@@ -1,0 +1,89 @@
+//! End-to-end driver (the repo's E2E validation workload): load the trained
+//! microllama checkpoint, direct-cast it across the paper's headline format
+//! families and bit widths, compute top-k KL against the reference model
+//! through the PJRT runtime, and print the fig.-1 trade-off table with
+//! throughput numbers. Results are appended to results/llm_tradeoff.jsonl.
+//!
+//! Requires `make artifacts`.
+//!
+//! ```bash
+//! cargo run --release --offline --example llm_tradeoff \
+//!     [--size m] [--eval-seqs 24]
+//! ```
+
+use std::time::Instant;
+
+use owf::coordinator::config::Scheme;
+use owf::coordinator::ResultSink;
+use owf::eval::llm::{headline_schemes, Env};
+use owf::eval::RunOpts;
+use owf::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let mut opts = RunOpts::default();
+    if let Some(i) = args.iter().position(|a| a == "--size") {
+        opts.size = args[i + 1].clone();
+    }
+    if let Some(i) = args.iter().position(|a| a == "--eval-seqs") {
+        opts.eval_seqs = args[i + 1].parse()?;
+    }
+    let size = opts.size.clone();
+    let eval_seqs = opts.eval_seqs;
+    let mut env = Env::open(opts)?;
+    let n_params = env.checkpoint(&size)?.config.n_params;
+    let seq_len = env.checkpoint(&size)?.config.seq_len;
+    println!(
+        "microllama-{size}: {n_params} params; eval {eval_seqs} seqs x {seq_len} tokens\n"
+    );
+
+    let sink = ResultSink::open("results/llm_tradeoff.jsonl")?;
+    println!(
+        "{:<26} {:>6} {:>10} {:>10} {:>9} {:>8} {:>9}",
+        "format", "b", "KL", "±2se", "ΔCE", "R", "sec"
+    );
+    let t_all = Instant::now();
+    let mut evals = 0usize;
+    for b in [3u32, 4, 5] {
+        for (label, spec) in headline_schemes(b) {
+            let scheme = Scheme::parse(&spec)?;
+            let t0 = Instant::now();
+            let p = env.direct_cast(&size, &scheme, None, false)?;
+            let dt = t0.elapsed().as_secs_f64();
+            evals += 1;
+            println!(
+                "{:<26} {:>6.3} {:>10.5} {:>10.5} {:>9.5} {:>8.4} {:>9.2}",
+                label,
+                p.bits,
+                p.kl.mean,
+                2.0 * p.kl.sem,
+                p.delta_ce,
+                p.r,
+                dt
+            );
+            sink.append(
+                &Json::obj()
+                    .push("example", "llm_tradeoff")
+                    .push("model", size.as_str())
+                    .push("format", label.as_str())
+                    .push("spec", spec.as_str())
+                    .push("bits", p.bits)
+                    .push("kl", p.kl.mean)
+                    .push("kl_2se", 2.0 * p.kl.sem)
+                    .push("delta_ce", p.delta_ce)
+                    .push("r", p.r)
+                    .push("seconds", dt),
+            )?;
+        }
+    }
+    let total = t_all.elapsed().as_secs_f64();
+    let tokens = (evals * eval_seqs * seq_len) as f64;
+    println!(
+        "\n{} evaluations in {:.1}s  ({:.0} quantise+eval tokens/s end-to-end)",
+        evals,
+        total,
+        tokens / total
+    );
+    println!("rows appended to results/llm_tradeoff.jsonl");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart: quantise one tensor with six formats and compare.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+//!
+//! No artifacts needed — this exercises the pure-Rust format framework on
+//! synthetic heavy-tailed data (the shape real LLM weights have, fig. 25).
+
+use owf::coordinator::config::Scheme;
+use owf::dist::{Dist, Family};
+use owf::eval::pipeline::qdq_tensor;
+use owf::util::rng::Rng;
+use owf::util::stats::relative_rms_error;
+
+fn main() -> anyhow::Result<()> {
+    // a synthetic "weight matrix": iid Student-t(5), the family that best
+    // matches trained-LLM weight statistics
+    let (rows, cols) = (512, 512);
+    let mut rng = Rng::new(42);
+    let data = Dist::standard(Family::StudentT, 5.0)
+        .sample_vec(&mut rng, rows * cols);
+
+    println!("quantising a {rows}x{cols} Student-t(5) tensor:\n");
+    println!("{:<42} {:>7} {:>9} {:>9}", "scheme", "bits", "R", "R·2^b");
+    for spec in [
+        // naive 4-bit integer, one scale for the whole tensor
+        "int@4:tensor-absmax",
+        // the paper's √[3]p Student-t element format, RMS scaling
+        "cbrt-t5@4:tensor-rms",
+        // + block scaling: the variable-length trick (§2.1)
+        "cbrt-t5@4:block128-absmax",
+        // + signmax scaling (the paper's novel variant)
+        "cbrt-t5@4:block128-signmax",
+        // sparse outliers instead of blocks (SpQR-style)
+        "cbrt-t5@4:tensor-rms:sparse0.001",
+        // the §2.3 optimum: uniform grid + ideal entropy coding
+        "grid@4:tensor-rms:compress",
+    ] {
+        let scheme = Scheme::parse(spec)?;
+        let out = qdq_tensor(&scheme, &data, &[rows, cols], Some(1), &[], 1)?;
+        let r = relative_rms_error(&data, &out.recon);
+        println!(
+            "{:<42} {:>7.3} {:>9.5} {:>9.4}",
+            spec,
+            out.bits,
+            r,
+            r * 2f64.powf(out.bits)
+        );
+    }
+    println!(
+        "\nLower R·2^b is better; see `owf report sim` for the full sweep."
+    );
+    Ok(())
+}

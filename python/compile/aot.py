@@ -1,0 +1,164 @@
+"""AOT export: lower every L2 graph to HLO **text** for the Rust runtime.
+
+HLO text (not ``lowered.compile().serialize()``/proto bytes) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version behind the Rust ``xla`` crate)
+rejects; the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Also writes ``artifacts/manifest.json`` describing, for every artifact, the
+exact flattened input order (name/dtype/shape) and output order, which the
+Rust runtime (rust/src/runtime) uses to marshal literals.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.qdq import qdq_block
+from .model import CONFIGS, fisher_batch, empirical_fisher_batch, \
+    kl_to_ref, logits_fn, adam_step
+
+# Evaluation/fisher/QAT batch sizes (sequences per PJRT call).
+FWD_BATCH = {"s": 16, "m": 16, "l": 8}
+FISHER_BATCH = {"s": 8, "m": 8, "l": 4}
+QAT_BATCH = 8
+QDQ_BLOCKS, QDQ_BLOCK = 4096, 128
+CODEBOOK_K = 16  # 4-bit LUT; smaller formats pad by duplicating codepoints
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_of(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def _flat_io(args, out):
+    """Flattened (inputs, outputs) description for the manifest."""
+
+    def describe(tree, prefix):
+        leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+        out = []
+        for path, leaf in leaves_with_paths:
+            suffix = "".join(
+                f".{p.key}" if hasattr(p, "key") else f".{p.idx}"
+                for p in path
+            )
+            out.append({
+                "name": prefix + suffix,
+                "dtype": str(leaf.dtype),
+                "shape": list(leaf.shape),
+            })
+        return out
+
+    ins = []
+    for i, a in enumerate(args):
+        ins += describe(a, f"arg{i}")
+    return ins, describe(out, "out")
+
+
+def export(fn, args, path: str, name: str, manifest: list) -> None:
+    """Lower ``fn(*args)`` (specs), write HLO text, record manifest entry."""
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(path, fname), "w") as f:
+        f.write(text)
+    out_spec = jax.eval_shape(fn, *args)
+    ins, outs = _flat_io(args, out_spec)
+    manifest.append({
+        "name": name, "file": fname, "inputs": ins, "outputs": outs,
+    })
+    print(f"[aot] {fname}: {len(text)} chars, "
+          f"{len(ins)} inputs, {len(outs)} outputs", flush=True)
+
+
+def param_specs(cfg):
+    return {
+        k: jax.ShapeDtypeStruct(s, jnp.float32)
+        for k, s in cfg.param_shapes().items()
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default="s,m,l")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest: list = []
+
+    # --- standalone fused block qdq (the L1 kernel as its own artifact) ---
+    xspec = jax.ShapeDtypeStruct((QDQ_BLOCKS, QDQ_BLOCK), jnp.float32)
+    cbspec = jax.ShapeDtypeStruct((CODEBOOK_K,), jnp.float32)
+    export(lambda x, cb: (qdq_block(x, cb, mode="absmax"),),
+           (xspec, cbspec), args.out, "qdq_block_absmax", manifest)
+    export(lambda x, cb: (qdq_block(x, cb, mode="rms"),),
+           (xspec, cbspec), args.out, "qdq_block_rms", manifest)
+
+    for size in args.sizes.split(","):
+        cfg = CONFIGS[size]
+        pspec = param_specs(cfg)
+        toks = jax.ShapeDtypeStruct((FWD_BATCH[size], cfg.seq_len), jnp.int32)
+
+        # forward logits — used for eval (direct-cast KL) and as reference
+        export(lambda p, t, cfg=cfg: (logits_fn(cfg, p, t),),
+               (pspec, toks), args.out, f"model_fwd_{size}", manifest)
+
+        # Fisher batch (sampled labels) and empirical-Fisher batch
+        ftoks = jax.ShapeDtypeStruct(
+            (FISHER_BATCH[size], cfg.seq_len), jnp.int32
+        )
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        export(lambda p, t, k, cfg=cfg: fisher_batch(cfg, p, t, k),
+               (pspec, ftoks, key), args.out, f"fisher_{size}", manifest)
+        if size == "m":
+            export(lambda p, t, cfg=cfg: empirical_fisher_batch(cfg, p, t),
+                   (pspec, ftoks), args.out, "fisher_emp_m", manifest)
+
+    # --- QAT step (model m): STE quantised fwd + full-KL loss + Adam -------
+    cfg = CONFIGS["m"]
+    pspec = param_specs(cfg)
+    qtoks = jax.ShapeDtypeStruct((QAT_BATCH, cfg.seq_len), jnp.int32)
+    rlog = jax.ShapeDtypeStruct((QAT_BATCH, cfg.seq_len, cfg.vocab),
+                                jnp.float32)
+    cb = jax.ShapeDtypeStruct((CODEBOOK_K,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def qat_step(params, m, v, step, tokens, ref_logits, codebook, lr,
+                 block, mode):
+        return adam_step(
+            lambda p: kl_to_ref(cfg, p, tokens, ref_logits, codebook,
+                                block, mode),
+            params, m, v, step, lr,
+        )
+
+    for tag, block, mode in (
+        ("block128_absmax", 128, "absmax"),
+        ("tensor_rms", 0, "rms"),
+    ):
+        export(
+            lambda p, m, v, s, t, r, c, lr, block=block, mode=mode:
+                qat_step(p, m, v, s, t, r, c, lr, block, mode),
+            (pspec, pspec, pspec, scalar, qtoks, rlog, cb, scalar),
+            args.out, f"qat_step_m_{tag}", manifest,
+        )
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=1)
+    print(f"[aot] manifest.json: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Pallas kernel: fused block-scaled quantise->dequantise (the paper's hot
+spot).
+
+Every direct-cast evaluation and every QAT step pushes all model weights
+through this operation, so it is the L1 compute kernel of the stack.  The
+kernel is format-agnostic: the (sorted, normalised) codebook arrives as an
+operand, so one compiled kernel serves INT / float / NF4 / SF4 / cube-root
+Normal / Laplace / Student-t element formats — only the codebook changes.
+
+TPU mapping (see DESIGN.md "Hardware adaptation"):
+
+* the data block per grid step is a ``(ROWS_PER_STEP, B)`` f32 tile; with the
+  paper-default B=128 this matches the TPU lane width, so the absmax is a
+  lane reduction and the tile is (8, 128)-aligned for VMEM,
+* the codebook (K <= 32 values, <= 128 B) is broadcast to every grid step and
+  lives in VMEM for the whole kernel,
+* nearest-codepoint assignment is K-1 vectorised compares accumulated into an
+  index (branchless, no gather for the search) followed by a single small
+  gather from the codebook — a pure VPU kernel, the MXU is untouched,
+* HBM<->VMEM double-buffering falls out of the grid/BlockSpec schedule.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the interpreter to plain HLO,
+which is exactly what the Rust runtime loads (see python/compile/aot.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of blocks processed per grid step. 8 f32 sublanes x B lanes per tile.
+ROWS_PER_STEP = 8
+
+
+def _qdq_kernel(x_ref, cb_ref, o_ref, *, mode: str, scale_bf16: bool):
+    """Kernel body: one (ROWS_PER_STEP, B) tile of blocks.
+
+    x_ref: (R, B) f32 tile of input blocks.
+    cb_ref: (K,) f32 sorted codebook (normalised space), whole-array spec.
+    o_ref: (R, B) f32 dequantised output tile.
+    """
+    x = x_ref[...]
+    cb = cb_ref[...]
+
+    # --- block statistic (lane reduction) ---------------------------------
+    if mode == "absmax":
+        s = jnp.max(jnp.abs(x), axis=-1)
+    else:  # rms
+        s = jnp.sqrt(jnp.mean(jnp.square(x), axis=-1))
+    s = jnp.where(s == 0.0, 1.0, s)
+
+    # --- bfloat16 round-away scale emulation (integer ops, branchless) ----
+    if scale_bf16:
+        u = s.view(jnp.uint32)
+        upper = (u >> 16) + ((u & jnp.uint32(0xFFFF)) != 0).astype(jnp.uint32)
+        s = (upper << 16).view(jnp.float32)
+
+    y = x / s[:, None]
+
+    # --- branchless nearest-codepoint search ------------------------------
+    # index = #  of midpoints <= y ; midpoints m_k = (cb[k] + cb[k+1]) / 2.
+    # K-1 broadcast compares, accumulated as int32 — no sorted search, no
+    # data-dependent control flow, vectorises across the whole tile.
+    mids = (cb[1:] + cb[:-1]) * 0.5
+    idx = jnp.sum(
+        (y[:, :, None] >= mids[None, None, :]).astype(jnp.int32), axis=-1
+    )
+
+    o_ref[...] = cb[idx] * s[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "scale_bf16"))
+def qdq_block(
+    x: jnp.ndarray,
+    codebook: jnp.ndarray,
+    mode: str = "absmax",
+    scale_bf16: bool = True,
+) -> jnp.ndarray:
+    """Fused block quantise->dequantise via Pallas.
+
+    Args:
+        x: (n_blocks, B) float32; n_blocks must be a multiple of
+           ROWS_PER_STEP (callers pad; model tensors satisfy this naturally).
+        codebook: (K,) sorted float32 codepoints in normalised space.
+        mode: "absmax" or "rms" block statistic.
+        scale_bf16: emulate bfloat16 round-away scale storage.
+
+    Returns:
+        (n_blocks, B) float32 dequantised data.
+    """
+    n_blocks, block = x.shape
+    if n_blocks % ROWS_PER_STEP != 0:
+        raise ValueError(
+            f"n_blocks={n_blocks} must be a multiple of {ROWS_PER_STEP}"
+        )
+    grid = (n_blocks // ROWS_PER_STEP,)
+    return pl.pallas_call(
+        functools.partial(_qdq_kernel, mode=mode, scale_bf16=scale_bf16),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS_PER_STEP, block), lambda i: (i, 0)),
+            # Whole codebook broadcast to every grid step.
+            pl.BlockSpec(codebook.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROWS_PER_STEP, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x, codebook)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through-estimator wrapper, used by the QAT training graph (L2).
+# Forward: qdq via the Pallas kernel. Backward: identity on x, zero on the
+# codebook (centroids are fixed during QAT, as in the paper's procedure).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def qdq_ste(x, codebook, mode: str = "absmax", scale_bf16: bool = True):
+    return qdq_block(x, codebook, mode=mode, scale_bf16=scale_bf16)
+
+
+def _qdq_ste_fwd(x, codebook, mode, scale_bf16):
+    return qdq_block(x, codebook, mode=mode, scale_bf16=scale_bf16), None
+
+
+def _qdq_ste_bwd(mode, scale_bf16, _res, g):
+    return g, None
+
+
+qdq_ste.defvjp(_qdq_ste_fwd, _qdq_ste_bwd)
+
+
+def qdq_tensor(
+    w: jnp.ndarray,
+    codebook: jnp.ndarray,
+    block: int = 128,
+    mode: str = "absmax",
+    scale_bf16: bool = True,
+    ste: bool = False,
+) -> jnp.ndarray:
+    """Quantise->dequantise an arbitrary-shaped weight tensor.
+
+    Flattens to blocks of ``block`` elements (padding the tail block with
+    zeros, which quantise exactly under any codebook containing 0 and are
+    discarded on reshape), runs the Pallas kernel, restores the shape.
+    """
+    flat = w.reshape(-1)
+    n = flat.shape[0]
+    n_blocks = -(-n // block)
+    # pad to a multiple of ROWS_PER_STEP rows of full blocks
+    rows = -(-n_blocks // ROWS_PER_STEP) * ROWS_PER_STEP
+    padded = jnp.zeros((rows * block,), jnp.float32).at[:n].set(flat)
+    fn = qdq_ste if ste else qdq_block
+    out = fn(padded.reshape(rows, block), codebook, mode, scale_bf16)
+    return out.reshape(-1)[:n].reshape(w.shape)

@@ -1,0 +1,93 @@
+"""Pure-jnp reference (oracle) for the fused block-scaled quantise->dequantise
+kernel.
+
+This is the correctness ground truth for the Pallas kernel in ``qdq.py``; the
+Rust implementation in ``rust/src/quant`` is cross-checked against the lowered
+Pallas HLO as well (see rust/tests/qdq_cross.rs), closing the three-way loop
+
+        ref.py  ==  pallas qdq.py  ==  rust quant::qdq
+
+The quantiser semantics follow the paper ("Optimal Formats for Weight
+Quantisation", sec. 2.1):
+
+* the input is viewed as ``(n_blocks, B)``; each block is scaled by a single
+  statistic (absmax or RMS),
+* the scale itself is stored in a reduced-precision format; we model the
+  paper's default, bfloat16 with *round-away* rounding (appendix, fig. 19:
+  round-away avoids clipping the block maximum outside [-1, 1]),
+* scaled elements are rounded to the nearest codepoint of a sorted codebook
+  ``Q`` (ties resolve to the upper codepoint, matching ``jnp.searchsorted``
+  over midpoints),
+* dequantisation multiplies back by the scale.
+"""
+
+from typing import Literal
+
+import jax.numpy as jnp
+
+ScaleMode = Literal["absmax", "rms"]
+
+
+def round_scale_bf16_away(x: jnp.ndarray) -> jnp.ndarray:
+    """Round a positive float32 scale to bfloat16, away from zero.
+
+    bfloat16 is float32 with the low 16 mantissa bits dropped; rounding away
+    from zero for positive values means incrementing the upper half whenever
+    any dropped bit is set.  (Scales are strictly positive here: absmax == 0
+    blocks are handled by the caller mapping scale 0 -> 1.)
+    """
+    u = jnp.asarray(x, jnp.float32).view(jnp.uint32)
+    upper = u >> 16
+    sticky = (u & jnp.uint32(0xFFFF)) != 0
+    upper = upper + sticky.astype(jnp.uint32)
+    return (upper << 16).view(jnp.float32)
+
+
+def block_scale(x: jnp.ndarray, mode: ScaleMode) -> jnp.ndarray:
+    """Per-row scale statistic for ``x`` of shape (n_blocks, B)."""
+    if mode == "absmax":
+        s = jnp.max(jnp.abs(x), axis=-1)
+    elif mode == "rms":
+        s = jnp.sqrt(jnp.mean(jnp.square(x), axis=-1))
+    else:  # pragma: no cover - guarded by typing
+        raise ValueError(f"unknown scale mode {mode!r}")
+    # Zero blocks would divide by zero; the dequantised result is exact zero
+    # for any codebook containing 0 and harmless otherwise, matching Rust.
+    return jnp.where(s == 0.0, 1.0, s)
+
+
+def quantise_indices(y: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-codepoint indices for scaled data ``y`` (any shape).
+
+    ``codebook`` must be sorted ascending.  Nearest-neighbour assignment over
+    a sorted codebook == searchsorted against interval midpoints (ties go to
+    the upper codepoint).
+    """
+    mids = (codebook[1:] + codebook[:-1]) * 0.5
+    return jnp.searchsorted(mids, y, side="right").astype(jnp.int32)
+
+
+def qdq_block_ref(
+    x: jnp.ndarray,
+    codebook: jnp.ndarray,
+    mode: ScaleMode = "absmax",
+    scale_bf16: bool = True,
+) -> jnp.ndarray:
+    """Reference fused quantise->dequantise.
+
+    Args:
+        x: (n_blocks, B) float32 data.
+        codebook: (K,) sorted float32 codepoints (normalised space).
+        mode: block statistic, "absmax" or "rms".
+        scale_bf16: store the scale in bfloat16 round-away (paper default).
+
+    Returns:
+        (n_blocks, B) float32 dequantised data.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    s = block_scale(x, mode)
+    if scale_bf16:
+        s = round_scale_bf16_away(s)
+    y = x / s[:, None]
+    idx = quantise_indices(y, codebook)
+    return codebook[idx] * s[:, None]

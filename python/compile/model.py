@@ -1,0 +1,286 @@
+"""L2: "microllama" — a from-scratch JAX transformer language model.
+
+This is the substitute substrate for the paper's Llama/Qwen/Gemma/Phi
+checkpoints (see DESIGN.md, "Substitutions").  Architecture mirrors Llama 3:
+token embedding -> N x (RMSNorm -> GQA attention with RoPE -> RMSNorm ->
+SwiGLU MLP) -> final RMSNorm -> untied LM head.
+
+Everything is a pure function over a flat ``dict[str, jnp.ndarray]`` of
+parameters with Llama-style names (``layers.0.self_attn.q_proj`` etc.), so
+the Rust side addresses tensors by the same names the paper's figures use.
+
+The QAT forward pass (``qat_logits``) routes every 2-D weight through the
+Pallas STE quantise->dequantise kernel (L1), which is how the L1 kernel lowers
+into the exported HLO graphs.
+"""
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.qdq import qdq_tensor
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """microllama hyper-parameters; S/M/L presets below."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    seq_len: int
+    rope_theta: float = 10000.0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_shapes(self) -> Dict[str, tuple]:
+        """Deterministic name -> shape map (insertion order = layer order)."""
+        d, h, kv, dh = self.d_model, self.n_heads, self.n_kv_heads, self.d_head
+        shapes: Dict[str, tuple] = {"embed_tokens": (self.vocab, d)}
+        for i in range(self.n_layers):
+            p = f"layers.{i}"
+            shapes[f"{p}.input_layernorm"] = (d,)
+            shapes[f"{p}.self_attn.q_proj"] = (d, h * dh)
+            shapes[f"{p}.self_attn.k_proj"] = (d, kv * dh)
+            shapes[f"{p}.self_attn.v_proj"] = (d, kv * dh)
+            shapes[f"{p}.self_attn.o_proj"] = (h * dh, d)
+            shapes[f"{p}.post_attention_layernorm"] = (d,)
+            shapes[f"{p}.mlp.gate_proj"] = (d, self.d_ff)
+            shapes[f"{p}.mlp.up_proj"] = (d, self.d_ff)
+            shapes[f"{p}.mlp.down_proj"] = (self.d_ff, d)
+        shapes["final_norm"] = (d,)
+        shapes["lm_head"] = (d, self.vocab)
+        return shapes
+
+    def n_params(self) -> int:
+        return sum(
+            functools.reduce(lambda a, b: a * b, s, 1)
+            for s in self.param_shapes().values()
+        )
+
+
+CONFIGS = {
+    # Small: the "many model families" stand-in, fast enough to sweep widely.
+    "s": Config("s", vocab=512, d_model=64, n_layers=2, n_heads=4,
+                n_kv_heads=2, d_ff=192, seq_len=128),
+    # Medium: the headline model (fig. 1 analogue).
+    "m": Config("m", vocab=1024, d_model=128, n_layers=4, n_heads=8,
+                n_kv_heads=2, d_ff=384, seq_len=128),
+    # Large: scaling check.
+    "l": Config("l", vocab=2048, d_model=192, n_layers=6, n_heads=8,
+                n_kv_heads=4, d_ff=576, seq_len=128),
+}
+
+
+def init_params(cfg: Config, key: jax.Array) -> Params:
+    """Scaled-normal init (norm gains at 1)."""
+    params: Params = {}
+    for name, shape in cfg.param_shapes().items():
+        key, sub = jax.random.split(key)
+        if name.endswith("layernorm") or name == "final_norm":
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "embed_tokens":
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * 0.02
+        else:
+            fan_in = shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * (
+                fan_in ** -0.5
+            )
+    return params
+
+
+def _rms_norm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def _rope(x: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding over (batch, seq, heads, d_head)."""
+    _, seq, _, dh = x.shape
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.arange(seq, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def _attention(cfg: Config, params: Params, prefix: str, x: jnp.ndarray,
+               wmap: Callable[[str, jnp.ndarray], jnp.ndarray]):
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    def proj(name, width):
+        w = wmap(f"{prefix}.{name}", params[f"{prefix}.{name}"])
+        return (x @ w).reshape(b, s, width, dh)
+
+    q = _rope(proj("self_attn.q_proj", h), cfg.rope_theta)
+    k = _rope(proj("self_attn.k_proj", kv), cfg.rope_theta)
+    v = proj("self_attn.v_proj", kv)
+    # GQA: repeat kv heads across the query-head group.
+    group = h // kv
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (dh ** 0.5)
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, h * dh)
+    wo = wmap(f"{prefix}.self_attn.o_proj", params[f"{prefix}.self_attn.o_proj"])
+    return out @ wo
+
+
+def _mlp(params: Params, prefix: str, x: jnp.ndarray,
+         wmap: Callable[[str, jnp.ndarray], jnp.ndarray]):
+    gate = wmap(f"{prefix}.mlp.gate_proj", params[f"{prefix}.mlp.gate_proj"])
+    up = wmap(f"{prefix}.mlp.up_proj", params[f"{prefix}.mlp.up_proj"])
+    down = wmap(f"{prefix}.mlp.down_proj", params[f"{prefix}.mlp.down_proj"])
+    return (jax.nn.silu(x @ gate) * (x @ up)) @ down
+
+
+def logits_fn(cfg: Config, params: Params, tokens: jnp.ndarray,
+              wmap: Optional[Callable[[str, jnp.ndarray], jnp.ndarray]] = None
+              ) -> jnp.ndarray:
+    """Forward pass: (batch, seq) int32 tokens -> (batch, seq, vocab) f32.
+
+    ``wmap(name, w)`` is applied to every weight matrix on the way in; the
+    identity for the reference model, the STE quantiser for QAT.
+    """
+    if wmap is None:
+        wmap = lambda _, w: w
+    emb = wmap("embed_tokens", params["embed_tokens"])
+    x = emb[tokens]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}"
+        hn = _rms_norm(x, params[f"{p}.input_layernorm"])
+        x = x + _attention(cfg, params, p, hn, wmap)
+        hn = _rms_norm(x, params[f"{p}.post_attention_layernorm"])
+        x = x + _mlp(params, p, hn, wmap)
+    x = _rms_norm(x, params["final_norm"])
+    head = wmap("lm_head", params["lm_head"])
+    return x @ head
+
+
+def qat_wmap(codebook: jnp.ndarray, block: int = 128, mode: str = "absmax"
+             ) -> Callable[[str, jnp.ndarray], jnp.ndarray]:
+    """Weight map routing every >=2-D tensor through the Pallas STE qdq.
+
+    1-D tensors (RMSNorm gains) stay in full precision, as in the paper's QAT
+    setup; ``block <= 0`` means per-tensor scaling (single block).
+    """
+
+    def wmap(name: str, w: jnp.ndarray) -> jnp.ndarray:
+        if w.ndim < 2:
+            return w
+        b = block if block > 0 else w.size
+        return qdq_tensor(w, codebook, block=b, mode=mode, ste=True)
+
+    return wmap
+
+
+def qat_logits(cfg: Config, params: Params, tokens: jnp.ndarray,
+               codebook: jnp.ndarray, block: int = 128,
+               mode: str = "absmax") -> jnp.ndarray:
+    return logits_fn(cfg, params, tokens, qat_wmap(codebook, block, mode))
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics used by the exported graphs
+# ---------------------------------------------------------------------------
+
+
+def ce_loss(cfg: Config, params: Params, tokens: jnp.ndarray,
+            wmap=None) -> jnp.ndarray:
+    """Next-token cross entropy (mean nats/token) for training."""
+    logits = logits_fn(cfg, params, tokens, wmap)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def kl_to_ref(cfg: Config, params: Params, tokens: jnp.ndarray,
+              ref_logits: jnp.ndarray, codebook: jnp.ndarray,
+              block: int, mode: str) -> jnp.ndarray:
+    """Full KL(ref || student) per token, averaged — the QAT loss."""
+    logits = qat_logits(cfg, params, tokens, codebook, block, mode)
+    p = jax.nn.softmax(ref_logits, axis=-1)
+    logp = jax.nn.log_softmax(ref_logits, axis=-1)
+    logq = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.mean(jnp.sum(p * (logp - logq), axis=-1))
+
+
+def fisher_batch(cfg: Config, params: Params, tokens: jnp.ndarray,
+                 key: jax.Array) -> Params:
+    """Per-parameter squared-gradient accumulation for one batch (eq. 8).
+
+    Labels are *sampled from the model's own predictive distribution* (not
+    the data), estimating the Fisher rather than the empirical Fisher; the
+    gradient is computed per sequence (vmap over the batch) and squared
+    before summation. The paper squares per token; per-sequence is the
+    documented substitution (DESIGN.md) — it preserves the inter-tensor
+    structure used by eq. (5).
+    """
+    logits = logits_fn(cfg, params, tokens)  # (b, s, v)
+    sampled = jax.random.categorical(key, logits[:, :-1])  # (b, s-1)
+
+    def seq_loss(p: Params, toks: jnp.ndarray, labels: jnp.ndarray):
+        lg = logits_fn(cfg, p, toks[None])[0, :-1]
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        return -jnp.sum(
+            jnp.take_along_axis(logp, labels[:, None], axis=-1)
+        )
+
+    grads = jax.vmap(lambda t, l: jax.grad(seq_loss)(params, t, l))(
+        tokens, sampled
+    )
+    return {k: jnp.sum(jnp.square(g), axis=0) for k, g in grads.items()}
+
+
+def empirical_fisher_batch(cfg: Config, params: Params,
+                           tokens: jnp.ndarray) -> Params:
+    """Empirical-Fisher variant (dataset labels), for the fig. 27 analogue."""
+
+    def seq_loss(p: Params, toks: jnp.ndarray):
+        lg = logits_fn(cfg, p, toks[None])[0, :-1]
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        return -jnp.sum(
+            jnp.take_along_axis(logp, toks[1:, None], axis=-1)
+        )
+
+    grads = jax.vmap(lambda t: jax.grad(seq_loss)(params, t))(tokens)
+    return {k: jnp.sum(jnp.square(g), axis=0) for k, g in grads.items()}
+
+
+# ---------------------------------------------------------------------------
+# Adam training step (used by train.py and the exported QAT step)
+# ---------------------------------------------------------------------------
+
+
+def adam_step(loss_fn, params: Params, m: Params, v: Params, step,
+              lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8):
+    """One Adam update; ``step`` is a 0-based scalar (traced or concrete)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    m = {k: b1 * m[k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * v[k] + (1 - b2) * jnp.square(grads[k]) for k in params}
+    t = step + 1
+    mhat = {k: m[k] / (1 - b1 ** t) for k in params}
+    vhat = {k: v[k] / (1 - b2 ** t) for k in params}
+    new = {
+        k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps)
+        for k in params
+    }
+    return new, m, v, loss

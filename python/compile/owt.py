@@ -1,0 +1,93 @@
+"""``.owt`` — the Optimal-Weight-Formats tensor container.
+
+A deliberately simple binary format shared between the Python build path and
+the Rust runtime (rust/src/tensorstore mirrors this exactly):
+
+    bytes 0..4    magic  b"OWT1"
+    bytes 4..8    u32 LE manifest length  (M)
+    bytes 8..8+M  manifest, UTF-8 JSON
+    8+M..        data region; every tensor offset is relative to the region
+                  start and 64-byte aligned
+
+Manifest schema::
+
+    {
+      "meta":    { ...free-form string/number map... },
+      "tensors": [
+        {"name": str, "dtype": "f32"|"i32", "shape": [int],
+         "offset": int, "channel_axis": int|null},
+        ...
+      ]
+    }
+
+``channel_axis`` marks the output-channel axis used by channel-scaled
+formats (null for 1-D tensors).
+"""
+
+import json
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+MAGIC = b"OWT1"
+_ALIGN = 64
+
+_DTYPES = {"f32": np.float32, "i32": np.int32}
+
+
+def write_owt(path: str, tensors: Dict[str, np.ndarray],
+              meta: Optional[dict] = None,
+              channel_axes: Optional[Dict[str, int]] = None) -> None:
+    """Write tensors (insertion order preserved) with optional metadata."""
+    channel_axes = channel_axes or {}
+    entries = []
+    offset = 0
+    blobs = []
+    for name, arr in tensors.items():
+        if arr.dtype == np.float32:
+            dtype = "f32"
+        elif arr.dtype == np.int32:
+            dtype = "i32"
+        else:
+            raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+        data = np.ascontiguousarray(arr).tobytes()
+        entries.append({
+            "name": name,
+            "dtype": dtype,
+            "shape": list(arr.shape),
+            "offset": offset,
+            "channel_axis": channel_axes.get(name),
+        })
+        blobs.append(data)
+        offset += len(data)
+        pad = (-offset) % _ALIGN
+        if pad:
+            blobs.append(b"\0" * pad)
+            offset += pad
+    manifest = json.dumps(
+        {"meta": meta or {}, "tensors": entries}, indent=None
+    ).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(len(manifest).to_bytes(4, "little"))
+        f.write(manifest)
+        for b in blobs:
+            f.write(b)
+
+
+def read_owt(path: str) -> Tuple[dict, Dict[str, np.ndarray]]:
+    """Read a container; returns (meta, name->array)."""
+    with open(path, "rb") as f:
+        raw = f.read()
+    assert raw[:4] == MAGIC, f"{path}: bad magic"
+    mlen = int.from_bytes(raw[4:8], "little")
+    manifest = json.loads(raw[8:8 + mlen])
+    base = 8 + mlen
+    out = {}
+    for e in manifest["tensors"]:
+        dt = _DTYPES[e["dtype"]]
+        n = int(np.prod(e["shape"])) if e["shape"] else 1
+        start = base + e["offset"]
+        arr = np.frombuffer(raw, dt, count=n, offset=start)
+        out[e["name"]] = arr.reshape(e["shape"]).copy()
+    return manifest["meta"], out

@@ -1,0 +1,113 @@
+"""Build-time training of the microllama checkpoints (the paper's pretrained
+model substitutes).
+
+Runs once from ``make artifacts``; the resulting ``.owt`` checkpoints and
+token splits are everything the Rust runtime needs — Python never runs again
+after this.
+
+Outputs per model size (s/m/l) under artifacts/:
+    model_<size>.owt          trained weights + config + loss curve meta
+    tokens_<size>_eval.owt    held-out eval sequences (token ids, i32)
+    tokens_<size>_fisher.owt  Fisher-estimation sequences (train domain)
+    tokens_<size>_xdom.owt    cross-domain sequences (fig. 30)
+    tokens_<size>_train.owt   a training-domain batch pool for QAT
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import CONFIGS, adam_step, ce_loss, init_params
+from .owt import write_owt
+
+# Per-size training budget: (steps, batch). Small on purpose — this is a
+# CPU-built substrate; enough for structured, heavy-tailed weights.
+BUDGET = {"s": (400, 32), "m": (350, 16), "l": (200, 12)}
+SPLITS = {"eval": (64, 101), "fisher": (64, 202), "train": (96, 303)}
+
+
+def channel_axes_for(shapes: dict) -> dict:
+    """Output-channel axis per tensor (axis 1 for (in, out) projections,
+    axis 1 for the (vocab, d) embedding's model dim — matching how channel
+    scaling is applied in the paper: one scale per output channel)."""
+    return {name: 1 for name, shape in shapes.items() if len(shape) == 2}
+
+
+def train_one(size: str, out_dir: str, seed: int = 0) -> None:
+    cfg = CONFIGS[size]
+    steps, batch = BUDGET[size]
+    corpus = data.Corpus(cfg.vocab, domain=0)
+    rng = np.random.default_rng(404 + seed)
+
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(p) for k, p in params.items()}
+
+    base_lr = 3e-3
+
+    @jax.jit
+    def step_fn(params, m, v, step, tokens, lr):
+        return adam_step(
+            lambda p: ce_loss(cfg, p, tokens), params, m, v, step, lr
+        )
+
+    losses = []
+    t0 = time.time()
+    for step in range(steps):
+        tokens = jnp.asarray(corpus.sample(rng, batch, cfg.seq_len))
+        # cosine decay with short warmup
+        warm = min(1.0, (step + 1) / 20)
+        lr = base_lr * warm * 0.5 * (1 + np.cos(np.pi * step / steps))
+        params, m, v, loss = step_fn(
+            params, m, v, jnp.float32(step), tokens, jnp.float32(lr)
+        )
+        losses.append(float(loss))
+        if step % 50 == 0 or step == steps - 1:
+            print(f"[train {size}] step {step:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+
+    shapes = cfg.param_shapes()
+    np_params = {k: np.asarray(params[k], np.float32) for k in shapes}
+    meta = {
+        "kind": "microllama-checkpoint",
+        "config": {
+            "name": cfg.name, "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len, "n_params": cfg.n_params(),
+        },
+        "train": {
+            "steps": steps, "batch": batch, "seed": seed,
+            "loss_first": losses[0], "loss_last": losses[-1],
+            "loss_curve_every50": losses[::50],
+        },
+    }
+    write_owt(f"{out_dir}/model_{size}.owt", np_params, meta,
+              channel_axes_for(shapes))
+    print(f"[train {size}] wrote model_{size}.owt "
+          f"({cfg.n_params()} params, loss {losses[0]:.3f} -> {losses[-1]:.3f})")
+
+    for split, (n_seq, split_seed) in SPLITS.items():
+        toks = data.make_split(cfg.vocab, 0, split_seed, n_seq, cfg.seq_len)
+        write_owt(f"{out_dir}/tokens_{size}_{split}.owt", {"tokens": toks},
+                  {"kind": "tokens", "split": split, "domain": 0})
+    xdom = data.make_split(cfg.vocab, 1, 505, SPLITS["eval"][0], cfg.seq_len)
+    write_owt(f"{out_dir}/tokens_{size}_xdom.owt", {"tokens": xdom},
+              {"kind": "tokens", "split": "xdom", "domain": 1})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default="s,m,l")
+    args = ap.parse_args()
+    for size in args.sizes.split(","):
+        train_one(size, args.out)
+
+
+if __name__ == "__main__":
+    main()

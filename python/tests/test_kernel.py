@@ -1,0 +1,144 @@
+"""L1 correctness: Pallas qdq kernel vs the pure-jnp oracle.
+
+The hypothesis sweep covers shapes, block sizes, scale modes and codebook
+constructions; this is the core correctness signal for the kernel that every
+exported QAT graph embeds.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qdq import ROWS_PER_STEP, qdq_block, qdq_tensor
+from compile.kernels.ref import (
+    block_scale,
+    qdq_block_ref,
+    quantise_indices,
+    round_scale_bf16_away,
+)
+
+
+def random_codebook(rng: np.random.Generator, k: int) -> np.ndarray:
+    """Sorted, deduplicated codebook spanning about [-1, 1]."""
+    cb = np.sort(rng.uniform(-1.0, 1.0, size=k).astype(np.float32))
+    # ensure strict monotonicity to keep midpoints well-defined
+    cb += np.arange(k, dtype=np.float32) * 1e-6
+    return cb
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(1, 6),
+    block=st.sampled_from([32, 64, 128, 256]),
+    k=st.sampled_from([4, 8, 15, 16, 32]),
+    mode=st.sampled_from(["absmax", "rms"]),
+    scale_bf16=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+    dist=st.sampled_from(["normal", "laplace", "student_t", "uniform"]),
+)
+def test_pallas_matches_ref(rows, block, k, mode, scale_bf16, seed, dist):
+    rng = np.random.default_rng(seed)
+    n_blocks = rows * ROWS_PER_STEP
+    if dist == "normal":
+        x = rng.standard_normal((n_blocks, block))
+    elif dist == "laplace":
+        x = rng.laplace(size=(n_blocks, block))
+    elif dist == "student_t":
+        x = rng.standard_t(5, size=(n_blocks, block))
+    else:
+        x = rng.uniform(-2, 2, size=(n_blocks, block))
+    x = x.astype(np.float32)
+    cb = random_codebook(rng, k)
+
+    got = qdq_block(jnp.asarray(x), jnp.asarray(cb), mode, scale_bf16)
+    want = qdq_block_ref(x, jnp.asarray(cb), mode, scale_bf16)
+    # Pallas interpret mode may reassociate the scale reduction, so values
+    # can differ by ~1 ulp (and a midpoint tie could flip, probability
+    # ~1e-7/elem — never observed at these sample counts).
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=3e-6, atol=1e-6
+    )
+
+
+def test_zero_block_is_stable():
+    """All-zero blocks must not divide by zero and must map to codebook 0."""
+    x = np.zeros((ROWS_PER_STEP, 64), np.float32)
+    cb = np.array([-1.0, -0.5, 0.0, 0.5, 1.0], np.float32)
+    out = np.asarray(qdq_block(jnp.asarray(x), jnp.asarray(cb)))
+    np.testing.assert_array_equal(out, np.zeros_like(x))
+
+
+def test_round_away_bf16_properties():
+    rng = np.random.default_rng(7)
+    s = np.abs(rng.standard_normal(1000).astype(np.float32)) + 1e-6
+    r = np.asarray(round_scale_bf16_away(jnp.asarray(s)))
+    # round-away never shrinks a positive scale
+    assert np.all(r >= s)
+    # and the result is exactly representable in bfloat16
+    bits = r.view(np.uint32)
+    assert np.all(bits & 0xFFFF == 0)
+    # exact bf16 values are unchanged
+    exact = (s.view(np.uint32) & 0xFFFF0000).view(np.float32)
+    r2 = np.asarray(round_scale_bf16_away(jnp.asarray(exact)))
+    np.testing.assert_array_equal(r2, exact)
+
+
+def test_absmax_never_clips():
+    """With round-away scales, |scaled data| <= 1 so the max is representable."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_t(4, size=(ROWS_PER_STEP * 2, 128)).astype(np.float32)
+    s = np.asarray(round_scale_bf16_away(block_scale(jnp.asarray(x), "absmax")))
+    assert np.all(np.abs(x / s[:, None]) <= 1.0 + 1e-7)
+
+
+def test_quantise_indices_nearest():
+    cb = jnp.asarray(np.array([-1.0, 0.0, 2.0], np.float32))
+    y = jnp.asarray(np.array([-5.0, -0.51, -0.49, 0.99, 1.01, 9.0], np.float32))
+    idx = np.asarray(quantise_indices(y, cb))
+    np.testing.assert_array_equal(idx, [0, 0, 1, 1, 2, 2])
+
+
+def test_qdq_tensor_padding_roundtrip():
+    """qdq_tensor pads the tail block; shape and non-padded values survive."""
+    rng = np.random.default_rng(11)
+    w = rng.standard_normal((37, 53)).astype(np.float32)  # 1961 elements
+    cb = random_codebook(rng, 16)
+    out = np.asarray(qdq_tensor(jnp.asarray(w), jnp.asarray(cb), block=128))
+    assert out.shape == w.shape
+    # error bounded by half the largest codebook gap times the block scale
+    blocks = np.pad(w.reshape(-1), (0, 128 * 16 - w.size)).reshape(-1, 128)
+    scales = np.max(np.abs(blocks), axis=1)
+    max_gap = np.max(np.diff(cb))
+    # every element's error <= scale * max(gap/2, distance outside range)
+    err = np.abs(out - w).reshape(-1)
+    per_elem_scale = np.repeat(scales, 128)[: w.size] * 1.01
+    assert np.all(err <= per_elem_scale * max(max_gap, 0.5))
+
+
+def test_qdq_idempotent():
+    """Quantising an already-quantised tensor is exact identity for absmax
+    formats whose codebook contains the endpoints +-1 (every absmax format
+    in the paper does): the block max re-scales to exactly +-1, so the
+    second pass sees scale == first-pass scale and every value is already a
+    codepoint."""
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((ROWS_PER_STEP, 128)).astype(np.float32)
+    inner = np.sort(rng.uniform(-0.95, 0.95, 14)).astype(np.float32)
+    cb = np.concatenate([[-1.0], inner, [1.0]]).astype(np.float32)
+    once = qdq_block(jnp.asarray(x), jnp.asarray(cb), "absmax", True)
+    twice = qdq_block(once, jnp.asarray(cb), "absmax", True)
+    np.testing.assert_array_equal(np.asarray(twice), np.asarray(once))
+
+
+def test_duplicate_codepoints_are_harmless():
+    """Padding a codebook by duplicating entries must not change results
+    (the QAT graphs rely on this to express 3-bit formats in a 16-slot LUT).
+    """
+    rng = np.random.default_rng(13)
+    x = rng.standard_normal((ROWS_PER_STEP, 64)).astype(np.float32)
+    cb8 = random_codebook(rng, 8)
+    cb16 = np.sort(np.concatenate([cb8, cb8]))
+    a = np.asarray(qdq_block(jnp.asarray(x), jnp.asarray(cb8)))
+    b = np.asarray(qdq_block(jnp.asarray(x), jnp.asarray(cb16)))
+    np.testing.assert_array_equal(a, b)

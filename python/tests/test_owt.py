@@ -1,0 +1,53 @@
+"""Round-trip tests for the .owt tensor container (python side; the Rust
+reader is tested against files produced here via artifacts)."""
+
+import numpy as np
+import pytest
+
+from compile.owt import MAGIC, read_owt, write_owt
+
+
+def test_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a.weight": rng.standard_normal((17, 9)).astype(np.float32),
+        "b.tokens": rng.integers(0, 100, size=(3, 5)).astype(np.int32),
+        "c.scalarish": np.array([1.5], np.float32),
+    }
+    meta = {"kind": "test", "nested": {"x": 1, "y": [1, 2.5, "s"]}}
+    path = str(tmp_path / "t.owt")
+    write_owt(path, tensors, meta, channel_axes={"a.weight": 1})
+    meta2, out = read_owt(path)
+    assert meta2 == meta
+    assert list(out) == list(tensors)  # order preserved
+    for k in tensors:
+        np.testing.assert_array_equal(out[k], tensors[k])
+        assert out[k].dtype == tensors[k].dtype
+
+
+def test_alignment(tmp_path):
+    """Every tensor offset must be 64-byte aligned in the data region."""
+    import json
+    tensors = {f"t{i}": np.ones(i + 1, np.float32) for i in range(5)}
+    path = str(tmp_path / "a.owt")
+    write_owt(path, tensors)
+    raw = open(path, "rb").read()
+    assert raw[:4] == MAGIC
+    mlen = int.from_bytes(raw[4:8], "little")
+    manifest = json.loads(raw[8:8 + mlen])
+    for e in manifest["tensors"]:
+        assert e["offset"] % 64 == 0
+
+
+def test_rejects_bad_dtype(tmp_path):
+    with pytest.raises(ValueError):
+        write_owt(str(tmp_path / "b.owt"), {"x": np.ones(3, np.float64)})
+
+
+def test_empty_meta_and_scalar_shape(tmp_path):
+    path = str(tmp_path / "c.owt")
+    write_owt(path, {"s": np.float32(3.5).reshape(())})
+    meta, out = read_owt(path)
+    assert meta == {}
+    assert out["s"].shape == ()
+    assert out["s"] == np.float32(3.5)

@@ -1,0 +1,33 @@
+//! Shared timing harness for the benches (criterion is unavailable in the
+//! offline registry, so this is a minimal warmup + repeated-measurement
+//! harness printing criterion-style lines and recording JSONL).
+
+use std::time::Instant;
+
+/// Run `f` with warmup and `reps` timed repetitions; prints
+/// `name  median  min..max  [throughput]` and returns the median seconds.
+pub fn bench(name: &str, items_per_rep: Option<f64>, mut f: impl FnMut()) -> f64 {
+    // warmup
+    for _ in 0..2 {
+        f();
+    }
+    let reps = 7;
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.total_cmp(b));
+    let median = times[reps / 2];
+    let throughput = items_per_rep
+        .map(|n| format!("  {:>10.1} Melem/s", n / median / 1e6))
+        .unwrap_or_default();
+    println!(
+        "{name:<52} {:>9.3} ms  ({:.3}..{:.3} ms){throughput}",
+        median * 1e3,
+        times[0] * 1e3,
+        times[reps - 1] * 1e3,
+    );
+    median
+}

@@ -1,0 +1,50 @@
+//! Bench: entropy-coder throughput (Huffman vs rANS, encode + decode) over
+//! quantised-weight symbol streams — fig. 24's practical-compressor angle.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::bench;
+
+use owf::compress::huffman::HuffmanCode;
+use owf::compress::rans::{rans_decode, rans_encode, RansModel};
+use owf::dist::{Dist, Family};
+use owf::formats::cbrt::{cbrt_rms, CBRT_ALPHA};
+use owf::formats::Variant;
+use owf::util::rng::Rng;
+
+fn main() {
+    let n = 1 << 21;
+    let mut rng = Rng::new(2);
+    let data = Dist::standard(Family::StudentT, 5.0).sample_vec(&mut rng, n);
+    let cb = cbrt_rms(Family::StudentT, 5.0, 4, Variant::Symmetric, CBRT_ALPHA);
+    let symbols: Vec<u16> = data.iter().map(|&x| cb.quantise(x)).collect();
+    let mut counts = vec![0u64; cb.len()];
+    for &s in &symbols {
+        counts[s as usize] += 1;
+    }
+
+    println!("entropy coders, {n} symbols (4-bit cbrt-t indices):");
+    let huff = HuffmanCode::from_counts(&counts);
+    let (encoded, bits) = huff.encode(&symbols);
+    println!(
+        "  rates: entropy {:.4} b/sym, huffman {:.4} b/sym",
+        owf::compress::entropy_bits(&counts),
+        bits as f64 / n as f64
+    );
+    bench("huffman encode", Some(n as f64), || {
+        std::hint::black_box(huff.encode(&symbols).1);
+    });
+    bench("huffman decode", Some(n as f64), || {
+        std::hint::black_box(huff.decode(&encoded, symbols.len()).len());
+    });
+
+    let model = RansModel::from_counts(&counts);
+    let renc = rans_encode(&model, &symbols);
+    println!("  rans rate {:.4} b/sym", renc.len() as f64 * 8.0 / n as f64);
+    bench("rans encode", Some(n as f64), || {
+        std::hint::black_box(rans_encode(&model, &symbols).len());
+    });
+    bench("rans decode", Some(n as f64), || {
+        std::hint::black_box(rans_decode(&model, &renc, symbols.len()).len());
+    });
+}

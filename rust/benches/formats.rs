@@ -1,0 +1,42 @@
+//! Bench: the quantise→dequantise hot path per element format — the L3
+//! side of the paper's efficiency story (EXPERIMENTS.md §Perf).
+//!
+//! One row per format family at b=4, block absmax B=128 where applicable;
+//! throughput in Melem/s over a 4M-element Student-t tensor.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::bench;
+
+use owf::coordinator::config::Scheme;
+use owf::dist::{Dist, Family};
+use owf::eval::pipeline::qdq_tensor;
+use owf::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let n = 1 << 22;
+    let mut rng = Rng::new(1);
+    let data = Dist::standard(Family::StudentT, 5.0).sample_vec(&mut rng, n);
+    println!("qdq hot path, {n} elements:");
+    for spec in [
+        "int@4:block128-absmax",
+        "int@8:block128-absmax",
+        "cbrt-t5@4:block128-absmax",
+        "cbrt-t5@4:block128-signmax",
+        "nf@4:block128-absmax",
+        "e2m1@4:block128-absmax",
+        "cbrt-t5@4:tensor-rms",
+        "cbrt-t5@4:channel-absmax",
+        "int@4:block128-absmax:sparse0.001",
+        "grid@4:tensor-rms:compress",
+    ] {
+        let scheme = Scheme::parse(spec)?;
+        bench(spec, Some(n as f64), || {
+            let out =
+                qdq_tensor(&scheme, &data, &[n / 1024, 1024], Some(1), &[], 1)
+                    .unwrap();
+            std::hint::black_box(out.sq_err);
+        });
+    }
+    Ok(())
+}

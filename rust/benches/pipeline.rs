@@ -1,0 +1,56 @@
+//! Bench: end-to-end direct-cast of a full checkpoint (quantise every
+//! tensor + PJRT forward + top-k KL) — the fig.-1 inner loop, and the
+//! number EXPERIMENTS.md §Perf tracks for the whole stack.
+//!
+//! Requires `make artifacts`; exits quietly otherwise.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::bench;
+
+use owf::coordinator::config::Scheme;
+use owf::eval::llm::Env;
+use owf::eval::RunOpts;
+
+fn main() -> anyhow::Result<()> {
+    let opts = RunOpts {
+        eval_seqs: 16,
+        ..Default::default()
+    };
+    let Ok(mut env) = Env::open(opts) else {
+        println!("artifacts missing; run `make artifacts` first");
+        return Ok(());
+    };
+    for size in ["s", "m"] {
+        let n_params = env.checkpoint(size)?.config.n_params;
+        // warm the ref-logits cache so the bench isolates the test path
+        env.ref_logits(size)?;
+        for spec in [
+            "cbrt-t7@4:block128-absmax",
+            "grid@4:tensor-rms:compress",
+        ] {
+            let scheme = Scheme::parse(spec)?;
+            bench(
+                &format!("direct-cast {size} {spec}"),
+                Some(n_params as f64),
+                || {
+                    let p =
+                        env.direct_cast(size, &scheme, None, false).unwrap();
+                    std::hint::black_box(p.kl.mean);
+                },
+            );
+        }
+        // quantise-only (no PJRT) to split the cost
+        let scheme = Scheme::parse("cbrt-t7@4:block128-absmax")?;
+        bench(
+            &format!("quantise-only {size}"),
+            Some(n_params as f64),
+            || {
+                let (p, _, _) =
+                    env.quantise(size, &scheme, None, false).unwrap();
+                std::hint::black_box(p.len());
+            },
+        );
+    }
+    Ok(())
+}

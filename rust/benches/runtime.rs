@@ -1,0 +1,52 @@
+//! Bench: PJRT execution latency per artifact — forward pass, Fisher batch
+//! and the Pallas qdq kernel, isolating the L1/L2 cost from L3.
+//!
+//! Requires `make artifacts`; exits quietly otherwise.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::bench;
+
+use owf::runtime::model::{Checkpoint, TokenSplit};
+use owf::runtime::{Runtime, Value};
+
+fn main() -> anyhow::Result<()> {
+    let Ok(rt) = Runtime::open_default() else {
+        println!("artifacts missing; run `make artifacts` first");
+        return Ok(());
+    };
+
+    // Pallas qdq kernel (as lowered HLO)
+    let info = rt.artifact("qdq_block_absmax")?.clone();
+    let n = info.inputs[0].numel();
+    let x: Vec<f32> = (0..n).map(|i| (i % 97) as f32 * 0.02 - 1.0).collect();
+    let cb: Vec<f32> = (0..info.inputs[1].numel())
+        .map(|i| -1.0 + i as f32 / 8.0)
+        .collect();
+    bench("pjrt qdq_block_absmax (512k elems)", Some(n as f64), || {
+        let out = rt
+            .execute_f32("qdq_block_absmax", &[Value::F32(&x), Value::F32(&cb)])
+            .unwrap();
+        std::hint::black_box(out[0][0]);
+    });
+
+    // model forward per size
+    for size in ["s", "m", "l"] {
+        let ck = Checkpoint::load(&rt, size)?;
+        let toks = TokenSplit::load(&rt, size, "eval")?;
+        let runner =
+            owf::runtime::ModelRunner::new(&rt, size, ck.config.clone())?;
+        let params = ck.params();
+        let batch_tokens = toks.take(runner.batch).to_vec();
+        let tokens_per_call = (runner.batch * ck.config.seq_len) as f64;
+        bench(
+            &format!("pjrt model_fwd_{size} (batch {})", runner.batch),
+            Some(tokens_per_call),
+            || {
+                let l = runner.logits(&params, &batch_tokens).unwrap();
+                std::hint::black_box(l.len());
+            },
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,318 @@
+//! Variable bit-width allocation across parameter tensors (§2.4, eq. 5,
+//! appendix B.5).
+//!
+//! ```text
+//! b*_t = b⁰ + log2 RMS(θ_t) + ½ log2 f̄_t
+//! ```
+//!
+//! with b⁰ chosen (here by bisection, with [min,max] clamping) to satisfy
+//! the model-level average-bits constraint Σ N_t·b_t ≤ b·Σ N_t.  Also
+//! implements the paper's baselines: flat allocation and the *heuristic*
+//! scheme of fig. 30 (+2 bits to the first/last two layers and the
+//! embedding/head), which the paper shows performs poorly.
+
+/// Per-tensor inputs to the allocator.
+#[derive(Clone, Debug)]
+pub struct TensorInfo {
+    pub name: String,
+    pub numel: usize,
+    pub rms: f64,
+    /// Mean of the Fisher diagonal over the tensor (f̄_t).
+    pub fisher_mean: f64,
+}
+
+/// An allocation: bits per tensor, same order as the input.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    pub bits: Vec<f64>,
+    pub average: f64,
+}
+
+/// Allocation strategy (fig. 6 / fig. 30 comparisons).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocScheme {
+    Flat,
+    /// eq. (5) Fisher + RMS optimal.
+    Variable,
+    /// +2 bits to first/last 2 layers, embedding and head (fig. 30).
+    Heuristic,
+}
+
+/// Bounds applied to per-tensor bit widths (formats exist for 2..=8 bits;
+/// fractional values are meaningful for √[3]p/grid formats, rounded for
+/// integer-LUT formats by the caller).
+pub const MIN_BITS: f64 = 1.0;
+pub const MAX_BITS: f64 = 16.0;
+
+/// Compute the eq.-(5) allocation for an average budget of `target_bits`.
+pub fn variable_allocation(
+    tensors: &[TensorInfo],
+    target_bits: f64,
+) -> Allocation {
+    assert!(!tensors.is_empty());
+    // offsets o_t = log2 rms + 0.5 log2 fisher (guard degenerate stats)
+    let offsets: Vec<f64> = tensors
+        .iter()
+        .map(|t| {
+            let rms = t.rms.max(1e-30);
+            let f = t.fisher_mean.max(1e-30);
+            rms.log2() + 0.5 * f.log2()
+        })
+        .collect();
+    let total: f64 = tensors.iter().map(|t| t.numel as f64).sum();
+    let avg = |b0: f64| -> f64 {
+        tensors
+            .iter()
+            .zip(&offsets)
+            .map(|(t, o)| {
+                (b0 + o).clamp(MIN_BITS, MAX_BITS) * t.numel as f64
+            })
+            .sum::<f64>()
+            / total
+    };
+    // bisection on b0 (avg is monotone in b0)
+    let (mut lo, mut hi) = (-80.0f64, 80.0f64);
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if avg(mid) < target_bits {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let b0 = 0.5 * (lo + hi);
+    let bits: Vec<f64> = offsets
+        .iter()
+        .map(|o| (b0 + o).clamp(MIN_BITS, MAX_BITS))
+        .collect();
+    let average = avg(b0);
+    Allocation { bits, average }
+}
+
+/// Flat allocation at exactly `target_bits`.
+pub fn flat_allocation(tensors: &[TensorInfo], target_bits: f64) -> Allocation {
+    Allocation {
+        bits: vec![target_bits; tensors.len()],
+        average: target_bits,
+    }
+}
+
+/// The fig.-30 heuristic: +2 bits for embed/head and the first/last two
+/// layers, with the base level set to hit the average budget.
+pub fn heuristic_allocation(
+    tensors: &[TensorInfo],
+    target_bits: f64,
+    n_layers: usize,
+) -> Allocation {
+    let boosted: Vec<bool> = tensors
+        .iter()
+        .map(|t| is_boosted(&t.name, n_layers))
+        .collect();
+    let total: f64 = tensors.iter().map(|t| t.numel as f64).sum();
+    let boosted_n: f64 = tensors
+        .iter()
+        .zip(&boosted)
+        .filter(|(_, &b)| b)
+        .map(|(t, _)| t.numel as f64)
+        .sum();
+    // base + 2·(boosted fraction) = target
+    let base = target_bits - 2.0 * boosted_n / total;
+    let bits: Vec<f64> = boosted
+        .iter()
+        .map(|&b| {
+            (if b { base + 2.0 } else { base }).clamp(MIN_BITS, MAX_BITS)
+        })
+        .collect();
+    let average = bits
+        .iter()
+        .zip(tensors)
+        .map(|(b, t)| b * t.numel as f64)
+        .sum::<f64>()
+        / total;
+    Allocation { bits, average }
+}
+
+fn is_boosted(name: &str, n_layers: usize) -> bool {
+    if name == "embed_tokens" || name == "lm_head" {
+        return true;
+    }
+    if let Some(rest) = name.strip_prefix("layers.") {
+        if let Some(idx) = rest.split('.').next() {
+            if let Ok(i) = idx.parse::<usize>() {
+                return i < 2 || i + 2 >= n_layers;
+            }
+        }
+    }
+    false
+}
+
+/// Round an allocation to integer bits while preserving the budget:
+/// floor everything, then promote the tensors with the largest fractional
+/// part until the average budget is used up (largest-remainder method).
+pub fn round_allocation(
+    tensors: &[TensorInfo],
+    alloc: &Allocation,
+    target_bits: f64,
+) -> Allocation {
+    let total: f64 = tensors.iter().map(|t| t.numel as f64).sum();
+    let mut bits: Vec<f64> =
+        alloc.bits.iter().map(|b| b.floor()).collect();
+    let mut used: f64 = bits
+        .iter()
+        .zip(tensors)
+        .map(|(b, t)| b * t.numel as f64)
+        .sum();
+    let budget = target_bits * total;
+    let mut order: Vec<usize> = (0..bits.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = alloc.bits[a] - alloc.bits[a].floor();
+        let fb = alloc.bits[b] - alloc.bits[b].floor();
+        fb.partial_cmp(&fa).unwrap()
+    });
+    for &i in &order {
+        let cost = tensors[i].numel as f64;
+        if used + cost <= budget + 1e-9 {
+            bits[i] += 1.0;
+            used += cost;
+        }
+    }
+    Allocation {
+        average: used / total,
+        bits,
+    }
+}
+
+/// Predicted KL from eq. (3) + Zador: ½ Σ N_t f̄_t ε² RMS² 2^(−2b_t)
+/// (constant ε dropped — useful for *comparing* allocations).
+pub fn predicted_kl(tensors: &[TensorInfo], alloc: &Allocation) -> f64 {
+    tensors
+        .iter()
+        .zip(&alloc.bits)
+        .map(|(t, &b)| {
+            0.5 * t.numel as f64
+                * t.fisher_mean
+                * t.rms
+                * t.rms
+                * 2f64.powf(-2.0 * b)
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(name: &str, numel: usize, rms: f64, fisher: f64) -> TensorInfo {
+        TensorInfo {
+            name: name.into(),
+            numel,
+            rms,
+            fisher_mean: fisher,
+        }
+    }
+
+    fn example() -> Vec<TensorInfo> {
+        vec![
+            mk("embed_tokens", 1000, 0.02, 1e-6),
+            mk("layers.0.self_attn.v_proj", 500, 0.05, 1e-3),
+            mk("layers.1.mlp.down_proj", 2000, 0.03, 1e-5),
+            mk("lm_head", 1000, 0.04, 1e-4),
+        ]
+    }
+
+    #[test]
+    fn budget_respected() {
+        let tensors = example();
+        for target in [3.0, 4.0, 6.0] {
+            let a = variable_allocation(&tensors, target);
+            assert!(
+                (a.average - target).abs() < 1e-6,
+                "target {target}: avg {}",
+                a.average
+            );
+        }
+    }
+
+    #[test]
+    fn four_x_fisher_is_one_more_bit() {
+        // the paper's intuition: 4× Fisher ⇒ +1 bit
+        let tensors = vec![
+            mk("a", 1000, 0.1, 4e-4),
+            mk("b", 1000, 0.1, 1e-4),
+        ];
+        let a = variable_allocation(&tensors, 8.0);
+        assert!(
+            (a.bits[0] - a.bits[1] - 1.0).abs() < 1e-9,
+            "{:?}",
+            a.bits
+        );
+    }
+
+    #[test]
+    fn monotone_in_fisher_and_rms() {
+        let tensors = example();
+        let a = variable_allocation(&tensors, 4.0);
+        // v_proj has the highest fisher — should get the most bits
+        let vmax = a.bits[1];
+        for (i, b) in a.bits.iter().enumerate() {
+            if i != 1 {
+                assert!(vmax >= *b, "{:?}", a.bits);
+            }
+        }
+    }
+
+    #[test]
+    fn clamping_still_meets_budget_when_feasible() {
+        let tensors = vec![
+            mk("a", 100, 1e-9, 1e-12), // will clamp to MIN_BITS
+            mk("b", 100, 1.0, 1.0),
+        ];
+        let a = variable_allocation(&tensors, 6.0);
+        assert!((a.average - 6.0).abs() < 1e-6, "avg {}", a.average);
+        assert_eq!(a.bits[0], MIN_BITS);
+    }
+
+    #[test]
+    fn heuristic_boosts_right_tensors() {
+        let tensors = vec![
+            mk("embed_tokens", 100, 0.1, 1e-4),
+            mk("layers.0.mlp.up_proj", 100, 0.1, 1e-4),
+            mk("layers.3.mlp.up_proj", 100, 0.1, 1e-4),
+            mk("layers.5.mlp.up_proj", 100, 0.1, 1e-4),
+            mk("lm_head", 100, 0.1, 1e-4),
+        ];
+        let a = heuristic_allocation(&tensors, 4.0, 8);
+        assert!((a.average - 4.0).abs() < 1e-9);
+        // layer 3 and 5 of 8 are not boosted
+        assert!(a.bits[0] > a.bits[2]);
+        assert!((a.bits[0] - a.bits[2] - 2.0).abs() < 1e-9);
+        assert_eq!(a.bits[2], a.bits[3]);
+        assert!(a.bits[4] > a.bits[2]);
+    }
+
+    #[test]
+    fn rounding_preserves_budget_and_integrality() {
+        let tensors = example();
+        let a = variable_allocation(&tensors, 4.0);
+        let r = round_allocation(&tensors, &a, 4.0);
+        assert!(r.average <= 4.0 + 1e-9);
+        assert!(r.average > 3.0);
+        for b in &r.bits {
+            assert_eq!(b.fract(), 0.0);
+        }
+    }
+
+    #[test]
+    fn variable_beats_flat_on_predicted_kl() {
+        // the whole point of eq. (5)
+        let tensors = example();
+        let flat = flat_allocation(&tensors, 4.0);
+        let var = variable_allocation(&tensors, 4.0);
+        let kl_flat = predicted_kl(&tensors, &flat);
+        let kl_var = predicted_kl(&tensors, &var);
+        assert!(
+            kl_var < kl_flat,
+            "variable {kl_var} should beat flat {kl_flat}"
+        );
+    }
+}

@@ -1,0 +1,340 @@
+//! Canonical Huffman coding (Huffman 1952), the practical entropy coder the
+//! paper shows reaches near-optimal compression (figs. 8, 24).
+//!
+//! * Code construction: package-merge-free classic two-queue algorithm over
+//!   sorted counts (O(n log n)), then canonicalisation (codes assigned in
+//!   (length, symbol) order) so the decoder needs only the length table.
+//! * Encode/decode: a plain bit-packed stream; decoding walks a flat
+//!   first-code table (per-length offsets), O(1) table memory.
+
+/// A canonical Huffman code over `n` symbols.
+#[derive(Clone, Debug)]
+pub struct HuffmanCode {
+    /// Code length per symbol (0 = symbol never occurs).
+    pub lengths: Vec<u8>,
+    /// Canonical codeword per symbol (valid when length > 0).
+    pub codes: Vec<u32>,
+}
+
+impl HuffmanCode {
+    /// Build from symbol counts. Zero-count symbols get no code.
+    pub fn from_counts(counts: &[u64]) -> HuffmanCode {
+        let n = counts.len();
+        assert!(n >= 1);
+        let active: Vec<usize> =
+            (0..n).filter(|&i| counts[i] > 0).collect();
+        let mut lengths = vec![0u8; n];
+        match active.len() {
+            0 => {}
+            1 => lengths[active[0]] = 1,
+            _ => {
+                // two-queue Huffman over sorted leaf weights
+                let mut leaves: Vec<(u64, usize)> =
+                    active.iter().map(|&i| (counts[i], i)).collect();
+                leaves.sort();
+                // node: (weight, id); children map for internal nodes
+                let mut children: Vec<(i64, i64)> = Vec::new();
+                let mut q1: std::collections::VecDeque<(u64, i64)> = leaves
+                    .iter()
+                    .map(|&(w, i)| (w, i as i64))
+                    .collect();
+                let mut q2: std::collections::VecDeque<(u64, i64)> =
+                    std::collections::VecDeque::new();
+                let pop_min =
+                    |q1: &mut std::collections::VecDeque<(u64, i64)>,
+                     q2: &mut std::collections::VecDeque<(u64, i64)>| {
+                        match (q1.front(), q2.front()) {
+                            (Some(&a), Some(&b)) => {
+                                if a.0 <= b.0 {
+                                    q1.pop_front().unwrap()
+                                } else {
+                                    q2.pop_front().unwrap()
+                                }
+                            }
+                            (Some(_), None) => q1.pop_front().unwrap(),
+                            (None, Some(_)) => q2.pop_front().unwrap(),
+                            (None, None) => unreachable!(),
+                        }
+                    };
+                while q1.len() + q2.len() > 1 {
+                    let a = pop_min(&mut q1, &mut q2);
+                    let b = pop_min(&mut q1, &mut q2);
+                    let id = !(children.len() as i64); // negative ids
+                    children.push((a.1, b.1));
+                    q2.push_back((a.0 + b.0, id));
+                }
+                // depth-first depth assignment
+                let root = pop_min(&mut q1, &mut q2).1;
+                let mut stack = vec![(root, 0u8)];
+                while let Some((node, depth)) = stack.pop() {
+                    if node >= 0 {
+                        lengths[node as usize] = depth.max(1);
+                    } else {
+                        let (l, r) = children[(!node) as usize];
+                        stack.push((l, depth + 1));
+                        stack.push((r, depth + 1));
+                    }
+                }
+            }
+        }
+        let codes = canonical_codes(&lengths);
+        HuffmanCode { lengths, codes }
+    }
+
+    /// Mean code length (bits/symbol) under the given counts.
+    pub fn mean_bits(&self, counts: &[u64]) -> f64 {
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let bits: f64 = counts
+            .iter()
+            .zip(&self.lengths)
+            .map(|(&c, &l)| c as f64 * l as f64)
+            .sum();
+        bits / total as f64
+    }
+
+    /// Encode a symbol stream to a bit-packed vector; returns (bytes, bit
+    /// count).
+    pub fn encode(&self, symbols: &[u16]) -> (Vec<u8>, u64) {
+        let mut out = Vec::with_capacity(symbols.len() / 2);
+        let mut acc: u64 = 0;
+        let mut nbits: u32 = 0;
+        let mut total: u64 = 0;
+        for &s in symbols {
+            let len = self.lengths[s as usize] as u32;
+            assert!(len > 0, "symbol {s} has no code");
+            // emit the canonical code MSB-first: reverse its bits so the
+            // LSB-first packer puts the MSB on the wire first
+            let code = reverse_bits(self.codes[s as usize], len) as u64;
+            acc |= code << nbits;
+            nbits += len;
+            total += len as u64;
+            while nbits >= 8 {
+                out.push((acc & 0xFF) as u8);
+                acc >>= 8;
+                nbits -= 8;
+            }
+        }
+        if nbits > 0 {
+            out.push((acc & 0xFF) as u8);
+        }
+        (out, total)
+    }
+
+    /// Decode `count` symbols.
+    pub fn decode(&self, data: &[u8], count: usize) -> Vec<u16> {
+        // canonical decode tables: for each length, (first_code, first_index)
+        let max_len = *self.lengths.iter().max().unwrap_or(&0) as usize;
+        // symbols sorted by (length, symbol)
+        let mut order: Vec<u16> = (0..self.lengths.len() as u16)
+            .filter(|&s| self.lengths[s as usize] > 0)
+            .collect();
+        order.sort_by_key(|&s| (self.lengths[s as usize], s));
+        let mut first_code = vec![0u32; max_len + 2];
+        let mut first_idx = vec![0usize; max_len + 2];
+        {
+            let mut code = 0u32;
+            let mut idx = 0usize;
+            for len in 1..=max_len {
+                first_code[len] = code;
+                first_idx[len] = idx;
+                while idx < order.len()
+                    && self.lengths[order[idx] as usize] as usize == len
+                {
+                    code += 1;
+                    idx += 1;
+                }
+                code <<= 1;
+            }
+        }
+        let mut out = Vec::with_capacity(count);
+        let mut bitpos = 0usize;
+        for _ in 0..count {
+            // canonical codes are MSB-first in (length, rank) order, but we
+            // packed LSB-first per codeword; read bits one at a time
+            let mut code = 0u32;
+            let mut len = 0usize;
+            loop {
+                let byte = data[bitpos >> 3];
+                let bit = (byte >> (bitpos & 7)) & 1;
+                bitpos += 1;
+                code = (code << 1) | bit as u32;
+                len += 1;
+                debug_assert!(len <= max_len, "corrupt stream");
+                // candidate: rank within this length
+                let rank = code.wrapping_sub(first_code[len]);
+                let start = first_idx[len];
+                let within = code >= first_code[len]
+                    && (rank as usize) < order.len() - start
+                    && self.lengths[order[start + rank as usize] as usize]
+                        as usize
+                        == len;
+                if within {
+                    out.push(order[start + rank as usize]);
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[inline]
+fn reverse_bits(code: u32, len: u32) -> u32 {
+    code.reverse_bits() >> (32 - len)
+}
+
+/// Canonical code assignment from lengths: codes in (length, symbol) order.
+fn canonical_codes(lengths: &[u8]) -> Vec<u32> {
+    let mut order: Vec<u16> = (0..lengths.len() as u16)
+        .filter(|&s| lengths[s as usize] > 0)
+        .collect();
+    order.sort_by_key(|&s| (lengths[s as usize], s));
+    let mut codes = vec![0u32; lengths.len()];
+    let mut code = 0u32;
+    let mut prev_len = 0u8;
+    for &s in &order {
+        let len = lengths[s as usize];
+        code <<= (len - prev_len) as u32;
+        codes[s as usize] = code;
+        code += 1;
+        prev_len = len;
+    }
+    codes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::entropy_bits;
+    use crate::util::rng::Rng;
+    use crate::util::testing::{check, Gen};
+
+    fn stream_from_counts(counts: &[u64], rng: &mut Rng) -> Vec<u16> {
+        let mut symbols = Vec::new();
+        for (s, &c) in counts.iter().enumerate() {
+            for _ in 0..c {
+                symbols.push(s as u16);
+            }
+        }
+        rng.shuffle(&mut symbols);
+        symbols
+    }
+
+    #[test]
+    fn roundtrip_simple() {
+        let counts = [10u64, 5, 2, 1];
+        let code = HuffmanCode::from_counts(&counts);
+        let mut rng = Rng::new(1);
+        let symbols = stream_from_counts(&counts, &mut rng);
+        let (bytes, _) = code.encode(&symbols);
+        let decoded = code.decode(&bytes, symbols.len());
+        assert_eq!(decoded, symbols);
+    }
+
+    #[test]
+    fn kraft_inequality_and_prefix_free() {
+        let counts = [7u64, 1, 1, 3, 9, 2, 4, 4, 0, 30];
+        let code = HuffmanCode::from_counts(&counts);
+        let kraft: f64 = code
+            .lengths
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32)))
+            .sum();
+        assert!(kraft <= 1.0 + 1e-12, "kraft {kraft}");
+        // prefix-freeness: no canonical code is a prefix of another
+        let active: Vec<usize> = (0..counts.len())
+            .filter(|&i| code.lengths[i] > 0)
+            .collect();
+        for &a in &active {
+            for &b in &active {
+                if a == b {
+                    continue;
+                }
+                let (la, lb) =
+                    (code.lengths[a] as u32, code.lengths[b] as u32);
+                if la <= lb {
+                    assert_ne!(
+                        code.codes[a],
+                        code.codes[b] >> (lb - la),
+                        "code {a} prefixes {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn within_one_bit_of_entropy() {
+        // Huffman's classic guarantee: H <= mean bits < H + 1
+        let counts = [1000u64, 500, 250, 125, 125, 60, 30, 10];
+        let code = HuffmanCode::from_counts(&counts);
+        let h = entropy_bits(&counts);
+        let mean = code.mean_bits(&counts);
+        assert!(mean >= h - 1e-9, "{mean} < {h}");
+        assert!(mean < h + 1.0, "{mean} >= {h} + 1");
+    }
+
+    #[test]
+    fn single_symbol_alphabet() {
+        let counts = [42u64];
+        let code = HuffmanCode::from_counts(&counts);
+        let symbols = vec![0u16; 10];
+        let (bytes, bits) = code.encode(&symbols);
+        assert_eq!(bits, 10);
+        assert_eq!(code.decode(&bytes, 10), symbols);
+    }
+
+    #[test]
+    fn skewed_distribution_roundtrip_property() {
+        check("huffman-roundtrip", 40, |g: &mut Gen| {
+            let n_symbols = 2 + g.rng.below(30);
+            let counts: Vec<u64> = (0..n_symbols)
+                .map(|_| {
+                    if g.rng.f64() < 0.2 {
+                        0
+                    } else {
+                        (g.rng.f64_open().powi(-2) as u64).min(10_000) + 1
+                    }
+                })
+                .collect();
+            if counts.iter().all(|&c| c == 0) {
+                return;
+            }
+            let code = HuffmanCode::from_counts(&counts);
+            let mut stream = stream_from_counts(&counts, &mut g.rng);
+            stream.truncate(500);
+            let (bytes, _) = code.encode(&stream);
+            assert_eq!(code.decode(&bytes, stream.len()), stream);
+        });
+    }
+
+    #[test]
+    fn near_optimal_on_quantised_normal() {
+        // fig. 24 analogue: elementwise Huffman within ~2% of entropy for a
+        // 6-bit uniform grid over Normal samples
+        let mut rng = Rng::new(3);
+        let grid: Vec<u16> = (0..200_000)
+            .map(|_| {
+                let x = rng.normal();
+                ((x * 8.0).round().clamp(-31.0, 31.0) + 32.0) as u16
+            })
+            .collect();
+        let mut counts = vec![0u64; 64];
+        for &s in &grid {
+            counts[s as usize] += 1;
+        }
+        let code = HuffmanCode::from_counts(&counts);
+        let h = entropy_bits(&counts);
+        let mean = code.mean_bits(&counts);
+        assert!(mean < h * 1.02 + 0.03, "mean {mean} vs entropy {h}");
+        // and the actual encoded size matches mean_bits
+        let (_, bits) = code.encode(&grid);
+        assert!(
+            ((bits as f64 / grid.len() as f64) - mean).abs() < 1e-9
+        );
+    }
+}

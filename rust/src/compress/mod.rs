@@ -1,0 +1,117 @@
+//! Lossless compression of quantised data (§2.3): the Shannon-limit entropy
+//! model, a canonical Huffman coder, a range-Asymmetric-Numeral-System
+//! coder, and the entropy-constrained uniform-grid quantiser that is optimal
+//! when followed by a lossless compressor (appendix B.3).
+
+pub mod grid;
+pub mod huffman;
+pub mod rans;
+
+/// Shannon entropy (bits/symbol) of a count histogram.
+pub fn entropy_bits(counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let n = total as f64;
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Cross-entropy (bits/symbol) of data with histogram `counts` coded under a
+/// (+1-smoothed) model built from `model_counts` — the achievable rate with
+/// a stale/sampled model, as in §C's sampling-based `p^Q`.
+pub fn cross_entropy_bits(counts: &[u64], model_counts: &[u64]) -> f64 {
+    assert_eq!(counts.len(), model_counts.len());
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let n = total as f64;
+    let model = smoothed_probs(model_counts);
+    counts
+        .iter()
+        .zip(&model)
+        .filter(|(&c, _)| c > 0)
+        .map(|(&c, &q)| {
+            let p = c as f64 / n;
+            -p * q.log2()
+        })
+        .sum()
+}
+
+/// +1-smoothed probability model from counts (§C "use +1 smoothing of the
+/// counts to avoid zeros").
+pub fn smoothed_probs(counts: &[u64]) -> Vec<f64> {
+    let total: u64 = counts.iter().sum();
+    let denom = total as f64 + counts.len() as f64;
+    counts
+        .iter()
+        .map(|&c| (c + 1) as f64 / denom)
+        .collect()
+}
+
+/// Information content Σ -log2 p(symbol) of a symbol stream under a model
+/// (§2.3: I(q) = Σ -log2 p^Q(q_i)); assumes an optimal compressor at the
+/// Shannon limit.
+pub fn information_content(symbols: &[u16], probs: &[f64]) -> f64 {
+    symbols
+        .iter()
+        .map(|&s| -probs[s as usize].log2())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_basics() {
+        assert_eq!(entropy_bits(&[0, 0, 0]), 0.0);
+        assert_eq!(entropy_bits(&[5, 0, 0]), 0.0);
+        assert!((entropy_bits(&[1, 1]) - 1.0).abs() < 1e-12);
+        assert!((entropy_bits(&[1, 1, 1, 1]) - 2.0).abs() < 1e-12);
+        // H(0.9, 0.1) ≈ 0.469
+        assert!((entropy_bits(&[9, 1]) - 0.4689955935892812).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cross_entropy_ge_entropy() {
+        let counts = [50u64, 30, 15, 5];
+        let model = [25u64, 25, 25, 25];
+        let h = entropy_bits(&counts);
+        let ce = cross_entropy_bits(&counts, &model);
+        assert!(ce >= h - 1e-9, "ce {ce} < h {h}");
+        // matching model gets close to entropy (smoothing costs a little)
+        let ce_self = cross_entropy_bits(&counts, &counts);
+        assert!(ce_self < h + 0.1);
+    }
+
+    #[test]
+    fn smoothing_has_no_zeros() {
+        let p = smoothed_probs(&[0, 10, 0]);
+        assert!(p.iter().all(|&x| x > 0.0));
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn information_content_matches_entropy_in_expectation() {
+        let counts = [100u64, 50, 25, 25];
+        let probs = smoothed_probs(&counts);
+        let mut symbols = Vec::new();
+        for (s, &c) in counts.iter().enumerate() {
+            for _ in 0..c {
+                symbols.push(s as u16);
+            }
+        }
+        let bits = information_content(&symbols, &probs);
+        let h = entropy_bits(&counts);
+        assert!((bits / symbols.len() as f64 - h).abs() < 0.05);
+    }
+}

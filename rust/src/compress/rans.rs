@@ -1,0 +1,206 @@
+//! Range Asymmetric Numeral System (rANS) entropy coder — the second
+//! practical compressor (fig. 24 compares practical coders against the
+//! Shannon limit; rANS gets closer than Huffman on skewed distributions
+//! because it is not integer-bit constrained).
+//!
+//! 32-bit state, 8-bit renormalisation, 12-bit quantised frequencies.
+//! Symbols are encoded in reverse so decode is forward.
+
+const PROB_BITS: u32 = 12;
+const PROB_SCALE: u32 = 1 << PROB_BITS;
+const RANS_LOW: u32 = 1 << 23;
+
+/// Frequency table quantised to 2^12, with cumulative offsets.
+#[derive(Clone, Debug)]
+pub struct RansModel {
+    pub freq: Vec<u32>,
+    pub cum: Vec<u32>,
+    /// symbol lookup per slot (2^12 entries)
+    slot_to_symbol: Vec<u16>,
+}
+
+impl RansModel {
+    /// Quantise counts to a 2^12 total; every seen symbol keeps freq >= 1.
+    pub fn from_counts(counts: &[u64]) -> RansModel {
+        let n = counts.len();
+        let total: u64 = counts.iter().sum();
+        assert!(total > 0, "empty model");
+        // initial proportional shares (floor), min 1 for non-zero counts
+        let mut freq: Vec<u32> = counts
+            .iter()
+            .map(|&c| {
+                if c == 0 {
+                    0
+                } else {
+                    (((c as u128) * PROB_SCALE as u128 / total as u128)
+                        as u32)
+                        .max(1)
+                }
+            })
+            .collect();
+        // adjust to exactly PROB_SCALE by nudging the largest entries
+        let mut sum: i64 = freq.iter().map(|&f| f as i64).sum();
+        while sum != PROB_SCALE as i64 {
+            let delta: i64 = if sum > PROB_SCALE as i64 { -1 } else { 1 };
+            // pick the symbol with the largest freq (>1 when shrinking)
+            let mut best = usize::MAX;
+            for i in 0..n {
+                if freq[i] == 0 {
+                    continue;
+                }
+                if delta < 0 && freq[i] <= 1 {
+                    continue;
+                }
+                if best == usize::MAX || freq[i] > freq[best] {
+                    best = i;
+                }
+            }
+            assert!(best != usize::MAX, "cannot normalise model");
+            freq[best] = (freq[best] as i64 + delta) as u32;
+            sum += delta;
+        }
+        let mut cum = vec![0u32; n + 1];
+        for i in 0..n {
+            cum[i + 1] = cum[i] + freq[i];
+        }
+        let mut slot_to_symbol = vec![0u16; PROB_SCALE as usize];
+        for s in 0..n {
+            for slot in cum[s]..cum[s + 1] {
+                slot_to_symbol[slot as usize] = s as u16;
+            }
+        }
+        RansModel {
+            freq,
+            cum,
+            slot_to_symbol,
+        }
+    }
+}
+
+/// Encode a symbol stream; returns the compressed bytes.
+pub fn rans_encode(model: &RansModel, symbols: &[u16]) -> Vec<u8> {
+    let mut out: Vec<u8> = Vec::with_capacity(symbols.len());
+    let mut state: u32 = RANS_LOW;
+    // encode in reverse so the decoder emits forward
+    for &s in symbols.iter().rev() {
+        let f = model.freq[s as usize];
+        assert!(f > 0, "symbol {s} not in model");
+        let c = model.cum[s as usize];
+        // renormalise: keep state < (RANS_LOW >> PROB_BITS << 8) * f
+        let x_max = ((RANS_LOW >> PROB_BITS) << 8) * f;
+        while state >= x_max {
+            out.push((state & 0xFF) as u8);
+            state >>= 8;
+        }
+        state = (state / f) * PROB_SCALE + (state % f) + c;
+    }
+    // flush 4 state bytes
+    for _ in 0..4 {
+        out.push((state & 0xFF) as u8);
+        state >>= 8;
+    }
+    out.reverse();
+    out
+}
+
+/// Decode `count` symbols.
+pub fn rans_decode(model: &RansModel, data: &[u8], count: usize) -> Vec<u16> {
+    let mut pos = 0usize;
+    let mut state: u32 = 0;
+    for _ in 0..4 {
+        state = (state << 8) | data[pos] as u32;
+        pos += 1;
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let slot = state & (PROB_SCALE - 1);
+        let s = model.slot_to_symbol[slot as usize];
+        out.push(s);
+        let f = model.freq[s as usize];
+        let c = model.cum[s as usize];
+        state = f * (state >> PROB_BITS) + slot - c;
+        while state < RANS_LOW && pos < data.len() {
+            state = (state << 8) | data[pos] as u32;
+            pos += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::entropy_bits;
+    use crate::util::rng::Rng;
+    use crate::util::testing::{check, Gen};
+
+    fn random_stream(
+        counts: &[u64],
+        len: usize,
+        rng: &mut Rng,
+    ) -> Vec<u16> {
+        let w: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+        (0..len).map(|_| rng.categorical(&w) as u16).collect()
+    }
+
+    #[test]
+    fn model_normalises_exactly() {
+        let m = RansModel::from_counts(&[3, 0, 1, 1000, 7]);
+        assert_eq!(m.freq.iter().sum::<u32>(), PROB_SCALE);
+        assert_eq!(m.freq[1], 0);
+        assert!(m.freq.iter().enumerate().all(|(i, &f)| f >= 1 || i == 1));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let counts = [100u64, 37, 4, 1, 220];
+        let model = RansModel::from_counts(&counts);
+        let mut rng = Rng::new(1);
+        let stream = random_stream(&counts, 10_000, &mut rng);
+        let enc = rans_encode(&model, &stream);
+        let dec = rans_decode(&model, &enc, stream.len());
+        assert_eq!(dec, stream);
+    }
+
+    #[test]
+    fn compression_near_entropy() {
+        // on a very skewed distribution rANS should land within ~2% of H
+        let counts = [10_000u64, 500, 100, 20, 5, 1];
+        let model = RansModel::from_counts(&counts);
+        let mut rng = Rng::new(2);
+        let stream = random_stream(&counts, 100_000, &mut rng);
+        let mut sc = vec![0u64; counts.len()];
+        for &s in &stream {
+            sc[s as usize] += 1;
+        }
+        let h = entropy_bits(&sc);
+        let enc = rans_encode(&model, &stream);
+        let rate = enc.len() as f64 * 8.0 / stream.len() as f64;
+        assert!(
+            rate < h * 1.03 + 0.05,
+            "rate {rate} vs entropy {h}"
+        );
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        check("rans-roundtrip", 30, |g: &mut Gen| {
+            let n_symbols = 2 + g.rng.below(40);
+            let counts: Vec<u64> = (0..n_symbols)
+                .map(|_| g.rng.below(1000) as u64 + 1)
+                .collect();
+            let model = RansModel::from_counts(&counts);
+            let len = 1 + g.rng.below(2000);
+            let stream = random_stream(&counts, len, &mut g.rng);
+            let enc = rans_encode(&model, &stream);
+            assert_eq!(rans_decode(&model, &enc, len), stream);
+        });
+    }
+
+    #[test]
+    fn empty_stream() {
+        let model = RansModel::from_counts(&[1, 1]);
+        let enc = rans_encode(&model, &[]);
+        assert_eq!(rans_decode(&model, &enc, 0), Vec::<u16>::new());
+    }
+}

@@ -1,0 +1,490 @@
+//! Experiment configuration: a parseable, printable description of a full
+//! quantisation scheme (element format × scaling × extras), the unit of
+//! work the coordinator schedules and the eval harness sweeps.
+//!
+//! Spec grammar (round-trips through `name()` / `parse()`):
+//!
+//! ```text
+//!   <element>@<bits>:<granularity>-<statistic>[:<flags>]
+//!   element      = int | int-sym | e2m1 | e3m0 | ... | nf4 | sf4 | af4
+//!                | cbrt-normal | cbrt-laplace | cbrt-t[<nu>] | lloyd
+//!                | grid            (uniform grid + ideal entropy coder)
+//!   granularity  = tensor | channel | block<B>
+//!   statistic    = rms | absmax | signmax
+//!   flags        = comma list of: sym | asym | sparse<frac> | rot |
+//!                  compress | mult<x> | fisher
+//! ```
+//!
+//! e.g. `cbrt-t@4:block128-absmax`, `int@3:channel-absmax:sparse0.001`,
+//! `grid@3.5:tensor-rms:compress`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::dist::Family;
+use crate::formats::cbrt::{cbrt_absmax, cbrt_rms, CBRT_ALPHA};
+use crate::formats::float::float_codebook_normalised;
+use crate::formats::int::int_codebook;
+use crate::formats::lloyd::{LloydInit, LloydMax};
+use crate::formats::quantile::{af4, nf, sf};
+use crate::formats::{Codebook, Variant};
+use crate::scaling::{Granularity, ScaleFormat, Statistic};
+
+/// Element-format family of a scheme.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Element {
+    Int,
+    Float { exp: u32, man: u32 },
+    Cbrt { family: Family, nu: f64 },
+    Nf,
+    Sf { nu: f64 },
+    Af4,
+    Lloyd { fisher_weighted: bool },
+    /// Uniform grid + ideal entropy coder (the §2.3 compressed quantiser);
+    /// `bits` is the target rate and may be fractional.
+    Grid,
+}
+
+/// A complete scheme.
+#[derive(Clone, Debug)]
+pub struct Scheme {
+    pub element: Element,
+    pub bits: f64,
+    pub granularity: Granularity,
+    pub statistic: Statistic,
+    pub scale_format: ScaleFormat,
+    pub variant: Variant,
+    /// Sparse outlier fraction (0 = off).
+    pub sparse: f64,
+    /// Random rotations before quantisation (fig. 29).
+    pub rotate: bool,
+    /// Lossless compression of element indices (Shannon-limit model).
+    pub compress: bool,
+    /// Quantiser scale multiplier; NaN = search (fig. 23/35).
+    pub multiplier: f64,
+}
+
+impl Scheme {
+    pub fn new(element: Element, bits: f64, granularity: Granularity,
+               statistic: Statistic) -> Scheme {
+        Scheme {
+            element,
+            bits,
+            granularity,
+            statistic,
+            scale_format: crate::scaling::DEFAULT_SCALE,
+            variant: Variant::Symmetric,
+            sparse: 0.0,
+            rotate: false,
+            compress: false,
+            multiplier: 1.0,
+        }
+    }
+
+    pub fn with_variant(mut self, v: Variant) -> Scheme {
+        self.variant = v;
+        if v == Variant::Signmax {
+            self.statistic = Statistic::Signmax;
+        }
+        self
+    }
+
+    pub fn with_sparse(mut self, fraction: f64) -> Scheme {
+        self.sparse = fraction;
+        self
+    }
+
+    pub fn with_compress(mut self) -> Scheme {
+        self.compress = true;
+        self
+    }
+
+    pub fn with_rotate(mut self) -> Scheme {
+        self.rotate = true;
+        self
+    }
+
+    pub fn with_scale_format(mut self, f: ScaleFormat) -> Scheme {
+        self.scale_format = f;
+        self
+    }
+
+    pub fn with_multiplier(mut self, m: f64) -> Scheme {
+        self.multiplier = m;
+        self
+    }
+
+    /// Integer LUT width for codebook formats.
+    pub fn int_bits(&self) -> u32 {
+        self.bits.round().clamp(2.0, 12.0) as u32
+    }
+
+    /// The block size used by absmax-format constructions (their truncated
+    /// block-maximum model needs one even for channel/tensor granularity,
+    /// where the "block" is the scale-group length).
+    fn model_block(&self, group_len: usize) -> usize {
+        match self.granularity {
+            Granularity::Block(b) => b,
+            _ => group_len.max(2),
+        }
+    }
+
+    /// Build the normalised codebook for this scheme.
+    /// `data` is required for Lloyd-Max (fitted formats); `group_len` is
+    /// the scale-group length for absmax constructions.
+    pub fn build_codebook(
+        &self,
+        group_len: usize,
+        data: Option<&[f32]>,
+        weights: &[f32],
+    ) -> Result<Codebook> {
+        let bits = self.int_bits();
+        let block = self.model_block(group_len);
+        let cb = match &self.element {
+            Element::Int => int_codebook(
+                bits,
+                if self.statistic == Statistic::Signmax {
+                    Variant::Signmax
+                } else {
+                    self.variant
+                },
+            ),
+            Element::Float { exp, man } => {
+                let total = 1 + exp + man;
+                if total as f64 != bits as f64 {
+                    // allowed: caller picked e/m directly
+                }
+                float_codebook_normalised(*exp, *man)
+            }
+            Element::Cbrt { family, nu } => match self.statistic {
+                Statistic::Rms => {
+                    cbrt_rms(*family, *nu, bits, self.variant, CBRT_ALPHA)
+                }
+                Statistic::Absmax => cbrt_absmax(
+                    *family, *nu, bits, block, self.variant, CBRT_ALPHA,
+                ),
+                Statistic::Signmax => cbrt_absmax(
+                    *family, *nu, bits, block, Variant::Signmax, CBRT_ALPHA,
+                ),
+            },
+            Element::Nf => nf(bits),
+            Element::Sf { nu } => sf(bits, *nu),
+            Element::Af4 => af4(block),
+            Element::Lloyd { fisher_weighted } => {
+                let data =
+                    data.context("Lloyd-Max needs data to fit against")?;
+                // fit in *scaled* space: normalise a sample by group scales
+                let init = if self.statistic == Statistic::Rms {
+                    LloydInit::KmeansPp
+                } else {
+                    LloydInit::Uniform
+                };
+                let scaled = scale_sample(
+                    data,
+                    self.granularity,
+                    self.statistic,
+                    group_len,
+                );
+                let w = if *fisher_weighted { weights } else { &[] };
+                let mut cb = LloydMax::new(bits, init).fit(&scaled, w);
+                if self.variant == Variant::Asymmetric {
+                    cb = cb.asymmetrise();
+                }
+                cb
+            }
+            Element::Grid => bail!("grid schemes bypass codebooks"),
+        };
+        Ok(cb)
+    }
+
+    /// Canonical printable name.
+    pub fn name(&self) -> String {
+        let elem = match &self.element {
+            Element::Int => "int".to_string(),
+            Element::Float { exp, man } => format!("e{exp}m{man}"),
+            Element::Cbrt { family, nu } => match family {
+                Family::Normal => "cbrt-normal".into(),
+                Family::Laplace => "cbrt-laplace".into(),
+                Family::StudentT => format!("cbrt-t{nu}"),
+                Family::Uniform => "cbrt-uniform".into(),
+            },
+            Element::Nf => "nf".to_string(),
+            Element::Sf { nu } => format!("sf{nu}"),
+            Element::Af4 => "af4".to_string(),
+            Element::Lloyd { fisher_weighted } => {
+                if *fisher_weighted {
+                    "lloyd-fisher".into()
+                } else {
+                    "lloyd".into()
+                }
+            }
+            Element::Grid => "grid".to_string(),
+        };
+        let mut flags = Vec::new();
+        if self.variant == Variant::Asymmetric {
+            flags.push("asym".to_string());
+        }
+        if self.sparse > 0.0 {
+            flags.push(format!("sparse{}", self.sparse));
+        }
+        if self.rotate {
+            flags.push("rot".into());
+        }
+        if self.compress {
+            flags.push("compress".into());
+        }
+        if self.multiplier != 1.0 {
+            if self.multiplier.is_nan() {
+                flags.push("search".into());
+            } else {
+                flags.push(format!("mult{}", self.multiplier));
+            }
+        }
+        let base = format!(
+            "{elem}@{}:{}-{}",
+            trim_float(self.bits),
+            self.granularity.name(),
+            self.statistic.name()
+        );
+        if flags.is_empty() {
+            base
+        } else {
+            format!("{base}:{}", flags.join(","))
+        }
+    }
+
+    /// Parse the grammar documented on the module.
+    pub fn parse(spec: &str) -> Result<Scheme> {
+        let mut parts = spec.split(':');
+        let elem_bits = parts.next().context("empty spec")?;
+        let scaling = parts
+            .next()
+            .with_context(|| format!("{spec}: missing scaling section"))?;
+        let flags = parts.next().unwrap_or("");
+        if parts.next().is_some() {
+            bail!("{spec}: too many sections");
+        }
+
+        let (elem_str, bits_str) = elem_bits
+            .split_once('@')
+            .with_context(|| format!("{elem_bits}: missing @bits"))?;
+        let bits: f64 = bits_str
+            .parse()
+            .with_context(|| format!("bad bits {bits_str}"))?;
+        let element = parse_element(elem_str)?;
+
+        let (gran_str, stat_str) = scaling
+            .rsplit_once('-')
+            .with_context(|| format!("{scaling}: want <granularity>-<stat>"))?;
+        let granularity = if gran_str == "tensor" {
+            Granularity::Tensor
+        } else if gran_str == "channel" {
+            Granularity::Channel
+        } else if let Some(b) = gran_str.strip_prefix("block") {
+            Granularity::Block(b.parse().context("bad block size")?)
+        } else {
+            bail!("unknown granularity {gran_str}");
+        };
+        let statistic = match stat_str {
+            "rms" => Statistic::Rms,
+            "absmax" => Statistic::Absmax,
+            "signmax" => Statistic::Signmax,
+            other => bail!("unknown statistic {other}"),
+        };
+
+        let mut scheme = Scheme::new(element, bits, granularity, statistic);
+        if statistic == Statistic::Signmax {
+            scheme.variant = Variant::Signmax;
+        }
+        for flag in flags.split(',').filter(|f| !f.is_empty()) {
+            if flag == "sym" {
+                scheme.variant = Variant::Symmetric;
+            } else if flag == "asym" {
+                scheme.variant = Variant::Asymmetric;
+            } else if flag == "rot" {
+                scheme.rotate = true;
+            } else if flag == "compress" {
+                scheme.compress = true;
+            } else if flag == "fisher" {
+                if let Element::Lloyd { .. } = scheme.element {
+                    scheme.element = Element::Lloyd {
+                        fisher_weighted: true,
+                    };
+                }
+            } else if let Some(f) = flag.strip_prefix("sparse") {
+                scheme.sparse = f.parse().context("bad sparse fraction")?;
+            } else if let Some(m) = flag.strip_prefix("mult") {
+                scheme.multiplier = m.parse().context("bad multiplier")?;
+            } else if flag == "search" {
+                scheme.multiplier = f64::NAN;
+            } else {
+                bail!("unknown flag {flag}");
+            }
+        }
+        Ok(scheme)
+    }
+}
+
+fn parse_element(s: &str) -> Result<Element> {
+    if s == "int" {
+        return Ok(Element::Int);
+    }
+    if s == "nf" || s == "nf4" {
+        return Ok(Element::Nf);
+    }
+    if s == "af4" {
+        return Ok(Element::Af4);
+    }
+    if let Some(nu) = s.strip_prefix("sf") {
+        let nu: f64 = if nu.is_empty() || nu == "4" {
+            5.0
+        } else {
+            nu.parse().context("bad sf nu")?
+        };
+        return Ok(Element::Sf { nu });
+    }
+    if s == "lloyd" {
+        return Ok(Element::Lloyd {
+            fisher_weighted: false,
+        });
+    }
+    if s == "grid" {
+        return Ok(Element::Grid);
+    }
+    if s == "cbrt-normal" {
+        return Ok(Element::Cbrt {
+            family: Family::Normal,
+            nu: 0.0,
+        });
+    }
+    if s == "cbrt-laplace" {
+        return Ok(Element::Cbrt {
+            family: Family::Laplace,
+            nu: 0.0,
+        });
+    }
+    if let Some(nu) = s.strip_prefix("cbrt-t") {
+        let nu: f64 = if nu.is_empty() {
+            7.0
+        } else {
+            nu.parse().context("bad cbrt-t nu")?
+        };
+        return Ok(Element::Cbrt {
+            family: Family::StudentT,
+            nu,
+        });
+    }
+    // eKmM float spec
+    if let Some(rest) = s.strip_prefix('e') {
+        if let Some((e, m)) = rest.split_once('m') {
+            return Ok(Element::Float {
+                exp: e.parse().context("bad exp bits")?,
+                man: m.parse().context("bad man bits")?,
+            });
+        }
+    }
+    bail!("unknown element format {s:?}")
+}
+
+/// Normalise a sample of data by its scheme scales (for Lloyd fitting).
+fn scale_sample(
+    data: &[f32],
+    granularity: Granularity,
+    statistic: Statistic,
+    channel_len: usize,
+) -> Vec<f32> {
+    let groups =
+        crate::scaling::scale_groups(data.len(), granularity, channel_len);
+    let mut out = Vec::with_capacity(data.len());
+    for (start, len) in groups {
+        let block = &data[start..start + len];
+        let s = statistic.compute(block);
+        let s = if s == 0.0 { 1.0 } else { s };
+        out.extend(block.iter().map(|&x| x / s));
+    }
+    out
+}
+
+fn trim_float(x: f64) -> String {
+    if x.fract() == 0.0 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for spec in [
+            "cbrt-t7@4:block128-absmax",
+            "int@3:channel-absmax:sparse0.001",
+            "grid@3.5:tensor-rms:compress",
+            "e2m1@4:block64-absmax",
+            "nf@4:block64-absmax",
+            "lloyd@4:tensor-rms",
+            "cbrt-normal@5:tensor-rms:asym",
+            "int@4:block128-signmax",
+            "cbrt-laplace@4:block128-absmax:rot",
+        ] {
+            let s = Scheme::parse(spec).unwrap();
+            let name = s.name();
+            let re = Scheme::parse(&name).unwrap();
+            assert_eq!(name, re.name(), "spec {spec} → {name}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "int:tensor-rms",
+            "int@4",
+            "wat@4:tensor-rms",
+            "int@4:tensor-wat",
+            "int@4:tensor-rms:wat",
+            "int@4:blockx-rms",
+        ] {
+            assert!(Scheme::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn signmax_statistic_forces_variant() {
+        let s = Scheme::parse("int@4:block128-signmax").unwrap();
+        assert_eq!(s.variant, Variant::Signmax);
+        let cb = s.build_codebook(128, None, &[]).unwrap();
+        assert!(cb.has_zero());
+        assert_eq!(*cb.points().last().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn codebooks_build_for_all_elements() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let data: Vec<f32> =
+            (0..4096).map(|_| rng.normal() as f32).collect();
+        for spec in [
+            "int@4:block128-absmax",
+            "e2m1@4:block128-absmax",
+            "cbrt-normal@4:tensor-rms",
+            "cbrt-t5@4:block128-absmax",
+            "cbrt-laplace@3:block64-absmax",
+            "nf@4:block64-absmax",
+            "sf5@4:block64-absmax",
+            "af4@4:block64-absmax",
+            "lloyd@4:tensor-rms",
+        ] {
+            let s = Scheme::parse(spec).unwrap();
+            let cb = s.build_codebook(128, Some(&data), &[]).unwrap();
+            assert!(cb.len() >= 4, "{spec}");
+            assert!(cb.len() <= 16, "{spec}");
+        }
+    }
+
+    #[test]
+    fn grid_has_no_codebook() {
+        let s = Scheme::parse("grid@4:tensor-rms:compress").unwrap();
+        assert!(s.build_codebook(128, None, &[]).is_err());
+    }
+}

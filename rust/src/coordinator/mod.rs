@@ -1,0 +1,13 @@
+//! The experiment coordinator (L3): scheme descriptions, the job scheduler
+//! and the JSONL result store.  The paper's contribution is numeric, so the
+//! coordinator is deliberately thin — configuration, fan-out, bookkeeping —
+//! with all heavy compute in [`crate::quant`]/[`crate::eval`] (CPU) and the
+//! PJRT runtime (model evaluation).
+
+pub mod config;
+pub mod results;
+pub mod scheduler;
+
+pub use config::{Element, Scheme};
+pub use results::{fmt, Report, ResultSink};
+pub use scheduler::{run_jobs, Job, JobKind, JobResult};

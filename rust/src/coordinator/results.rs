@@ -1,0 +1,180 @@
+//! JSONL result store: every experiment the coordinator runs appends one
+//! JSON row; reports re-read them for aggregation.  Plain files, append-only,
+//! human-greppable.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Append-only JSONL sink.
+pub struct ResultSink {
+    path: PathBuf,
+}
+
+impl ResultSink {
+    pub fn open(path: impl AsRef<Path>) -> Result<ResultSink> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(ResultSink { path })
+    }
+
+    pub fn append(&self, row: &Json) -> Result<()> {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("open {:?}", self.path))?;
+        writeln!(f, "{row}")?;
+        Ok(())
+    }
+
+    pub fn read_all(&self) -> Result<Vec<Json>> {
+        if !self.path.exists() {
+            return Ok(Vec::new());
+        }
+        let text = std::fs::read_to_string(&self.path)?;
+        text.lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| Json::parse(l).map_err(anyhow::Error::from))
+            .collect()
+    }
+}
+
+/// A printable report: the harness's unit of output (one per paper
+/// figure/table).
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Report {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "report {}", self.id);
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, text: impl Into<String>) {
+        self.notes.push(text.into());
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} — {} ==\n", self.id, self.title));
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect();
+        out.push_str(&header.join("  "));
+        out.push('\n');
+        out.push_str(&"-".repeat(header.join("  ").len()));
+        out.push('\n');
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            out.push_str(&line.join("  "));
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+
+    /// Rows as JSON (for the result sink).
+    pub fn to_json_rows(&self) -> Vec<Json> {
+        self.rows
+            .iter()
+            .map(|row| {
+                let mut obj = Json::obj().push("report", self.id.as_str());
+                for (c, v) in self.columns.iter().zip(row) {
+                    obj = obj.push(c, v.as_str());
+                }
+                obj
+            })
+            .collect()
+    }
+}
+
+/// Format a float for table cells.
+pub fn fmt(x: f64) -> String {
+    if x == 0.0 {
+        return "0".into();
+    }
+    let a = x.abs();
+    if a >= 1000.0 || a < 1e-3 {
+        format!("{x:.3e}")
+    } else if a >= 10.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_roundtrip() {
+        let path = std::env::temp_dir().join("owf_results_test.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let sink = ResultSink::open(&path).unwrap();
+        sink.append(&Json::obj().push("a", 1.0)).unwrap();
+        sink.append(&Json::obj().push("a", 2.0)).unwrap();
+        let rows = sink.read_all().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("a").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn report_renders() {
+        let mut r = Report::new("fig1", "test", &["format", "bits", "kl"]);
+        r.row(vec!["int4".into(), "4.25".into(), "0.12".into()]);
+        r.note("hello");
+        let text = r.render();
+        assert!(text.contains("fig1"));
+        assert!(text.contains("int4"));
+        assert!(text.contains("note: hello"));
+        assert_eq!(r.to_json_rows().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt(0.0), "0");
+        assert_eq!(fmt(0.12345), "0.1235");
+        assert_eq!(fmt(12.345), "12.35");
+        assert!(fmt(1e-5).contains('e'));
+    }
+}

@@ -1,0 +1,116 @@
+//! The experiment scheduler: fans a set of experiment descriptions over a
+//! worker pool, with PJRT-bound work serialised on the main thread (the
+//! PJRT CPU client is not Sync; XLA multithreads internally) and CPU-bound
+//! work (simulated-data sweeps, per-tensor quantisation) parallelised via
+//! [`crate::util::pool`].
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::pool::par_map;
+
+/// One schedulable unit.
+pub struct Job<T: Send> {
+    pub name: String,
+    pub kind: JobKind,
+    pub run: Box<dyn Fn() -> Result<T> + Sync + Send>,
+}
+
+/// Where a job is allowed to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    /// Pure CPU — safe to run on the worker pool.
+    Cpu,
+    /// Touches the PJRT client — must run serialised.
+    Pjrt,
+}
+
+/// Outcome of one job.
+pub struct JobResult<T> {
+    pub name: String,
+    pub seconds: f64,
+    pub outcome: Result<T>,
+}
+
+/// Run all jobs: CPU jobs in parallel, PJRT jobs sequentially afterwards,
+/// preserving input order in the returned vector.
+pub fn run_jobs<T: Send>(jobs: Vec<Job<T>>) -> Vec<JobResult<T>> {
+    // index jobs, split by kind
+    let mut slots: Vec<Option<JobResult<T>>> =
+        jobs.iter().map(|_| None).collect();
+    let mut cpu: Vec<(usize, Job<T>)> = Vec::new();
+    let mut pjrt: Vec<(usize, Job<T>)> = Vec::new();
+    for (i, j) in jobs.into_iter().enumerate() {
+        match j.kind {
+            JobKind::Cpu => cpu.push((i, j)),
+            JobKind::Pjrt => pjrt.push((i, j)),
+        }
+    }
+    let cpu_results = par_map(&cpu, |_, (i, job)| {
+        let t0 = Instant::now();
+        let outcome = (job.run)();
+        (
+            *i,
+            JobResult {
+                name: job.name.clone(),
+                seconds: t0.elapsed().as_secs_f64(),
+                outcome,
+            },
+        )
+    });
+    for (i, r) in cpu_results {
+        slots[i] = Some(r);
+    }
+    for (i, job) in pjrt {
+        let t0 = Instant::now();
+        let outcome = (job.run)();
+        slots[i] = Some(JobResult {
+            name: job.name,
+            seconds: t0.elapsed().as_secs_f64(),
+            outcome,
+        });
+    }
+    slots.into_iter().map(|s| s.expect("job not run")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_and_preserves_order() {
+        let jobs: Vec<Job<usize>> = (0..20)
+            .map(|i| Job {
+                name: format!("job{i}"),
+                kind: if i % 3 == 0 { JobKind::Pjrt } else { JobKind::Cpu },
+                run: Box::new(move || Ok(i * 2)),
+            })
+            .collect();
+        let results = run_jobs(jobs);
+        assert_eq!(results.len(), 20);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.name, format!("job{i}"));
+            assert_eq!(*r.outcome.as_ref().unwrap(), i * 2);
+        }
+    }
+
+    #[test]
+    fn errors_do_not_poison_others() {
+        let jobs: Vec<Job<()>> = vec![
+            Job {
+                name: "ok".into(),
+                kind: JobKind::Cpu,
+                run: Box::new(|| Ok(())),
+            },
+            Job {
+                name: "bad".into(),
+                kind: JobKind::Cpu,
+                run: Box::new(|| anyhow::bail!("boom")),
+            },
+        ];
+        let results = run_jobs(jobs);
+        assert!(results[0].outcome.is_ok());
+        assert!(results[1].outcome.is_err());
+    }
+}

@@ -1,0 +1,1005 @@
+//! LLM direct-cast evaluations (§4): quantise microllama checkpoints under
+//! a [`Scheme`], run teacher-forced logits through PJRT and score top-k KL
+//! against the bf16/f32 reference — the machinery behind figs. 1, 5, 6, 8,
+//! 11-13, 17, 25-35 and table 5.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::alloc::{
+    flat_allocation, heuristic_allocation, predicted_kl, round_allocation,
+    variable_allocation, AllocScheme, Allocation, TensorInfo,
+};
+use crate::coordinator::config::Scheme;
+use crate::coordinator::{fmt, Report};
+use crate::eval::pipeline::qdq_tensor;
+use crate::eval::RunOpts;
+use crate::fisher::FisherEstimate;
+use crate::kl::{cross_entropy_batch, topk_kl_batch, KlSummary};
+use crate::runtime::model::{Checkpoint, ModelRunner, TokenSplit};
+use crate::runtime::Runtime;
+use crate::util::stats;
+
+pub const TOP_K: usize = 64;
+
+/// Shared evaluation environment: runtime + per-size caches.
+pub struct Env {
+    pub rt: Runtime,
+    pub opts: RunOpts,
+    checkpoints: HashMap<String, Checkpoint>,
+    ref_logits: HashMap<String, Vec<f32>>,
+    eval_tokens: HashMap<String, TokenSplit>,
+    fisher: HashMap<String, FisherEstimate>,
+    /// QAT-trained master parameters, keyed by scheme tag (see eval::qat).
+    pub qat_cache: HashMap<String, HashMap<String, Vec<f32>>>,
+}
+
+/// One measured point on a trade-off curve.
+#[derive(Clone, Copy, Debug)]
+pub struct DcPoint {
+    pub bits: f64,
+    pub kl: KlSummary,
+    /// change in cross entropy vs the reference (nats/token)
+    pub delta_ce: f64,
+    /// parameter-space relative RMS error
+    pub r: f64,
+}
+
+impl Env {
+    pub fn open(opts: RunOpts) -> Result<Env> {
+        Ok(Env {
+            rt: Runtime::open_default()?,
+            opts,
+            checkpoints: HashMap::new(),
+            ref_logits: HashMap::new(),
+            eval_tokens: HashMap::new(),
+            fisher: HashMap::new(),
+            qat_cache: HashMap::new(),
+        })
+    }
+
+    pub fn checkpoint(&mut self, size: &str) -> Result<&Checkpoint> {
+        if !self.checkpoints.contains_key(size) {
+            let ck = Checkpoint::load(&self.rt, size)?;
+            self.checkpoints.insert(size.to_string(), ck);
+        }
+        Ok(&self.checkpoints[size])
+    }
+
+    pub fn tokens(&mut self, size: &str, split: &str) -> Result<&TokenSplit> {
+        let key = format!("{size}:{split}");
+        if !self.eval_tokens.contains_key(&key) {
+            let t = TokenSplit::load(&self.rt, size, split)?;
+            self.eval_tokens.insert(key.clone(), t);
+        }
+        Ok(&self.eval_tokens[&key])
+    }
+
+    fn eval_token_buf(&mut self, size: &str) -> Result<Vec<i32>> {
+        let n = self.opts.eval_seqs;
+        Ok(self.tokens(size, "eval")?.take(n).to_vec())
+    }
+
+    /// Reference logits over the eval subset (cached per size).
+    pub fn ref_logits(&mut self, size: &str) -> Result<&[f32]> {
+        if !self.ref_logits.contains_key(size) {
+            let ck = self.checkpoint(size)?;
+            let config = ck.config.clone();
+            let params = ck.params();
+            let toks = self.eval_token_buf(size)?;
+            let runner = ModelRunner::new(&self.rt, size, config)?;
+            let logits = runner.logits(&params, &toks)?;
+            self.ref_logits.insert(size.to_string(), logits);
+        }
+        Ok(&self.ref_logits[size])
+    }
+
+    /// Fisher estimate (cached in memory and on disk next to artifacts).
+    pub fn fisher(&mut self, size: &str) -> Result<&FisherEstimate> {
+        if !self.fisher.contains_key(size) {
+            let path = self.rt.data_path(&format!("fisher_{size}.owt"));
+            let est = if path.exists() {
+                FisherEstimate::load(&path)?
+            } else {
+                let ck = self.checkpoint(size)?;
+                let params = ck.params();
+                let toks = TokenSplit::load(&self.rt, size, "fisher")?;
+                let est = FisherEstimate::estimate(
+                    &self.rt, size, &params, &toks, 4, 1234, false,
+                )?;
+                est.save(&path)?;
+                est
+            };
+            self.fisher.insert(size.to_string(), est);
+        }
+        Ok(&self.fisher[size])
+    }
+
+    /// Quantise a full checkpoint. Returns (params, avg bits, param-space R).
+    /// `bits_override` maps tensor name → bit width (variable allocation);
+    /// `use_fisher` enables Fisher-weighted selection/search inside the
+    /// pipeline.
+    pub fn quantise(
+        &mut self,
+        size: &str,
+        scheme: &Scheme,
+        bits_override: Option<&HashMap<String, f64>>,
+        use_fisher: bool,
+    ) -> Result<(HashMap<String, Vec<f32>>, f64, f64)> {
+        let fisher: Option<HashMap<String, Vec<f32>>> = if use_fisher {
+            Some(self.fisher(size)?.diag.clone())
+        } else {
+            None
+        };
+        let ck = self.checkpoint(size)?;
+        let mut params = HashMap::new();
+        let mut total_bits = 0f64;
+        let mut total_elems = 0usize;
+        let mut sq = 0f64;
+        let mut norm = 0f64;
+        for t in &ck.store.tensors {
+            let data = t.as_f32();
+            let mut s = scheme.clone();
+            if let Some(map) = bits_override {
+                if let Some(&b) = map.get(&t.name) {
+                    s.bits = b;
+                }
+            }
+            let empty: Vec<f32> = Vec::new();
+            let fvec: &[f32] = fisher
+                .as_ref()
+                .and_then(|f| f.get(&t.name))
+                .unwrap_or(&empty);
+            let out = qdq_tensor(
+                &s,
+                &data,
+                &t.shape,
+                t.channel_axis,
+                fvec,
+                0xC0DE ^ t.numel() as u64,
+            )?;
+            total_bits += out.bits * t.numel() as f64;
+            total_elems += t.numel();
+            sq += out.sq_err;
+            norm += data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>();
+            params.insert(t.name.clone(), out.recon);
+        }
+        Ok((
+            params,
+            total_bits / total_elems as f64,
+            (sq / norm.max(1e-30)).sqrt(),
+        ))
+    }
+
+    /// Evaluate quantised parameters: top-k KL + ΔCE vs the reference.
+    pub fn evaluate(
+        &mut self,
+        size: &str,
+        params: &HashMap<String, Vec<f32>>,
+    ) -> Result<(KlSummary, f64)> {
+        let config = self.checkpoint(size)?.config.clone();
+        let toks = self.eval_token_buf(size)?;
+        self.ref_logits(size)?; // populate cache
+        let runner = ModelRunner::new(&self.rt, size, config.clone())?;
+        let test = runner.logits(params, &toks)?;
+        let reference = &self.ref_logits[size];
+        let kl = topk_kl_batch(reference, &test, config.vocab, TOP_K);
+        // next-token ΔCE (teacher forcing: shift targets by one)
+        let (ce_ref, ce_test) =
+            (ce_of(reference, &toks, &config), ce_of(&test, &toks, &config));
+        Ok((kl, ce_test - ce_ref))
+    }
+
+    /// One full direct-cast point.
+    pub fn direct_cast(
+        &mut self,
+        size: &str,
+        scheme: &Scheme,
+        bits_override: Option<&HashMap<String, f64>>,
+        use_fisher: bool,
+    ) -> Result<DcPoint> {
+        let (params, bits, r) =
+            self.quantise(size, scheme, bits_override, use_fisher)?;
+        let (kl, delta_ce) = self.evaluate(size, &params)?;
+        Ok(DcPoint {
+            bits,
+            kl,
+            delta_ce,
+            r,
+        })
+    }
+
+    /// Per-tensor [`TensorInfo`] for the allocator.
+    pub fn tensor_infos(&mut self, size: &str) -> Result<Vec<TensorInfo>> {
+        let means = self.fisher(size)?.tensor_means();
+        let ck = self.checkpoint(size)?;
+        Ok(ck
+            .store
+            .tensors
+            .iter()
+            .map(|t| TensorInfo {
+                name: t.name.clone(),
+                numel: t.numel(),
+                rms: stats::rms(&t.as_f32()),
+                fisher_mean: *means.get(&t.name).unwrap_or(&1e-12),
+            })
+            .collect())
+    }
+}
+
+/// Next-token cross entropy of flat logits against the token buffer.
+fn ce_of(
+    logits: &[f32],
+    tokens: &[i32],
+    config: &crate::runtime::model::ModelConfig,
+) -> f64 {
+    let (seq, vocab) = (config.seq_len, config.vocab);
+    let n_seq = tokens.len() / seq;
+    let mut rows = Vec::new();
+    let mut targets = Vec::new();
+    for s in 0..n_seq {
+        for t in 0..seq - 1 {
+            let base = (s * seq + t) * vocab;
+            rows.extend_from_slice(&logits[base..base + vocab]);
+            targets.push(tokens[s * seq + t + 1]);
+        }
+    }
+    cross_entropy_batch(&rows, &targets, vocab)
+}
+
+/// The headline scheme set of fig. 1 at a given element bit width.
+pub fn headline_schemes(b: u32) -> Vec<(String, String)> {
+    vec![
+        ("Tensor RMS".into(), format!("cbrt-t7@{b}:tensor-rms")),
+        (
+            "Tensor RMS + Sparse".into(),
+            format!("cbrt-t7@{b}:tensor-rms:sparse0.001"),
+        ),
+        ("Tensor Absmax".into(), format!("cbrt-t7@{b}:tensor-absmax")),
+        (
+            "Channel Absmax".into(),
+            format!("cbrt-t7@{b}:channel-absmax"),
+        ),
+        (
+            "Block Absmax".into(),
+            format!("cbrt-t7@{b}:block128-absmax"),
+        ),
+        (
+            "Tensor RMS + Compress".into(),
+            format!("grid@{b}:tensor-rms:compress"),
+        ),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// figures
+// ---------------------------------------------------------------------------
+
+/// fig. 1 — the headline bits-vs-KL trade-off.
+pub fn fig1_tradeoff(env: &mut Env) -> Result<Report> {
+    let size = env.opts.size.clone();
+    let mut rep = Report::new(
+        "fig1",
+        &format!("bits vs top-k KL, microllama-{size} (paper: Llama 3.1 8B)"),
+        &["format", "b", "KL mean", "±2se", "ΔCE", "R"],
+    );
+    for b in [3u32, 4, 5] {
+        for (label, spec) in headline_schemes(b) {
+            let scheme = Scheme::parse(&spec)?;
+            let p = env.direct_cast(&size, &scheme, None, false)?;
+            rep.row(vec![
+                label,
+                fmt(p.bits),
+                fmt(p.kl.mean),
+                fmt(2.0 * p.kl.sem),
+                fmt(p.delta_ce),
+                fmt(p.r),
+            ]);
+        }
+    }
+    rep.note("paper fig. 1: compress < {block,channel} absmax ≈ rms+sparse ≪ tensor fixed-length");
+    Ok(rep)
+}
+
+/// fig. 5 — effective bits per parameter β_i for three variable-length
+/// mechanisms (summary statistics of the β histogram).
+pub fn fig5_bits_hist(env: &mut Env) -> Result<Report> {
+    let size = env.opts.size.clone();
+    let mut rep = Report::new(
+        "fig5",
+        "effective per-parameter bits β_i (first MLP down-projection)",
+        &["scheme", "mean β", "p10", "p90", "max β"],
+    );
+    let ck = env.checkpoint(&size)?;
+    let t = ck
+        .store
+        .get("layers.0.mlp.down_proj")
+        .context("down_proj missing")?;
+    let data = t.as_f32();
+    // (a) sparse outliers: 4-bit element + exact outliers
+    {
+        let sp = crate::quant::outliers::SparseOutliers::by_value(1e-3);
+        let idx = sp.select(&data, &[]);
+        let idx_bits = (data.len() as f64).log2().ceil();
+        let mut betas = vec![4.0f64; data.len()];
+        for &i in &idx {
+            betas[i as usize] = 32.0 + idx_bits;
+        }
+        push_beta_row(&mut rep, "sparse 0.1% (4b dense)", &betas);
+    }
+    // (b) block absmax: the bf16 scale is the block max's encoding
+    {
+        let block = 128usize;
+        let mut betas = vec![4.0f64; data.len()];
+        for blk in 0..data.len().div_ceil(block) {
+            let start = blk * block;
+            let end = (start + block).min(data.len());
+            let mut mi = start;
+            for i in start..end {
+                if data[i].abs() > data[mi].abs() {
+                    mi = i;
+                }
+            }
+            betas[mi] = 16.0; // the max is carried by the scale
+        }
+        push_beta_row(&mut rep, "block128 absmax (4b elem)", &betas);
+    }
+    // (c) compression on a uniform grid: β_i = −log2 p_i
+    {
+        let r = crate::compress::grid::grid_for_target_bits(&data, 4.0);
+        let grid = crate::compress::grid::UniformGrid::new(r.delta);
+        let (idx, _) = grid.encode(&data);
+        let (counts, dense) = grid.dense_histogram(&idx);
+        let probs = crate::compress::smoothed_probs(&counts);
+        let betas: Vec<f64> = dense
+            .iter()
+            .map(|&s| -probs[s as usize].log2())
+            .collect();
+        push_beta_row(&mut rep, "uniform grid + compress (b≈4)", &betas);
+    }
+    rep.note("paper fig. 5: all three act as variable-length codes over |θ|");
+    Ok(rep)
+}
+
+fn push_beta_row(rep: &mut Report, name: &str, betas: &[f64]) {
+    rep.row(vec![
+        name.into(),
+        fmt(stats::mean(betas)),
+        fmt(stats::quantile(betas, 0.1)),
+        fmt(stats::quantile(betas, 0.9)),
+        fmt(betas.iter().fold(0f64, |m, &x| m.max(x))),
+    ]);
+}
+
+/// fig. 6 — variable bit allocation vs flat, across formats and models.
+pub fn fig6_allocation(env: &mut Env) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig6",
+        "Fisher-based variable bit allocation (eq. 5) vs flat",
+        &["model", "format", "b", "KL flat", "KL variable", "ratio"],
+    );
+    for size in ["s", "m"] {
+        let infos = env.tensor_infos(size)?;
+        for (label, spec) in [
+            ("Tensor RMS + Sp", "cbrt-t7@4:tensor-rms:sparse0.001"),
+            ("Block Absmax", "cbrt-t7@4:block128-absmax"),
+        ] {
+            let scheme = Scheme::parse(spec)?;
+            let target = 4.0;
+            let flat = env.direct_cast(size, &scheme, None, false)?;
+            let alloc = variable_allocation(&infos, target);
+            let rounded = round_allocation(&infos, &alloc, target);
+            let map: HashMap<String, f64> = infos
+                .iter()
+                .zip(&rounded.bits)
+                .map(|(t, &b)| (t.name.clone(), b))
+                .collect();
+            let var = env.direct_cast(size, &scheme, Some(&map), false)?;
+            rep.row(vec![
+                size.into(),
+                label.into(),
+                fmt(rounded.average),
+                fmt(flat.kl.mean),
+                fmt(var.kl.mean),
+                fmt(var.kl.mean / flat.kl.mean.max(1e-12)),
+            ]);
+        }
+    }
+    rep.note("paper fig. 6: variable allocation improves most model/format pairs");
+    Ok(rep)
+}
+
+/// fig. 8 — ρ = KL·2^2b across models and schemes (+ Huffman reality check).
+pub fn fig8_rho_grid(env: &mut Env) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig8",
+        "scaled KL ρ = KL·2^2b across models and schemes",
+        &["model", "scheme", "b", "rho", "±2se·2^2b"],
+    );
+    for size in ["s", "m", "l"] {
+        for (label, spec) in [
+            ("rms", "cbrt-t7@4:tensor-rms"),
+            ("rms+sparse", "cbrt-t7@4:tensor-rms:sparse0.001"),
+            ("block-absmax", "cbrt-t7@4:block128-absmax"),
+            ("rms+compress", "grid@4:tensor-rms:compress"),
+        ] {
+            let scheme = Scheme::parse(spec)?;
+            let p = env.direct_cast(size, &scheme, None, false)?;
+            rep.row(vec![
+                size.into(),
+                label.into(),
+                fmt(p.bits),
+                fmt(p.kl.rho(p.bits)),
+                fmt(2.0 * p.kl.sem * 2f64.powf(2.0 * p.bits)),
+            ]);
+        }
+    }
+    rep.note("paper fig. 8: ordering consistent across families & sizes");
+    Ok(rep)
+}
+
+/// fig. 11 — Fisher predicts the KL of iid per-tensor perturbations.
+pub fn fig11_fisher_pred(env: &mut Env) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig11",
+        "per-tensor noise: predicted (eq. 7) vs measured top-k KL (microllama-s)",
+        &["tensor", "sigma", "KL predicted", "KL measured"],
+    );
+    let size = "s";
+    env.fisher(size)?;
+    let ck = env.checkpoint(size)?;
+    let params = ck.params();
+    let names: Vec<String> = [
+        "embed_tokens",
+        "layers.0.self_attn.v_proj",
+        "layers.0.self_attn.q_proj",
+        "layers.1.mlp.down_proj",
+        "lm_head",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let mut rng = crate::util::rng::Rng::new(0xF11);
+    for name in &names {
+        for sigma in [0.01f32, 0.04] {
+            let mut perturbed = params.clone();
+            let v = perturbed.get_mut(name).context("tensor")?;
+            for x in v.iter_mut() {
+                *x += sigma * rng.normal() as f32;
+            }
+            let predicted =
+                env.fisher(size)?.predict_kl(&params, &perturbed);
+            let (kl, _) = env.evaluate(size, &perturbed)?;
+            rep.row(vec![
+                name.clone(),
+                fmt(sigma as f64),
+                fmt(predicted),
+                fmt(kl.mean),
+            ]);
+        }
+    }
+    rep.note("paper fig. 11: prediction tracks measurement across tensors/scales");
+    Ok(rep)
+}
+
+/// fig. 12 — Fisher diagonal: across- vs within-tensor variation.
+pub fn fig12_fisher_structure(env: &mut Env) -> Result<Report> {
+    let size = env.opts.size.clone();
+    let mut rep = Report::new(
+        "fig12",
+        &format!("Fisher diagonal structure, microllama-{size}"),
+        &["tensor", "mean f̄", "log10 within-tensor std"],
+    );
+    let summaries = env.fisher(&size)?.tensor_summaries();
+    let mut means = Vec::new();
+    for t in &summaries {
+        means.push(t.mean.max(1e-30).log10());
+        rep.row(vec![
+            t.name.clone(),
+            fmt(t.mean),
+            fmt(t.log10_within_std),
+        ]);
+    }
+    rep.note(format!(
+        "across-tensor log10-std = {} (paper fig. 12: across ≈ within)",
+        fmt(stats::std(&means))
+    ));
+    Ok(rep)
+}
+
+/// fig. 13 — fig. 11's prediction across model sizes.
+pub fn fig13_fisher_models(env: &mut Env) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig13",
+        "Fisher KL prediction across models (correlation of log KL)",
+        &["model", "n points", "pearson(log pred, log meas)"],
+    );
+    for size in ["s", "m"] {
+        env.fisher(size)?;
+        let ck = env.checkpoint(size)?;
+        let params = ck.params();
+        let names: Vec<String> =
+            ck.store.names().iter().map(|s| s.to_string()).collect();
+        let mut rng = crate::util::rng::Rng::new(0xF13);
+        let (mut preds, mut meas) = (Vec::new(), Vec::new());
+        for name in names.iter().step_by(3) {
+            let mut perturbed = params.clone();
+            let v = perturbed.get_mut(name).unwrap();
+            for x in v.iter_mut() {
+                *x += 0.02 * rng.normal() as f32;
+            }
+            preds.push(
+                env.fisher(size)?
+                    .predict_kl(&params, &perturbed)
+                    .max(1e-12)
+                    .ln(),
+            );
+            let (kl, _) = env.evaluate(size, &perturbed)?;
+            meas.push(kl.mean.max(1e-12).ln());
+        }
+        rep.row(vec![
+            size.into(),
+            preds.len().to_string(),
+            fmt(stats::pearson(&preds, &meas)),
+        ]);
+    }
+    rep.note("paper fig. 13: clear positive trend (Gemma-like failures absent here)");
+    Ok(rep)
+}
+
+/// fig. 17 — the per-tensor b*_t profile at b=4.
+pub fn fig17_alloc_profile(env: &mut Env) -> Result<Report> {
+    let size = env.opts.size.clone();
+    let mut rep = Report::new(
+        "fig17",
+        &format!("variable bit allocation profile, target 4 b/param ({size})"),
+        &["tensor", "numel", "rms", "f̄", "b*_t"],
+    );
+    let infos = env.tensor_infos(&size)?;
+    let alloc = variable_allocation(&infos, 4.0);
+    for (t, &b) in infos.iter().zip(&alloc.bits) {
+        rep.row(vec![
+            t.name.clone(),
+            t.numel.to_string(),
+            fmt(t.rms),
+            fmt(t.fisher_mean),
+            fmt(b),
+        ]);
+    }
+    rep.note("paper fig. 17: attention k/v projections get extra bits (GQA)");
+    Ok(rep)
+}
+
+/// fig. 25 — weight statistics: heavy tails across tensors.
+pub fn fig25_weight_stats(env: &mut Env) -> Result<Report> {
+    let size = env.opts.size.clone();
+    let mut rep = Report::new(
+        "fig25",
+        &format!("|θ|/RMS tail statistics per tensor, microllama-{size}"),
+        &["tensor", "kurtosis", "q99.9/rms", "max/rms"],
+    );
+    let ck = env.checkpoint(&size)?;
+    for t in &ck.store.tensors {
+        if t.shape.len() < 2 {
+            continue;
+        }
+        let v = t.as_f32();
+        let rms = stats::rms(&v).max(1e-30);
+        let xs: Vec<f64> =
+            v.iter().map(|&x| (x as f64 / rms).abs()).collect();
+        let m2 = xs.iter().map(|x| x * x).sum::<f64>() / xs.len() as f64;
+        let m4 = xs.iter().map(|x| x.powi(4)).sum::<f64>() / xs.len() as f64;
+        rep.row(vec![
+            t.name.clone(),
+            fmt(m4 / (m2 * m2)),
+            fmt(stats::quantile(&xs, 0.999)),
+            fmt(xs.iter().fold(0f64, |m, &x| m.max(x))),
+        ]);
+    }
+    rep.note("paper fig. 25: kurtosis > 3 (Normal) ⇒ heavy, Student-t-like tails");
+    Ok(rep)
+}
+
+/// fig. 26 — top-k KL correlates with ΔCE.
+pub fn fig26_kl_vs_ce(env: &mut Env) -> Result<Report> {
+    let size = env.opts.size.clone();
+    let mut rep = Report::new(
+        "fig26",
+        "top-k KL vs ΔCE across a quantisation sweep",
+        &["scheme", "b", "KL", "ΔCE"],
+    );
+    let (mut kls, mut ces) = (Vec::new(), Vec::new());
+    for b in [3u32, 4, 5] {
+        for spec in [
+            format!("cbrt-t7@{b}:block128-absmax"),
+            format!("int@{b}:block128-absmax"),
+            format!("cbrt-t7@{b}:tensor-rms"),
+        ] {
+            let p =
+                env.direct_cast(&size, &Scheme::parse(&spec)?, None, false)?;
+            kls.push(p.kl.mean.max(1e-12).ln());
+            ces.push(p.delta_ce.max(1e-12).ln());
+            rep.row(vec![
+                spec,
+                fmt(p.bits),
+                fmt(p.kl.mean),
+                fmt(p.delta_ce),
+            ]);
+        }
+    }
+    rep.note(format!(
+        "pearson(log KL, log ΔCE) = {} (paper fig. 26: ≈ 1)",
+        fmt(stats::pearson(&kls, &ces))
+    ));
+    Ok(rep)
+}
+
+/// fig. 27 — sampled vs empirical Fisher.
+pub fn fig27_fisher_variants(env: &mut Env) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig27",
+        "sampled-label vs empirical Fisher (per-tensor means, microllama-m)",
+        &["tensor", "sampled", "empirical", "ratio"],
+    );
+    let size = "m";
+    let ck = env.checkpoint(size)?;
+    let params = ck.params();
+    let toks = TokenSplit::load(&env.rt, size, "fisher")?;
+    let emp = FisherEstimate::estimate(
+        &env.rt, size, &params, &toks, 2, 99, true,
+    )?;
+    let emp_means = emp.tensor_means();
+    let sampled = env.fisher(size)?.tensor_means();
+    let (mut a, mut b) = (Vec::new(), Vec::new());
+    let mut names: Vec<&String> = sampled.keys().collect();
+    names.sort();
+    for name in names {
+        let s = sampled[name];
+        let e = *emp_means.get(name).unwrap_or(&0.0);
+        a.push(s.max(1e-30).ln());
+        b.push(e.max(1e-30).ln());
+        rep.row(vec![
+            name.clone(),
+            fmt(s),
+            fmt(e),
+            fmt(e / s.max(1e-30)),
+        ]);
+    }
+    rep.note(format!(
+        "pearson(log sampled, log empirical) = {} (paper fig. 27: tight, empirical slightly larger)",
+        fmt(stats::pearson(&a, &b))
+    ));
+    Ok(rep)
+}
+
+/// fig. 28 — under compression, block scaling / sparsity stop helping.
+pub fn fig28_compress_interaction(env: &mut Env) -> Result<Report> {
+    let size = env.opts.size.clone();
+    let mut rep = Report::new(
+        "fig28",
+        "scaling × sparsity × compression interaction (ρ at b≈4)",
+        &["scheme", "b", "rho"],
+    );
+    for spec in [
+        "cbrt-t7@4:tensor-rms",
+        "cbrt-t7@4:tensor-rms:compress",
+        "cbrt-t7@4:block128-absmax",
+        "cbrt-t7@4:block128-absmax:compress",
+        "cbrt-t7@4:tensor-rms:sparse0.001,compress",
+        "cbrt-t7@4:channel-rms:compress",
+    ] {
+        let p = env.direct_cast(&size, &Scheme::parse(spec)?, None, false)?;
+        rep.row(vec![spec.into(), fmt(p.bits), fmt(p.kl.rho(p.bits))]);
+    }
+    rep.note("paper fig. 28: compression absorbs block/sparse gains; channel RMS keeps a small edge");
+    Ok(rep)
+}
+
+/// fig. 29 — random rotations help fixed-length schemes only.
+pub fn fig29_rotations(env: &mut Env) -> Result<Report> {
+    let size = env.opts.size.clone();
+    let mut rep = Report::new(
+        "fig29",
+        "random rotations (cbrt-normal elements, b=4)",
+        &["scheme", "KL plain", "KL rotated", "rotated/plain"],
+    );
+    for spec in [
+        "cbrt-normal@4:tensor-rms",
+        "cbrt-normal@4:tensor-rms:sparse0.001",
+        "cbrt-normal@4:block128-absmax",
+        "grid@4:tensor-rms:compress",
+    ] {
+        let plain =
+            env.direct_cast(&size, &Scheme::parse(spec)?, None, false)?;
+        let rot_scheme = Scheme::parse(spec)?.with_rotate();
+        let rotated = env.direct_cast(&size, &rot_scheme, None, false)?;
+        rep.row(vec![
+            spec.into(),
+            fmt(plain.kl.mean),
+            fmt(rotated.kl.mean),
+            fmt(rotated.kl.mean / plain.kl.mean.max(1e-12)),
+        ]);
+    }
+    rep.note("paper fig. 29: rotations rescue tensor fixed-length, don't help variable-length");
+    Ok(rep)
+}
+
+/// fig. 30 — allocation from Fisher computed on a *different* domain.
+pub fn fig30_cross_domain(env: &mut Env) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig30",
+        "bit allocation evaluated cross-domain (xdom eval split)",
+        &["model", "alloc", "KL (xdom)"],
+    );
+    for size in ["s", "m"] {
+        let infos = env.tensor_infos(size)?;
+        let scheme = Scheme::parse("cbrt-t7@4:tensor-rms:sparse0.001")?;
+        // evaluate on the cross-domain split
+        let n_eval = env.opts.eval_seqs;
+        let xdom = env.tokens(size, "xdom")?.take(n_eval).to_vec();
+        for (name, alloc) in [
+            (AllocScheme::Flat, flat_allocation(&infos, 4.0)),
+            (AllocScheme::Variable, variable_allocation(&infos, 4.0)),
+            (
+                AllocScheme::Heuristic,
+                heuristic_allocation(
+                    &infos,
+                    4.0,
+                    env.checkpoint(size)?.config.n_layers,
+                ),
+            ),
+        ]
+        .map(|(n, a)| (n, round_allocation(&infos, &a, 4.0)))
+        {
+            let map: HashMap<String, f64> = infos
+                .iter()
+                .zip(&alloc.bits)
+                .map(|(t, &b)| (t.name.clone(), b))
+                .collect();
+            let (params, _, _) =
+                env.quantise(size, &scheme, Some(&map), false)?;
+            // cross-domain logits
+            let config = env.checkpoint(size)?.config.clone();
+            let ref_params = env.checkpoint(size)?.params();
+            let runner = ModelRunner::new(&env.rt, size, config.clone())?;
+            let ref_logits = runner.logits(&ref_params, &xdom)?;
+            let test_logits = runner.logits(&params, &xdom)?;
+            let kl =
+                topk_kl_batch(&ref_logits, &test_logits, config.vocab, TOP_K);
+            rep.row(vec![
+                size.into(),
+                format!("{name:?}"),
+                fmt(kl.mean),
+            ]);
+        }
+    }
+    rep.note("paper fig. 30: Fisher generalises across domains; heuristic (+2b ends) is poor");
+    Ok(rep)
+}
+
+/// fig. 31 — element-format shootout vs the Student-t baseline.
+pub fn fig31_element_shootout(env: &mut Env) -> Result<Report> {
+    let size = env.opts.size.clone();
+    let mut rep = Report::new(
+        "fig31",
+        "element formats vs cbrt-t (tensor RMS + sparse), mean over b=3..5",
+        &["element", "mean KL ratio vs cbrt-t"],
+    );
+    let mut base_kl = HashMap::new();
+    for b in [3u32, 4, 5] {
+        let p = env.direct_cast(
+            &size,
+            &Scheme::parse(&format!("cbrt-t7@{b}:tensor-rms:sparse0.001"))?,
+            None,
+            false,
+        )?;
+        base_kl.insert(b, p.kl.mean);
+    }
+    for elem in ["cbrt-normal", "cbrt-laplace", "nf", "int", "e2m1", "lloyd"] {
+        let mut ratios = Vec::new();
+        for b in [3u32, 4, 5] {
+            if elem == "e2m1" && b != 4 {
+                continue; // fixed-width float
+            }
+            let spec = format!("{elem}@{b}:tensor-rms:sparse0.001");
+            let p =
+                env.direct_cast(&size, &Scheme::parse(&spec)?, None, false)?;
+            ratios.push(p.kl.mean / base_kl[&b].max(1e-12));
+        }
+        rep.row(vec![elem.into(), fmt(stats::mean(&ratios))]);
+    }
+    rep.note("paper fig. 31: no element format consistently beats cbrt Student-t");
+    Ok(rep)
+}
+
+/// fig. 32 — √[3]p vs NF4/SF4 under block absmax.
+pub fn fig32_nf4_sf4(env: &mut Env) -> Result<Report> {
+    let size = env.opts.size.clone();
+    let mut rep = Report::new(
+        "fig32",
+        "4-bit block-absmax formats vs block size",
+        &["element", "B", "b", "rho"],
+    );
+    for elem in ["cbrt-normal", "cbrt-laplace", "cbrt-t7", "nf", "sf5", "af4"]
+    {
+        for block in [64usize, 128, 256] {
+            let spec = format!("{elem}@4:block{block}-absmax");
+            let p =
+                env.direct_cast(&size, &Scheme::parse(&spec)?, None, false)?;
+            rep.row(vec![
+                elem.into(),
+                block.to_string(),
+                fmt(p.bits),
+                fmt(p.kl.rho(p.bits)),
+            ]);
+        }
+    }
+    rep.note("paper fig. 32: cbrt-t/laplace best; cbrt-normal ≈ NF4; SF4 behind");
+    Ok(rep)
+}
+
+/// fig. 33 — LLM block size & scale-mantissa sweep.
+pub fn fig33_llm_block(env: &mut Env) -> Result<Report> {
+    let size = env.opts.size.clone();
+    let mut rep = Report::new(
+        "fig33",
+        "block-absmax hyperparameters (cbrt-t elements, b≈4)",
+        &["B", "scale fmt", "b", "rho"],
+    );
+    for block in [32usize, 64, 128, 256, 512] {
+        let spec = format!("cbrt-t7@4:block{block}-absmax");
+        let p = env.direct_cast(&size, &Scheme::parse(&spec)?, None, false)?;
+        rep.row(vec![
+            block.to_string(),
+            "bf16".into(),
+            fmt(p.bits),
+            fmt(p.kl.rho(p.bits)),
+        ]);
+    }
+    for (name, sf) in [
+        ("e8m0", crate::scaling::ScaleFormat::E8M0 { away: true }),
+        (
+            "e5m4",
+            crate::scaling::ScaleFormat::Float { exp: 5, man: 4, away: true },
+        ),
+        ("bf16", crate::scaling::DEFAULT_SCALE),
+    ] {
+        let scheme = Scheme::parse("cbrt-t7@4:block128-absmax")?
+            .with_scale_format(sf);
+        let p = env.direct_cast(&size, &scheme, None, false)?;
+        rep.row(vec![
+            "128".into(),
+            name.into(),
+            fmt(p.bits),
+            fmt(p.kl.rho(p.bits)),
+        ]);
+    }
+    rep.note("paper fig. 33: B≈128 with a ≥4-mantissa-bit scale wins");
+    Ok(rep)
+}
+
+/// fig. 34 — signmax vs asymmetric vs symmetric.
+pub fn fig34_signmax(env: &mut Env) -> Result<Report> {
+    let size = env.opts.size.clone();
+    let mut rep = Report::new(
+        "fig34",
+        "scaling variants, block B=128 (int and cbrt-t elements)",
+        &["element", "variant", "b", "b width", "rho"],
+    );
+    for elem in ["int", "cbrt-t7"] {
+        for b in [3u32, 4] {
+            for (vname, spec) in [
+                ("asym", format!("{elem}@{b}:block128-absmax:asym")),
+                ("sym", format!("{elem}@{b}:block128-absmax:sym")),
+                ("signmax", format!("{elem}@{b}:block128-signmax")),
+            ] {
+                let p = env.direct_cast(
+                    &size,
+                    &Scheme::parse(&spec)?,
+                    None,
+                    false,
+                )?;
+                rep.row(vec![
+                    elem.into(),
+                    vname.into(),
+                    b.to_string(),
+                    fmt(p.bits),
+                    fmt(p.kl.rho(p.bits)),
+                ]);
+            }
+        }
+    }
+    rep.note("paper fig. 34: signmax consistently best, especially at b=3");
+    Ok(rep)
+}
+
+/// fig. 35 — moment matching vs scale search vs Fisher-weighted search.
+pub fn fig35_scale_fit(env: &mut Env) -> Result<Report> {
+    let size = env.opts.size.clone();
+    let mut rep = Report::new(
+        "fig35",
+        "scale fitting strategies (cbrt-t elements, b=4)",
+        &["scaling", "moment", "search", "fisher-search"],
+    );
+    for scaling in ["tensor-rms", "block128-absmax"] {
+        let base = format!("cbrt-t7@4:{scaling}");
+        let moment =
+            env.direct_cast(&size, &Scheme::parse(&base)?, None, false)?;
+        let search = env.direct_cast(
+            &size,
+            &Scheme::parse(&format!("{base}:search"))?,
+            None,
+            false,
+        )?;
+        let fsearch = env.direct_cast(
+            &size,
+            &Scheme::parse(&format!("{base}:search"))?,
+            None,
+            true,
+        )?;
+        rep.row(vec![
+            scaling.into(),
+            fmt(moment.kl.mean),
+            fmt(search.kl.mean),
+            fmt(fsearch.kl.mean),
+        ]);
+    }
+    rep.note("paper fig. 35: search helps RMS scaling; absmax prefers moment matching unless Fisher-weighted");
+    Ok(rep)
+}
+
+/// table 5 — variation of the allocation terms across tensors.
+pub fn tab5_alloc_terms(env: &mut Env) -> Result<Report> {
+    let size = env.opts.size.clone();
+    let mut rep = Report::new(
+        "tab5",
+        "std / inter-decile range of eq.-(5) terms across tensors",
+        &["term", "std", "q90-q10"],
+    );
+    let infos = env.tensor_infos(&size)?;
+    let half_log_f: Vec<f64> = infos
+        .iter()
+        .map(|t| 0.5 * t.fisher_mean.max(1e-30).log2())
+        .collect();
+    let log_rms: Vec<f64> =
+        infos.iter().map(|t| t.rms.max(1e-30).log2()).collect();
+    for (name, vals) in [("½log2 f̄", &half_log_f), ("log2 rms", &log_rms)] {
+        rep.row(vec![
+            name.into(),
+            fmt(stats::std(vals)),
+            fmt(stats::quantile(vals, 0.9) - stats::quantile(vals, 0.1)),
+        ]);
+    }
+    // ε_t variation: estimated from observed R at fixed b per tensor
+    let scheme = Scheme::parse("cbrt-t7@4:block128-absmax")?;
+    let ck = env.checkpoint(&size)?;
+    let mut log_eps = Vec::new();
+    for t in &ck.store.tensors {
+        if t.shape.len() < 2 {
+            continue;
+        }
+        let data = t.as_f32();
+        let out = qdq_tensor(&scheme, &data, &t.shape, t.channel_axis, &[], 9)?;
+        let r = (out.sq_err
+            / data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>())
+        .sqrt();
+        // R ≈ ε·2^-b ⇒ log2 ε = log2 R + b
+        log_eps.push(r.max(1e-12).log2() + 4.0);
+    }
+    rep.row(vec![
+        "log2 ε".into(),
+        fmt(stats::std(&log_eps)),
+        fmt(stats::quantile(&log_eps, 0.9) - stats::quantile(&log_eps, 0.1)),
+    ]);
+    rep.note("paper table 5: ε varies far less than f̄ and RMS ⇒ fold into b⁰");
+    Ok(rep)
+}
+
+/// Predicted-KL helper shared with examples.
+pub fn predicted_kl_for(
+    infos: &[TensorInfo],
+    alloc: &Allocation,
+) -> f64 {
+    predicted_kl(infos, alloc)
+}

@@ -1,0 +1,129 @@
+//! The figure/table reproduction harness: one function per paper artefact
+//! (`fig1`..`fig35`, `tab1`/`tab2`/`tab5`), each returning a printable
+//! [`Report`] whose rows mirror the series the paper plots.
+//!
+//! `run(id)` dispatches; `owf report <id>` is the CLI entry. Simulated-data
+//! analyses ([`sim`]) are pure Rust; LLM analyses ([`llm`], [`qat`]) run the
+//! microllama checkpoints through the PJRT runtime.
+
+pub mod llm;
+pub mod pipeline;
+pub mod qat;
+pub mod sim;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::Report;
+
+/// All report ids, in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "fig2", "fig3", "fig4", "fig14", "fig15", "fig16", "fig18", "fig19",
+    "fig20", "fig21", "fig22", "fig23", "fig24", // simulated (§3/§C)
+    "fig1", "fig5", "fig6", "fig8", "fig11", "fig12", "fig13", "fig17",
+    "fig25", "fig26", "fig27", "fig28", "fig29", "fig30", "fig31", "fig32",
+    "fig33", "fig34", "fig35", "tab5", // LLM direct-cast (§4/§D)
+    "fig7", "fig9", "fig10", "tab1", "tab2", // QAT + downstream
+];
+
+/// Ids that run without artifacts (pure simulation).
+pub const SIM_IDS: &[&str] = &[
+    "fig2", "fig3", "fig4", "fig14", "fig15", "fig16", "fig18", "fig19",
+    "fig20", "fig21", "fig22", "fig23", "fig24",
+];
+
+/// Options shared by report runs.
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    /// Simulated-data sample count (paper: 2^24; default here 2^20 for CPU
+    /// budget — override with --samples).
+    pub samples: usize,
+    /// Eval sequences per LLM KL evaluation.
+    pub eval_seqs: usize,
+    /// QAT steps (paper: 8192; default small for CPU).
+    pub qat_steps: usize,
+    /// Model size for single-model figures.
+    pub size: String,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            samples: 1 << 20,
+            eval_seqs: 24,
+            qat_steps: 60,
+            size: "m".into(),
+        }
+    }
+}
+
+/// Run one report by id ("sim" / "all" fan out).
+pub fn run(id: &str, opts: &RunOpts) -> Result<Vec<Report>> {
+    let ids: Vec<&str> = match id {
+        "all" => ALL_IDS.to_vec(),
+        "sim" => SIM_IDS.to_vec(),
+        "llm" => ALL_IDS
+            .iter()
+            .copied()
+            .filter(|i| !SIM_IDS.contains(i))
+            .collect(),
+        single => vec![single],
+    };
+    let mut llm_env: Option<llm::Env> = None;
+    let mut reports = Vec::new();
+    for id in ids {
+        let report = match id {
+            // --- simulated ---------------------------------------------------
+            "fig2" => sim::fig2_curves(opts),
+            "fig3" => sim::fig3_codepoints(),
+            "fig4" => sim::fig4_sim_tradeoff(opts),
+            "fig14" => sim::fig14_absmax_approx(opts),
+            "fig15" => sim::fig15_mixture(opts),
+            "fig16" => sim::fig16_cbrt_rule(opts),
+            "fig18" => sim::fig18_element_formats(opts),
+            "fig19" => sim::fig19_exponent(opts),
+            "fig20" => sim::fig20_scale_mantissa(opts),
+            "fig21" => sim::fig21_block_size(opts),
+            "fig22" => sim::fig22_alpha(opts),
+            "fig23" => sim::fig23_scale_search(opts),
+            "fig24" => sim::fig24_compressors(opts),
+            // --- LLM direct-cast ---------------------------------------------
+            other => {
+                if llm_env.is_none() {
+                    llm_env = Some(llm::Env::open(opts.clone())?);
+                }
+                let env = llm_env.as_mut().unwrap();
+                match other {
+                    "fig1" => llm::fig1_tradeoff(env),
+                    "fig5" => llm::fig5_bits_hist(env),
+                    "fig6" => llm::fig6_allocation(env),
+                    "fig8" => llm::fig8_rho_grid(env),
+                    "fig11" => llm::fig11_fisher_pred(env),
+                    "fig12" => llm::fig12_fisher_structure(env),
+                    "fig13" => llm::fig13_fisher_models(env),
+                    "fig17" => llm::fig17_alloc_profile(env),
+                    "fig25" => llm::fig25_weight_stats(env),
+                    "fig26" => llm::fig26_kl_vs_ce(env),
+                    "fig27" => llm::fig27_fisher_variants(env),
+                    "fig28" => llm::fig28_compress_interaction(env),
+                    "fig29" => llm::fig29_rotations(env),
+                    "fig30" => llm::fig30_cross_domain(env),
+                    "fig31" => llm::fig31_element_shootout(env),
+                    "fig32" => llm::fig32_nf4_sf4(env),
+                    "fig33" => llm::fig33_llm_block(env),
+                    "fig34" => llm::fig34_signmax(env),
+                    "fig35" => llm::fig35_scale_fit(env),
+                    "tab5" => llm::tab5_alloc_terms(env),
+                    "fig7" => qat::fig7_qat_downstream(env),
+                    "fig9" => qat::fig9_dc_vs_qat(env),
+                    "fig10" => qat::fig10_kl_downstream(env),
+                    "tab1" => qat::tab1_downstream_dc(env),
+                    "tab2" => qat::tab2_downstream_qat(env),
+                    _ => bail!("unknown report id {other:?}"),
+                }
+            }
+        }?;
+        println!("{}", report.render());
+        reports.push(report);
+    }
+    Ok(reports)
+}

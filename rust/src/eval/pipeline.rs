@@ -1,0 +1,325 @@
+//! Applying a [`Scheme`] to one parameter tensor: the full §2 pipeline —
+//! optional rotation, sparse-outlier extraction, scale-multiplier search,
+//! Lloyd fitting, the dense quantiser (or compressed uniform grid) and
+//! honest bits-per-element accounting (element indices + scale overhead +
+//! outlier storage; entropy-rate when `compress` is set).
+
+use anyhow::{bail, Result};
+
+use crate::compress::{entropy_bits, grid::grid_for_target_bits};
+use crate::coordinator::config::{Element, Scheme};
+use crate::dist::fit::{grid_then_golden, scale_search_grid};
+use crate::quant::outliers::{qdq_with_outliers, OutlierCriterion, SparseOutliers};
+use crate::quant::rotation::{rotate_2d, rotate_2d_inverse, RandomRotation};
+use crate::quant::Quantiser;
+use crate::scaling::Granularity;
+
+/// Result of quantising one tensor.
+#[derive(Clone, Debug)]
+pub struct TensorQdq {
+    pub recon: Vec<f32>,
+    /// average storage bits per element, all overheads included
+    pub bits: f64,
+    pub sq_err: f64,
+}
+
+/// Quantise→dequantise one tensor under a scheme.
+///
+/// * `shape`/`channel_axis` drive channel granularity (2-D tensors with
+///   `channel_axis = 1` are transposed so scale groups are contiguous);
+/// * `fisher` (may be empty) enables Fisher-weighted outlier selection,
+///   Lloyd weighting and weighted scale search;
+/// * `seed` makes rotations deterministic per tensor.
+pub fn qdq_tensor(
+    scheme: &Scheme,
+    data: &[f32],
+    shape: &[usize],
+    channel_axis: Option<usize>,
+    fisher: &[f32],
+    seed: u64,
+) -> Result<TensorQdq> {
+    // --- rotation: into the rotated basis (2-D only; fig. 29) -------------
+    let mut work = data.to_vec();
+    let rot = if scheme.rotate && shape.len() == 2 {
+        let (rows, cols) = (shape[0], shape[1]);
+        let v = RandomRotation::new(rows, seed ^ 0xA11CE);
+        let w = RandomRotation::new(cols, seed ^ 0xB0B);
+        rotate_2d(&mut work, rows, cols, &v, &w);
+        Some((v, w))
+    } else {
+        None
+    };
+
+    // --- channel granularity: make scale groups contiguous -----------------
+    let (mut flat, channel_len, transposed) = prepare_layout(
+        &work,
+        shape,
+        channel_axis,
+        scheme.granularity,
+    );
+
+    let mut result = match &scheme.element {
+        Element::Grid => qdq_grid(scheme, &flat)?,
+        _ => qdq_codebook(scheme, &mut flat, channel_len, fisher)?,
+    };
+
+    // --- sparse outliers are patched on the *layout* buffer ---------------
+    // (handled inside qdq_codebook for the dense path)
+
+    // --- undo layout / rotation -------------------------------------------
+    let mut recon = restore_layout(&result.recon, shape, transposed);
+    if let Some((v, w)) = rot {
+        rotate_2d_inverse(&mut recon, shape[0], shape[1], &v, &w);
+    }
+    result.sq_err = crate::util::stats::sq_err(data, &recon);
+    result.recon = recon;
+    Ok(result)
+}
+
+/// Transpose 2-D data when channel scaling wants column groups.
+fn prepare_layout(
+    data: &[f32],
+    shape: &[usize],
+    channel_axis: Option<usize>,
+    granularity: Granularity,
+) -> (Vec<f32>, usize, bool) {
+    if granularity != Granularity::Channel {
+        return (data.to_vec(), 0, false);
+    }
+    match (shape.len(), channel_axis) {
+        (2, Some(1)) => {
+            // scale per column: transpose so each column is contiguous
+            let (rows, cols) = (shape[0], shape[1]);
+            let mut t = vec![0f32; data.len()];
+            for r in 0..rows {
+                for c in 0..cols {
+                    t[c * rows + r] = data[r * cols + c];
+                }
+            }
+            (t, rows, true)
+        }
+        (2, Some(0)) => (data.to_vec(), shape[1], false),
+        _ => (data.to_vec(), data.len(), false), // 1-D: tensor fallback
+    }
+}
+
+fn restore_layout(
+    data: &[f32],
+    shape: &[usize],
+    transposed: bool,
+) -> Vec<f32> {
+    if !transposed {
+        return data.to_vec();
+    }
+    let (rows, cols) = (shape[0], shape[1]);
+    let mut out = vec![0f32; data.len()];
+    for c in 0..cols {
+        for r in 0..rows {
+            out[r * cols + c] = data[c * rows + r];
+        }
+    }
+    out
+}
+
+/// Dense codebook path (everything except Grid).
+fn qdq_codebook(
+    scheme: &Scheme,
+    flat: &mut [f32],
+    channel_len: usize,
+    fisher: &[f32],
+) -> Result<TensorQdq> {
+    let group_len = match scheme.granularity {
+        Granularity::Block(b) => b,
+        Granularity::Channel => channel_len.max(1),
+        Granularity::Tensor => flat.len(),
+    };
+    let codebook =
+        scheme.build_codebook(group_len, Some(flat), fisher)?;
+    let mut quantiser = Quantiser::new(
+        scheme.granularity,
+        scheme.statistic,
+        scheme.scale_format,
+        codebook,
+    );
+
+    // multiplier: fixed, or searched to minimise (weighted) squared error
+    if scheme.multiplier.is_nan() {
+        let weights = if fisher.is_empty() { &[][..] } else { fisher };
+        let base = quantiser.clone();
+        let flat_ref: &[f32] = flat;
+        let (best, _) = grid_then_golden(&scale_search_grid(), |m| {
+            let q = base.clone().with_multiplier(m);
+            let recon = q.qdq(flat_ref, channel_len);
+            crate::dist::fit::weighted_sq_err(flat_ref, &recon, weights)
+        });
+        quantiser = quantiser.with_multiplier(best);
+    } else {
+        quantiser = quantiser.with_multiplier(scheme.multiplier);
+    }
+
+    let sparse = SparseOutliers {
+        fraction: scheme.sparse,
+        criterion: if fisher.is_empty() {
+            OutlierCriterion::AbsValue
+        } else {
+            OutlierCriterion::FisherWeighted
+        },
+    };
+    let (recon, mut bits) = if scheme.sparse > 0.0 {
+        qdq_with_outliers(&quantiser, &sparse, flat, fisher, channel_len)
+    } else {
+        let recon = quantiser.qdq(flat, channel_len);
+        (recon, quantiser.bits_per_element(flat.len(), channel_len))
+    };
+
+    // compression: replace the element-index cost with its entropy rate
+    if scheme.compress {
+        let enc = quantiser.encode(flat, channel_len);
+        let mut counts = vec![0u64; quantiser.codebook.len()];
+        for &i in &enc.indices {
+            counts[i as usize] += 1;
+        }
+        let h = entropy_bits(&counts);
+        bits = bits - quantiser.codebook.storage_bits() + h;
+    }
+
+    let sq_err = crate::util::stats::sq_err(flat, &recon);
+    Ok(TensorQdq {
+        recon,
+        bits,
+        sq_err,
+    })
+}
+
+/// Compressed uniform grid path (§2.3/§4): tensor-RMS scaling is *folded
+/// into the grid resolution* — one global relative resolution
+/// δ_t = c·RMS(θ_t) with c = 2^(h₀ − b), h₀ the differential entropy of a
+/// unit Normal (½·log2(2πe) ≈ 2.047).  Per-tensor *rates* then vary with
+/// tail weight (heavier tails → higher entropy → more bits), which is
+/// exactly the cross-tensor variable-length allocation the paper credits
+/// for the compressed format's win; the realised entropy is reported as
+/// the honest bits figure.  A per-tensor δ search to a *fixed* rate
+/// (`:search` flag) is also available, and measurably worse at low b.
+fn qdq_grid(scheme: &Scheme, flat: &[f32]) -> Result<TensorQdq> {
+    if scheme.granularity != Granularity::Tensor {
+        bail!("grid schemes use tensor granularity (scale folds into δ)");
+    }
+    if scheme.multiplier.is_nan() {
+        // explicit per-tensor rate search (fixed-rate-per-tensor ablation)
+        let r = grid_for_target_bits(flat, scheme.bits);
+        let grid = crate::compress::grid::UniformGrid::new(r.delta);
+        let recon: Vec<f32> = flat.iter().map(|&x| grid.qdq(x)).collect();
+        return Ok(TensorQdq {
+            recon,
+            bits: r.bits_per_element,
+            sq_err: r.sq_err,
+        });
+    }
+    const H0: f64 = 2.047; // ½·log2(2πe)
+    let rms = crate::util::stats::rms(flat).max(1e-30);
+    let delta = rms * 2f64.powf(H0 - scheme.bits) * scheme.multiplier;
+    let grid = crate::compress::grid::UniformGrid::new(delta);
+    let (counts, sq_err) = grid.count_histogram(flat);
+    let recon: Vec<f32> = flat.iter().map(|&x| grid.qdq(x)).collect();
+    Ok(TensorQdq {
+        recon,
+        bits: entropy_bits(&counts),
+        sq_err,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Dist, Family};
+    use crate::util::rng::Rng;
+    use crate::util::stats::relative_rms_error;
+
+    fn data_2d(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        Dist::standard(Family::StudentT, 6.0).sample_vec(&mut rng, rows * cols)
+    }
+
+    fn run(spec: &str, data: &[f32], shape: &[usize]) -> TensorQdq {
+        let scheme = Scheme::parse(spec).unwrap();
+        qdq_tensor(&scheme, data, shape, Some(1), &[], 7).unwrap()
+    }
+
+    #[test]
+    fn bits_accounting_across_paths() {
+        let data = data_2d(64, 96, 1);
+        let shape = [64, 96];
+        let t = run("int@4:block64-absmax", &data, &shape);
+        assert!((t.bits - 4.25).abs() < 1e-9, "{}", t.bits);
+        let t = run("int@4:block64-absmax:sparse0.001", &data, &shape);
+        assert!(t.bits > 4.25 && t.bits < 4.35, "{}", t.bits);
+        let t = run("cbrt-t7@4:tensor-rms", &data, &shape);
+        assert!(t.bits > 4.0 && t.bits < 4.01, "{}", t.bits);
+        let t = run("grid@3.5:tensor-rms:compress", &data, &shape);
+        assert!((t.bits - 3.5).abs() < 0.1, "{}", t.bits);
+    }
+
+    #[test]
+    fn compression_reduces_bits_for_nonuniform_usage() {
+        // tensor absmax INT on heavy-tailed data concentrates indices
+        // near the middle ⇒ entropy ≪ 4 bits
+        let data = data_2d(64, 64, 2);
+        let plain = run("int@4:tensor-absmax", &data, &[64, 64]);
+        let compressed = run("int@4:tensor-absmax:compress", &data, &[64, 64]);
+        assert!(compressed.bits < plain.bits - 0.5);
+        // identical reconstruction (compression is lossless)
+        assert_eq!(plain.recon, compressed.recon);
+    }
+
+    #[test]
+    fn rotation_roundtrips_and_helps_tensor_scaling() {
+        let mut data = data_2d(64, 64, 3);
+        // heavy outlier to break tensor absmax
+        data[100] = 80.0;
+        let shape = [64, 64];
+        let plain = run("cbrt-normal@4:tensor-rms", &data, &shape);
+        let rotated = run("cbrt-normal@4:tensor-rms:rot", &data, &shape);
+        let r_plain = relative_rms_error(&data, &plain.recon);
+        let r_rot = relative_rms_error(&data, &rotated.recon);
+        assert!(
+            r_rot < r_plain,
+            "rotation should fix the outlier: {r_rot} vs {r_plain}"
+        );
+    }
+
+    #[test]
+    fn channel_scaling_handles_column_structure() {
+        // columns with wildly different scales
+        let (rows, cols) = (32, 8);
+        let mut rng = Rng::new(4);
+        let mut data = vec![0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                data[r * cols + c] =
+                    rng.normal() as f32 * 10f32.powi(c as i32 % 4);
+            }
+        }
+        let ch = run("int@4:channel-absmax", &data, &[rows, cols]);
+        let tn = run("int@4:tensor-absmax", &data, &[rows, cols]);
+        let r_ch = relative_rms_error(&data, &ch.recon);
+        let r_tn = relative_rms_error(&data, &tn.recon);
+        assert!(r_ch < r_tn * 0.5, "channel {r_ch} vs tensor {r_tn}");
+    }
+
+    #[test]
+    fn search_multiplier_beats_moment_matching_for_int_rms() {
+        let data = data_2d(64, 64, 5);
+        let fixed = run("int@4:tensor-rms:mult2", &data, &[64, 64]);
+        let searched = run("int@4:tensor-rms:search", &data, &[64, 64]);
+        assert!(searched.sq_err <= fixed.sq_err * 1.001);
+    }
+
+    #[test]
+    fn lloyd_fits_this_tensor() {
+        let data = data_2d(64, 64, 6);
+        let lloyd = run("lloyd@4:tensor-rms", &data, &[64, 64]);
+        let cbrt = run("cbrt-normal@4:tensor-rms", &data, &[64, 64]);
+        // data is Student-t; fitted Lloyd must beat the mismatched Normal
+        assert!(lloyd.sq_err < cbrt.sq_err);
+    }
+}

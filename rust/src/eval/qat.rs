@@ -1,0 +1,464 @@
+//! Quantisation-aware training (§D "Quantisation aware training") and the
+//! downstream-task proxy battery (figs. 7/9/10, tables 1/2).
+//!
+//! QAT runs the AOT `qat_step_m_*` artifact: an STE-quantised forward
+//! (through the Pallas qdq kernel), full-KL loss against reference logits
+//! and a fused Adam update — one PJRT call per step.  The downstream proxy
+//! replaces OLMES (unavailable offline) with four synthetic probe tasks
+//! scored by the same argmax machinery (DESIGN.md "Substitutions").
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::config::Scheme;
+use crate::coordinator::{fmt, Report};
+use crate::eval::llm::{headline_schemes, Env};
+use crate::runtime::model::ModelRunner;
+use crate::runtime::OwnedValue;
+use crate::util::stats;
+
+/// The QAT variants with exported step artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QatKind {
+    BlockAbsmax128,
+    TensorRms,
+}
+
+impl QatKind {
+    fn artifact(&self) -> &'static str {
+        match self {
+            QatKind::BlockAbsmax128 => "qat_step_m_block128_absmax",
+            QatKind::TensorRms => "qat_step_m_tensor_rms",
+        }
+    }
+
+    /// The matching direct-cast scheme for final evaluation at `b` bits.
+    pub fn scheme(&self, b: u32) -> String {
+        match self {
+            QatKind::BlockAbsmax128 => {
+                format!("cbrt-t7@{b}:block128-absmax")
+            }
+            QatKind::TensorRms => format!("cbrt-t7@{b}:tensor-rms"),
+        }
+    }
+}
+
+/// Pad a codebook to the artifact's 16-slot LUT by duplicating codepoints
+/// (nearest-neighbour semantics are unchanged; verified in python tests).
+fn pad_codebook(points: &[f32]) -> Vec<f32> {
+    let mut out = points.to_vec();
+    while out.len() < 16 {
+        out.push(*out.last().unwrap());
+    }
+    out.sort_by(|a, b| a.total_cmp(b));
+    out
+}
+
+/// Train QAT masters for a scheme; returns the *master* parameters (to be
+/// direct-cast with the same scheme for evaluation). Cached per tag in Env.
+pub fn qat_train(
+    env: &mut Env,
+    kind: QatKind,
+    bits: u32,
+    steps: usize,
+) -> Result<HashMap<String, Vec<f32>>> {
+    let tag = format!("{kind:?}@{bits}x{steps}");
+    if let Some(p) = env.qat_cache.get(&tag) {
+        return Ok(p.clone());
+    }
+    let size = "m";
+    let scheme = Scheme::parse(&kind.scheme(bits))?;
+    let codebook = pad_codebook(
+        scheme
+            .build_codebook(128, None, &[])?
+            .points(),
+    );
+
+    let ck = env.checkpoint(size)?;
+    let config = ck.config.clone();
+    let mut params = ck.params();
+    let mut m: HashMap<String, Vec<f32>> = params
+        .iter()
+        .map(|(k, v)| (k.clone(), vec![0f32; v.len()]))
+        .collect();
+    let mut v = m.clone();
+
+    // reference logits over the QAT train pool, computed once
+    let train = env.tokens(size, "train")?;
+    let pool_tokens: Vec<i32> = train.tokens.clone();
+    let pool_seqs = train.n_seq;
+    let seq = train.seq_len;
+    let ref_params = env.checkpoint(size)?.params();
+    let runner = ModelRunner::new(&env.rt, size, config.clone())?;
+    let pool_logits = runner.logits(&ref_params, &pool_tokens)?;
+
+    let info = env.rt.artifact(kind.artifact())?.clone();
+    let qat_batch = info
+        .inputs
+        .iter()
+        .find(|s| s.dtype == "int32")
+        .context("no tokens input")?
+        .shape[0];
+    let vocab = config.vocab;
+    // lr ∝ 2^-b heuristic from table 6
+    let lr = 2f32.powi(-(6 + bits as i32));
+
+    let mut loss_first = f64::NAN;
+    let mut loss_last = f64::NAN;
+    for step in 0..steps {
+        let start = (step * qat_batch) % pool_seqs;
+        let mut toks = vec![0i32; qat_batch * seq];
+        let mut refs = vec![0f32; qat_batch * seq * vocab];
+        for row in 0..qat_batch {
+            let s = (start + row) % pool_seqs;
+            toks[row * seq..(row + 1) * seq]
+                .copy_from_slice(&pool_tokens[s * seq..(s + 1) * seq]);
+            refs[row * seq * vocab..(row + 1) * seq * vocab]
+                .copy_from_slice(
+                    &pool_logits[s * seq * vocab..(s + 1) * seq * vocab],
+                );
+        }
+        // marshal inputs in manifest order:
+        // arg0.<p> params, arg1.<p> m, arg2.<p> v, arg3 step, arg4 tokens,
+        // arg5 ref logits, arg6 codebook, arg7 lr
+        let outputs = env.rt.execute_named(kind.artifact(), |spec| {
+            if let Some(p) = spec.name.strip_prefix("arg0.") {
+                Ok(OwnedValue::F32(params[p].clone()))
+            } else if let Some(p) = spec.name.strip_prefix("arg1.") {
+                Ok(OwnedValue::F32(m[p].clone()))
+            } else if let Some(p) = spec.name.strip_prefix("arg2.") {
+                Ok(OwnedValue::F32(v[p].clone()))
+            } else if spec.name == "arg3" {
+                Ok(OwnedValue::F32(vec![step as f32]))
+            } else if spec.dtype == "int32" {
+                Ok(OwnedValue::I32(toks.clone()))
+            } else if spec.numel() == qat_batch * seq * vocab {
+                Ok(OwnedValue::F32(refs.clone()))
+            } else if spec.numel() == 16 {
+                Ok(OwnedValue::F32(codebook.clone()))
+            } else if spec.name == "arg7" {
+                Ok(OwnedValue::F32(vec![lr]))
+            } else {
+                anyhow::bail!("unmatched input {}", spec.name)
+            }
+        })?;
+        // outputs: out.0.<p>, out.1.<p>, out.2.<p>, out.3 (loss)
+        let mut loss = f64::NAN;
+        for (spec, out) in info.outputs.iter().zip(outputs) {
+            if let Some(p) = spec.name.strip_prefix("out.0.") {
+                params.insert(p.to_string(), out);
+            } else if let Some(p) = spec.name.strip_prefix("out.1.") {
+                m.insert(p.to_string(), out);
+            } else if let Some(p) = spec.name.strip_prefix("out.2.") {
+                v.insert(p.to_string(), out);
+            } else {
+                loss = out[0] as f64;
+            }
+        }
+        if step == 0 {
+            loss_first = loss;
+        }
+        loss_last = loss;
+    }
+    eprintln!(
+        "[qat {tag}] {steps} steps: loss {loss_first:.4} -> {loss_last:.4}"
+    );
+    env.qat_cache.insert(tag, params.clone());
+    Ok(params)
+}
+
+// ---------------------------------------------------------------------------
+// downstream proxy battery
+// ---------------------------------------------------------------------------
+
+/// Task names for the downstream proxy (OLMES substitution).
+pub const TASKS: [&str; 4] = ["NextTok", "Cloze", "MC4", "XDom"];
+
+/// Score the proxy battery for a parameter set.
+pub fn downstream(
+    env: &mut Env,
+    size: &str,
+    params: &HashMap<String, Vec<f32>>,
+) -> Result<Vec<f64>> {
+    let config = env.checkpoint(size)?.config.clone();
+    let n = env.opts.eval_seqs;
+    let eval_toks = env.tokens(size, "eval")?.take(n).to_vec();
+    let xdom_toks = env.tokens(size, "xdom")?.take(n).to_vec();
+    let ref_params = env.checkpoint(size)?.params();
+    let runner = ModelRunner::new(&env.rt, size, config.clone())?;
+    let logits = runner.logits(params, &eval_toks)?;
+    let xlogits = runner.logits(params, &xdom_toks)?;
+    let ref_logits = runner.logits(&ref_params, &eval_toks)?;
+    let (seq, vocab) = (config.seq_len, config.vocab);
+    let n_seq = eval_toks.len() / seq;
+
+    let mut nexttok = (0usize, 0usize);
+    let mut cloze = (0usize, 0usize);
+    let mut mc4 = (0usize, 0usize);
+    let mut rng = crate::util::rng::Rng::new(0xD05E);
+    for s in 0..n_seq {
+        for t in 0..seq - 1 {
+            let base = (s * seq + t) * vocab;
+            let row = &logits[base..base + vocab];
+            let ref_row = &ref_logits[base..base + vocab];
+            let target = eval_toks[s * seq + t + 1] as usize;
+            let top1 = argmax(row);
+            // NextTok: plain top-1 accuracy
+            nexttok.1 += 1;
+            nexttok.0 += (top1 == target) as usize;
+            // Cloze: positions where the *reference* is confident
+            let ref_top1 = argmax(ref_row);
+            let conf = softmax_prob(ref_row, ref_top1);
+            if conf > 0.5 {
+                cloze.1 += 1;
+                cloze.0 += (top1 == target) as usize;
+            }
+            // MC4: pick among the target + 3 seeded distractors
+            let mut best = target;
+            for _ in 0..3 {
+                let d = rng.below(vocab);
+                if row[d] > row[best] {
+                    best = d;
+                }
+            }
+            mc4.1 += 1;
+            mc4.0 += (best == target) as usize;
+        }
+    }
+    let mut xacc = (0usize, 0usize);
+    let xn_seq = xdom_toks.len() / seq;
+    for s in 0..xn_seq {
+        for t in 0..seq - 1 {
+            let base = (s * seq + t) * vocab;
+            let row = &xlogits[base..base + vocab];
+            let target = xdom_toks[s * seq + t + 1] as usize;
+            xacc.1 += 1;
+            xacc.0 += (argmax(row) == target) as usize;
+        }
+    }
+    let acc = |c: (usize, usize)| c.0 as f64 / c.1.max(1) as f64;
+    Ok(vec![acc(nexttok), acc(cloze), acc(mc4), acc(xacc)])
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn softmax_prob(row: &[f32], idx: usize) -> f64 {
+    let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x)) as f64;
+    let z: f64 = row.iter().map(|&x| ((x as f64) - max).exp()).sum();
+    ((row[idx] as f64) - max).exp() / z
+}
+
+/// Downstream mean-accuracy ratio vs the baseline (§D), clipped to [0,1].
+fn mean_ratio(accs: &[f64], baseline: &[f64]) -> f64 {
+    stats::mean(
+        &accs
+            .iter()
+            .zip(baseline)
+            .map(|(&a, &b)| (a / b.max(1e-9)).clamp(0.0, 1.0))
+            .collect::<Vec<_>>(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// figures / tables
+// ---------------------------------------------------------------------------
+
+/// table 1 — downstream proxy under direct-cast at b≈3.
+pub fn tab1_downstream_dc(env: &mut Env) -> Result<Report> {
+    let size = "m".to_string();
+    let mut rep = Report::new(
+        "tab1",
+        "downstream proxy @ b≈3, direct-cast (microllama-m)",
+        &["format", "b", "KL", "NextTok", "Cloze", "MC4", "XDom"],
+    );
+    let baseline_params = env.checkpoint(&size)?.params();
+    let base = downstream(env, &size, &baseline_params)?;
+    let mut row = vec!["Baseline".to_string(), "32".into(), "0".into()];
+    row.extend(base.iter().map(|&a| fmt(a)));
+    rep.row(row);
+    for (label, spec) in headline_schemes(3) {
+        let scheme = Scheme::parse(&spec)?;
+        let (params, bits, _) = env.quantise(&size, &scheme, None, false)?;
+        let (kl, _) = env.evaluate(&size, &params)?;
+        let accs = downstream(env, &size, &params)?;
+        let mut row = vec![label, fmt(bits), fmt(kl.mean)];
+        row.extend(accs.iter().map(|&a| fmt(a)));
+        rep.row(row);
+    }
+    rep.note("paper table 1: task accuracy follows the KL ranking");
+    Ok(rep)
+}
+
+/// table 2 — downstream proxy after QAT at b≈3.
+pub fn tab2_downstream_qat(env: &mut Env) -> Result<Report> {
+    let mut rep = Report::new(
+        "tab2",
+        "downstream proxy @ b≈3 after QAT (microllama-m)",
+        &["format", "b", "KL", "NextTok", "Cloze", "MC4", "XDom"],
+    );
+    let size = "m".to_string();
+    let steps = env.opts.qat_steps;
+    let baseline_params = env.checkpoint(&size)?.params();
+    let base = downstream(env, &size, &baseline_params)?;
+    let mut row = vec!["Baseline".to_string(), "32".into(), "0".into()];
+    row.extend(base.iter().map(|&a| fmt(a)));
+    rep.row(row);
+    for kind in [QatKind::BlockAbsmax128, QatKind::TensorRms] {
+        let masters = qat_train(env, kind, 3, steps)?;
+        let scheme = Scheme::parse(&kind.scheme(3))?;
+        // final model: direct-cast of the QAT masters
+        let (params, bits) = quantise_masters(env, &scheme, &masters)?;
+        let (kl, _) = env.evaluate(&size, &params)?;
+        let accs = downstream(env, &size, &params)?;
+        let mut row = vec![format!("{kind:?} (QAT)"), fmt(bits), fmt(kl.mean)];
+        row.extend(accs.iter().map(|&a| fmt(a)));
+        rep.row(row);
+    }
+    rep.note(format!(
+        "paper table 2 (QAT steps: {steps} here vs 8192 in the paper)"
+    ));
+    Ok(rep)
+}
+
+/// Quantise externally-supplied master parameters with a scheme.
+fn quantise_masters(
+    env: &mut Env,
+    scheme: &Scheme,
+    masters: &HashMap<String, Vec<f32>>,
+) -> Result<(HashMap<String, Vec<f32>>, f64)> {
+    let shapes: Vec<(String, Vec<usize>, Option<usize>, usize)> = {
+        let ck = env.checkpoint("m")?;
+        ck.store
+            .tensors
+            .iter()
+            .map(|t| (t.name.clone(), t.shape.clone(), t.channel_axis, t.numel()))
+            .collect()
+    };
+    let mut out = HashMap::new();
+    let mut bits_total = 0f64;
+    let mut elems = 0usize;
+    for (name, shape, channel_axis, numel) in shapes {
+        let data = &masters[&name];
+        // QAT leaves 1-D tensors unquantised (norm gains)
+        if shape.len() < 2 {
+            out.insert(name, data.clone());
+            bits_total += 16.0 * numel as f64;
+            elems += numel;
+            continue;
+        }
+        let q = crate::eval::pipeline::qdq_tensor(
+            scheme,
+            data,
+            &shape,
+            channel_axis,
+            &[],
+            0xA7,
+        )?;
+        bits_total += q.bits * numel as f64;
+        elems += numel;
+        out.insert(name, q.recon);
+    }
+    Ok((out, bits_total / elems as f64))
+}
+
+/// fig. 7 — QAT downstream trade-off.
+pub fn fig7_qat_downstream(env: &mut Env) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig7",
+        "bits vs downstream mean-accuracy ratio after QAT (microllama-m)",
+        &["format", "b", "KL", "downstream ratio"],
+    );
+    let steps = env.opts.qat_steps;
+    let baseline_params = env.checkpoint("m")?.params();
+    let base = downstream(env, "m", &baseline_params)?;
+    for kind in [QatKind::BlockAbsmax128, QatKind::TensorRms] {
+        for b in [3u32, 4] {
+            let masters = qat_train(env, kind, b, steps)?;
+            let scheme = Scheme::parse(&kind.scheme(b))?;
+            let (params, bits) = quantise_masters(env, &scheme, &masters)?;
+            let (kl, _) = env.evaluate("m", &params)?;
+            let accs = downstream(env, "m", &params)?;
+            rep.row(vec![
+                format!("{kind:?}"),
+                fmt(bits),
+                fmt(kl.mean),
+                fmt(mean_ratio(&accs, &base)),
+            ]);
+        }
+    }
+    rep.note("paper fig. 7: downstream saturates with b; format choice matters most at b=3");
+    Ok(rep)
+}
+
+/// fig. 9 — direct-cast vs QAT side by side.
+pub fn fig9_dc_vs_qat(env: &mut Env) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig9",
+        "direct-cast vs QAT at b=3 (KL and downstream ratio)",
+        &["format", "KL dc", "KL qat", "ds dc", "ds qat"],
+    );
+    let steps = env.opts.qat_steps;
+    let baseline_params = env.checkpoint("m")?.params();
+    let base = downstream(env, "m", &baseline_params)?;
+    for kind in [QatKind::BlockAbsmax128, QatKind::TensorRms] {
+        let scheme = Scheme::parse(&kind.scheme(3))?;
+        let dc = env.direct_cast("m", &scheme, None, false)?;
+        let (dc_params, _, _) = env.quantise("m", &scheme, None, false)?;
+        let dc_ds = mean_ratio(&downstream(env, "m", &dc_params)?, &base);
+        let masters = qat_train(env, kind, 3, steps)?;
+        let (q_params, _) = quantise_masters(env, &scheme, &masters)?;
+        let (q_kl, _) = env.evaluate("m", &q_params)?;
+        let q_ds = mean_ratio(&downstream(env, "m", &q_params)?, &base);
+        rep.row(vec![
+            format!("{kind:?}"),
+            fmt(dc.kl.mean),
+            fmt(q_kl.mean),
+            fmt(dc_ds),
+            fmt(q_ds),
+        ]);
+    }
+    rep.note("paper fig. 9: QAT improves everything, ranking broadly preserved");
+    Ok(rep)
+}
+
+/// fig. 10 — KL ↔ downstream correlation across the sweep.
+pub fn fig10_kl_downstream(env: &mut Env) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig10",
+        "correlation of KL and downstream ratio (direct-cast sweep)",
+        &["format", "b", "KL", "downstream ratio"],
+    );
+    let baseline_params = env.checkpoint("m")?.params();
+    let base = downstream(env, "m", &baseline_params)?;
+    let (mut kls, mut dss) = (Vec::new(), Vec::new());
+    for b in [3u32, 4] {
+        for spec in [
+            format!("cbrt-t7@{b}:block128-absmax"),
+            format!("cbrt-t7@{b}:tensor-rms"),
+            format!("cbrt-t7@{b}:tensor-rms:sparse0.001"),
+        ] {
+            let scheme = Scheme::parse(&spec)?;
+            let (params, bits, _) =
+                env.quantise("m", &scheme, None, false)?;
+            let (kl, _) = env.evaluate("m", &params)?;
+            let ds = mean_ratio(&downstream(env, "m", &params)?, &base);
+            kls.push(kl.mean.max(1e-12).ln());
+            dss.push(ds);
+            rep.row(vec![spec, fmt(bits), fmt(kl.mean), fmt(ds)]);
+        }
+    }
+    rep.note(format!(
+        "pearson(log KL, downstream) = {} (paper fig. 10: strong negative)",
+        fmt(stats::pearson(&kls, &dss))
+    ));
+    Ok(rep)
+}

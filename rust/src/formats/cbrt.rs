@@ -1,0 +1,283 @@
+//! The paper's √[3]p (cube-root-density) non-uniform quantisers (§2.1,
+//! appendix B.1/E) for Normal, Laplace and Student-t data under RMS, absmax
+//! and signmax scaling, with symmetric/asymmetric variants, generalised to
+//! a `p^α` exponent for the fig. 22 sweep.
+//!
+//! Construction (appendix E):
+//!
+//! * **RMS scaling** — data is scaled to RMS 1, so take D with RMS = 1,
+//!   derive D′ = p^α transform (table 4), and place 2^b codepoints at the
+//!   interior quantiles `linspace(0, 1, 2^b + 2)[1:-1]` of D′.
+//! * **Absmax scaling** — data is scaled so the block max is ±1; model the
+//!   non-maxima as D truncated at the (expected) maximum.  Take D with
+//!   `E[absmax over B] = 1`, transform to D′, truncate at ±1, and place
+//!   2^b codepoints at `linspace(0, 1, 2^b)` (endpoints included, so ±1 are
+//!   always codepoints).
+//! * **Signmax scaling** — the block max is *+1* exactly; special codepoints
+//!   {0, +1} plus 2^b − 2 quantiles of the truncated D′ on (−1, +1).
+
+use crate::dist::{Dist, Family, Truncated};
+use crate::formats::{Codebook, Variant};
+
+/// The exponent of the optimal density rule under a codepoint constraint.
+pub const CBRT_ALPHA: f64 = 1.0 / 3.0;
+
+/// √[3]p codebook for RMS-scaled data (α generalised; α = 1/3 is optimal).
+pub fn cbrt_rms(
+    family: Family,
+    nu: f64,
+    bits: u32,
+    variant: Variant,
+    alpha: f64,
+) -> Codebook {
+    assert!(
+        variant != Variant::Signmax,
+        "signmax implies absmax-style scaling; use cbrt_signmax"
+    );
+    let k = 1usize << bits;
+    let d = Dist::standard(family, nu); // RMS = 1
+    let dp = d.power_transform(alpha);
+    let points = match variant {
+        // interior quantiles of D': linspace(0,1,K+2)[1:-1]
+        Variant::Symmetric => quantiles(&dp, k),
+        // K+1 interior quantiles (odd count ⇒ exact 0), drop the largest
+        Variant::Asymmetric => {
+            let mut pts = quantiles(&dp, k + 1);
+            snap_zero(&mut pts);
+            pts.pop();
+            pts
+        }
+        Variant::Signmax => unreachable!(),
+    };
+    Codebook::with_bits(points, bits as f64)
+}
+
+/// √[3]p codebook for block-absmax-scaled data.
+pub fn cbrt_absmax(
+    family: Family,
+    nu: f64,
+    bits: u32,
+    block: usize,
+    variant: Variant,
+    alpha: f64,
+) -> Codebook {
+    let k = 1usize << bits;
+    let trunc = truncated_dprime(family, nu, block, alpha);
+    let points = match variant {
+        // endpoint-inclusive quantiles: ±1 always representable
+        Variant::Symmetric => trunc_quantiles(&trunc, k, true),
+        // one extra quantile (odd ⇒ exact 0 present), drop +1 (INT
+        // convention: asymmetry sacrifices the positive endpoint)
+        Variant::Asymmetric => {
+            let mut pts = trunc_quantiles(&trunc, k + 1, true);
+            snap_zero(&mut pts);
+            pts.pop();
+            pts
+        }
+        Variant::Signmax => {
+            // {0, +1} special + K-2 interior quantiles of truncated D'
+            let mut pts = vec![0.0f32, 1.0];
+            pts.extend(trunc_quantiles(&trunc, k - 2, false));
+            pts
+        }
+    };
+    Codebook::with_bits(points, bits as f64)
+}
+
+/// The truncated D′ used by absmax/signmax constructions: D scaled so that
+/// `E[absmax over block] = 1`, power-transformed, truncated at ±1.
+pub fn truncated_dprime(
+    family: Family,
+    nu: f64,
+    block: usize,
+    alpha: f64,
+) -> Truncated {
+    let d = Dist::standard(family, nu);
+    let scaled = d.with_absmax(block, 1.0);
+    let dp = scaled.power_transform(alpha);
+    Truncated::new(dp, -1.0, 1.0)
+}
+
+/// Interior quantile codepoints: linspace(0, 1, k+2)[1:-1] through the ppf.
+fn quantiles(d: &Dist, k: usize) -> Vec<f32> {
+    assert!(k >= 1);
+    (1..=k)
+        .map(|i| d.ppf(i as f64 / (k + 1) as f64) as f32)
+        .collect()
+}
+
+fn trunc_quantiles(t: &Truncated, k: usize, endpoints: bool) -> Vec<f32> {
+    assert!(k >= 1);
+    if endpoints {
+        if k == 1 {
+            return vec![t.ppf(0.5) as f32];
+        }
+        (0..k)
+            .map(|i| t.ppf(i as f64 / (k - 1) as f64) as f32)
+            .collect()
+    } else {
+        (1..=k)
+            .map(|i| t.ppf(i as f64 / (k + 1) as f64) as f32)
+            .collect()
+    }
+}
+
+/// Snap the value nearest zero to exact 0.0 (guards f64→f32 residue on the
+/// middle quantile of odd-count constructions).
+fn snap_zero(pts: &mut [f32]) {
+    if let Some((i, _)) = pts.iter().enumerate().min_by(|(_, a), (_, b)| {
+        a.abs().partial_cmp(&b.abs()).unwrap()
+    }) {
+        pts[i] = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Dist;
+
+    /// Matches the paper's E.1 Normal example:
+    /// `Q = norm.ppf(linspace(0,1,2^b+2)[1:-1], scale=sqrt(3))`.
+    #[test]
+    fn rms_normal_matches_e1_recipe() {
+        let cb = cbrt_rms(Family::Normal, 0.0, 4, Variant::Symmetric, CBRT_ALPHA);
+        assert_eq!(cb.len(), 16);
+        let d = Dist::normal(3f64.sqrt());
+        for (i, &p) in cb.points().iter().enumerate() {
+            let want = d.ppf((i + 1) as f64 / 17.0) as f32;
+            assert!((p - want).abs() < 1e-5, "i={i}: {p} vs {want}");
+        }
+        // symmetric, no zero
+        assert!(!cb.has_zero());
+        assert!((cb.points()[0] + cb.points()[15]).abs() < 1e-6);
+    }
+
+    /// Matches E.1 Student-t: `t.ppf(p, (df-2)/3, scale=sqrt(3))` for df=7.
+    #[test]
+    fn rms_student_matches_e1_recipe() {
+        let df = 7.0;
+        let cb = cbrt_rms(Family::StudentT, df, 4, Variant::Symmetric, CBRT_ALPHA);
+        // D = t(7) with RMS 1 ⇒ s = sqrt(5/7); D' = t((7-2)/3) with
+        // s' = s*sqrt(7/((7-2)/3)) = sqrt(5/7)*sqrt(21/5) = sqrt(3). ✓ E.1
+        let dp = Dist::student_t((df - 2.0) / 3.0, 3f64.sqrt());
+        for (i, &p) in cb.points().iter().enumerate() {
+            let want = dp.ppf((i + 1) as f64 / 17.0) as f32;
+            assert!(
+                (p - want).abs() < 1e-4 * want.abs().max(1.0),
+                "i={i}: {p} vs {want}"
+            );
+        }
+    }
+
+    /// Matches E.2: truncnorm quantiles with scale sqrt(3/(2 ln(B/π))).
+    #[test]
+    fn absmax_normal_matches_e2_recipe() {
+        let block = 64;
+        let cb = cbrt_absmax(
+            Family::Normal, 0.0, 4, block, Variant::Symmetric, CBRT_ALPHA,
+        );
+        assert_eq!(cb.len(), 16);
+        let scale = (3.0 / (2.0 * (block as f64 / std::f64::consts::PI).ln()))
+            .sqrt();
+        let trunc = Truncated::new(Dist::normal(scale), -1.0, 1.0);
+        for (i, &p) in cb.points().iter().enumerate() {
+            let want = trunc.ppf(i as f64 / 15.0) as f32;
+            assert!((p - want).abs() < 1e-5, "i={i}: {p} vs {want}");
+        }
+        // endpoints exactly representable
+        assert_eq!(cb.points()[0], -1.0);
+        assert_eq!(cb.points()[15], 1.0);
+    }
+
+    #[test]
+    fn absmax_laplace_matches_e2_scale() {
+        let block = 64usize;
+        let t = truncated_dprime(Family::Laplace, 0.0, block, CBRT_ALPHA);
+        // E.2: scale = 3 / (γ + ln B)
+        let want = 3.0 / (crate::dist::EULER_GAMMA + (block as f64).ln());
+        match t.base {
+            Dist::Laplace { s } => {
+                assert!((s - want).abs() < 1e-12, "{s} vs {want}")
+            }
+            _ => panic!("family"),
+        }
+    }
+
+    #[test]
+    fn absmax_student_matches_e2_scale() {
+        let block = 64usize;
+        let df = 7.0;
+        let t = truncated_dprime(Family::StudentT, df, block, CBRT_ALPHA);
+        // E.2: scale = (2 ln(B/π))^((3-df)/(2 df)) * B^(-1/df) * sqrt(3)
+        let b = block as f64;
+        let want = (2.0 * (b / std::f64::consts::PI).ln())
+            .powf((3.0 - df) / (2.0 * df))
+            * b.powf(-1.0 / df)
+            * 3f64.sqrt();
+        match t.base {
+            Dist::StudentT { nu, s } => {
+                assert!((nu - (df - 2.0) / 3.0).abs() < 1e-12);
+                assert!(
+                    ((s - want) / want).abs() < 1e-10,
+                    "{s} vs {want}"
+                );
+            }
+            _ => panic!("family"),
+        }
+    }
+
+    #[test]
+    fn asymmetric_variants_have_zero() {
+        for fam in [Family::Normal, Family::Laplace, Family::StudentT] {
+            let rms = cbrt_rms(fam, 7.0, 3, Variant::Asymmetric, CBRT_ALPHA);
+            assert!(rms.has_zero(), "{fam:?} rms");
+            assert_eq!(rms.len(), 8);
+            let am = cbrt_absmax(fam, 7.0, 3, 64, Variant::Asymmetric, CBRT_ALPHA);
+            assert!(am.has_zero(), "{fam:?} absmax");
+            assert_eq!(am.len(), 8);
+            // asymmetric absmax keeps −1, drops +1
+            assert_eq!(am.points()[0], -1.0);
+            assert!(am.absmax() <= 1.0 && *am.points().last().unwrap() < 1.0);
+        }
+    }
+
+    #[test]
+    fn signmax_specials() {
+        let cb = cbrt_absmax(
+            Family::Normal, 0.0, 3, 64, Variant::Signmax, CBRT_ALPHA,
+        );
+        assert_eq!(cb.len(), 8);
+        assert!(cb.has_zero());
+        assert_eq!(*cb.points().last().unwrap(), 1.0);
+        // no −1: sign is absorbed into the scale
+        assert!(cb.points()[0] > -1.0);
+    }
+
+    #[test]
+    fn quantile_rule_alpha_one_reduces_to_quantile_quantisation() {
+        // α = 1 ⇒ D′ = D: codepoints are plain quantiles of D.
+        let cb = cbrt_rms(Family::Normal, 0.0, 3, Variant::Symmetric, 1.0);
+        let d = Dist::standard(Family::Normal, 0.0);
+        for (i, &p) in cb.points().iter().enumerate() {
+            let want = d.ppf((i + 1) as f64 / 9.0) as f32;
+            assert!((p - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn codepoint_density_follows_cbrt_rule() {
+        // Empirical check of the defining property: the number of codepoints
+        // in an interval is ∝ ∫ p^(1/3). Use a large codebook for fidelity.
+        let bits = 8;
+        let cb = cbrt_rms(Family::Normal, 0.0, bits, Variant::Symmetric, CBRT_ALPHA);
+        let dp = Dist::standard(Family::Normal, 0.0).cbrt();
+        // count points in [-1, 1] vs expectation under D'
+        let count = cb.points().iter().filter(|p| p.abs() <= 1.0).count();
+        let expect = (dp.cdf(1.0) - dp.cdf(-1.0)) * cb.len() as f64;
+        assert!(
+            ((count as f64 - expect) / expect).abs() < 0.05,
+            "count {count} vs expect {expect:.1}"
+        );
+    }
+}

@@ -1,0 +1,228 @@
+//! Generic EkMm minifloat element formats (fig. 19's exponent sweep,
+//! E2M1/E3M0 of fig. 18, and the scale formats of §scaling).
+//!
+//! Encodings follow the "all finite" convention used by sub-byte deep
+//! learning formats (MX/FP4): 1 sign bit, `e` exponent bits (bias
+//! 2^(e-1)-1), `m` mantissa bits, subnormals at exponent 0, **no inf/NaN**
+//! (the top exponent is an ordinary binade).  ±0 both exist, so one encoding
+//! is wasted — exactly the "represent zero twice" property the paper notes
+//! for symmetric float formats.
+
+use crate::formats::Codebook;
+
+/// All representable values of the EkMm format, one per *encoding* (so ±0
+/// duplicates; `Codebook` dedups but keeps storage at 1+e+m bits).
+pub fn float_values(exp_bits: u32, man_bits: u32) -> Vec<f32> {
+    assert!(exp_bits >= 1 && exp_bits <= 8, "exp bits {exp_bits}");
+    assert!(man_bits <= 10, "man bits {man_bits}");
+    let bias = (1i32 << (exp_bits - 1)) - 1;
+    let mut out = Vec::with_capacity(1 << (1 + exp_bits + man_bits));
+    for sign in [1.0f32, -1.0] {
+        for e in 0..(1u32 << exp_bits) {
+            for m in 0..(1u32 << man_bits) {
+                let frac = m as f32 / (1u32 << man_bits) as f32;
+                let v = if e == 0 {
+                    // subnormal: 0.frac × 2^(1-bias)
+                    frac * 2f32.powi(1 - bias)
+                } else {
+                    (1.0 + frac) * 2f32.powi(e as i32 - bias)
+                };
+                out.push(sign * v);
+            }
+        }
+    }
+    out
+}
+
+/// Largest finite magnitude of EkMm.
+pub fn float_max(exp_bits: u32, man_bits: u32) -> f32 {
+    float_values(exp_bits, man_bits)
+        .into_iter()
+        .fold(0.0, f32::max)
+}
+
+/// EkMm codebook in natural (unnormalised) space.
+pub fn float_codebook(exp_bits: u32, man_bits: u32) -> Codebook {
+    Codebook::with_bits(
+        float_values(exp_bits, man_bits),
+        (1 + exp_bits + man_bits) as f64,
+    )
+}
+
+/// EkMm codebook normalised so the largest magnitude is exactly 1 (the
+/// absmax-scaling convention).
+pub fn float_codebook_normalised(exp_bits: u32, man_bits: u32) -> Codebook {
+    let max = float_max(exp_bits, man_bits);
+    let points = float_values(exp_bits, man_bits)
+        .into_iter()
+        .map(|v| v / max)
+        .collect();
+    Codebook::with_bits(points, (1 + exp_bits + man_bits) as f64)
+}
+
+/// Round an f32 to the nearest EkMm value *with round-to-nearest-even on the
+/// mantissa and saturation at the max magnitude* — used for scale storage
+/// (fig. 20/21's scale-format sweeps) where building a full codebook would
+/// be wasteful for large e+m.
+pub fn round_to_float(x: f32, exp_bits: u32, man_bits: u32, away: bool) -> f32 {
+    if x == 0.0 || !x.is_finite() {
+        return x;
+    }
+    let bias = (1i32 << (exp_bits - 1)) - 1;
+    let max = {
+        let frac =
+            ((1u32 << man_bits) - 1) as f32 / (1u32 << man_bits) as f32;
+        (1.0 + frac) * 2f32.powi(((1i32 << exp_bits) - 1) - bias)
+    };
+    let sign = x.signum();
+    let mag = x.abs();
+    if mag >= max {
+        return sign * max;
+    }
+    // exponent of the binade containing mag, clamped to format range
+    let e = (mag.log2().floor() as i32).clamp(1 - bias, (1 << exp_bits) - 1 - bias);
+    let ulp = 2f32.powi(e - man_bits as i32);
+    let steps = mag / ulp;
+    let rounded = if away {
+        steps.ceil()
+    } else {
+        // round-half-even
+        let f = steps.fract();
+        if (f - 0.5).abs() < f32::EPSILON * steps.max(1.0) {
+            let down = steps.floor();
+            if (down as u64) % 2 == 0 {
+                down
+            } else {
+                down + 1.0
+            }
+        } else {
+            steps.round()
+        }
+    };
+    (sign * rounded * ulp).clamp(-max, max)
+}
+
+/// E8M0: the MX power-of-two scale format (round-away optional).
+pub fn round_to_e8m0(x: f32, away: bool) -> f32 {
+    if x <= 0.0 || !x.is_finite() {
+        return x;
+    }
+    let l = x.log2();
+    let e = if away { l.ceil() } else { l.round() };
+    2f32.powi(e.clamp(-127.0, 127.0) as i32)
+}
+
+/// bfloat16 rounding of a positive scale: `away` = round away from zero
+/// (the paper's default for absmax scales — never shrinks the block max),
+/// else round-to-nearest-even.
+pub fn round_to_bf16(x: f32, away: bool) -> f32 {
+    if x == 0.0 || !x.is_finite() {
+        return x;
+    }
+    let bits = x.to_bits();
+    let lower = bits & 0xFFFF;
+    if lower == 0 {
+        return x;
+    }
+    let upper = bits & 0xFFFF_0000;
+    if away {
+        // magnitude up (works for positive scales, the only use here)
+        f32::from_bits(upper.wrapping_add(0x1_0000))
+    } else {
+        // round-to-nearest-even on the upper half
+        let round_bit = 0x8000u32;
+        let mut up = upper;
+        if lower > round_bit || (lower == round_bit && (upper & 0x1_0000) != 0)
+        {
+            up = up.wrapping_add(0x1_0000);
+        }
+        f32::from_bits(up)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e2m1_is_fp4() {
+        // E2M1 (fp4): ±{0, 0.5, 1, 1.5, 2, 3, 4, 6}
+        let mut v = float_values(2, 1);
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.dedup();
+        assert_eq!(
+            v,
+            vec![-6.0, -4.0, -3.0, -2.0, -1.5, -1.0, -0.5, 0.0, 0.5, 1.0,
+                 1.5, 2.0, 3.0, 4.0, 6.0]
+        );
+        assert_eq!(float_max(2, 1), 6.0);
+    }
+
+    #[test]
+    fn e4m3_like_max() {
+        // all-finite E4M3 → max = 1.875 * 2^8 = 480
+        assert_eq!(float_max(4, 3), 480.0);
+    }
+
+    #[test]
+    fn normalised_touches_one() {
+        for (e, m) in [(2, 1), (3, 0), (3, 2), (5, 2)] {
+            let cb = float_codebook_normalised(e, m);
+            assert_eq!(cb.absmax(), 1.0, "E{e}M{m}");
+            assert!(cb.has_zero());
+            assert_eq!(cb.storage_bits(), (1 + e + m) as f64);
+        }
+    }
+
+    #[test]
+    fn round_to_float_exact_values_fixed() {
+        for &v in &[0.5f32, 1.0, 1.5, 2.0, 3.0, 6.0, -4.0] {
+            assert_eq!(round_to_float(v, 2, 1, false), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn round_to_float_nearest_and_away() {
+        // between 2.0 and 3.0 in E2M1 (ulp = 1.0 in that binade)
+        assert_eq!(round_to_float(2.4, 2, 1, false), 2.0);
+        assert_eq!(round_to_float(2.6, 2, 1, false), 3.0);
+        assert_eq!(round_to_float(2.1, 2, 1, true), 3.0); // away
+        // saturation
+        assert_eq!(round_to_float(100.0, 2, 1, false), 6.0);
+        assert_eq!(round_to_float(-100.0, 2, 1, true), -6.0);
+    }
+
+    #[test]
+    fn bf16_rounding() {
+        let x = f32::from_bits(0x3F80_0001); // 1.0 + tiny
+        assert_eq!(round_to_bf16(x, true), f32::from_bits(0x3F81_0000));
+        assert_eq!(round_to_bf16(x, false), 1.0);
+        assert_eq!(round_to_bf16(1.0, true), 1.0); // exact value unchanged
+        // round-away never shrinks
+        for i in 1..1000 {
+            let v = i as f32 * 0.0137;
+            assert!(round_to_bf16(v, true) >= v);
+        }
+    }
+
+    #[test]
+    fn e8m0_rounding() {
+        assert_eq!(round_to_e8m0(1.0, false), 1.0);
+        assert_eq!(round_to_e8m0(3.0, true), 4.0);
+        // log-space nearest: log2(2.9) ≈ 1.536 rounds to 2 → 2^2
+        assert_eq!(round_to_e8m0(2.9, false), 4.0);
+        assert_eq!(round_to_e8m0(2.5, false), 2.0); // log2(2.5) ≈ 1.32 → 2^1
+    }
+
+    #[test]
+    fn subnormals_present() {
+        let v = float_values(3, 1);
+        // smallest positive: 0.5 * 2^(1-3) = 0.125 for E3M1 (bias 3)
+        let min_pos = v
+            .iter()
+            .copied()
+            .filter(|&x| x > 0.0)
+            .fold(f32::INFINITY, f32::min);
+        assert_eq!(min_pos, 0.5 * 2f32.powi(-2));
+    }
+}

@@ -1,0 +1,89 @@
+//! Integer element formats (normalised to the absmax convention: the
+//! representable range touches ±1).
+//!
+//! * **Asymmetric** (the INT standard, fig. 3): codepoints k/2^(b-1) for
+//!   k ∈ [-2^(b-1), 2^(b-1)-1] — contains exact 0, sacrifices +1.
+//! * **Symmetric**: 2^b evenly spaced points including both ±1, no zero.
+//! * **Signmax**: for signed-max scaling — {0, +1} special plus an even grid
+//!   covering [-1, 1) (fig. 3 right).
+
+use crate::formats::{Codebook, Variant};
+
+/// Build an INT-b codebook for the given variant. `bits` ∈ [2, 8].
+pub fn int_codebook(bits: u32, variant: Variant) -> Codebook {
+    assert!((2..=8).contains(&bits), "int bits {bits}");
+    let k = 1usize << bits;
+    let points: Vec<f32> = match variant {
+        Variant::Asymmetric => {
+            let half = (k / 2) as f32;
+            (0..k).map(|i| (i as f32 - half) / half).collect()
+        }
+        Variant::Symmetric => (0..k)
+            .map(|i| -1.0 + 2.0 * i as f32 / (k - 1) as f32)
+            .collect(),
+        Variant::Signmax => {
+            // {0, 1} plus k-2 evenly spaced points on [-1, 1), skipping
+            // slots that would collide with the specials.
+            let mut pts = vec![0.0f32, 1.0];
+            let body = k - 2;
+            for i in 0..body {
+                let x = -1.0 + 2.0 * i as f32 / body as f32;
+                if x != 0.0 {
+                    pts.push(x);
+                } else {
+                    pts.push(1.0 / body as f32); // fill the freed slot
+                }
+            }
+            pts
+        }
+    };
+    Codebook::with_bits(points, bits as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asymmetric_matches_int_convention() {
+        let cb = int_codebook(3, Variant::Asymmetric);
+        assert_eq!(cb.len(), 8);
+        assert_eq!(
+            cb.points(),
+            &[-1.0, -0.75, -0.5, -0.25, 0.0, 0.25, 0.5, 0.75]
+        );
+        assert!(cb.has_zero());
+    }
+
+    #[test]
+    fn symmetric_touches_both_endpoints() {
+        let cb = int_codebook(4, Variant::Symmetric);
+        assert_eq!(cb.len(), 16);
+        assert_eq!(cb.points()[0], -1.0);
+        assert_eq!(cb.points()[15], 1.0);
+        assert!(!cb.has_zero());
+        // mirror symmetry
+        for i in 0..16 {
+            assert!(
+                (cb.points()[i] + cb.points()[15 - i]).abs() < 1e-6,
+                "not symmetric at {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn signmax_has_specials() {
+        for bits in 2..=5 {
+            let cb = int_codebook(bits, Variant::Signmax);
+            assert!(cb.has_zero(), "b={bits}");
+            assert_eq!(cb.points().last().copied(), Some(1.0));
+            assert_eq!(cb.len(), 1 << bits, "no collisions allowed b={bits}");
+        }
+    }
+
+    #[test]
+    fn storage_bits_recorded() {
+        assert_eq!(int_codebook(4, Variant::Asymmetric).storage_bits(), 4.0);
+        assert_eq!(int_codebook(2, Variant::Symmetric).storage_bits(), 2.0);
+    }
+}

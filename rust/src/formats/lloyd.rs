@@ -1,0 +1,272 @@
+//! Lloyd-Max optimal scalar quantiser (1-D weighted k-means), the
+//! data-driven optimum the √[3]p formats are benchmarked against (fig. 2/16)
+//! and SqueezeLLM's sensitivity-weighted variant (Fisher-diag weights).
+//!
+//! Implementation notes (§D of the paper):
+//! * k-means++ initialisation for RMS-scaled data, uniform(-1, 1) for
+//!   absmax-scaled data;
+//! * iterate until the fraction of changed cluster assignments drops below
+//!   1e-4;
+//! * 1-D structure exploited: data is sorted once, each iteration finds
+//!   segment boundaries by binary search over interval midpoints and
+//!   updates centroids from prefix sums — O(K log n) per iteration.
+
+use crate::formats::Codebook;
+use crate::util::rng::Rng;
+
+/// Initialisation strategy (paper §D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LloydInit {
+    /// k-means++ (RMS-scaled data).
+    KmeansPp,
+    /// Uniform grid on [-1, 1] (absmax-scaled data).
+    Uniform,
+}
+
+/// Configuration for the solver.
+#[derive(Clone, Copy, Debug)]
+pub struct LloydMax {
+    pub k: usize,
+    pub init: LloydInit,
+    pub max_iters: usize,
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl LloydMax {
+    pub fn new(bits: u32, init: LloydInit) -> LloydMax {
+        LloydMax {
+            k: 1 << bits,
+            init,
+            max_iters: 200,
+            tol: 1e-4,
+            seed: DEFAULT_SEED,
+        }
+    }
+
+    /// Fit codepoints to `data` with optional per-element `weights`
+    /// (empty slice = unweighted).
+    pub fn fit(&self, data: &[f32], weights: &[f32]) -> Codebook {
+        assert!(!data.is_empty());
+        assert!(weights.is_empty() || weights.len() == data.len());
+        let k = self.k.min(data.len());
+
+        // sort data (with weights riding along)
+        let mut order: Vec<u32> = (0..data.len() as u32).collect();
+        order.sort_by(|&a, &b| {
+            data[a as usize].total_cmp(&data[b as usize])
+        });
+        let xs: Vec<f64> =
+            order.iter().map(|&i| data[i as usize] as f64).collect();
+        let ws: Vec<f64> = if weights.is_empty() {
+            vec![1.0; xs.len()]
+        } else {
+            order
+                .iter()
+                .map(|&i| (weights[i as usize] as f64).max(0.0))
+                .collect()
+        };
+        // prefix sums of w and w*x for O(1) segment means
+        let n = xs.len();
+        let mut pw = vec![0.0f64; n + 1];
+        let mut pwx = vec![0.0f64; n + 1];
+        for i in 0..n {
+            pw[i + 1] = pw[i] + ws[i];
+            pwx[i + 1] = pwx[i] + ws[i] * xs[i];
+        }
+
+        let mut centroids = self.initial_centroids(&xs, &ws, k);
+        centroids.sort_by(|a, b| a.total_cmp(b));
+
+        let mut boundaries = vec![0usize; k + 1];
+        let mut prev_boundaries = vec![usize::MAX; k + 1];
+        for _ in 0..self.max_iters {
+            // assignment boundaries: first index with x >= midpoint
+            boundaries[0] = 0;
+            boundaries[k] = n;
+            for j in 1..k {
+                let mid = 0.5 * (centroids[j - 1] + centroids[j]);
+                boundaries[j] = xs.partition_point(|&x| x < mid);
+            }
+            // update centroids to segment weighted means
+            for j in 0..k {
+                let (a, b) = (boundaries[j], boundaries[j + 1]);
+                if b > a && pw[b] > pw[a] {
+                    centroids[j] = (pwx[b] - pwx[a]) / (pw[b] - pw[a]);
+                }
+                // empty segment: leave centroid in place
+            }
+            centroids.sort_by(|a, b| a.total_cmp(b));
+            // convergence: fraction of moved assignments
+            let moved: usize = boundaries
+                .iter()
+                .zip(prev_boundaries.iter())
+                .map(|(&a, &b)| {
+                    if b == usize::MAX {
+                        n
+                    } else {
+                        a.abs_diff(b)
+                    }
+                })
+                .sum();
+            prev_boundaries.copy_from_slice(&boundaries);
+            if (moved as f64) / (n as f64) < self.tol {
+                break;
+            }
+        }
+        Codebook::with_bits(
+            centroids.iter().map(|&c| c as f32).collect(),
+            (self.k as f64).log2(),
+        )
+    }
+
+    fn initial_centroids(&self, xs: &[f64], ws: &[f64], k: usize) -> Vec<f64> {
+        match self.init {
+            LloydInit::Uniform => (0..k)
+                .map(|i| -1.0 + 2.0 * (i as f64 + 0.5) / k as f64)
+                .collect(),
+            LloydInit::KmeansPp => {
+                let mut rng = Rng::new(self.seed);
+                let mut centroids = Vec::with_capacity(k);
+                // first centroid: weighted draw
+                centroids.push(xs[weighted_draw(&mut rng, ws)]);
+                let mut d2: Vec<f64> = xs
+                    .iter()
+                    .map(|&x| (x - centroids[0]).powi(2))
+                    .collect();
+                while centroids.len() < k {
+                    let probs: Vec<f64> = d2
+                        .iter()
+                        .zip(ws)
+                        .map(|(&d, &w)| d * w)
+                        .collect();
+                    let total: f64 = probs.iter().sum();
+                    let idx = if total > 0.0 {
+                        weighted_draw(&mut rng, &probs)
+                    } else {
+                        rng.below(xs.len())
+                    };
+                    let c = xs[idx];
+                    centroids.push(c);
+                    for (d, &x) in d2.iter_mut().zip(xs) {
+                        *d = d.min((x - c).powi(2));
+                    }
+                }
+                centroids
+            }
+        }
+    }
+}
+
+fn weighted_draw(rng: &mut Rng, weights: &[f64]) -> usize {
+    rng.categorical(weights)
+}
+
+/// Default deterministic seed for k-means++ initialisation.
+pub const DEFAULT_SEED: u64 = 0x1107d;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Dist, Family};
+    use crate::util::rng::Rng;
+    use crate::util::stats::relative_rms_error;
+
+    fn qdq_all(cb: &Codebook, data: &[f32]) -> Vec<f32> {
+        data.iter().map(|&x| cb.qdq(x)).collect()
+    }
+
+    #[test]
+    fn recovers_discrete_clusters() {
+        let mut rng = Rng::new(1);
+        let mut data = Vec::new();
+        for &c in &[-2.0f32, 0.0, 3.0] {
+            for _ in 0..1000 {
+                data.push(c + 0.01 * rng.normal() as f32);
+            }
+        }
+        let lm = LloydMax {
+            k: 3,
+            init: LloydInit::KmeansPp,
+            max_iters: 100,
+            tol: 1e-6,
+            seed: 7,
+        };
+        let cb = lm.fit(&data, &[]);
+        let pts = cb.points();
+        assert_eq!(pts.len(), 3);
+        assert!((pts[0] + 2.0).abs() < 0.05, "{pts:?}");
+        assert!(pts[1].abs() < 0.05, "{pts:?}");
+        assert!((pts[2] - 3.0).abs() < 0.05, "{pts:?}");
+    }
+
+    #[test]
+    fn close_to_cbrt_on_normal_data() {
+        // fig. 2/16: Lloyd-Max ≈ cube-root-density quantiser for Normal data
+        let mut rng = Rng::new(2);
+        let data = Dist::standard(Family::Normal, 0.0).sample_vec(&mut rng, 100_000);
+        let lm = LloydMax::new(4, LloydInit::KmeansPp).fit(&data, &[]);
+        let cbrt = crate::formats::cbrt::cbrt_rms(
+            Family::Normal, 0.0, 4, crate::formats::Variant::Symmetric,
+            1.0 / 3.0,
+        );
+        let r_lm = relative_rms_error(&data, &qdq_all(&lm, &data));
+        let r_cb = relative_rms_error(&data, &qdq_all(&cbrt, &data));
+        // Lloyd-Max is the direct optimum; cbrt should be within a few %
+        assert!(r_lm <= r_cb * 1.02, "lm {r_lm} vs cbrt {r_cb}");
+        assert!(r_cb <= r_lm * 1.10, "cbrt {r_cb} far from lm {r_lm}");
+    }
+
+    #[test]
+    fn weighted_fit_biases_centroids() {
+        // two clusters; weighting one hugely should pull most centroids there
+        let mut data = Vec::new();
+        let mut w = Vec::new();
+        let mut rng = Rng::new(3);
+        for _ in 0..2000 {
+            data.push(-1.0 + 0.05 * rng.normal() as f32);
+            w.push(100.0f32);
+            data.push(1.0 + 0.05 * rng.normal() as f32);
+            w.push(0.01);
+        }
+        let lm = LloydMax {
+            k: 8,
+            init: LloydInit::KmeansPp,
+            max_iters: 200,
+            tol: 1e-6,
+            seed: 11,
+        };
+        let cb = lm.fit(&data, &w);
+        let near_heavy =
+            cb.points().iter().filter(|p| (**p + 1.0).abs() < 0.3).count();
+        let near_light =
+            cb.points().iter().filter(|p| (**p - 1.0).abs() < 0.3).count();
+        assert!(
+            near_heavy > near_light,
+            "{:?}", cb.points()
+        );
+    }
+
+    #[test]
+    fn uniform_init_covers_range() {
+        let mut rng = Rng::new(4);
+        let data: Vec<f32> =
+            (0..10_000).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+        let cb = LloydMax::new(3, LloydInit::Uniform).fit(&data, &[]);
+        assert_eq!(cb.len(), 8);
+        // uniform data ⇒ near-uniform centroids
+        let pts = cb.points();
+        for w in pts.windows(2) {
+            let gap = w[1] - w[0];
+            assert!(gap > 0.1 && gap < 0.4, "{pts:?}");
+        }
+    }
+
+    #[test]
+    fn k_larger_than_data_is_safe() {
+        let data = [0.0f32, 1.0];
+        let cb = LloydMax::new(4, LloydInit::KmeansPp).fit(&data, &[]);
+        assert!(cb.len() <= 16);
+        assert_eq!(cb.qdq(0.9), 1.0);
+    }
+}

@@ -1,0 +1,321 @@
+//! Element formats: every fixed-length quantiser family evaluated in the
+//! paper, all reduced to one machinery — a sorted [`Codebook`] of codepoints
+//! in normalised space.
+//!
+//! | module | formats |
+//! |---|---|
+//! | [`int`] | INT-b, symmetric / asymmetric / signmax variants |
+//! | [`float`] | generic EkMm minifloats (E2M1, E3M0, E5M2, ...) |
+//! | [`cbrt`] | the paper's √[3]p Normal / Laplace / Student-t for RMS, absmax and signmax scaling |
+//! | [`quantile`] | quantile-rule baselines: NF4, SF4, AF4 |
+//! | [`lloyd`] | (Fisher-weighted) Lloyd-Max, k-means++ / uniform init |
+
+pub mod cbrt;
+pub mod float;
+pub mod int;
+pub mod lloyd;
+pub mod quantile;
+
+/// Symmetry variant of a codepoint distribution (§2.1, fig. 3).
+///
+/// * `Symmetric` — even count, mirror-symmetric, no exact zero.
+/// * `Asymmetric` — contains exact zero; for absmax formats the `+1`
+///   endpoint is sacrificed (the INT convention), for RMS formats the
+///   largest positive point is dropped.
+/// * `Signmax` — assumes the block maximum is at `+1` exactly (signed-max
+///   scaling): special codepoints {0, +1} plus a truncated-D′ body.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Symmetric,
+    Asymmetric,
+    Signmax,
+}
+
+impl Variant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Symmetric => "sym",
+            Variant::Asymmetric => "asym",
+            Variant::Signmax => "signmax",
+        }
+    }
+}
+
+/// A finite, sorted set of codepoints plus nearest-neighbour machinery.
+///
+/// `storage_bits` is the bit width of the *stored index* (may exceed
+/// log2(len) when a format wastes encodings, e.g. duplicate float zero).
+#[derive(Clone, Debug)]
+pub struct Codebook {
+    points: Vec<f32>,
+    mids: Vec<f32>,
+    storage_bits: f64,
+}
+
+impl Codebook {
+    /// Build from codepoints (sorted internally). `storage_bits` defaults
+    /// to ⌈log2 n⌉ via [`Codebook::new`].
+    pub fn with_bits(mut points: Vec<f32>, storage_bits: f64) -> Codebook {
+        assert!(!points.is_empty(), "empty codebook");
+        points.sort_by(|a, b| a.total_cmp(b));
+        points.dedup();
+        let mids = points
+            .windows(2)
+            .map(|w| 0.5 * (w[0] + w[1]))
+            .collect();
+        Codebook {
+            points,
+            mids,
+            storage_bits,
+        }
+    }
+
+    pub fn new(points: Vec<f32>) -> Codebook {
+        let n = points.len();
+        let mut cb = Codebook::with_bits(points, 0.0);
+        // after dedup the *stored* width still covers the requested points
+        cb.storage_bits = (n.max(2) as f64).log2().ceil();
+        cb
+    }
+
+    /// Exact-entropy storage width, for non-power-of-two codebooks where the
+    /// caller models ideal packing (used by some sweeps): log2(len).
+    pub fn with_fractional_bits(points: Vec<f32>) -> Codebook {
+        let mut cb = Codebook::with_bits(points, 0.0);
+        cb.storage_bits = (cb.points.len() as f64).log2();
+        cb
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn points(&self) -> &[f32] {
+        &self.points
+    }
+
+    /// Bits per element when storing raw indices.
+    pub fn storage_bits(&self) -> f64 {
+        self.storage_bits
+    }
+
+    /// Index of the nearest codepoint (ties to the upper codepoint, matching
+    /// `jnp.searchsorted(mids, y, side="right")` in the Pallas kernel).
+    #[inline]
+    pub fn quantise(&self, y: f32) -> u16 {
+        let mids = &self.mids;
+        if mids.len() <= 32 {
+            // branchless compare-count — the hot path for real formats
+            let mut idx = 0u16;
+            for &m in mids {
+                idx += (y >= m) as u16;
+            }
+            idx
+        } else {
+            match mids.binary_search_by(|m| m.total_cmp(&y)) {
+                // y == mids[i]: tie goes up
+                Ok(i) => (i + 1) as u16,
+                Err(i) => i as u16,
+            }
+        }
+    }
+
+    #[inline]
+    pub fn dequantise(&self, idx: u16) -> f32 {
+        self.points[idx as usize]
+    }
+
+    #[inline]
+    pub fn qdq(&self, y: f32) -> f32 {
+        self.points[self.quantise(y) as usize]
+    }
+
+    pub fn quantise_slice(&self, ys: &[f32], out: &mut Vec<u16>) {
+        out.clear();
+        out.extend(ys.iter().map(|&y| self.quantise(y)));
+    }
+
+    pub fn qdq_slice(&self, ys: &mut [f32]) {
+        for y in ys {
+            *y = self.qdq(*y);
+        }
+    }
+
+    /// Fused scale→quantise→descale over a slice: `x ← Q(x·inv)·s`.
+    /// The hot inner loop of every block qdq; for small codebooks the
+    /// midpoints live in a fixed-size local array so the compare-count
+    /// loop has static bounds and vectorises.
+    pub fn qdq_scaled_slice(&self, xs: &mut [f32], inv: f32, s: f32) {
+        let mids = &self.mids;
+        let pts = &self.points;
+        if mids.len() <= 32 {
+            // copy midpoints into a padded local array (pad with +inf so
+            // padded lanes never increment the index)
+            let mut m = [f32::INFINITY; 32];
+            m[..mids.len()].copy_from_slice(mids);
+            let k = mids.len();
+            // unrolled-by-compiler loop with static upper bound
+            for x in xs.iter_mut() {
+                let y = *x * inv;
+                let mut idx = 0u32;
+                for &mid in m[..k].iter() {
+                    idx += (y >= mid) as u32;
+                }
+                // SAFETY: idx <= k < points.len()
+                *x = unsafe { *pts.get_unchecked(idx as usize) } * s;
+            }
+        } else {
+            for x in xs.iter_mut() {
+                *x = self.qdq(*x * inv) * s;
+            }
+        }
+    }
+
+    /// Largest |codepoint| (the representable range).
+    pub fn absmax(&self) -> f32 {
+        self.points
+            .iter()
+            .fold(0f32, |m, &p| m.max(p.abs()))
+    }
+
+    /// RMS of the codepoints under nearest-assignment of a distribution is
+    /// not stored; this is the plain codepoint RMS (used by moment checks).
+    pub fn point_rms(&self) -> f64 {
+        crate::util::stats::rms(&self.points)
+    }
+
+    /// True iff an exact 0.0 codepoint exists.
+    pub fn has_zero(&self) -> bool {
+        self.points.iter().any(|&p| p == 0.0)
+    }
+
+    /// Snap the codepoint nearest zero to exact 0.0 (count unchanged) —
+    /// the minimal "give me an encoding for zero" surgery used by
+    /// data-driven formats (Lloyd-Max asymmetric variant).
+    pub fn asymmetrise(self) -> Codebook {
+        let bits = self.storage_bits;
+        let mut pts = self.points;
+        let (nearest, _) = pts
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.abs().partial_cmp(&b.abs()).unwrap()
+            })
+            .unwrap();
+        pts[nearest] = 0.0;
+        Codebook::with_bits(pts, bits)
+    }
+
+    /// Quantisation-bucket populations for a batch of scaled samples
+    /// (probability model for entropy coding / fig. 5 histograms).
+    pub fn bucket_counts(&self, ys: &[f32]) -> Vec<u64> {
+        let mut counts = vec![0u64; self.len()];
+        for &y in ys {
+            counts[self.quantise(y) as usize] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{check, Gen};
+
+    #[test]
+    fn quantise_nearest_small_and_large() {
+        // small (compare-count) and large (binary search) paths must agree
+        let pts: Vec<f32> = (0..64).map(|i| i as f32 * 0.37 - 11.0).collect();
+        let small = Codebook::new(pts[..16].to_vec());
+        let large = Codebook::new(pts.clone());
+        for i in 0..1000 {
+            let y = -15.0 + i as f32 * 0.04;
+            let qs = small.qdq(y);
+            // nearest by brute force
+            let want = small
+                .points()
+                .iter()
+                .copied()
+                .min_by(|a, b| {
+                    (a - y).abs().partial_cmp(&(b - y).abs()).unwrap()
+                })
+                .unwrap();
+            assert!(
+                (qs - want).abs() < 1e-6 || (qs - y).abs() <= (want - y).abs() + 1e-6,
+                "y={y} qs={qs} want={want}"
+            );
+            let ql = large.qdq(y);
+            let want_l = large
+                .points()
+                .iter()
+                .copied()
+                .min_by(|a, b| {
+                    (a - y).abs().partial_cmp(&(b - y).abs()).unwrap()
+                })
+                .unwrap();
+            assert!((ql - want_l).abs() < 1e-6 || (ql - y).abs() <= (want_l - y).abs() + 1e-6);
+        }
+    }
+
+    #[test]
+    fn paths_agree_property() {
+        check("codebook-paths-agree", 100, |g: &mut Gen| {
+            let n = 33 + g.rng.below(64); // force binary-search path
+            let pts = g.f32_vec(n, 2.0);
+            let big = Codebook::new(pts.clone());
+            // A codebook with the same points but linear search, via chunks
+            let ys = g.f32_vec(64, 3.0);
+            for &y in &ys {
+                let idx = big.quantise(y);
+                // check |y - points[idx]| is minimal
+                let d = (big.dequantise(idx) - y).abs();
+                for &p in big.points() {
+                    assert!(
+                        d <= (p - y).abs() + 1e-5,
+                        "idx {idx} not nearest for y={y}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn dedup_and_sorting() {
+        let cb = Codebook::new(vec![1.0, -1.0, 0.0, 1.0, -1.0]);
+        assert_eq!(cb.points(), &[-1.0, 0.0, 1.0]);
+        // storage bits reflect the 5 requested encodings
+        assert_eq!(cb.storage_bits(), 3.0);
+    }
+
+    #[test]
+    fn qdq_idempotent_on_codepoints() {
+        let cb = Codebook::new(vec![-1.0, -0.25, 0.0, 0.6, 1.0]);
+        for &p in cb.points() {
+            assert_eq!(cb.qdq(p), p);
+        }
+    }
+
+    #[test]
+    fn asymmetrise_adds_zero() {
+        let cb = Codebook::new(vec![-1.0, -0.3, 0.3, 1.0]);
+        assert!(!cb.has_zero());
+        let a = cb.asymmetrise();
+        assert!(a.has_zero());
+        assert_eq!(a.len(), 4);
+    }
+
+    #[test]
+    fn bucket_counts_sum() {
+        let cb = Codebook::new(vec![-1.0, 0.0, 1.0]);
+        let ys = [-2.0f32, -0.6, -0.4, 0.1, 0.9, 2.0];
+        let counts = cb.bucket_counts(&ys);
+        assert_eq!(counts.iter().sum::<u64>() as usize, ys.len());
+        assert_eq!(counts, vec![2, 2, 2]);
+    }
+}

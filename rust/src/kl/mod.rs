@@ -1,0 +1,241 @@
+//! Top-k KL divergence and related evaluation metrics (§D).
+//!
+//! The paper's comparison metric: per token, take the reference model's
+//! top-k classes, compare the two predictive distributions over those k
+//! classes plus a collapsed tail class.  Always ≥ 0; the top-k is taken from
+//! the *reference* model only.
+
+/// Top-k KL divergence between two logit vectors (one token position).
+/// `k` is clamped to the vocabulary size.
+pub fn topk_kl_token(ref_logits: &[f32], test_logits: &[f32], k: usize) -> f64 {
+    assert_eq!(ref_logits.len(), test_logits.len());
+    let v = ref_logits.len();
+    let k = k.min(v);
+    // softmax both in f64 with max-subtraction
+    let p = softmax64(ref_logits);
+    let q = softmax64(test_logits);
+    // top-k indices of the reference distribution
+    let mut idx: Vec<u32> = (0..v as u32).collect();
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        p[b as usize].partial_cmp(&p[a as usize]).unwrap()
+    });
+    let mut kl = 0.0f64;
+    let mut p_tail = 1.0f64;
+    let mut q_tail = 1.0f64;
+    for &i in &idx[..k] {
+        let (pi, qi) = (p[i as usize], q[i as usize]);
+        p_tail -= pi;
+        q_tail -= qi;
+        if pi > 0.0 {
+            kl += pi * (pi / qi.max(1e-300)).ln();
+        }
+    }
+    // collapsed tail term keeps the divergence ≥ 0
+    let p_tail = p_tail.max(0.0);
+    let q_tail = q_tail.max(1e-300);
+    if p_tail > 0.0 {
+        kl += p_tail * (p_tail / q_tail).ln();
+    }
+    kl.max(0.0)
+}
+
+fn softmax64(logits: &[f32]) -> Vec<f64> {
+    let max = logits.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x)) as f64;
+    let exps: Vec<f64> =
+        logits.iter().map(|&x| ((x as f64) - max).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / sum).collect()
+}
+
+/// Mean top-k KL over a batch of token positions.
+/// `ref_logits`/`test_logits` are row-major (tokens × vocab).
+pub fn topk_kl_batch(
+    ref_logits: &[f32],
+    test_logits: &[f32],
+    vocab: usize,
+    k: usize,
+) -> KlSummary {
+    assert_eq!(ref_logits.len(), test_logits.len());
+    assert_eq!(ref_logits.len() % vocab, 0);
+    let n = ref_logits.len() / vocab;
+    let per_token = crate::util::pool::par_map(
+        &(0..n).collect::<Vec<_>>(),
+        |_, &t| {
+            topk_kl_token(
+                &ref_logits[t * vocab..(t + 1) * vocab],
+                &test_logits[t * vocab..(t + 1) * vocab],
+                k,
+            )
+        },
+    );
+    KlSummary::from_samples(&per_token)
+}
+
+/// Cross-entropy (nats/token) of targets under logits (tokens × vocab).
+pub fn cross_entropy_batch(
+    logits: &[f32],
+    targets: &[i32],
+    vocab: usize,
+) -> f64 {
+    assert_eq!(logits.len() % vocab, 0);
+    assert_eq!(logits.len() / vocab, targets.len());
+    let mut total = 0.0;
+    for (t, &y) in targets.iter().enumerate() {
+        let row = &logits[t * vocab..(t + 1) * vocab];
+        let p = softmax64(row);
+        total += -(p[y as usize].max(1e-300)).ln();
+    }
+    total / targets.len() as f64
+}
+
+/// Argmax accuracy of logits against targets — the downstream-task proxy
+/// metric (tables 1-2 analogue).
+pub fn argmax_accuracy(logits: &[f32], targets: &[i32], vocab: usize) -> f64 {
+    let n = targets.len();
+    let mut hits = 0usize;
+    for (t, &y) in targets.iter().enumerate() {
+        let row = &logits[t * vocab..(t + 1) * vocab];
+        let mut best = 0usize;
+        for (i, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = i;
+            }
+        }
+        if best == y as usize {
+            hits += 1;
+        }
+    }
+    hits as f64 / n as f64
+}
+
+/// Mean ± standard-error summary of per-token KL samples (the ±2 SE bands
+/// in figs. 1/7/8).
+#[derive(Clone, Copy, Debug)]
+pub struct KlSummary {
+    pub mean: f64,
+    pub sem: f64,
+    pub n: usize,
+}
+
+impl KlSummary {
+    pub fn from_samples(samples: &[f64]) -> KlSummary {
+        KlSummary {
+            mean: crate::util::stats::mean(samples),
+            sem: crate::util::stats::sem(samples),
+            n: samples.len(),
+        }
+    }
+
+    /// ρ := KL · 2^(2b), the scaled-KL inefficiency measure (fig. 8).
+    pub fn rho(&self, bits: f64) -> f64 {
+        self.mean * 2f64.powf(2.0 * bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_logits(rng: &mut Rng, v: usize) -> Vec<f32> {
+        (0..v).map(|_| rng.normal() as f32 * 2.0).collect()
+    }
+
+    #[test]
+    fn identical_distributions_zero() {
+        let mut rng = Rng::new(1);
+        let l = rand_logits(&mut rng, 100);
+        assert!(topk_kl_token(&l, &l, 16) < 1e-12);
+    }
+
+    #[test]
+    fn always_nonnegative() {
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let a = rand_logits(&mut rng, 64);
+            let b = rand_logits(&mut rng, 64);
+            assert!(topk_kl_token(&a, &b, 8) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn full_k_equals_exact_kl() {
+        let mut rng = Rng::new(3);
+        let a = rand_logits(&mut rng, 32);
+        let b = rand_logits(&mut rng, 32);
+        let topk = topk_kl_token(&a, &b, 32);
+        // exact KL
+        let p = softmax64(&a);
+        let q = softmax64(&b);
+        let exact: f64 = p
+            .iter()
+            .zip(&q)
+            .map(|(&pi, &qi)| if pi > 0.0 { pi * (pi / qi).ln() } else { 0.0 })
+            .sum();
+        assert!((topk - exact).abs() < 1e-9);
+    }
+
+    #[test]
+    fn topk_le_exact_kl() {
+        // collapsing the tail can only lose information (data processing)
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let a = rand_logits(&mut rng, 64);
+            let b = rand_logits(&mut rng, 64);
+            let topk = topk_kl_token(&a, &b, 8);
+            let exact = topk_kl_token(&a, &b, 64);
+            assert!(topk <= exact + 1e-9, "{topk} > {exact}");
+        }
+    }
+
+    #[test]
+    fn grows_with_perturbation() {
+        let mut rng = Rng::new(5);
+        let a = rand_logits(&mut rng, 128);
+        let mut prev = 0.0;
+        for scale in [0.01f32, 0.1, 0.5, 2.0] {
+            let b: Vec<f32> = a
+                .iter()
+                .map(|&x| x + scale * rng.normal() as f32)
+                .collect();
+            let kl = topk_kl_token(&a, &b, 32);
+            assert!(kl >= prev * 0.2, "kl should roughly grow: {kl} vs {prev}");
+            prev = kl;
+        }
+    }
+
+    #[test]
+    fn batch_summary() {
+        let mut rng = Rng::new(6);
+        let vocab = 32;
+        let n = 50;
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for _ in 0..n {
+            let r = rand_logits(&mut rng, vocab);
+            let t: Vec<f32> =
+                r.iter().map(|&x| x + 0.1 * rng.normal() as f32).collect();
+            a.extend_from_slice(&r);
+            b.extend(t);
+        }
+        let s = topk_kl_batch(&a, &b, vocab, 8);
+        assert_eq!(s.n, n);
+        assert!(s.mean > 0.0);
+        assert!(s.sem > 0.0 && s.sem < s.mean);
+        // rho at 4 bits = mean * 256
+        assert!((s.rho(4.0) - s.mean * 256.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ce_and_accuracy() {
+        // logits strongly favouring the target ⇒ low CE, high accuracy
+        let vocab = 8;
+        let targets = [1i32, 3, 5];
+        let mut logits = vec![0f32; targets.len() * vocab];
+        for (t, &y) in targets.iter().enumerate() {
+            logits[t * vocab + y as usize] = 10.0;
+        }
+        assert!(cross_entropy_batch(&logits, &targets, vocab) < 0.01);
+        assert_eq!(argmax_accuracy(&logits, &targets, vocab), 1.0);
+    }
+}

@@ -1,0 +1,33 @@
+//! # owf — Optimal Weight Formats
+//!
+//! A production-grade reproduction of *"Optimal Formats for Weight
+//! Quantisation"* (Orr, Ribar & Luschi, Graphcore Research, 2025): a
+//! framework for systematic design and analysis of weight-quantisation
+//! formats, built as a three-layer Rust + JAX + Pallas stack (Python only at
+//! build time; see DESIGN.md).
+//!
+//! Layer map:
+//! * [`dist`], [`formats`], [`scaling`], [`quant`], [`compress`] — the
+//!   format-design framework (§2 of the paper);
+//! * [`tensorstore`], [`runtime`] — checkpoint I/O and the PJRT executor for
+//!   the AOT-compiled JAX/Pallas graphs;
+//! * [`fisher`], [`alloc`], [`kl`] — Fisher estimation, variable bit-width
+//!   allocation (eq. 5) and the top-k KL metric (§2.4/§D);
+//! * [`coordinator`], [`eval`] — the experiment scheduler/CLI and the
+//!   per-figure/table reproduction harness (§3/§4);
+//! * [`util`] — from-scratch JSON / RNG / thread-pool / stats / property
+//!   testing (the offline build has no external crates beyond `xla`).
+
+pub mod alloc;
+pub mod compress;
+pub mod coordinator;
+pub mod dist;
+pub mod eval;
+pub mod fisher;
+pub mod formats;
+pub mod kl;
+pub mod quant;
+pub mod runtime;
+pub mod scaling;
+pub mod tensorstore;
+pub mod util;

@@ -1,0 +1,221 @@
+//! `owf` — the Optimal-Weight-Formats CLI (L3 leader entrypoint).
+//!
+//! Commands (arg parsing is hand-rolled; clap is unavailable offline):
+//!
+//! ```text
+//! owf list                          list AOT artifacts + checkpoints
+//! owf report <id|sim|llm|all> [--size s|m|l] [--samples N]
+//!                                   [--eval-seqs N] [--qat-steps N]
+//!                                   [--out results.jsonl]
+//! owf quantise --spec <scheme> [--size m]   one direct-cast point
+//! owf fisher --size m [--batches N]         (re)estimate + save Fisher
+//! owf schemes                       print the scheme grammar + examples
+//! ```
+
+use anyhow::{Context, Result};
+
+use owf::coordinator::config::Scheme;
+use owf::coordinator::ResultSink;
+use owf::eval::{self, RunOpts};
+use owf::fisher::FisherEstimate;
+use owf::runtime::model::{Checkpoint, TokenSplit};
+use owf::runtime::Runtime;
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut it = std::env::args().skip(1).peekable();
+    while let Some(arg) = it.next() {
+        if let Some(key) = arg.strip_prefix("--") {
+            let value = if it
+                .peek()
+                .map(|v| !v.starts_with("--"))
+                .unwrap_or(false)
+            {
+                it.next().unwrap()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(key.to_string(), value);
+        } else {
+            positional.push(arg);
+        }
+    }
+    Args { positional, flags }
+}
+
+fn opts_from(args: &Args) -> Result<RunOpts> {
+    let mut opts = RunOpts::default();
+    if let Some(v) = args.flags.get("samples") {
+        opts.samples = v.parse().context("--samples")?;
+    }
+    if let Some(v) = args.flags.get("eval-seqs") {
+        opts.eval_seqs = v.parse().context("--eval-seqs")?;
+    }
+    if let Some(v) = args.flags.get("qat-steps") {
+        opts.qat_steps = v.parse().context("--qat-steps")?;
+    }
+    if let Some(v) = args.flags.get("size") {
+        opts.size = v.clone();
+    }
+    Ok(opts)
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    match cmd {
+        "list" => cmd_list(),
+        "report" => cmd_report(&args),
+        "quantise" | "quantize" => cmd_quantise(&args),
+        "fisher" => cmd_fisher(&args),
+        "schemes" => {
+            println!("{SCHEME_HELP}");
+            Ok(())
+        }
+        _ => {
+            println!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_list() -> Result<()> {
+    let rt = Runtime::open_default()?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts:");
+    for name in rt.artifact_names() {
+        let info = rt.artifact(name)?;
+        println!(
+            "  {name:<28} {} inputs, {} outputs",
+            info.inputs.len(),
+            info.outputs.len()
+        );
+    }
+    for size in ["s", "m", "l"] {
+        if let Ok(ck) = Checkpoint::load(&rt, size) {
+            let toks = TokenSplit::load(&rt, size, "eval")?;
+            println!(
+                "checkpoint {size}: {} params, {} tensors, eval {}x{}",
+                ck.config.n_params,
+                ck.store.tensors.len(),
+                toks.n_seq,
+                toks.seq_len
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .context("usage: owf report <id|sim|llm|all>")?;
+    let opts = opts_from(args)?;
+    let reports = eval::run(id, &opts)?;
+    if let Some(out) = args.flags.get("out") {
+        let sink = ResultSink::open(out)?;
+        for rep in &reports {
+            for row in rep.to_json_rows() {
+                sink.append(&row)?;
+            }
+        }
+        println!("[wrote {} reports to {out}]", reports.len());
+    }
+    Ok(())
+}
+
+fn cmd_quantise(args: &Args) -> Result<()> {
+    let spec = args.flags.get("spec").context("--spec <scheme> required")?;
+    let opts = opts_from(args)?;
+    let size = opts.size.clone();
+    let scheme = Scheme::parse(spec)?;
+    let mut env = eval::llm::Env::open(opts)?;
+    let p = env.direct_cast(&size, &scheme, None, false)?;
+    println!(
+        "{spec} on microllama-{size}: b={:.3} KL={:.5}±{:.5} ΔCE={:.5} R={:.4}",
+        p.bits,
+        p.kl.mean,
+        2.0 * p.kl.sem,
+        p.delta_ce,
+        p.r
+    );
+    Ok(())
+}
+
+fn cmd_fisher(args: &Args) -> Result<()> {
+    let opts = opts_from(args)?;
+    let batches: usize = args
+        .flags
+        .get("batches")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(4);
+    let rt = Runtime::open_default()?;
+    let size = &opts.size;
+    let ck = Checkpoint::load(&rt, size)?;
+    let toks = TokenSplit::load(&rt, size, "fisher")?;
+    let est = FisherEstimate::estimate(
+        &rt,
+        size,
+        &ck.params(),
+        &toks,
+        batches,
+        1234,
+        args.flags.contains_key("empirical"),
+    )?;
+    let path = rt.data_path(&format!("fisher_{size}.owt"));
+    est.save(&path)?;
+    println!(
+        "fisher({size}): {} sequences -> {:?}",
+        est.sequences, path
+    );
+    for t in est.tensor_summaries() {
+        println!("  {:<40} mean {:.3e}", t.name, t.mean);
+    }
+    Ok(())
+}
+
+const HELP: &str = "owf — Optimal Weight Formats (paper reproduction)
+
+USAGE:
+  owf list                              show artifacts & checkpoints
+  owf report <id|sim|llm|all> [opts]    reproduce paper figures/tables
+  owf quantise --spec <scheme> [opts]   one direct-cast measurement
+  owf fisher [--size m] [--batches N]   estimate the Fisher diagonal
+  owf schemes                           scheme grammar reference
+
+OPTIONS:
+  --size s|m|l      model for single-model reports   (default m)
+  --samples N       simulated-data sample count      (default 2^20)
+  --eval-seqs N     sequences per KL evaluation      (default 24)
+  --qat-steps N     QAT training steps               (default 60)
+  --out FILE        append report rows as JSONL
+";
+
+const SCHEME_HELP: &str = "scheme grammar:
+  <element>@<bits>:<granularity>-<statistic>[:<flags>]
+
+elements:     int | e<K>m<M> | nf | sf<nu> | af4 | lloyd |
+              cbrt-normal | cbrt-laplace | cbrt-t<nu> | grid
+granularity:  tensor | channel | block<B>
+statistic:    rms | absmax | signmax
+flags:        sym | asym | sparse<frac> | rot | compress |
+              mult<x> | search | fisher
+
+examples:
+  cbrt-t7@4:block128-absmax          paper's best uncompressed format
+  grid@3.5:tensor-rms:compress       entropy-coded uniform grid
+  int@3:channel-absmax:sparse0.001   SpQR-style dense+sparse
+  lloyd@4:tensor-rms:fisher          SqueezeLLM-style weighted k-means
+";

@@ -1,0 +1,437 @@
+//! The quantisation pipeline: granularity × statistic × scale format ×
+//! element codebook, plus sparse-outlier overlay and random rotations.
+//!
+//! This is the Rust-native hot path (the Pallas kernel implements the same
+//! semantics for the QAT graphs; rust/tests/qdq_cross.rs bit-compares the
+//! two through PJRT).
+
+pub mod outliers;
+pub mod rotation;
+
+use crate::formats::Codebook;
+use crate::scaling::{
+    scale_groups, scale_overhead_bits, Granularity, ScaleFormat, Statistic,
+};
+
+/// A fully specified linear-scaling quantiser (§2.1 "Linear scaling").
+#[derive(Clone, Debug)]
+pub struct Quantiser {
+    pub granularity: Granularity,
+    pub statistic: Statistic,
+    pub scale_format: ScaleFormat,
+    pub codebook: Codebook,
+    /// Extra multiplier on the scale (quantiser-scale search, §2.2 /
+    /// fig. 23: `θ̃ = n'·dequantise(quantise(θ/n'))`). 1.0 = moment match.
+    pub scale_multiplier: f64,
+}
+
+/// Quantised representation of one tensor (scales + codebook indices).
+#[derive(Clone, Debug)]
+pub struct Encoded {
+    pub scales: Vec<f32>,
+    pub indices: Vec<u16>,
+    pub groups: Vec<(usize, usize)>,
+}
+
+/// Result summary of a quantise→dequantise pass.
+#[derive(Clone, Copy, Debug)]
+pub struct QdqStats {
+    /// Average bits per element (element format + scale overhead).
+    pub bits_per_element: f64,
+    /// Sum of squared reconstruction error (f64 accumulation).
+    pub sq_err: f64,
+}
+
+impl Quantiser {
+    pub fn new(
+        granularity: Granularity,
+        statistic: Statistic,
+        scale_format: ScaleFormat,
+        codebook: Codebook,
+    ) -> Quantiser {
+        Quantiser {
+            granularity,
+            statistic,
+            scale_format,
+            codebook,
+            scale_multiplier: 1.0,
+        }
+    }
+
+    pub fn with_multiplier(mut self, m: f64) -> Quantiser {
+        self.scale_multiplier = m;
+        self
+    }
+
+    /// Effective group scale: statistic → format rounding → multiplier,
+    /// with the zero-block guard.
+    fn group_scale(&self, block: &[f32]) -> f32 {
+        let raw = self.statistic.compute(block);
+        let rounded = self.scale_format.round(raw);
+        let s = rounded * self.scale_multiplier as f32;
+        if s == 0.0 {
+            1.0
+        } else {
+            s
+        }
+    }
+
+    /// Quantise to (scales, indices).
+    pub fn encode(&self, data: &[f32], channel_len: usize) -> Encoded {
+        let groups = scale_groups(data.len(), self.granularity, channel_len);
+        let mut scales = Vec::with_capacity(groups.len());
+        let mut indices = Vec::with_capacity(data.len());
+        for &(start, len) in &groups {
+            let block = &data[start..start + len];
+            let s = self.group_scale(block);
+            scales.push(s);
+            for &x in block {
+                indices.push(self.codebook.quantise(x / s));
+            }
+        }
+        Encoded {
+            scales,
+            indices,
+            groups,
+        }
+    }
+
+    /// Reconstruct from an encoding.
+    pub fn decode(&self, enc: &Encoded) -> Vec<f32> {
+        let n: usize = enc.groups.iter().map(|&(_, l)| l).sum();
+        let mut out = Vec::with_capacity(n);
+        let mut cursor = 0usize;
+        for (gi, &(_, len)) in enc.groups.iter().enumerate() {
+            let s = enc.scales[gi];
+            for _ in 0..len {
+                out.push(self.codebook.dequantise(enc.indices[cursor]) * s);
+                cursor += 1;
+            }
+        }
+        out
+    }
+
+    /// Fused quantise→dequantise (the hot path; no index materialisation).
+    pub fn qdq(&self, data: &[f32], channel_len: usize) -> Vec<f32> {
+        let mut out = data.to_vec();
+        self.qdq_in_place(&mut out, channel_len);
+        out
+    }
+
+    /// In-place fused qdq. Parallelised across scale groups for large
+    /// tensors (the hot path of every direct-cast evaluation; see
+    /// EXPERIMENTS.md §Perf).
+    pub fn qdq_in_place(&self, data: &mut [f32], channel_len: usize) {
+        const PAR_THRESHOLD: usize = 1 << 16;
+        let n = data.len();
+        match self.granularity {
+            // block/channel groups are contiguous and independent: split
+            // the buffer into group-aligned chunks and fan out
+            Granularity::Block(b) if n >= PAR_THRESHOLD => {
+                let threads = crate::util::pool::num_threads();
+                let groups_per_chunk = n.div_ceil(b).div_ceil(threads).max(1);
+                crate::util::pool::par_chunks_mut(
+                    data,
+                    groups_per_chunk * b,
+                    |_, chunk| self.qdq_serial(chunk, Granularity::Block(b), 0),
+                );
+            }
+            Granularity::Channel
+                if n >= PAR_THRESHOLD && channel_len > 0 =>
+            {
+                let threads = crate::util::pool::num_threads();
+                let per = n
+                    .div_ceil(channel_len)
+                    .div_ceil(threads)
+                    .max(1);
+                crate::util::pool::par_chunks_mut(
+                    data,
+                    per * channel_len,
+                    |_, chunk| {
+                        self.qdq_serial(chunk, Granularity::Channel, channel_len)
+                    },
+                );
+            }
+            // tensor granularity: one scale, then a parallel element map
+            Granularity::Tensor if n >= PAR_THRESHOLD => {
+                let s = self.group_scale(data);
+                let inv = 1.0 / s;
+                crate::util::pool::par_chunks_mut(
+                    data,
+                    n.div_ceil(crate::util::pool::num_threads()).max(1),
+                    |_, chunk| {
+                        for x in chunk.iter_mut() {
+                            *x = self.codebook.qdq(*x * inv) * s;
+                        }
+                    },
+                );
+            }
+            g => self.qdq_serial(data, g, channel_len),
+        }
+    }
+
+    fn qdq_serial(
+        &self,
+        data: &mut [f32],
+        granularity: Granularity,
+        channel_len: usize,
+    ) {
+        let groups = scale_groups(data.len(), granularity, channel_len);
+        for &(start, len) in &groups {
+            let block = &mut data[start..start + len];
+            let s = self.group_scale(block);
+            let inv = 1.0 / s;
+            self.codebook.qdq_scaled_slice(block, inv, s);
+        }
+    }
+
+    /// Average storage bits per element for a tensor of `n` elements.
+    pub fn bits_per_element(&self, n: usize, channel_len: usize) -> f64 {
+        self.codebook.storage_bits()
+            + scale_overhead_bits(
+                n,
+                self.granularity,
+                channel_len,
+                self.scale_format,
+                self.statistic,
+            )
+    }
+
+    /// qdq + stats in one pass.
+    pub fn evaluate(&self, data: &[f32], channel_len: usize) -> (Vec<f32>, QdqStats) {
+        let recon = self.qdq(data, channel_len);
+        let sq_err = crate::util::stats::sq_err(data, &recon);
+        (
+            recon,
+            QdqStats {
+                bits_per_element: self.bits_per_element(data.len(), channel_len),
+                sq_err,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Dist, Family};
+    use crate::formats::cbrt::{cbrt_absmax, cbrt_rms, CBRT_ALPHA};
+    use crate::formats::int::int_codebook;
+    use crate::formats::Variant;
+    use crate::scaling::DEFAULT_SCALE;
+    use crate::util::rng::Rng;
+    use crate::util::stats::relative_rms_error;
+    use crate::util::testing::{check, Gen};
+
+    fn block_absmax_int4() -> Quantiser {
+        Quantiser::new(
+            Granularity::Block(64),
+            Statistic::Absmax,
+            DEFAULT_SCALE,
+            int_codebook(4, Variant::Asymmetric),
+        )
+    }
+
+    #[test]
+    fn encode_decode_matches_qdq() {
+        let mut rng = Rng::new(1);
+        let data = Dist::standard(Family::Normal, 0.0).sample_vec(&mut rng, 1000);
+        let q = block_absmax_int4();
+        let enc = q.encode(&data, 0);
+        let dec = q.decode(&enc);
+        let direct = q.qdq(&data, 0);
+        assert_eq!(dec, direct);
+    }
+
+    #[test]
+    fn qdq_error_bounded_for_absmax() {
+        // absmax + round-away: scaled data in [-1, 1]; error per element is
+        // at most half the largest codepoint gap times the scale
+        check("absmax-error-bound", 60, |g: &mut Gen| {
+            let n = 64 * (1 + g.rng.below(8));
+            let data = g.heavy_tailed_vec(n);
+            let q = Quantiser::new(
+                Granularity::Block(64),
+                Statistic::Absmax,
+                DEFAULT_SCALE,
+                int_codebook(4, Variant::Symmetric),
+            );
+            let recon = q.qdq(&data, 0);
+            for (start, len) in scale_groups(n, Granularity::Block(64), 0) {
+                let block = &data[start..start + len];
+                let s = crate::formats::float::round_to_bf16(
+                    block.iter().fold(0f32, |m, &x| m.max(x.abs())),
+                    true,
+                );
+                if s == 0.0 {
+                    continue;
+                }
+                // symmetric INT4 gap = 2/15
+                let bound = s * (1.0 / 15.0) + 1e-6;
+                for (i, &x) in block.iter().enumerate() {
+                    let err = (recon[start + i] - x).abs();
+                    assert!(
+                        err <= bound * 1.001,
+                        "err {err} > bound {bound} (x={x}, s={s})"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let q = block_absmax_int4();
+        // 4 bits element + 16/64 scale
+        assert!((q.bits_per_element(6400, 0) - 4.25).abs() < 1e-12);
+        let qs = Quantiser::new(
+            Granularity::Block(64),
+            Statistic::Signmax,
+            DEFAULT_SCALE,
+            int_codebook(4, Variant::Signmax),
+        );
+        assert!((qs.bits_per_element(6400, 0) - 4.25 - 1.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cbrt_beats_int_on_normal_rms() {
+        // fig. 18's headline: non-uniform √[3]p beats INT for Normal data
+        let mut rng = Rng::new(2);
+        let data = Dist::standard(Family::Normal, 0.0)
+            .sample_vec(&mut rng, 1 << 16);
+        let q_cbrt = Quantiser::new(
+            Granularity::Tensor,
+            Statistic::Rms,
+            ScaleFormat::F32,
+            cbrt_rms(Family::Normal, 0.0, 4, Variant::Symmetric, CBRT_ALPHA),
+        );
+        let q_int = Quantiser::new(
+            Granularity::Tensor,
+            Statistic::Rms,
+            ScaleFormat::F32,
+            int_codebook(4, Variant::Symmetric),
+        );
+        // INT with RMS scaling needs a range multiplier to cover the tails;
+        // moment matching for INT sets data RMS to (2^(b-1)-1)/sqrt(3)·gap...
+        // use the paper's uniform-RMS convention: multiplier = sqrt(3)
+        let q_int = q_int.with_multiplier(3f64.sqrt());
+        let r_cbrt = relative_rms_error(&data, &q_cbrt.qdq(&data, 0));
+        let r_int = relative_rms_error(&data, &q_int.qdq(&data, 0));
+        assert!(
+            r_cbrt < r_int,
+            "cbrt {r_cbrt} should beat int {r_int} on normal data"
+        );
+    }
+
+    #[test]
+    fn block_absmax_cbrt_beats_tensor_rms_for_student_t() {
+        // fig. 4 right panel, the paper's central surprise: block absmax
+        // outperforms tensor-RMS optimal formats on heavy-tailed iid data
+        let mut rng = Rng::new(3);
+        let nu = 5.0;
+        let data = Dist::standard(Family::StudentT, nu)
+            .sample_vec(&mut rng, 1 << 16);
+        let q_block = Quantiser::new(
+            Granularity::Block(128),
+            Statistic::Absmax,
+            DEFAULT_SCALE,
+            cbrt_absmax(Family::StudentT, nu, 4, 128, Variant::Symmetric, CBRT_ALPHA),
+        );
+        let q_rms = Quantiser::new(
+            Granularity::Tensor,
+            Statistic::Rms,
+            ScaleFormat::F32,
+            cbrt_rms(Family::StudentT, nu, 4, Variant::Symmetric, CBRT_ALPHA),
+        );
+        let r_block = relative_rms_error(&data, &q_block.qdq(&data, 0));
+        let r_rms = relative_rms_error(&data, &q_rms.qdq(&data, 0));
+        assert!(
+            r_block < r_rms,
+            "block absmax {r_block} should beat tensor RMS {r_rms}"
+        );
+    }
+
+    #[test]
+    fn signmax_statistic_normalises_max_to_plus_one() {
+        let mut rng = Rng::new(4);
+        let data = Dist::standard(Family::Normal, 0.0).sample_vec(&mut rng, 256);
+        let q = Quantiser::new(
+            Granularity::Block(64),
+            Statistic::Signmax,
+            ScaleFormat::F32,
+            int_codebook(4, Variant::Signmax),
+        );
+        let recon = q.qdq(&data, 0);
+        // every block max must be reconstructed exactly (codepoint +1)
+        for (start, len) in scale_groups(256, Granularity::Block(64), 0) {
+            let block = &data[start..start + len];
+            let mut max_i = 0;
+            for (i, &x) in block.iter().enumerate() {
+                if x.abs() > block[max_i].abs() {
+                    max_i = i;
+                }
+            }
+            assert_eq!(
+                recon[start + max_i], block[max_i],
+                "block max must be exact under signmax"
+            );
+        }
+    }
+
+    #[test]
+    fn channel_scaling_uses_channel_len() {
+        let data: Vec<f32> = (0..64)
+            .map(|i| if i < 32 { 0.01 } else { 100.0 } * ((i % 7) as f32 - 3.0))
+            .collect();
+        let q = Quantiser::new(
+            Granularity::Channel,
+            Statistic::Absmax,
+            ScaleFormat::F32,
+            int_codebook(4, Variant::Asymmetric),
+        );
+        let recon = q.qdq(&data, 32);
+        let r = relative_rms_error(&data, &recon);
+        // per-channel scales should handle the 10^4 dynamic range easily
+        assert!(r < 0.1, "r = {r}");
+        // tensor scaling drowns the small channel
+        let qt = Quantiser::new(
+            Granularity::Tensor,
+            Statistic::Absmax,
+            ScaleFormat::F32,
+            int_codebook(4, Variant::Asymmetric),
+        );
+        let rt = relative_rms_error(&data, &qt.qdq(&data, 0));
+        assert!(r < rt);
+    }
+
+    #[test]
+    fn zero_tensor_is_fixed_point() {
+        let data = vec![0f32; 256];
+        let q = block_absmax_int4();
+        assert_eq!(q.qdq(&data, 0), data);
+    }
+
+    #[test]
+    fn multiplier_trades_clipping_against_resolution() {
+        // INT-with-RMS-scaling error is U-shaped in the quantiser range
+        // multiplier (clipping ↔ resolution, fig. 23's premise): a
+        // mid-range multiplier must beat both extremes.
+        let mut rng = Rng::new(5);
+        let data = Dist::standard(Family::Normal, 0.0).sample_vec(&mut rng, 4096);
+        let base = Quantiser::new(
+            Granularity::Tensor,
+            Statistic::Rms,
+            ScaleFormat::F32,
+            int_codebook(4, Variant::Symmetric),
+        );
+        let r = |m: f64| {
+            relative_rms_error(
+                &data,
+                &base.clone().with_multiplier(m).qdq(&data, 0),
+            )
+        };
+        let (narrow, mid, wide) = (r(1.0), r(2.5), r(8.0));
+        assert!(mid < narrow, "mid {mid} vs narrow {narrow}");
+        assert!(mid < wide, "mid {mid} vs wide {wide}");
+    }
+}

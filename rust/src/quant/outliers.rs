@@ -1,0 +1,204 @@
+//! Sparse outlier storage (§4, fig. 1 "0.1% sparse outlier removal"; the
+//! SpQR/SqueezeLLM dense-and-sparse decomposition).
+//!
+//! A fraction of elements — chosen by |θ| or by Fisher-weighted impact
+//! f·θ² — is stored exactly (f32 value + index); the remainder goes through
+//! the dense quantiser.  Outliers are *removed before* the dense pass so
+//! they don't inflate block scales, then patched back in.
+
+use crate::quant::Quantiser;
+
+/// Outlier selection criterion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutlierCriterion {
+    /// Largest absolute value.
+    AbsValue,
+    /// Largest Fisher-weighted squared value f_i·θ_i² (needs weights).
+    FisherWeighted,
+}
+
+/// Sparse outlier configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseOutliers {
+    /// Fraction of elements kept dense-exempt (the paper uses 1e-3).
+    pub fraction: f64,
+    pub criterion: OutlierCriterion,
+}
+
+impl SparseOutliers {
+    pub fn by_value(fraction: f64) -> SparseOutliers {
+        SparseOutliers {
+            fraction,
+            criterion: OutlierCriterion::AbsValue,
+        }
+    }
+
+    /// Number of outliers for a tensor of n elements.
+    pub fn count(&self, n: usize) -> usize {
+        ((n as f64) * self.fraction).round() as usize
+    }
+
+    /// Storage cost in bits per element of the tensor: each outlier costs a
+    /// 32-bit value plus a ⌈log2 n⌉-bit index.
+    pub fn overhead_bits(&self, n: usize) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let k = self.count(n) as f64;
+        let idx_bits = (n as f64).log2().ceil();
+        k * (32.0 + idx_bits) / n as f64
+    }
+
+    /// Select outlier indices (sorted ascending).
+    pub fn select(&self, data: &[f32], fisher: &[f32]) -> Vec<u32> {
+        let k = self.count(data.len());
+        if k == 0 {
+            return Vec::new();
+        }
+        let score = |i: usize| -> f64 {
+            let x = data[i] as f64;
+            match self.criterion {
+                OutlierCriterion::AbsValue => x.abs(),
+                OutlierCriterion::FisherWeighted => {
+                    let f = if fisher.is_empty() {
+                        1.0
+                    } else {
+                        fisher[i] as f64
+                    };
+                    f * x * x
+                }
+            }
+        };
+        let mut idx: Vec<u32> = (0..data.len() as u32).collect();
+        // partial selection of the top-k by score
+        idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+            score(b as usize)
+                .partial_cmp(&score(a as usize))
+                .unwrap()
+        });
+        let mut top: Vec<u32> = idx[..k].to_vec();
+        top.sort_unstable();
+        top
+    }
+}
+
+/// Dense + sparse quantise→dequantise: outliers are zeroed for the dense
+/// pass (so they don't blow up absmax scales) and restored exactly after.
+/// Returns (reconstruction, bits_per_element).
+pub fn qdq_with_outliers(
+    quantiser: &Quantiser,
+    sparse: &SparseOutliers,
+    data: &[f32],
+    fisher: &[f32],
+    channel_len: usize,
+) -> (Vec<f32>, f64) {
+    let outlier_idx = sparse.select(data, fisher);
+    let mut dense = data.to_vec();
+    for &i in &outlier_idx {
+        dense[i as usize] = 0.0;
+    }
+    quantiser.qdq_in_place(&mut dense, channel_len);
+    for &i in &outlier_idx {
+        dense[i as usize] = data[i as usize];
+    }
+    let bits = quantiser.bits_per_element(data.len(), channel_len)
+        + sparse.overhead_bits(data.len());
+    (dense, bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::int::int_codebook;
+    use crate::formats::Variant;
+    use crate::scaling::{Granularity, ScaleFormat, Statistic};
+    use crate::util::rng::Rng;
+    use crate::util::stats::relative_rms_error;
+
+    fn quantiser() -> Quantiser {
+        Quantiser::new(
+            Granularity::Tensor,
+            Statistic::Absmax,
+            ScaleFormat::F32,
+            int_codebook(4, Variant::Asymmetric),
+        )
+    }
+
+    fn spiky_data(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut data: Vec<f32> =
+            (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        // inject huge outliers
+        for i in 0..n / 500 {
+            data[(i * 499) % n] = 50.0 * if i % 2 == 0 { 1.0 } else { -1.0 };
+        }
+        data
+    }
+
+    #[test]
+    fn outliers_bitexact_and_error_drops() {
+        let data = spiky_data(10_000, 1);
+        let q = quantiser();
+        let sp = SparseOutliers::by_value(0.005);
+        let (recon, bits) = qdq_with_outliers(&q, &sp, &data, &[], 0);
+        // every selected outlier must be exact
+        for &i in &sp.select(&data, &[]) {
+            assert_eq!(recon[i as usize], data[i as usize]);
+        }
+        // error with outlier removal should be dramatically lower than
+        // plain tensor-absmax (whose scale is dominated by the spikes)
+        let r_sparse = relative_rms_error(&data, &recon);
+        let r_plain = relative_rms_error(&data, &q.qdq(&data, 0));
+        assert!(
+            r_sparse < r_plain * 0.2,
+            "sparse {r_sparse} vs plain {r_plain}"
+        );
+        assert!(bits > 4.0 && bits < 4.5, "bits {bits}");
+    }
+
+    #[test]
+    fn count_and_overhead() {
+        let sp = SparseOutliers::by_value(1e-3);
+        assert_eq!(sp.count(10_000), 10);
+        let bits = sp.overhead_bits(10_000);
+        // 10 outliers × (32 + 14) bits / 10000
+        assert!((bits - 10.0 * 46.0 / 10_000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fisher_weighted_selection_differs() {
+        let data = vec![1.0f32, -2.0, 0.5, 1.5];
+        let fisher = vec![0.0f32, 0.0, 100.0, 0.01];
+        let by_val = SparseOutliers {
+            fraction: 0.25,
+            criterion: OutlierCriterion::AbsValue,
+        };
+        let by_fisher = SparseOutliers {
+            fraction: 0.25,
+            criterion: OutlierCriterion::FisherWeighted,
+        };
+        assert_eq!(by_val.select(&data, &fisher), vec![1]);
+        assert_eq!(by_fisher.select(&data, &fisher), vec![2]);
+    }
+
+    #[test]
+    fn zero_fraction_is_noop() {
+        let data = spiky_data(1000, 2);
+        let q = quantiser();
+        let sp = SparseOutliers::by_value(0.0);
+        let (recon, bits) = qdq_with_outliers(&q, &sp, &data, &[], 0);
+        assert_eq!(recon, q.qdq(&data, 0));
+        assert!((bits - q.bits_per_element(1000, 0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn indices_sorted_unique() {
+        let data = spiky_data(5000, 3);
+        let sp = SparseOutliers::by_value(0.01);
+        let idx = sp.select(&data, &[]);
+        assert_eq!(idx.len(), 50);
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+}

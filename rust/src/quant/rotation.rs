@@ -1,0 +1,321 @@
+//! Random orthonormal rotations (fig. 29; QuaRot/SpinQuant-style outlier
+//! suppression).
+//!
+//! A rotation is a seeded composition of `rounds` of
+//! (random permutation → random signs → block-wise fast Walsh–Hadamard
+//! transform), which is orthonormal by construction, runs in O(n log n),
+//! works for any dimension (greedy power-of-two block decomposition; the
+//! permutations mix across blocks between rounds) and drives heavy-tailed
+//! marginals toward Normal — exactly the property fig. 29 exploits.
+//!
+//! Applied to a 2-D tensor as `θ_rot = V θ W` (rows rotated by V, columns
+//! by W), inverted exactly by the transposes.
+
+use crate::util::rng::Rng;
+
+/// Orthonormal random rotation on vectors of length `dim`.
+#[derive(Clone, Debug)]
+pub struct RandomRotation {
+    dim: usize,
+    rounds: Vec<Round>,
+}
+
+#[derive(Clone, Debug)]
+struct Round {
+    perm: Vec<u32>,
+    inv_perm: Vec<u32>,
+    signs: Vec<f32>,
+    /// (start, len) power-of-two FWHT blocks covering [0, dim)
+    blocks: Vec<(usize, usize)>,
+}
+
+impl RandomRotation {
+    pub fn new(dim: usize, seed: u64) -> RandomRotation {
+        assert!(dim >= 1);
+        let mut rng = Rng::new(seed ^ 0x5EED_0FA7);
+        let n_rounds = 3;
+        let blocks = pow2_blocks(dim);
+        let rounds = (0..n_rounds)
+            .map(|_| {
+                let mut perm: Vec<u32> = (0..dim as u32).collect();
+                rng.shuffle(&mut perm);
+                let mut inv_perm = vec![0u32; dim];
+                for (i, &p) in perm.iter().enumerate() {
+                    inv_perm[p as usize] = i as u32;
+                }
+                let signs = (0..dim)
+                    .map(|_| if rng.f64() < 0.5 { -1.0 } else { 1.0 })
+                    .collect();
+                Round {
+                    perm,
+                    inv_perm,
+                    signs,
+                    blocks: blocks.clone(),
+                }
+            })
+            .collect();
+        RandomRotation { dim, rounds }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// y = R x (in place).
+    pub fn apply(&self, x: &mut [f32]) {
+        assert_eq!(x.len(), self.dim);
+        let mut tmp = vec![0f32; self.dim];
+        for round in &self.rounds {
+            // permute
+            for (i, &p) in round.perm.iter().enumerate() {
+                tmp[i] = x[p as usize];
+            }
+            // signs
+            for (t, &s) in tmp.iter_mut().zip(&round.signs) {
+                *t *= s;
+            }
+            // blockwise normalised FWHT
+            for &(start, len) in &round.blocks {
+                fwht(&mut tmp[start..start + len]);
+            }
+            x.copy_from_slice(&tmp);
+        }
+    }
+
+    /// x = Rᵀ y (in place) — exact inverse of [`RandomRotation::apply`].
+    pub fn apply_transpose(&self, x: &mut [f32]) {
+        assert_eq!(x.len(), self.dim);
+        let mut tmp = vec![0f32; self.dim];
+        for round in self.rounds.iter().rev() {
+            // FWHT is self-inverse (normalised)
+            for &(start, len) in &round.blocks {
+                fwht(&mut x[start..start + len]);
+            }
+            for (t, &s) in x.iter_mut().zip(&round.signs) {
+                *t *= s;
+            }
+            for (i, &ip) in round.inv_perm.iter().enumerate() {
+                tmp[i] = x[ip as usize];
+            }
+            x.copy_from_slice(&tmp);
+        }
+    }
+
+    /// Rotate every length-`dim` row of a row-major (rows × dim) matrix.
+    pub fn apply_rows(&self, data: &mut [f32]) {
+        assert_eq!(data.len() % self.dim, 0);
+        for row in data.chunks_mut(self.dim) {
+            self.apply(row);
+        }
+    }
+
+    pub fn apply_rows_transpose(&self, data: &mut [f32]) {
+        assert_eq!(data.len() % self.dim, 0);
+        for row in data.chunks_mut(self.dim) {
+            self.apply_transpose(row);
+        }
+    }
+}
+
+/// Greedy power-of-two decomposition of [0, n): e.g. 192 → 128 + 64.
+fn pow2_blocks(n: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut rem = n;
+    while rem > 0 {
+        let len = 1usize << (usize::BITS - 1 - rem.leading_zeros());
+        out.push((start, len));
+        start += len;
+        rem -= len;
+    }
+    out
+}
+
+/// Normalised in-place fast Walsh–Hadamard transform (len = power of two).
+pub fn fwht(x: &mut [f32]) {
+    let n = x.len();
+    debug_assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        for chunk in x.chunks_mut(2 * h) {
+            let (a, b) = chunk.split_at_mut(h);
+            for (ai, bi) in a.iter_mut().zip(b.iter_mut()) {
+                let (u, v) = (*ai, *bi);
+                *ai = u + v;
+                *bi = u - v;
+            }
+        }
+        h *= 2;
+    }
+    let norm = 1.0 / (n as f32).sqrt();
+    for v in x {
+        *v *= norm;
+    }
+}
+
+/// Rotate a 2-D tensor (rows × cols, row-major): θ ← V θ W, where V acts on
+/// columns-as-vectors (length rows) and W on rows-as-vectors (length cols).
+pub fn rotate_2d(
+    data: &mut [f32],
+    rows: usize,
+    cols: usize,
+    v: &RandomRotation,
+    w: &RandomRotation,
+) {
+    assert_eq!(data.len(), rows * cols);
+    assert_eq!(v.dim(), rows);
+    assert_eq!(w.dim(), cols);
+    // W on each row
+    w.apply_rows(data);
+    // V on each column: transpose, rotate rows, transpose back
+    let mut t = transpose(data, rows, cols);
+    v.apply_rows(&mut t);
+    let back = transpose(&t, cols, rows);
+    data.copy_from_slice(&back);
+}
+
+/// Inverse of [`rotate_2d`].
+pub fn rotate_2d_inverse(
+    data: &mut [f32],
+    rows: usize,
+    cols: usize,
+    v: &RandomRotation,
+    w: &RandomRotation,
+) {
+    let mut t = transpose(data, rows, cols);
+    v.apply_rows_transpose(&mut t);
+    let back = transpose(&t, cols, rows);
+    data.copy_from_slice(&back);
+    w.apply_rows_transpose(data);
+}
+
+fn transpose(data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0f32; data.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = data[r * cols + c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats;
+
+    #[test]
+    fn fwht_self_inverse() {
+        let mut rng = Rng::new(1);
+        let orig: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+        let mut x = orig.clone();
+        fwht(&mut x);
+        fwht(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rotation_orthonormal() {
+        for dim in [8, 100, 192, 257] {
+            let rot = RandomRotation::new(dim, 42);
+            let mut rng = Rng::new(2);
+            let orig: Vec<f32> =
+                (0..dim).map(|_| rng.normal() as f32).collect();
+            let mut x = orig.clone();
+            rot.apply(&mut x);
+            // norm preserved
+            let n0 = stats::rms(&orig);
+            let n1 = stats::rms(&x);
+            assert!(
+                ((n0 - n1) / n0).abs() < 1e-4,
+                "dim {dim}: norm {n0} -> {n1}"
+            );
+            // inverse restores
+            rot.apply_transpose(&mut x);
+            for (a, b) in x.iter().zip(&orig) {
+                assert!((a - b).abs() < 1e-4, "dim {dim}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_gaussianises_heavy_tails() {
+        // fig. 29's premise: rotation pulls Student-t marginals toward
+        // Normal — kurtosis should drop dramatically.
+        let dim = 512;
+        let mut rng = Rng::new(3);
+        let mut x: Vec<f32> =
+            (0..dim).map(|_| rng.student_t(3.0) as f32).collect();
+        let kurt = |xs: &[f32]| {
+            let m = xs.iter().map(|&v| v as f64).sum::<f64>() / xs.len() as f64;
+            let var = xs
+                .iter()
+                .map(|&v| (v as f64 - m).powi(2))
+                .sum::<f64>()
+                / xs.len() as f64;
+            let m4 = xs
+                .iter()
+                .map(|&v| (v as f64 - m).powi(4))
+                .sum::<f64>()
+                / xs.len() as f64;
+            m4 / (var * var)
+        };
+        // make it *really* heavy by injecting a spike
+        x[7] = 400.0;
+        let k_before = kurt(&x);
+        let rot = RandomRotation::new(dim, 4);
+        rot.apply(&mut x);
+        let k_after = kurt(&x);
+        assert!(
+            k_after < k_before * 0.2,
+            "kurtosis {k_before} -> {k_after}"
+        );
+    }
+
+    #[test]
+    fn rotate_2d_roundtrip() {
+        let (rows, cols) = (24, 40);
+        let mut rng = Rng::new(5);
+        let orig: Vec<f32> =
+            (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let v = RandomRotation::new(rows, 10);
+        let w = RandomRotation::new(cols, 11);
+        let mut x = orig.clone();
+        rotate_2d(&mut x, rows, cols, &v, &w);
+        assert!(stats::sq_err(&x, &orig) > 0.0); // actually rotated
+        rotate_2d_inverse(&mut x, rows, cols, &v, &w);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn pow2_blocks_cover() {
+        for n in [1usize, 7, 64, 100, 192, 1000] {
+            let blocks = pow2_blocks(n);
+            let total: usize = blocks.iter().map(|&(_, l)| l).sum();
+            assert_eq!(total, n);
+            for &(_, l) in &blocks {
+                assert!(l.is_power_of_two());
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let r1 = RandomRotation::new(64, 9);
+        let r2 = RandomRotation::new(64, 9);
+        let mut a: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let mut b = a.clone();
+        r1.apply(&mut a);
+        r2.apply(&mut b);
+        assert_eq!(a, b);
+        let r3 = RandomRotation::new(64, 10);
+        let mut c: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        r3.apply(&mut c);
+        assert_ne!(a, c);
+    }
+}

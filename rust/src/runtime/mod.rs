@@ -1,0 +1,359 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place Python-built compute enters the Rust process —
+//! and it happens strictly through `artifacts/` files; Python itself never
+//! runs here.  Interchange is HLO *text* (xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos; the text parser reassigns instruction ids).
+//!
+//! [`Runtime`] owns the client, the artifact manifest and a compile cache;
+//! [`ModelRunner`] wraps a `model_fwd_*` artifact with parameter marshalling
+//! and batch chunking for evaluation-sized workloads.
+
+pub mod model;
+
+pub use model::ModelRunner;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape/dtype/name of one artifact input or output (flattened order).
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: j.req_str("name").map_err(anyhow::Error::from)?.to_string(),
+            dtype: j
+                .req_str("dtype")
+                .map_err(anyhow::Error::from)?
+                .to_string(),
+            shape: j
+                .req("shape")
+                .map_err(anyhow::Error::from)?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|x| x.as_usize().context("shape elem"))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// Manifest entry for one AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// A typed input value for execution.
+pub enum Value<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    U32(&'a [u32]),
+}
+
+impl<'a> Value<'a> {
+    fn to_literal(&self, spec: &IoSpec) -> Result<xla::Literal> {
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32(v) => {
+                if spec.dtype != "float32" {
+                    bail!("{}: expected {}, got f32", spec.name, spec.dtype);
+                }
+                if v.len() != spec.numel() {
+                    bail!(
+                        "{}: expected {} elements, got {}",
+                        spec.name,
+                        spec.numel(),
+                        v.len()
+                    );
+                }
+                xla::Literal::vec1(v)
+            }
+            Value::I32(v) => {
+                if spec.dtype != "int32" {
+                    bail!("{}: expected {}, got i32", spec.name, spec.dtype);
+                }
+                xla::Literal::vec1(v)
+            }
+            Value::U32(v) => {
+                if spec.dtype != "uint32" {
+                    bail!("{}: expected {}, got u32", spec.name, spec.dtype);
+                }
+                xla::Literal::vec1(v)
+            }
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// The PJRT runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    artifacts: HashMap<String, ArtifactInfo>,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (reads `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(
+            || format!("read {manifest_path:?} — run `make artifacts` first"),
+        )?;
+        let json = Json::parse(&text).context("manifest.json parse")?;
+        let mut artifacts = HashMap::new();
+        for a in json
+            .req("artifacts")
+            .map_err(anyhow::Error::from)?
+            .as_arr()
+            .context("artifacts not an array")?
+        {
+            let info = ArtifactInfo {
+                name: a.req_str("name").map_err(anyhow::Error::from)?.into(),
+                file: a.req_str("file").map_err(anyhow::Error::from)?.into(),
+                inputs: a
+                    .req("inputs")
+                    .map_err(anyhow::Error::from)?
+                    .as_arr()
+                    .context("inputs")?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .req("outputs")
+                    .map_err(anyhow::Error::from)?
+                    .as_arr()
+                    .context("outputs")?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<_>>()?,
+            };
+            artifacts.insert(info.name.clone(), info);
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir,
+            artifacts,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts location relative to the repo root, overridable via
+    /// `OWF_ARTIFACTS`.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("OWF_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        // try a few anchors so tests (cwd = rust/) and the binary (repo
+        // root) both work
+        for candidate in [
+            PathBuf::from(&dir),
+            PathBuf::from("..").join(&dir),
+            PathBuf::from("../..").join(&dir),
+        ] {
+            if candidate.join("manifest.json").exists() {
+                return Runtime::open(candidate);
+            }
+        }
+        bail!("artifacts directory not found (run `make artifacts`)")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}"))
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> =
+            self.artifacts.keys().map(|s| s.as_str()).collect();
+        names.sort();
+        names
+    }
+
+    /// Path of the `.owt` data files that accompany the artifacts.
+    pub fn data_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Compile (cached) an artifact.
+    fn load(
+        &self,
+        name: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self.artifact(name)?;
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("load {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with positional inputs (flattened manifest
+    /// order). Returns one `Vec<f32>` per output (int outputs error).
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        inputs: &[Value],
+    ) -> Result<Vec<Vec<f32>>> {
+        let info = self.artifact(name)?;
+        if inputs.len() != info.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                info.inputs.len(),
+                inputs.len()
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&info.inputs)
+            .map(|(v, spec)| v.to_literal(spec))
+            .collect::<Result<_>>()?;
+        let exe = self.load(name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        // aot.py lowers with return_tuple=True: one tuple output
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != info.outputs.len() {
+            bail!(
+                "{name}: manifest says {} outputs, got {}",
+                info.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect()
+    }
+
+    /// Execute with a named-input provider: looks each manifest input up in
+    /// `f32_map` (for float inputs) or the positional `extra` list matched
+    /// by suffix order for non-float inputs.
+    pub fn execute_named(
+        &self,
+        name: &str,
+        mut provider: impl FnMut(&IoSpec) -> Result<OwnedValue>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let info = self.artifact(name)?.clone();
+        let owned: Vec<OwnedValue> = info
+            .inputs
+            .iter()
+            .map(&mut provider)
+            .collect::<Result<_>>()?;
+        let values: Vec<Value> = owned.iter().map(OwnedValue::borrow).collect();
+        self.execute_f32(name, &values)
+    }
+}
+
+/// Owned input buffer (for provider-style execution).
+pub enum OwnedValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl OwnedValue {
+    pub fn borrow(&self) -> Value<'_> {
+        match self {
+            OwnedValue::F32(v) => Value::F32(v),
+            OwnedValue::I32(v) => Value::I32(v),
+            OwnedValue::U32(v) => Value::U32(v),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        Runtime::open_default().ok()
+    }
+
+    #[test]
+    fn manifest_loads_and_lists_artifacts() {
+        let Some(rt) = runtime() else { return };
+        let names = rt.artifact_names();
+        for expected in [
+            "qdq_block_absmax",
+            "model_fwd_s",
+            "model_fwd_m",
+            "fisher_s",
+            "qat_step_m_block128_absmax",
+        ] {
+            assert!(
+                names.contains(&expected),
+                "missing artifact {expected}; have {names:?}"
+            );
+        }
+        let info = rt.artifact("model_fwd_s").unwrap();
+        // params… + tokens
+        assert!(info.inputs.len() > 20);
+        assert_eq!(info.outputs.len(), 1);
+    }
+
+    #[test]
+    fn qdq_artifact_executes() {
+        let Some(rt) = runtime() else { return };
+        let info = rt.artifact("qdq_block_absmax").unwrap().clone();
+        let n: usize = info.inputs[0].numel();
+        let k = info.inputs[1].numel();
+        let x: Vec<f32> = (0..n).map(|i| ((i % 37) as f32 - 18.0) * 0.1).collect();
+        let cb: Vec<f32> = (0..k)
+            .map(|i| -1.0 + 2.0 * i as f32 / (k - 1) as f32)
+            .collect();
+        let out = rt
+            .execute_f32(
+                "qdq_block_absmax",
+                &[Value::F32(&x), Value::F32(&cb)],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), n);
+        // dequantised values are finite and within the block absmax
+        assert!(out[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let Some(rt) = runtime() else { return };
+        let x = vec![0f32; 4];
+        assert!(rt
+            .execute_f32("qdq_block_absmax", &[Value::F32(&x)])
+            .is_err());
+    }
+}

@@ -1,0 +1,262 @@
+//! Model-level wrapper over the `model_fwd_*` artifacts: checkpoint
+//! loading, parameter marshalling (manifest order), eval-batch chunking and
+//! teacher-forced logits.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{OwnedValue, Runtime};
+use crate::tensorstore::Store;
+
+/// microllama configuration, read from the checkpoint metadata.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub n_params: usize,
+}
+
+impl ModelConfig {
+    pub fn from_store(store: &Store) -> Result<ModelConfig> {
+        let c = store.meta.get("config").context("no config in meta")?;
+        let u = |k: &str| -> Result<usize> {
+            Ok(c.req_usize(k).map_err(anyhow::Error::from)?)
+        };
+        Ok(ModelConfig {
+            name: c
+                .req_str("name")
+                .map_err(anyhow::Error::from)?
+                .to_string(),
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            n_kv_heads: u("n_kv_heads")?,
+            d_ff: u("d_ff")?,
+            seq_len: u("seq_len")?,
+            n_params: u("n_params")?,
+        })
+    }
+}
+
+/// Loaded checkpoint: the parameter store plus its parsed config.
+pub struct Checkpoint {
+    pub store: Store,
+    pub config: ModelConfig,
+}
+
+impl Checkpoint {
+    pub fn load(rt: &Runtime, size: &str) -> Result<Checkpoint> {
+        let store = Store::load(rt.data_path(&format!("model_{size}.owt")))?;
+        let config = ModelConfig::from_store(&store)?;
+        Ok(Checkpoint { store, config })
+    }
+
+    /// Parameters as a name → f32 map (a working copy to quantise).
+    pub fn params(&self) -> HashMap<String, Vec<f32>> {
+        self.store
+            .tensors
+            .iter()
+            .map(|t| (t.name.clone(), t.as_f32()))
+            .collect()
+    }
+}
+
+/// Token split loaded from `tokens_<size>_<split>.owt`.
+pub struct TokenSplit {
+    pub n_seq: usize,
+    pub seq_len: usize,
+    pub tokens: Vec<i32>,
+}
+
+impl TokenSplit {
+    pub fn load(rt: &Runtime, size: &str, split: &str) -> Result<TokenSplit> {
+        let store =
+            Store::load(rt.data_path(&format!("tokens_{size}_{split}.owt")))?;
+        let t = store.require("tokens")?;
+        if t.shape.len() != 2 {
+            bail!("tokens must be 2-D");
+        }
+        Ok(TokenSplit {
+            n_seq: t.shape[0],
+            seq_len: t.shape[1],
+            tokens: t.as_i32(),
+        })
+    }
+
+    pub fn seq(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+
+    /// First `n` sequences as a flat buffer.
+    pub fn take(&self, n: usize) -> &[i32] {
+        &self.tokens[..n.min(self.n_seq) * self.seq_len]
+    }
+}
+
+/// Wraps one `model_fwd_<size>` artifact.
+pub struct ModelRunner<'rt> {
+    rt: &'rt Runtime,
+    pub size: String,
+    pub config: ModelConfig,
+    artifact: String,
+    /// sequences per PJRT call (fixed at AOT time)
+    pub batch: usize,
+}
+
+impl<'rt> ModelRunner<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        size: &str,
+        config: ModelConfig,
+    ) -> Result<ModelRunner<'rt>> {
+        let artifact = format!("model_fwd_{size}");
+        let info = rt.artifact(&artifact)?;
+        let tokens_spec = info
+            .inputs
+            .iter()
+            .find(|s| s.dtype == "int32")
+            .context("fwd artifact has no token input")?;
+        let batch = tokens_spec.shape[0];
+        if tokens_spec.shape[1] != config.seq_len {
+            bail!("artifact seq_len mismatch");
+        }
+        Ok(ModelRunner {
+            rt,
+            size: size.to_string(),
+            config,
+            artifact,
+            batch,
+        })
+    }
+
+    /// Teacher-forced logits for `n_seq` sequences (flat `tokens`,
+    /// n_seq × seq_len). Chunks into the artifact's fixed batch, padding the
+    /// final chunk by repeating its last sequence; returns
+    /// n_seq × seq_len × vocab floats.
+    pub fn logits(
+        &self,
+        params: &HashMap<String, Vec<f32>>,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let seq = self.config.seq_len;
+        assert_eq!(tokens.len() % seq, 0, "ragged token buffer");
+        let n_seq = tokens.len() / seq;
+        let vocab = self.config.vocab;
+        let mut out = Vec::with_capacity(n_seq * seq * vocab);
+        let mut chunk_tokens = vec![0i32; self.batch * seq];
+        let mut start = 0usize;
+        while start < n_seq {
+            let take = (n_seq - start).min(self.batch);
+            for row in 0..self.batch {
+                let src = (start + row.min(take - 1)) * seq;
+                chunk_tokens[row * seq..(row + 1) * seq]
+                    .copy_from_slice(&tokens[src..src + seq]);
+            }
+            let outputs = self.rt.execute_named(&self.artifact, |spec| {
+                if spec.dtype == "int32" {
+                    return Ok(OwnedValue::I32(chunk_tokens.clone()));
+                }
+                let pname = spec
+                    .name
+                    .strip_prefix("arg0.")
+                    .with_context(|| format!("unexpected input {}", spec.name))?;
+                let values = params
+                    .get(pname)
+                    .with_context(|| format!("missing param {pname}"))?;
+                if values.len() != spec.numel() {
+                    bail!(
+                        "param {pname}: {} elements, artifact wants {}",
+                        values.len(),
+                        spec.numel()
+                    );
+                }
+                Ok(OwnedValue::F32(values.clone()))
+            })?;
+            let logits = &outputs[0];
+            out.extend_from_slice(&logits[..take * seq * vocab]);
+            start += take;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> Option<(Runtime, Checkpoint)> {
+        let rt = Runtime::open_default().ok()?;
+        let ck = Checkpoint::load(&rt, "s").ok()?;
+        Some((rt, ck))
+    }
+
+    #[test]
+    fn checkpoint_and_tokens_load() {
+        let Some((rt, ck)) = setup() else { return };
+        assert_eq!(ck.config.name, "s");
+        assert_eq!(ck.store.total_f32_elements(), ck.config.n_params);
+        let toks = TokenSplit::load(&rt, "s", "eval").unwrap();
+        assert_eq!(toks.seq_len, ck.config.seq_len);
+        assert!(toks.n_seq >= 32);
+        assert!(toks
+            .tokens
+            .iter()
+            .all(|&t| t >= 0 && (t as usize) < ck.config.vocab));
+    }
+
+    #[test]
+    fn forward_logits_shape_and_sanity() {
+        let Some((rt, ck)) = setup() else { return };
+        let runner = ModelRunner::new(&rt, "s", ck.config.clone()).unwrap();
+        let toks = TokenSplit::load(&rt, "s", "eval").unwrap();
+        let n = runner.batch + 3; // force a padded second chunk
+        let logits = runner.logits(&ck.params(), toks.take(n)).unwrap();
+        assert_eq!(
+            logits.len(),
+            n * ck.config.seq_len * ck.config.vocab
+        );
+        assert!(logits.iter().all(|x| x.is_finite()));
+        // the trained model should beat uniform cross-entropy on its corpus
+        let seq = ck.config.seq_len;
+        let vocab = ck.config.vocab;
+        // CE of next-token predictions for the first sequence
+        let mut ce = 0.0f64;
+        let mut count = 0usize;
+        for t in 0..seq - 1 {
+            let row = &logits[t * vocab..(t + 1) * vocab];
+            let target = toks.tokens[t + 1] as usize;
+            let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            let z: f64 = row
+                .iter()
+                .map(|&x| ((x - max) as f64).exp())
+                .sum();
+            ce += -(((row[target] - max) as f64) - z.ln());
+            count += 1;
+        }
+        ce /= count as f64;
+        let uniform = (vocab as f64).ln();
+        assert!(
+            ce < uniform * 0.8,
+            "model CE {ce:.3} not beating uniform {uniform:.3}"
+        );
+    }
+
+    #[test]
+    fn deterministic_execution() {
+        let Some((rt, ck)) = setup() else { return };
+        let runner = ModelRunner::new(&rt, "s", ck.config.clone()).unwrap();
+        let toks = TokenSplit::load(&rt, "s", "eval").unwrap();
+        let params = ck.params();
+        let a = runner.logits(&params, toks.take(2)).unwrap();
+        let b = runner.logits(&params, toks.take(2)).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,249 @@
+//! Scaling schemes (§2.1): the *granularity* (tensor / channel / block),
+//! the *statistic* (RMS / absmax / signmax) and the *scale storage format*
+//! (bfloat16 round-away by default; E8M0 and generic EkMm for the fig. 20/21
+//! sweeps).
+
+use crate::formats::float::{round_to_bf16, round_to_e8m0, round_to_float};
+
+/// How many elements share one scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Granularity {
+    /// One scale for the whole tensor.
+    Tensor,
+    /// One scale per output channel (row/column per the tensor's
+    /// `channel_axis`).
+    Channel,
+    /// One scale per contiguous block of `B` elements.
+    Block(usize),
+}
+
+impl Granularity {
+    pub fn name(&self) -> String {
+        match self {
+            Granularity::Tensor => "tensor".into(),
+            Granularity::Channel => "channel".into(),
+            Granularity::Block(b) => format!("block{b}"),
+        }
+    }
+}
+
+/// The block statistic used as the scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Statistic {
+    Rms,
+    Absmax,
+    /// Signed absolute maximum: scale carries the max's sign, costing one
+    /// extra bit per block (§2.1 "Signmax scaling").
+    Signmax,
+}
+
+impl Statistic {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Statistic::Rms => "rms",
+            Statistic::Absmax => "absmax",
+            Statistic::Signmax => "signmax",
+        }
+    }
+
+    /// Compute the (signed, for signmax) scale of one block.
+    pub fn compute(&self, block: &[f32]) -> f32 {
+        match self {
+            Statistic::Rms => {
+                let ss: f64 = block
+                    .iter()
+                    .map(|&x| x as f64 * x as f64)
+                    .sum();
+                ((ss / block.len() as f64).sqrt()) as f32
+            }
+            Statistic::Absmax => {
+                block.iter().fold(0f32, |m, &x| m.max(x.abs()))
+            }
+            Statistic::Signmax => {
+                let mut best = 0f32;
+                for &x in block {
+                    if x.abs() > best.abs() {
+                        best = x;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+/// Storage format for the per-block scale value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ScaleFormat {
+    /// float32 passthrough (idealised; 32 bits).
+    F32,
+    /// bfloat16; `away` selects round-away-from-zero (the paper's default
+    /// for absmax so the block max never clips outside ±1).
+    Bf16 { away: bool },
+    /// Power-of-two exponent-only scale (MX convention).
+    E8M0 { away: bool },
+    /// Generic EkMm minifloat scale (fig. 20's mantissa sweep).
+    Float { exp: u32, man: u32, away: bool },
+}
+
+impl ScaleFormat {
+    pub fn bits(&self) -> f64 {
+        match self {
+            ScaleFormat::F32 => 32.0,
+            ScaleFormat::Bf16 { .. } => 16.0,
+            ScaleFormat::E8M0 { .. } => 8.0,
+            ScaleFormat::Float { exp, man, .. } => (1 + exp + man) as f64,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ScaleFormat::F32 => "f32".into(),
+            ScaleFormat::Bf16 { away } => {
+                format!("bf16{}", if *away { "-away" } else { "" })
+            }
+            ScaleFormat::E8M0 { away } => {
+                format!("e8m0{}", if *away { "-away" } else { "" })
+            }
+            ScaleFormat::Float { exp, man, away } => {
+                format!("e{exp}m{man}{}", if *away { "-away" } else { "" })
+            }
+        }
+    }
+
+    /// Round a (positive-magnitude) scale; the sign (signmax) is preserved.
+    pub fn round(&self, scale: f32) -> f32 {
+        if scale == 0.0 {
+            return 0.0;
+        }
+        let sign = scale.signum();
+        let mag = scale.abs();
+        let rounded = match *self {
+            ScaleFormat::F32 => mag,
+            ScaleFormat::Bf16 { away } => round_to_bf16(mag, away),
+            ScaleFormat::E8M0 { away } => round_to_e8m0(mag, away),
+            ScaleFormat::Float { exp, man, away } => {
+                round_to_float(mag, exp, man, away)
+            }
+        };
+        sign * rounded
+    }
+}
+
+/// The paper's default scale format: bfloat16, round-away.
+pub const DEFAULT_SCALE: ScaleFormat = ScaleFormat::Bf16 { away: true };
+
+/// View a flat tensor as scale groups for a granularity. Returns a list of
+/// (start, len) ranges; `channel_len` is the contiguous length of one
+/// channel group (tensor shape dependent, supplied by the caller).
+pub fn scale_groups(
+    n: usize,
+    granularity: Granularity,
+    channel_len: usize,
+) -> Vec<(usize, usize)> {
+    match granularity {
+        Granularity::Tensor => vec![(0, n)],
+        Granularity::Channel => {
+            assert!(channel_len > 0 && n % channel_len == 0,
+                "channel_len {channel_len} does not divide {n}");
+            (0..n / channel_len)
+                .map(|i| (i * channel_len, channel_len))
+                .collect()
+        }
+        Granularity::Block(b) => {
+            assert!(b > 0);
+            let mut out = Vec::with_capacity(n.div_ceil(b));
+            let mut start = 0;
+            while start < n {
+                let len = b.min(n - start);
+                out.push((start, len));
+                start += len;
+            }
+            out
+        }
+    }
+}
+
+/// Average scale overhead in bits per element.
+pub fn scale_overhead_bits(
+    n: usize,
+    granularity: Granularity,
+    channel_len: usize,
+    scale_format: ScaleFormat,
+    statistic: Statistic,
+) -> f64 {
+    let groups = scale_groups(n, granularity, channel_len).len() as f64;
+    let sign_bit = if statistic == Statistic::Signmax { 1.0 } else { 0.0 };
+    groups * (scale_format.bits() + sign_bit) / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn statistics() {
+        let block = [1.0f32, -3.0, 2.0];
+        assert_eq!(Statistic::Absmax.compute(&block), 3.0);
+        assert_eq!(Statistic::Signmax.compute(&block), -3.0);
+        let rms = Statistic::Rms.compute(&block);
+        assert!((rms - ((14.0f64 / 3.0).sqrt() as f32)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn signmax_keeps_sign_through_rounding() {
+        let s = ScaleFormat::Bf16 { away: true };
+        let r = s.round(-3.0001);
+        assert!(r <= -3.0001, "round-away grows magnitude: {r}");
+        // bf16 ulp in the [2, 4) binade is 2^-7·4 = 0.03125
+        assert!(r >= -3.04, "{r}");
+    }
+
+    #[test]
+    fn groups_partition() {
+        for (n, g, cl) in [
+            (100, Granularity::Tensor, 0),
+            (100, Granularity::Block(32), 0),
+            (96, Granularity::Channel, 24),
+        ] {
+            let groups = scale_groups(n, g, cl);
+            let total: usize = groups.iter().map(|&(_, l)| l).sum();
+            assert_eq!(total, n, "{g:?}");
+            // contiguity
+            let mut next = 0;
+            for &(s, l) in &groups {
+                assert_eq!(s, next);
+                next = s + l;
+            }
+        }
+    }
+
+    #[test]
+    fn overhead_bits() {
+        // B=128 bf16 scale = 16/128 = 0.125 bits/elem
+        let o = scale_overhead_bits(
+            128 * 10,
+            Granularity::Block(128),
+            0,
+            ScaleFormat::Bf16 { away: true },
+            Statistic::Absmax,
+        );
+        assert!((o - 0.125).abs() < 1e-12);
+        // signmax adds 1/128
+        let s = scale_overhead_bits(
+            128 * 10,
+            Granularity::Block(128),
+            0,
+            ScaleFormat::Bf16 { away: true },
+            Statistic::Signmax,
+        );
+        assert!((s - 0.125 - 1.0 / 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tail_block_handled() {
+        let groups = scale_groups(100, Granularity::Block(32), 0);
+        assert_eq!(groups.len(), 4);
+        assert_eq!(groups[3], (96, 4));
+    }
+}

@@ -1,0 +1,9 @@
+//! Foundation utilities implemented from scratch for the offline build:
+//! seeded RNG + samplers, JSON, data-parallel helpers, summary statistics
+//! and a miniature property-testing harness.
+
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod testing;

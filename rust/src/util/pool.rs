@@ -1,0 +1,129 @@
+//! Minimal data-parallel helpers built on `std::thread::scope`.
+//!
+//! rayon is not available offline, so the coordinator and the simulated-data
+//! sweeps use these: `par_map` (index-preserving parallel map over items)
+//! and `par_chunks_mut` (parallel mutation of disjoint slice chunks).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use (respects `OWF_THREADS`).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("OWF_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Parallel map with order-preserving results and work stealing via an
+/// atomic cursor. `f` must be `Sync` (called concurrently), items are read
+/// by shared reference.
+pub fn par_map<T: Sync, R: Send>(
+    items: &[T],
+    f: impl Fn(usize, &T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = num_threads().min(n);
+    if workers == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
+    // SAFETY-free design: workers collect (index, result) locally, merged
+    // under the mutex at the end of each worker's life.
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i, &items[i])));
+                }
+                let mut guard = slots.lock().unwrap();
+                for (i, r) in local {
+                    guard[i] = Some(r);
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker died")).collect()
+}
+
+/// Parallel in-place transform over disjoint chunks of a mutable slice.
+pub fn par_chunks_mut<T: Send>(
+    data: &mut [T],
+    chunk: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    let chunks: Vec<(usize, &mut [T])> =
+        data.chunks_mut(chunk.max(1)).enumerate().collect();
+    let cursor = AtomicUsize::new(0);
+    let n = chunks.len();
+    let chunks = Mutex::new(
+        chunks
+            .into_iter()
+            .map(Some)
+            .collect::<Vec<Option<(usize, &mut [T])>>>(),
+    );
+    let workers = num_threads().min(n.max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let taken = chunks.lock().unwrap()[i].take();
+                if let Some((idx, slice)) = taken {
+                    f(idx, slice);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = par_map(&items, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map(&empty, |_, &x| x).is_empty());
+        assert_eq!(par_map(&[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_all() {
+        let mut data = vec![0u64; 10_000];
+        par_chunks_mut(&mut data, 333, |idx, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = (idx * 333 + j) as u64;
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u64);
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! Deterministic pseudo-random number generation and samplers.
+//!
+//! The offline build environment carries no `rand`/`rand_distr`, so this is a
+//! from-scratch implementation: [xoshiro256++] as the core generator plus the
+//! samplers the paper's simulated-data analyses need (§3/§C): Normal
+//! (polar Marsaglia), Laplace (inverse cdf), Student-t (normal / sqrt
+//! (chi²/ν) with Marsaglia–Tsang gamma), uniform and categorical draws.
+//!
+//! [xoshiro256++]: https://prng.di.unimi.it/
+
+/// xoshiro256++ generator. Deterministic, seedable, fast, 2^256-1 period.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+/// splitmix64, used to expand a single seed into xoshiro state.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for parallel workers).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1] — safe as a log() argument.
+    #[inline]
+    pub fn f64_open(&mut self) -> f64 {
+        ((self.next_u64() >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        // Lemire's multiply-shift rejection-free (bias < 2^-64 * n, fine here)
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via polar Marsaglia (pairs cached).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Standard Laplace (scale 1) via inverse cdf.
+    pub fn laplace(&mut self) -> f64 {
+        let u = self.f64() - 0.5;
+        let inner = (1.0 - 2.0 * u.abs()).max(f64::MIN_POSITIVE);
+        if u >= 0.0 {
+            -inner.ln()
+        } else {
+            inner.ln()
+        }
+    }
+
+    /// Gamma(shape k, scale 1) via Marsaglia–Tsang (k >= 1 fast path,
+    /// boost for k < 1).
+    pub fn gamma(&mut self, k: f64) -> f64 {
+        if k < 1.0 {
+            // Gamma(k) = Gamma(k+1) * U^(1/k)
+            let g = self.gamma(k + 1.0);
+            return g * self.f64_open().powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64_open();
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v;
+            }
+        }
+    }
+
+    /// Student-t with `nu` degrees of freedom (scale 1).
+    pub fn student_t(&mut self, nu: f64) -> f64 {
+        let z = self.normal();
+        let chi2 = 2.0 * self.gamma(nu / 2.0);
+        z / (chi2 / nu).sqrt()
+    }
+
+    /// Fill a vector of standard-normal f32 samples.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal() as f32).collect()
+    }
+
+    pub fn laplace_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.laplace() as f32).collect()
+    }
+
+    pub fn student_t_vec(&mut self, nu: f64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.student_t(nu) as f32).collect()
+    }
+
+    /// Random index from unnormalised non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut target = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            target -= w;
+            if target <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i + 1);
+            items.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn determinism() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = r.f64_open();
+            assert!(y > 0.0 && y <= 1.0);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.normal()).collect();
+        let (mean, var) = moments(&xs);
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn laplace_moments() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.laplace()).collect();
+        let (mean, var) = moments(&xs);
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        // Laplace(scale 1) variance = 2
+        assert!((var - 2.0).abs() < 0.08, "var {var}");
+    }
+
+    #[test]
+    fn student_t_moments() {
+        let mut r = Rng::new(4);
+        let nu = 7.0;
+        let xs: Vec<f64> = (0..200_000).map(|_| r.student_t(nu)).collect();
+        let (mean, var) = moments(&xs);
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        // var = nu / (nu - 2) = 1.4
+        assert!((var - 1.4).abs() < 0.12, "var {var}");
+    }
+
+    #[test]
+    fn gamma_mean() {
+        let mut r = Rng::new(5);
+        for &k in &[0.5, 1.0, 2.5, 10.0] {
+            let xs: Vec<f64> = (0..100_000).map(|_| r.gamma(k)).collect();
+            let (mean, _) = moments(&xs);
+            assert!((mean - k).abs() < 0.05 * k.max(1.0), "k={k} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(6);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[r.below(10)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn categorical_distribution() {
+        let mut r = Rng::new(7);
+        let w = [1.0, 2.0, 7.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..100_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert!((counts[2] as f64 / 1e5 - 0.7).abs() < 0.01);
+        assert!((counts[1] as f64 / 1e5 - 0.2).abs() < 0.01);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(8);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,164 @@
+//! Summary statistics used throughout the evaluation harness.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Standard error of the mean.
+pub fn sem(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    std(xs) / (xs.len() as f64 - 1.0).sqrt()
+}
+
+/// Linear-interpolated quantile, q in [0, 1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// RMS of an f32 slice, computed in f64.
+pub fn rms(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+        / xs.len() as f64)
+        .sqrt()
+}
+
+/// Sum of squared differences, f64 accumulation.
+pub fn sq_err(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// The paper's R: RMS error divided by data RMS (§C). SNR = 1/R^2.
+pub fn relative_rms_error(original: &[f32], reconstructed: &[f32]) -> f64 {
+    let num = sq_err(original, reconstructed);
+    let den: f64 = original
+        .iter()
+        .map(|&x| (x as f64) * (x as f64))
+        .sum::<f64>();
+    if den == 0.0 {
+        return 0.0;
+    }
+    (num / den).sqrt()
+}
+
+/// Pearson correlation.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (ma, mb) = (mean(a), mean(b));
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        num += (x - ma) * (y - mb);
+        da += (x - ma).powi(2);
+        db += (y - mb).powi(2);
+    }
+    if da == 0.0 || db == 0.0 {
+        return 0.0;
+    }
+    num / (da * db).sqrt()
+}
+
+/// Spearman rank correlation (average ranks for ties).
+pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    pearson(&ranks(a), &ranks(b))
+}
+
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&i, &j| xs[i].total_cmp(&xs[j]));
+    let mut out = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0;
+        for k in i..=j {
+            out[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [3.0, 1.0, 2.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert!((quantile(&xs, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r_metric() {
+        let orig = [1.0f32, -1.0, 1.0, -1.0];
+        let same = orig;
+        assert_eq!(relative_rms_error(&orig, &same), 0.0);
+        let off = [0.9f32, -0.9, 0.9, -0.9];
+        assert!((relative_rms_error(&orig, &off) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn correlations() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-12);
+        assert!((spearman(&a, &[1.0, 10.0, 100.0, 1000.0]) - 1.0).abs()
+            < 1e-12);
+    }
+
+    #[test]
+    fn spearman_ties() {
+        let a = [1.0, 1.0, 2.0, 3.0];
+        let r = ranks(&a);
+        assert_eq!(r, vec![0.5, 0.5, 2.0, 3.0]);
+    }
+}

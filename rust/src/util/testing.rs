@@ -1,0 +1,101 @@
+//! A miniature property-based testing harness (proptest is unavailable in
+//! the offline registry).
+//!
+//! `check(name, cases, |g| ...)` runs a closure against `cases` seeded
+//! generators; on failure it re-runs a bounded shrink loop over the seed
+//! space is not attempted (seeds are reported instead so failures reproduce
+//! exactly). The `Gen` type wraps [`crate::util::rng::Rng`] with convenience
+//! draws used by the property tests across the crate.
+
+use crate::util::rng::Rng;
+
+/// Property-test input generator: a seeded RNG plus sizing helpers.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Vector length that grows with the case index (small cases first).
+    pub fn size(&mut self, max: usize) -> usize {
+        let cap = 1 + (self.case * max) / 96_usize.max(self.case + 1);
+        self.rng.below(cap.min(max)) + 1
+    }
+
+    pub fn f32_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n)
+            .map(|_| (self.rng.normal() as f32) * scale)
+            .collect()
+    }
+
+    pub fn heavy_tailed_vec(&mut self, n: usize) -> Vec<f32> {
+        let nu = self.rng.range(3.0, 12.0);
+        (0..n)
+            .map(|_| self.rng.student_t(nu) as f32)
+            .collect()
+    }
+
+    pub fn bits(&mut self, lo: u32, hi: u32) -> u32 {
+        lo + self.rng.below((hi - lo + 1) as usize) as u32
+    }
+}
+
+/// Run `property` against `cases` deterministic cases. Panics with the
+/// failing seed on the first violation.
+pub fn check(name: &str, cases: usize, mut property: impl FnMut(&mut Gen)) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            case,
+        };
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| property(&mut g)),
+        );
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("sum-commutes", 50, |g| {
+            let n = g.size(100);
+            let v = g.f32_vec(n, 1.0);
+            let a: f32 = v.iter().sum();
+            let b: f32 = v.iter().rev().sum();
+            assert!((a - b).abs() <= 1e-3 * a.abs().max(1.0));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\"")]
+    fn reports_failing_case() {
+        check("always-fails", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        check("collect", 5, |g| {
+            first.push(g.rng.next_u64());
+        });
+        let mut second = Vec::new();
+        check("collect", 5, |g| {
+            second.push(g.rng.next_u64());
+        });
+        assert_eq!(first, second);
+    }
+}

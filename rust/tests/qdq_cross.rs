@@ -1,0 +1,101 @@
+//! Three-way cross-validation of the fused block qdq:
+//!
+//!     Rust quant::Quantiser  ==  Pallas kernel (lowered HLO via PJRT)
+//!
+//! (the Python side already asserts pallas == pure-jnp oracle), closing the
+//! loop across all three layers. Skips gracefully when artifacts are absent.
+
+use owf::formats::cbrt::{cbrt_absmax, CBRT_ALPHA};
+use owf::formats::int::int_codebook;
+use owf::formats::Variant;
+use owf::quant::Quantiser;
+use owf::runtime::{Runtime, Value};
+use owf::scaling::{Granularity, ScaleFormat, Statistic};
+use owf::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    Runtime::open_default().ok()
+}
+
+fn cross_check(mode: &str, codebook: owf::formats::Codebook, seed: u64) {
+    let Some(rt) = runtime() else { return };
+    let artifact = format!("qdq_block_{mode}");
+    let info = rt.artifact(&artifact).unwrap().clone();
+    let n_blocks = info.inputs[0].shape[0];
+    let block = info.inputs[0].shape[1];
+    let k = info.inputs[1].numel();
+
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..n_blocks * block)
+        .map(|_| rng.student_t(5.0) as f32)
+        .collect();
+    // pad the codebook to the artifact's LUT width by duplication
+    let mut cb_points = codebook.points().to_vec();
+    while cb_points.len() < k {
+        cb_points.push(*cb_points.last().unwrap());
+    }
+    cb_points.sort_by(|a, b| a.total_cmp(b));
+
+    // L1 via PJRT
+    let out = rt
+        .execute_f32(&artifact, &[Value::F32(&x), Value::F32(&cb_points)])
+        .unwrap();
+    let pallas = &out[0];
+
+    // L3 native
+    let statistic = if mode == "absmax" {
+        Statistic::Absmax
+    } else {
+        Statistic::Rms
+    };
+    let quantiser = Quantiser::new(
+        Granularity::Block(block),
+        statistic,
+        ScaleFormat::Bf16 { away: true },
+        codebook,
+    );
+    let native = quantiser.qdq(&x, 0);
+
+    let mut mismatches = 0usize;
+    for (i, (a, b)) in pallas.iter().zip(&native).enumerate() {
+        // reductions may differ by 1 ulp; a midpoint tie could flip a
+        // codepoint (bounded by the local gap) — count real mismatches
+        if (a - b).abs() > 1e-5 * a.abs().max(1.0) {
+            mismatches += 1;
+            assert!(
+                mismatches < 5,
+                "too many mismatches; first at {i}: pallas {a} vs rust {b}"
+            );
+        }
+    }
+    assert!(
+        (mismatches as f64) < 1e-4 * native.len() as f64,
+        "{mismatches} mismatches"
+    );
+}
+
+#[test]
+fn rust_matches_pallas_absmax_int4() {
+    cross_check("absmax", int_codebook(4, Variant::Asymmetric), 1);
+}
+
+#[test]
+fn rust_matches_pallas_absmax_cbrt() {
+    cross_check(
+        "absmax",
+        cbrt_absmax(
+            owf::dist::Family::StudentT,
+            5.0,
+            4,
+            128,
+            Variant::Symmetric,
+            CBRT_ALPHA,
+        ),
+        2,
+    );
+}
+
+#[test]
+fn rust_matches_pallas_rms_int4() {
+    cross_check("rms", int_codebook(4, Variant::Symmetric), 3);
+}
