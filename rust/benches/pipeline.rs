@@ -1,18 +1,45 @@
 //! Bench: end-to-end direct-cast of a full checkpoint (quantise every
 //! tensor + PJRT forward + top-k KL) — the fig.-1 inner loop, and the
-//! number EXPERIMENTS.md §Perf tracks for the whole stack.
+//! number EXPERIMENTS.md §Perf tracks for the whole stack — plus the
+//! `owf sweep` engine over a simulated grid (pure CPU, always runs).
 //!
-//! Requires `make artifacts`; exits quietly otherwise.
+//! The checkpoint benches require `make artifacts`; they exit quietly
+//! otherwise.
 
 #[path = "bench_util.rs"]
 mod bench_util;
 use bench_util::bench;
 
 use owf::coordinator::config::Scheme;
+use owf::coordinator::{run_sweep, SweepOpts};
 use owf::eval::llm::Env;
 use owf::eval::RunOpts;
 
+fn bench_sweep() {
+    // 24 points × 2^16 samples through the full sweep engine (expansion,
+    // scheduling over OWF_THREADS, JSONL streaming)
+    let out = std::env::temp_dir().join("owf_bench_sweep.jsonl");
+    let grid = "{int,cbrt-t5,nf}@{3..6}:block{64,128}-absmax";
+    let opts = SweepOpts {
+        out: out.clone(),
+        samples: 1 << 16,
+        ..Default::default()
+    };
+    let points = 3 * 4 * 2;
+    bench(
+        &format!("sweep sim {points}pt x 2^16"),
+        Some((points * (1 << 16)) as f64),
+        || {
+            let stats = run_sweep(grid, &opts).unwrap();
+            assert_eq!(stats.ran, points);
+            std::hint::black_box(stats.ran);
+        },
+    );
+    let _ = std::fs::remove_file(&out);
+}
+
 fn main() -> anyhow::Result<()> {
+    bench_sweep();
     let opts = RunOpts {
         eval_seqs: 16,
         ..Default::default()

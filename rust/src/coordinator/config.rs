@@ -412,6 +412,130 @@ fn trim_float(x: f64) -> String {
     }
 }
 
+// ---------------------------------------------------------------------------
+// sweep-grid grammar
+// ---------------------------------------------------------------------------
+
+/// Hard cap on grid expansion (guards typo'd ranges like `{1..100000}`).
+pub const MAX_GRID_POINTS: usize = 100_000;
+
+/// Widest single `{lo..hi}` range (bit widths and block sizes never need
+/// more; typos fail fast instead of allocating).
+pub const MAX_RANGE_SPAN: usize = 4096;
+
+/// Expand a sweep-grid expression into concrete scheme specs.
+///
+/// Grammar: a grid is one or more scheme templates separated by `;`.  Each
+/// template is a spec string in which any `{...}` group expands to a set of
+/// alternatives — either a comma list (`block{32,64,128}`) or an inclusive
+/// integer range (`@{2..8}`) — with multiple groups combining as a
+/// cartesian product (leftmost group varies slowest).
+///
+/// ```text
+///   cbrt-t7@{2..8}:block{32,64,128}-absmax
+///     → cbrt-t7@2:block32-absmax, cbrt-t7@2:block64-absmax, ...
+///       cbrt-t7@8:block128-absmax                      (21 specs)
+///   {int,nf}@4:block64-absmax ; grid@{3,4}:tensor-rms:compress
+///     → 4 specs
+/// ```
+///
+/// Every expanded spec must parse as a [`Scheme`] (errors name the
+/// offending spec); duplicates are dropped, first occurrence wins.
+pub fn expand_grid(grid: &str) -> Result<Vec<String>> {
+    let mut out: Vec<String> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for template in grid.split(';').map(str::trim).filter(|s| !s.is_empty())
+    {
+        // depth-first expansion of the leftmost group keeps output order
+        // lexicographic in group positions
+        let mut stack = vec![template.to_string()];
+        while let Some(s) = stack.pop() {
+            match brace_group(&s)? {
+                None => {
+                    Scheme::parse(&s).with_context(|| {
+                        format!("grid point {s:?} (from {template:?})")
+                    })?;
+                    if seen.insert(s.clone()) {
+                        out.push(s);
+                    }
+                }
+                Some((start, end, options)) => {
+                    if stack.len() + options.len() > MAX_GRID_POINTS {
+                        bail!(
+                            "grid expands past {MAX_GRID_POINTS} points"
+                        );
+                    }
+                    for opt in options.into_iter().rev() {
+                        stack.push(format!(
+                            "{}{}{}",
+                            &s[..start],
+                            opt,
+                            &s[end + 1..]
+                        ));
+                    }
+                }
+            }
+            if out.len() > MAX_GRID_POINTS {
+                bail!("grid expands past {MAX_GRID_POINTS} points");
+            }
+        }
+    }
+    if out.is_empty() {
+        bail!("grid {grid:?} expands to zero specs");
+    }
+    Ok(out)
+}
+
+/// Find the leftmost `{...}` group: returns (byte offset of `{`, byte
+/// offset of `}`, expanded alternatives), or `None` when the string has no
+/// group.
+fn brace_group(s: &str) -> Result<Option<(usize, usize, Vec<String>)>> {
+    let Some(start) = s.find('{') else {
+        if s.contains('}') {
+            bail!("{s}: unmatched '}}'");
+        }
+        return Ok(None);
+    };
+    let rest = &s[start + 1..];
+    let end_rel = rest.find('}').with_context(|| format!("{s}: unmatched '{{'"))?;
+    let inner = &rest[..end_rel];
+    if inner.contains('{') {
+        bail!("{s}: nested braces are not supported");
+    }
+    let end = start + 1 + end_rel;
+    let options: Vec<String> = if !inner.contains(',') && inner.contains("..")
+    {
+        let (lo, hi) = inner
+            .split_once("..")
+            .with_context(|| format!("{s}: bad range {inner:?}"))?;
+        let lo: i64 = lo.trim().parse().with_context(|| {
+            format!("{s}: bad range start {lo:?}")
+        })?;
+        let hi: i64 = hi.trim().parse().with_context(|| {
+            format!("{s}: bad range end {hi:?}")
+        })?;
+        if hi < lo {
+            bail!("{s}: empty range {lo}..{hi}");
+        }
+        // i128: hi − lo can overflow i64 for absurd endpoints
+        if (hi as i128 - lo as i128) >= MAX_RANGE_SPAN as i128 {
+            bail!("{s}: range {lo}..{hi} too large (max {MAX_RANGE_SPAN})");
+        }
+        (lo..=hi).map(|v| v.to_string()).collect()
+    } else {
+        let opts: Vec<String> = inner
+            .split(',')
+            .map(|o| o.trim().to_string())
+            .filter(|o| !o.is_empty())
+            .collect();
+        if opts.is_empty() {
+            bail!("{s}: empty alternation {{{inner}}}");
+        }
+        opts
+    };
+    Ok(Some((start, end, options)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -486,5 +610,73 @@ mod tests {
     fn grid_has_no_codebook() {
         let s = Scheme::parse("grid@4:tensor-rms:compress").unwrap();
         assert!(s.build_codebook(128, None, &[]).is_err());
+    }
+
+    #[test]
+    fn expand_grid_range_and_list() {
+        let specs =
+            expand_grid("cbrt-t7@{2..8}:block{32,64,128}-absmax").unwrap();
+        assert_eq!(specs.len(), 7 * 3);
+        assert_eq!(specs[0], "cbrt-t7@2:block32-absmax");
+        assert_eq!(specs[1], "cbrt-t7@2:block64-absmax");
+        assert_eq!(specs[3], "cbrt-t7@3:block32-absmax");
+        assert_eq!(specs[20], "cbrt-t7@8:block128-absmax");
+        // every expansion is a valid scheme
+        for s in &specs {
+            Scheme::parse(s).unwrap();
+        }
+    }
+
+    #[test]
+    fn expand_grid_union_and_dedup() {
+        let specs = expand_grid(
+            "{int,nf}@4:block64-absmax ; int@4:block64-absmax",
+        )
+        .unwrap();
+        assert_eq!(
+            specs,
+            vec![
+                "int@4:block64-absmax".to_string(),
+                "nf@4:block64-absmax".to_string(),
+            ]
+        );
+    }
+
+    #[test]
+    fn expand_grid_plain_spec_passes_through() {
+        let specs = expand_grid("grid@3.5:tensor-rms:compress").unwrap();
+        assert_eq!(specs, vec!["grid@3.5:tensor-rms:compress".to_string()]);
+    }
+
+    #[test]
+    fn expand_grid_hundred_plus_points() {
+        // the acceptance-criteria grid shape: ≥ 100 points
+        let specs = expand_grid(
+            "{int,cbrt-t5,cbrt-normal,cbrt-laplace,nf}@{2..8}:block{32,64,128}-absmax",
+        )
+        .unwrap();
+        assert_eq!(specs.len(), 5 * 7 * 3);
+        let unique: std::collections::HashSet<&String> =
+            specs.iter().collect();
+        assert_eq!(unique.len(), specs.len());
+    }
+
+    #[test]
+    fn expand_grid_rejects_garbage() {
+        for bad in [
+            "",
+            "  ;  ",
+            "int@{4..2}:tensor-rms",          // empty range
+            "int@{2..8:tensor-rms",           // unmatched {
+            "int@2..8}:tensor-rms",           // unmatched }
+            "int@{2..{3..4}}:tensor-rms",     // nested
+            "wat@{2..4}:tensor-rms",          // expands to invalid scheme
+            "int@{}:tensor-rms",              // empty alternation
+            "int@{1..99999}:tensor-rms",      // too large
+            // span overflows i64 — must error, not panic
+            "int@{-9000000000000000000..9000000000000000000}:tensor-rms",
+        ] {
+            assert!(expand_grid(bad).is_err(), "{bad:?} should fail");
+        }
     }
 }

@@ -1,5 +1,6 @@
-//! The experiment coordinator (L3): scheme descriptions, the job scheduler
-//! and the JSONL result store.  The paper's contribution is numeric, so the
+//! The experiment coordinator (L3): scheme descriptions, the sweep-grid
+//! grammar and engine (`owf sweep`), the job scheduler and the JSONL
+//! result store.  The paper's contribution is numeric, so the
 //! coordinator is deliberately thin — configuration, fan-out, bookkeeping —
 //! with all heavy compute in [`crate::quant`]/[`crate::eval`] (CPU) and the
 //! PJRT runtime (model evaluation).
@@ -7,7 +8,9 @@
 pub mod config;
 pub mod results;
 pub mod scheduler;
+pub mod sweep;
 
-pub use config::{Element, Scheme};
-pub use results::{fmt, Report, ResultSink};
-pub use scheduler::{run_jobs, Job, JobKind, JobResult};
+pub use config::{expand_grid, Element, Scheme};
+pub use results::{fmt, Report, ResultSink, SweepCache};
+pub use scheduler::{run_jobs, run_jobs_with, Job, JobKind, JobResult};
+pub use sweep::{run_sweep, SweepData, SweepOpts, SweepStats};

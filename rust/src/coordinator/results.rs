@@ -1,7 +1,9 @@
 //! JSONL result store: every experiment the coordinator runs appends one
 //! JSON row; reports re-read them for aggregation.  Plain files, append-only,
-//! human-greppable.
+//! human-greppable.  [`SweepCache`] layers a completed-row index on top so
+//! `owf sweep --resume` can skip points that already finished.
 
+use std::collections::HashSet;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
@@ -23,14 +25,47 @@ impl ResultSink {
         Ok(ResultSink { path })
     }
 
+    /// Append one row.  The line (text + newline) is serialised first and
+    /// written with a single `write_all` on an `O_APPEND` handle, so
+    /// concurrent appends from pool workers never interleave mid-row.
     pub fn append(&self, row: &Json) -> Result<()> {
         let mut f = std::fs::OpenOptions::new()
             .create(true)
             .append(true)
             .open(&self.path)
             .with_context(|| format!("open {:?}", self.path))?;
-        writeln!(f, "{row}")?;
+        let mut line = row.to_string();
+        line.push('\n');
+        f.write_all(line.as_bytes())?;
         Ok(())
+    }
+
+    /// Fail fast if the sink cannot be appended to (read-only mount,
+    /// permissions) — resumed sweeps probe this before computing anything.
+    pub fn probe_writable(&self) -> Result<()> {
+        std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| {
+                format!("output {:?} is not writable", self.path)
+            })?;
+        Ok(())
+    }
+
+    /// Reset the sink to an empty file (fresh, non-resumed sweeps).
+    pub fn truncate(&self) -> Result<()> {
+        std::fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&self.path)
+            .with_context(|| format!("truncate {:?}", self.path))?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
     }
 
     pub fn read_all(&self) -> Result<Vec<Json>> {
@@ -42,6 +77,73 @@ impl ResultSink {
             .filter(|l| !l.trim().is_empty())
             .map(|l| Json::parse(l).map_err(anyhow::Error::from))
             .collect()
+    }
+
+    /// Like [`ResultSink::read_all`] but skips unparseable lines — a sweep
+    /// killed mid-append leaves a torn final line, which must not poison
+    /// the resume index.
+    pub fn read_valid(&self) -> Result<Vec<Json>> {
+        if !self.path.exists() {
+            return Ok(Vec::new());
+        }
+        let text = std::fs::read_to_string(&self.path)?;
+        Ok(text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .filter_map(|l| Json::parse(l).ok())
+            .collect())
+    }
+}
+
+/// A JSONL-backed completed-work cache: rows already in the file are
+/// indexed by a caller-supplied key function at open time; the engine
+/// checks [`SweepCache::is_done`] before scheduling a point and appends
+/// each finished row through the same sink.  Kill the process at any time —
+/// the rows written so far are the resume state.
+pub struct SweepCache {
+    sink: ResultSink,
+    done: HashSet<String>,
+}
+
+impl SweepCache {
+    /// Open `path`.  With `resume` the existing rows are indexed via
+    /// `key_of` (rows it maps to `None` — malformed or failed — are
+    /// ignored, so they re-run); without it the file is truncated.
+    pub fn open(
+        path: impl AsRef<Path>,
+        resume: bool,
+        key_of: impl Fn(&Json) -> Option<String>,
+    ) -> Result<SweepCache> {
+        let sink = ResultSink::open(path)?;
+        let done = if resume {
+            // fail fast on an unwritable output — otherwise a long resumed
+            // sweep would compute everything and drop every row
+            sink.probe_writable()?;
+            // lenient read: a row torn by a mid-append kill is simply not
+            // done, so its point reruns
+            sink.read_valid()?.iter().filter_map(key_of).collect()
+        } else {
+            sink.truncate()?;
+            HashSet::new()
+        };
+        Ok(SweepCache { sink, done })
+    }
+
+    pub fn is_done(&self, key: &str) -> bool {
+        self.done.contains(key)
+    }
+
+    pub fn completed(&self) -> usize {
+        self.done.len()
+    }
+
+    /// Append a finished row (thread-safe: single-write append).
+    pub fn append(&self, row: &Json) -> Result<()> {
+        self.sink.append(row)
+    }
+
+    pub fn path(&self) -> &Path {
+        self.sink.path()
     }
 }
 
@@ -156,6 +258,100 @@ mod tests {
         let rows = sink.read_all().unwrap();
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[1].get("a").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn truncate_resets() {
+        let path = std::env::temp_dir().join("owf_results_trunc.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let sink = ResultSink::open(&path).unwrap();
+        sink.append(&Json::obj().push("a", 1.0)).unwrap();
+        sink.truncate().unwrap();
+        assert!(sink.read_all().unwrap().is_empty());
+        sink.append(&Json::obj().push("a", 2.0)).unwrap();
+        assert_eq!(sink.read_all().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn sweep_cache_resume_and_fresh() {
+        let path = std::env::temp_dir().join("owf_sweep_cache.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let key_of = |row: &Json| {
+            let ok = row.get("ok").and_then(Json::as_bool).unwrap_or(false);
+            if !ok {
+                return None;
+            }
+            row.get("key").and_then(Json::as_str).map(String::from)
+        };
+        {
+            let cache = SweepCache::open(&path, false, key_of).unwrap();
+            assert_eq!(cache.completed(), 0);
+            cache
+                .append(&Json::obj().push("key", "a").push("ok", true))
+                .unwrap();
+            cache
+                .append(&Json::obj().push("key", "b").push("ok", false))
+                .unwrap();
+        }
+        // resume: only the ok row counts as done
+        let cache = SweepCache::open(&path, true, key_of).unwrap();
+        assert_eq!(cache.completed(), 1);
+        assert!(cache.is_done("a"));
+        assert!(!cache.is_done("b"));
+        // fresh open truncates
+        let cache = SweepCache::open(&path, false, key_of).unwrap();
+        assert_eq!(cache.completed(), 0);
+        assert!(!cache.is_done("a"));
+    }
+
+    #[test]
+    fn torn_final_line_does_not_poison_resume() {
+        // a sweep killed mid-append leaves a partial JSON line; the resume
+        // index must skip it (and read_all must still be strict)
+        use std::io::Write as _;
+        let path = std::env::temp_dir().join("owf_sweep_torn.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let key_of = |row: &Json| {
+            row.get("key").and_then(Json::as_str).map(String::from)
+        };
+        {
+            let sink = ResultSink::open(&path).unwrap();
+            sink.append(&Json::obj().push("key", "a")).unwrap();
+            let mut f = std::fs::OpenOptions::new()
+                .append(true)
+                .open(&path)
+                .unwrap();
+            f.write_all(b"{\"key\":\"b\",\"ok\":tr").unwrap(); // torn
+        }
+        let cache = SweepCache::open(&path, true, key_of).unwrap();
+        assert_eq!(cache.completed(), 1);
+        assert!(cache.is_done("a"));
+        assert!(!cache.is_done("b"));
+        let sink = ResultSink::open(&path).unwrap();
+        assert!(sink.read_all().is_err(), "strict read must still error");
+        assert_eq!(sink.read_valid().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn concurrent_appends_keep_rows_intact() {
+        let path = std::env::temp_dir().join("owf_results_par.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let sink = ResultSink::open(&path).unwrap();
+        let ids: Vec<usize> = (0..200).collect();
+        crate::util::pool::par_map(&ids, |_, &i| {
+            sink.append(
+                &Json::obj().push("id", i).push("pad", "x".repeat(64)),
+            )
+            .unwrap();
+        });
+        let rows = sink.read_all().unwrap();
+        assert_eq!(rows.len(), 200);
+        let mut seen: Vec<usize> = rows
+            .iter()
+            .map(|r| r.get("id").unwrap().as_usize().unwrap())
+            .collect();
+        seen.sort();
+        assert_eq!(seen, ids);
     }
 
     #[test]

@@ -36,6 +36,18 @@ pub struct JobResult<T> {
 /// Run all jobs: CPU jobs in parallel, PJRT jobs sequentially afterwards,
 /// preserving input order in the returned vector.
 pub fn run_jobs<T: Send>(jobs: Vec<Job<T>>) -> Vec<JobResult<T>> {
+    run_jobs_with(jobs, |_, _| {})
+}
+
+/// [`run_jobs`] with a streaming completion hook: `on_done(index, result)`
+/// fires as each job finishes (from worker threads for CPU jobs, the main
+/// thread for PJRT jobs), before the batch is collected.  The sweep engine
+/// uses this to append JSONL rows incrementally, so a killed run keeps
+/// every completed point and `--resume` picks up from there.
+pub fn run_jobs_with<T: Send>(
+    jobs: Vec<Job<T>>,
+    on_done: impl Fn(usize, &JobResult<T>) + Sync,
+) -> Vec<JobResult<T>> {
     // index jobs, split by kind
     let mut slots: Vec<Option<JobResult<T>>> =
         jobs.iter().map(|_| None).collect();
@@ -50,14 +62,13 @@ pub fn run_jobs<T: Send>(jobs: Vec<Job<T>>) -> Vec<JobResult<T>> {
     let cpu_results = par_map(&cpu, |_, (i, job)| {
         let t0 = Instant::now();
         let outcome = (job.run)();
-        (
-            *i,
-            JobResult {
-                name: job.name.clone(),
-                seconds: t0.elapsed().as_secs_f64(),
-                outcome,
-            },
-        )
+        let result = JobResult {
+            name: job.name.clone(),
+            seconds: t0.elapsed().as_secs_f64(),
+            outcome,
+        };
+        on_done(*i, &result);
+        (*i, result)
     });
     for (i, r) in cpu_results {
         slots[i] = Some(r);
@@ -65,11 +76,13 @@ pub fn run_jobs<T: Send>(jobs: Vec<Job<T>>) -> Vec<JobResult<T>> {
     for (i, job) in pjrt {
         let t0 = Instant::now();
         let outcome = (job.run)();
-        slots[i] = Some(JobResult {
+        let result = JobResult {
             name: job.name,
             seconds: t0.elapsed().as_secs_f64(),
             outcome,
-        });
+        };
+        on_done(i, &result);
+        slots[i] = Some(result);
     }
     slots.into_iter().map(|s| s.expect("job not run")).collect()
 }
@@ -93,6 +106,65 @@ mod tests {
             assert_eq!(r.name, format!("job{i}"));
             assert_eq!(*r.outcome.as_ref().unwrap(), i * 2);
         }
+    }
+
+    #[test]
+    fn five_hundred_jobs_order_and_error_isolation() {
+        // stress: a large mixed batch must come back in input order, with
+        // every 7th job failing and nothing else poisoned by it
+        let jobs: Vec<Job<usize>> = (0..500)
+            .map(|i| Job {
+                name: format!("j{i}"),
+                kind: if i % 5 == 0 { JobKind::Pjrt } else { JobKind::Cpu },
+                run: Box::new(move || {
+                    if i % 7 == 0 {
+                        anyhow::bail!("planned failure {i}");
+                    }
+                    Ok(i)
+                }),
+            })
+            .collect();
+        let results = run_jobs(jobs);
+        assert_eq!(results.len(), 500);
+        let mut failures = 0;
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.name, format!("j{i}"), "order broken at {i}");
+            if i % 7 == 0 {
+                let msg =
+                    r.outcome.as_ref().err().unwrap().to_string();
+                assert!(msg.contains(&format!("planned failure {i}")));
+                failures += 1;
+            } else {
+                assert_eq!(*r.outcome.as_ref().unwrap(), i);
+            }
+            assert!(r.seconds >= 0.0);
+        }
+        assert_eq!(failures, 500usize.div_ceil(7));
+    }
+
+    #[test]
+    fn streaming_hook_sees_every_completion_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Mutex;
+        let jobs: Vec<Job<usize>> = (0..100)
+            .map(|i| Job {
+                name: format!("j{i}"),
+                kind: if i % 4 == 0 { JobKind::Pjrt } else { JobKind::Cpu },
+                run: Box::new(move || Ok(i * 3)),
+            })
+            .collect();
+        let calls = AtomicUsize::new(0);
+        let seen = Mutex::new(vec![false; 100]);
+        let results = run_jobs_with(jobs, |i, r| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            assert_eq!(*r.outcome.as_ref().unwrap(), i * 3);
+            let mut guard = seen.lock().unwrap();
+            assert!(!guard[i], "duplicate completion for {i}");
+            guard[i] = true;
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 100);
+        assert!(seen.lock().unwrap().iter().all(|&b| b));
+        assert_eq!(results.len(), 100);
     }
 
     #[test]

@@ -1,0 +1,421 @@
+//! The parallel, resumable sweep engine behind `owf sweep`.
+//!
+//! A sweep is a grid expression (see [`crate::coordinator::config::expand_grid`])
+//! crossed with a seed range.  Each `(scheme, size, seed)` point — keyed
+//! together with the run parameters (`--samples`/`--eval-seqs`), so stale
+//! rows never satisfy a resume — becomes one job; CPU points (simulated-data R sweeps, [`crate::eval::sim`]) fan out
+//! over the [`crate::util::pool`] workers (`OWF_THREADS`), PJRT points
+//! (checkpoint KL sweeps, [`crate::eval::llm`]) run serialised on the main
+//! thread — both stream one JSONL row per finished point through a
+//! [`SweepCache`].  Kill the process at any moment: rerunning with
+//! `--resume` loads the completed keys from the output file and schedules
+//! only the remainder.
+
+use std::panic::catch_unwind;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::config::{expand_grid, Scheme};
+use crate::coordinator::results::SweepCache;
+use crate::coordinator::scheduler::{run_jobs_with, Job, JobKind};
+use crate::eval::{llm, sim};
+use crate::util::json::Json;
+
+/// The `size` column of simulated-data rows (LLM rows carry the model
+/// size).
+pub const SIM_SIZE: &str = "sim";
+
+/// What a sweep point evaluates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepData {
+    /// iid draws → R, R·2^b (pure CPU, parallel).
+    Sim,
+    /// microllama direct-cast → top-k KL (PJRT, serialised).
+    Llm,
+}
+
+/// Sweep configuration (CLI flags map 1:1).
+#[derive(Clone, Debug)]
+pub struct SweepOpts {
+    pub data: SweepData,
+    /// JSONL output; doubles as the resume state.
+    pub out: PathBuf,
+    /// Skip `(scheme, size, seed)` rows already completed in `out`.
+    pub resume: bool,
+    /// Seeds per scheme (points = specs × seeds).
+    pub seeds: u64,
+    /// Samples per simulated point.
+    pub samples: usize,
+    /// Model size for LLM points.
+    pub size: String,
+    /// Eval sequences per LLM KL evaluation.
+    pub eval_seqs: usize,
+}
+
+impl Default for SweepOpts {
+    fn default() -> SweepOpts {
+        SweepOpts {
+            data: SweepData::Sim,
+            out: PathBuf::from("sweep.jsonl"),
+            resume: false,
+            seeds: 1,
+            samples: 1 << 16,
+            size: "m".into(),
+            eval_seqs: 24,
+        }
+    }
+}
+
+/// What a sweep run did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SweepStats {
+    /// grid points × seeds
+    pub planned: usize,
+    /// already complete in the output file (resume hits)
+    pub skipped: usize,
+    /// executed this run
+    pub ran: usize,
+    /// executed and failed (row written with `ok: false`)
+    pub failed: usize,
+}
+
+/// The run-parameter tag folded into every resume key, so rows computed
+/// under different `--samples` / `--eval-seqs` are not silently reused.
+/// Sim tags use the *effective* sample count (the engine floors tiny
+/// `--samples` at [`sim::MIN_SWEEP_SAMPLES`]), so the tag always describes
+/// the computation that actually ran.
+pub fn params_tag(opts: &SweepOpts) -> String {
+    match opts.data {
+        SweepData::Sim => {
+            format!("n{}", opts.samples.max(sim::MIN_SWEEP_SAMPLES))
+        }
+        SweepData::Llm => format!("e{}", opts.eval_seqs),
+    }
+}
+
+/// The resume key of one point.
+pub fn point_key(spec: &str, size: &str, seed: u64, params: &str) -> String {
+    format!("{spec}|{size}|{seed}|{params}")
+}
+
+/// Key of a completed row; `None` for failed/malformed rows so they rerun.
+pub fn row_key(row: &Json) -> Option<String> {
+    if !row.get("ok").and_then(Json::as_bool).unwrap_or(false) {
+        return None;
+    }
+    let spec = row.get("scheme")?.as_str()?;
+    let size = row.get("size")?.as_str()?;
+    let seed = row.get("seed")?.as_f64()? as u64;
+    let params = row.get("params")?.as_str()?;
+    Some(point_key(spec, size, seed, params))
+}
+
+/// Expand `grid`, skip completed points, run the rest, stream rows to
+/// `opts.out`.
+pub fn run_sweep(grid: &str, opts: &SweepOpts) -> Result<SweepStats> {
+    let specs = expand_grid(grid)?;
+    let seeds = opts.seeds.max(1);
+    if opts.data == SweepData::Llm && seeds > 1 {
+        // checkpoint evaluations are deterministic per scheme: extra seeds
+        // would repeat identical (expensive) PJRT runs
+        bail!("--seeds > 1 is only meaningful for --data sim");
+    }
+    let size_tag = match opts.data {
+        SweepData::Sim => SIM_SIZE.to_string(),
+        SweepData::Llm => opts.size.clone(),
+    };
+
+    // all fallible setup happens BEFORE the cache opens: a fresh (non
+    // --resume) open truncates the output file, and a run that then dies
+    // immediately would have destroyed prior results for zero work
+    let mut llm_env = match opts.data {
+        SweepData::Sim => None,
+        SweepData::Llm => {
+            let run_opts = crate::eval::RunOpts {
+                samples: opts.samples,
+                eval_seqs: opts.eval_seqs,
+                size: opts.size.clone(),
+                ..Default::default()
+            };
+            Some(llm::Env::open(run_opts).context(
+                "LLM sweeps need the PJRT runtime and artifacts",
+            )?)
+        }
+    };
+
+    let cache = SweepCache::open(&opts.out, opts.resume, row_key)?;
+    let params = params_tag(opts);
+    let mut todo: Vec<(String, u64)> = Vec::new();
+    let mut skipped = 0usize;
+    for spec in &specs {
+        for seed in 0..seeds {
+            if cache.is_done(&point_key(spec, &size_tag, seed, &params)) {
+                skipped += 1;
+            } else {
+                todo.push((spec.clone(), seed));
+            }
+        }
+    }
+    let planned = specs.len() * seeds as usize;
+    let ran = todo.len();
+
+    let failed = match llm_env.as_mut() {
+        None => run_sim_points(&todo, opts, &params, &cache)?,
+        Some(env) => {
+            run_llm_points(&todo, &size_tag, &params, env, &cache)?
+        }
+    };
+
+    Ok(SweepStats {
+        planned,
+        skipped,
+        ran,
+        failed,
+    })
+}
+
+/// Fan simulated-data points over the worker pool, appending each row as
+/// its job completes.
+fn run_sim_points(
+    todo: &[(String, u64)],
+    opts: &SweepOpts,
+    params: &str,
+    cache: &SweepCache,
+) -> Result<usize> {
+    let samples = opts.samples;
+    let jobs: Vec<Job<Json>> = todo
+        .iter()
+        .map(|(spec, seed)| {
+            let spec = spec.clone();
+            let seed = *seed;
+            Job {
+                name: point_key(&spec, SIM_SIZE, seed, params),
+                kind: JobKind::Cpu,
+                run: Box::new(move || {
+                    // a panicking scheme (e.g. an assert deep in a codebook
+                    // construction) must fail its own row, not the sweep
+                    match catch_unwind(|| {
+                        sim::sweep_point(&spec, samples, seed)
+                    }) {
+                        Ok(Ok(p)) => Ok(Json::obj()
+                            .push("bits", p.bits)
+                            .push("r", p.r)
+                            .push("r2b", p.r2b)),
+                        Ok(Err(e)) => Err(e),
+                        Err(_) => Err(anyhow::anyhow!(
+                            "panic evaluating {spec}"
+                        )),
+                    }
+                }),
+            }
+        })
+        .collect();
+
+    let failed = AtomicUsize::new(0);
+    let append_failures = AtomicUsize::new(0);
+    run_jobs_with(jobs, |i, r| {
+        let (spec, seed) = &todo[i];
+        let row = assemble_row(
+            spec, SIM_SIZE, *seed, params, r.seconds, &r.outcome,
+        );
+        if cache.append(&row).is_err() {
+            append_failures.fetch_add(1, Ordering::Relaxed);
+        }
+        if r.outcome.is_err() {
+            failed.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+    let lost = append_failures.load(Ordering::Relaxed);
+    if lost > 0 {
+        bail!("failed to append {lost} rows to {:?}", cache.path());
+    }
+    Ok(failed.load(Ordering::Relaxed))
+}
+
+/// Run checkpoint KL points serially through one [`llm::Env`] (the PJRT
+/// client is not Sync; XLA multithreads internally).
+fn run_llm_points(
+    todo: &[(String, u64)],
+    size_tag: &str,
+    params: &str,
+    env: &mut llm::Env,
+    cache: &SweepCache,
+) -> Result<usize> {
+    let mut failed = 0usize;
+    for (spec, seed) in todo {
+        let t0 = Instant::now();
+        let outcome = Scheme::parse(spec)
+            .and_then(|scheme| env.sweep_row(size_tag, &scheme));
+        let row = assemble_row(
+            spec,
+            size_tag,
+            *seed,
+            params,
+            t0.elapsed().as_secs_f64(),
+            &outcome,
+        );
+        cache.append(&row)?;
+        if outcome.is_err() {
+            failed += 1;
+        }
+    }
+    Ok(failed)
+}
+
+/// Identity columns + metric fragment (or error) + timing, in one row.
+fn assemble_row(
+    spec: &str,
+    size: &str,
+    seed: u64,
+    params: &str,
+    seconds: f64,
+    outcome: &Result<Json>,
+) -> Json {
+    let mut row = Json::obj()
+        .push("scheme", spec)
+        .push("size", size)
+        .push("seed", seed as usize)
+        .push("params", params)
+        .push("ok", outcome.is_ok());
+    match outcome {
+        Ok(metrics) => {
+            if let Some(pairs) = metrics.as_obj() {
+                for (k, v) in pairs {
+                    row = row.push(k, v.clone());
+                }
+            }
+        }
+        Err(e) => {
+            row = row.push("error", e.to_string());
+        }
+    }
+    row.push("seconds", seconds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(name)
+    }
+
+    fn opts(out: PathBuf) -> SweepOpts {
+        SweepOpts {
+            out,
+            samples: 1 << 12,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sim_sweep_writes_one_row_per_point() {
+        let out = tmp("owf_sweep_unit.jsonl");
+        let _ = std::fs::remove_file(&out);
+        let stats = run_sweep(
+            "cbrt-t5@{3,4}:block{32,64}-absmax",
+            &opts(out.clone()),
+        )
+        .unwrap();
+        assert_eq!(
+            stats,
+            SweepStats {
+                planned: 4,
+                skipped: 0,
+                ran: 4,
+                failed: 0
+            }
+        );
+        let text = std::fs::read_to_string(&out).unwrap();
+        let rows: Vec<Json> = text
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        assert_eq!(rows.len(), 4);
+        for row in &rows {
+            assert_eq!(row.get("ok").unwrap().as_bool(), Some(true));
+            assert!(row.get("r").unwrap().as_f64().unwrap() > 0.0);
+            assert_eq!(row.get("size").unwrap().as_str(), Some(SIM_SIZE));
+        }
+    }
+
+    #[test]
+    fn failing_points_are_isolated_and_rerun_on_resume() {
+        let out = tmp("owf_sweep_fail.jsonl");
+        let _ = std::fs::remove_file(&out);
+        // cbrt-t1 panics inside the power transform (alpha(nu+1) <= 1);
+        // the row must record the failure while the good point completes
+        let grid = "cbrt-t{1,5}@4:block64-absmax";
+        let stats = run_sweep(grid, &opts(out.clone())).unwrap();
+        assert_eq!(stats.ran, 2);
+        assert_eq!(stats.failed, 1);
+        // resume: the failed row is not treated as done
+        let mut o = opts(out.clone());
+        o.resume = true;
+        let again = run_sweep(grid, &o).unwrap();
+        assert_eq!(again.skipped, 1);
+        assert_eq!(again.ran, 1);
+        assert_eq!(again.failed, 1);
+    }
+
+    #[test]
+    fn seeds_multiply_points() {
+        let out = tmp("owf_sweep_seeds.jsonl");
+        let _ = std::fs::remove_file(&out);
+        let mut o = opts(out.clone());
+        o.seeds = 3;
+        let stats =
+            run_sweep("int@4:block64-absmax", &o).unwrap();
+        assert_eq!(stats.planned, 3);
+        assert_eq!(stats.ran, 3);
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert_eq!(text.lines().count(), 3);
+    }
+
+    #[test]
+    fn row_key_ignores_failed_rows() {
+        let ok = Json::obj()
+            .push("scheme", "int@4:tensor-rms")
+            .push("size", "sim")
+            .push("seed", 2usize)
+            .push("params", "n4096")
+            .push("ok", true);
+        assert_eq!(
+            row_key(&ok).unwrap(),
+            "int@4:tensor-rms|sim|2|n4096"
+        );
+        let bad = Json::obj()
+            .push("scheme", "int@4:tensor-rms")
+            .push("size", "sim")
+            .push("seed", 2usize)
+            .push("params", "n4096")
+            .push("ok", false);
+        assert!(row_key(&bad).is_none());
+        assert!(row_key(&Json::obj()).is_none());
+    }
+
+    #[test]
+    fn changed_samples_invalidate_the_resume_cache() {
+        let out = tmp("owf_sweep_params.jsonl");
+        let _ = std::fs::remove_file(&out);
+        let grid = "int@4:block64-absmax";
+        run_sweep(grid, &opts(out.clone())).unwrap();
+        // same grid, different --samples: the old row must NOT satisfy
+        // resume (it was computed under different settings)
+        let mut o = opts(out.clone());
+        o.resume = true;
+        o.samples = 1 << 13;
+        let stats = run_sweep(grid, &o).unwrap();
+        assert_eq!(stats.skipped, 0);
+        assert_eq!(stats.ran, 1);
+        // and rerunning with the original settings still resumes
+        let mut back = opts(out.clone());
+        back.resume = true;
+        let again = run_sweep(grid, &back).unwrap();
+        assert_eq!(again.skipped, 1);
+        assert_eq!(again.ran, 0);
+    }
+}

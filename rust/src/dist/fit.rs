@@ -1,0 +1,137 @@
+//! 1-D fitting helpers: golden-section minimisation, the coarse-grid +
+//! golden refinement used by the quantiser-scale search (§2.2 / figs. 23,
+//! 35), and the (Fisher-)weighted squared-error objective.
+
+/// Golden-section search for the minimiser of `f` on \[lo, hi\].
+/// Returns `(argmin, min)` after `iters` interval reductions.
+pub fn golden_section(
+    lo: f64,
+    hi: f64,
+    iters: usize,
+    f: impl Fn(f64) -> f64,
+) -> (f64, f64) {
+    const INVPHI: f64 = 0.618_033_988_749_894_8;
+    let (mut a, mut b) = (lo.min(hi), lo.max(hi));
+    let mut c = b - INVPHI * (b - a);
+    let mut d = a + INVPHI * (b - a);
+    let mut fc = f(c);
+    let mut fd = f(d);
+    for _ in 0..iters {
+        if fc <= fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - INVPHI * (b - a);
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + INVPHI * (b - a);
+            fd = f(d);
+        }
+    }
+    if fc <= fd {
+        (c, fc)
+    } else {
+        (d, fd)
+    }
+}
+
+/// Coarse-to-fine 1-D minimisation: evaluate `f` on `grid` (must be sorted
+/// ascending), then golden-section between the best point's neighbours.
+pub fn grid_then_golden(
+    grid: &[f64],
+    f: impl Fn(f64) -> f64,
+) -> (f64, f64) {
+    assert!(!grid.is_empty(), "empty search grid");
+    let mut best_i = 0usize;
+    let mut best_f = f64::INFINITY;
+    for (i, &x) in grid.iter().enumerate() {
+        let fx = f(x);
+        if fx < best_f {
+            best_f = fx;
+            best_i = i;
+        }
+    }
+    let lo = grid[best_i.saturating_sub(1)];
+    let hi = grid[(best_i + 1).min(grid.len() - 1)];
+    if hi <= lo {
+        return (grid[best_i], best_f);
+    }
+    let (x, fx) = golden_section(lo, hi, 25, &f);
+    if fx < best_f {
+        (x, fx)
+    } else {
+        (grid[best_i], best_f)
+    }
+}
+
+/// The multiplier grid of the quantiser-scale search: 2^(k/4) for
+/// k ∈ \[−8, 12\] (0.25 … 8, including exactly 1).
+pub fn scale_search_grid() -> Vec<f64> {
+    (-8i32..=12).map(|k| 2f64.powf(k as f64 / 4.0)).collect()
+}
+
+/// Σ wᵢ(aᵢ−bᵢ)², or the plain squared error when `weights` is empty /
+/// mismatched (f64 accumulation).
+pub fn weighted_sq_err(a: &[f32], b: &[f32], weights: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    if weights.len() != a.len() {
+        return crate::util::stats::sq_err(a, b);
+    }
+    let mut acc = 0f64;
+    for i in 0..a.len() {
+        let d = a[i] as f64 - b[i] as f64;
+        acc += weights[i] as f64 * d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_finds_parabola_min() {
+        let (x, fx) = golden_section(0.0, 5.0, 40, |x| (x - 2.0).powi(2));
+        assert!((x - 2.0).abs() < 1e-6, "{x}");
+        assert!(fx < 1e-10);
+    }
+
+    #[test]
+    fn grid_then_golden_refines() {
+        let f = |x: f64| (x.ln() - 0.37).powi(2);
+        let grid = scale_search_grid();
+        let (x, _) = grid_then_golden(&grid, f);
+        assert!((x.ln() - 0.37).abs() < 1e-4, "{x}");
+    }
+
+    #[test]
+    fn grid_handles_edge_minima() {
+        // minimum at the first / last grid point must not panic
+        let grid = [1.0, 2.0, 3.0];
+        let (x, _) = grid_then_golden(&grid, |x| x);
+        assert!(x <= 1.0 + 1e-9);
+        let (x, _) = grid_then_golden(&grid, |x| -x);
+        assert!(x >= 3.0 - 1e-9);
+    }
+
+    #[test]
+    fn search_grid_contains_unity() {
+        let g = scale_search_grid();
+        assert!(g.iter().any(|&x| (x - 1.0).abs() < 1e-12));
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+        assert!((g[0] - 0.25).abs() < 1e-12);
+        assert!((g.last().unwrap() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_sq_err_reduces_to_plain() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.5f32, 2.0, 2.0];
+        assert!((weighted_sq_err(&a, &b, &[]) - 1.25).abs() < 1e-9);
+        let w = [2.0f32, 1.0, 0.0];
+        assert!((weighted_sq_err(&a, &b, &w) - 0.5).abs() < 1e-9);
+    }
+}

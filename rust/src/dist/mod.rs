@@ -1,0 +1,655 @@
+//! The data distributions of §3: Normal, Laplace, Student-t and Uniform,
+//! with the machinery the format constructions need — cdf/ppf, sampling,
+//! the `p^α` power transform (table 4), the expected-block-absmax
+//! approximations (table 4 / fig. 14) and truncation (the absmax mixture
+//! model of fig. 15).
+//!
+//! Everything is closed-form or classic numerics (erfc, regularised
+//! incomplete beta via Lentz's continued fraction, Acklam's inverse normal
+//! cdf) — the offline registry has no `statrs`/`special` crates.
+
+pub mod fit;
+
+use crate::util::rng::Rng;
+
+/// Euler–Mascheroni constant (the Laplace E[absmax] ≈ s·(γ + ln B) rule).
+pub const EULER_GAMMA: f64 = 0.577_215_664_901_532_9;
+
+/// Distribution family tag (the scheme grammar's `cbrt-*` selector).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Family {
+    Normal,
+    Laplace,
+    StudentT,
+    Uniform,
+}
+
+/// A symmetric, zero-mean distribution with a scale parameter.
+///
+/// * `Normal { s }` — N(0, s²).
+/// * `Laplace { s }` — density (1/2s)·exp(−|x|/s).
+/// * `StudentT { nu, s }` — Student-t with `nu` dof, scaled by `s`.
+/// * `Uniform { a }` — uniform on \[−a, a\].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Dist {
+    Normal { s: f64 },
+    Laplace { s: f64 },
+    StudentT { nu: f64, s: f64 },
+    Uniform { a: f64 },
+}
+
+impl Dist {
+    pub fn normal(s: f64) -> Dist {
+        Dist::Normal { s }
+    }
+
+    pub fn laplace(s: f64) -> Dist {
+        Dist::Laplace { s }
+    }
+
+    pub fn student_t(nu: f64, s: f64) -> Dist {
+        assert!(nu > 0.0, "student-t needs nu > 0, got {nu}");
+        Dist::StudentT { nu, s }
+    }
+
+    pub fn uniform(a: f64) -> Dist {
+        Dist::Uniform { a }
+    }
+
+    /// The unit-RMS member of a family (`nu` ignored except for Student-t,
+    /// which needs `nu > 2` for the RMS to exist).
+    pub fn standard(family: Family, nu: f64) -> Dist {
+        match family {
+            Family::Normal => Dist::Normal { s: 1.0 },
+            Family::Laplace => Dist::Laplace {
+                s: std::f64::consts::FRAC_1_SQRT_2,
+            },
+            Family::StudentT => {
+                assert!(nu > 2.0, "unit-RMS student-t needs nu > 2, got {nu}");
+                Dist::StudentT {
+                    nu,
+                    s: ((nu - 2.0) / nu).sqrt(),
+                }
+            }
+            Family::Uniform => Dist::Uniform { a: 3f64.sqrt() },
+        }
+    }
+
+    pub fn family(&self) -> Family {
+        match self {
+            Dist::Normal { .. } => Family::Normal,
+            Dist::Laplace { .. } => Family::Laplace,
+            Dist::StudentT { .. } => Family::StudentT,
+            Dist::Uniform { .. } => Family::Uniform,
+        }
+    }
+
+    /// The scale parameter (whatever it means for the family).
+    pub fn scale(&self) -> f64 {
+        match *self {
+            Dist::Normal { s } | Dist::Laplace { s } => s,
+            Dist::StudentT { s, .. } => s,
+            Dist::Uniform { a } => a,
+        }
+    }
+
+    /// Same family, scale multiplied by `c`.
+    pub fn scaled_by(&self, c: f64) -> Dist {
+        match *self {
+            Dist::Normal { s } => Dist::Normal { s: s * c },
+            Dist::Laplace { s } => Dist::Laplace { s: s * c },
+            Dist::StudentT { nu, s } => Dist::StudentT { nu, s: s * c },
+            Dist::Uniform { a } => Dist::Uniform { a: a * c },
+        }
+    }
+
+    // ---- sampling ----------------------------------------------------------
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Dist::Normal { s } => s * rng.normal(),
+            Dist::Laplace { s } => s * rng.laplace(),
+            Dist::StudentT { nu, s } => s * rng.student_t(nu),
+            Dist::Uniform { a } => rng.range(-a, a),
+        }
+    }
+
+    pub fn sample_vec(&self, rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.sample(rng) as f32).collect()
+    }
+
+    // ---- cdf / ppf ---------------------------------------------------------
+
+    pub fn cdf(&self, x: f64) -> f64 {
+        match *self {
+            Dist::Normal { s } => normal_cdf(x / s),
+            Dist::Laplace { s } => {
+                let t = x / s;
+                if t < 0.0 {
+                    0.5 * t.exp()
+                } else {
+                    1.0 - 0.5 * (-t).exp()
+                }
+            }
+            Dist::StudentT { nu, s } => student_t_cdf(x / s, nu),
+            Dist::Uniform { a } => ((x + a) / (2.0 * a)).clamp(0.0, 1.0),
+        }
+    }
+
+    /// Inverse cdf (quantile function).
+    pub fn ppf(&self, p: f64) -> f64 {
+        let p = p.clamp(1e-300, 1.0 - 1e-12);
+        match *self {
+            Dist::Normal { s } => s * normal_ppf(p),
+            Dist::Laplace { s } => {
+                if p < 0.5 {
+                    s * (2.0 * p).ln()
+                } else {
+                    -s * (2.0 * (1.0 - p)).ln()
+                }
+            }
+            Dist::StudentT { nu, s } => s * student_t_ppf(p, nu),
+            Dist::Uniform { a } => -a + 2.0 * a * p,
+        }
+    }
+
+    // ---- the p^α transform (table 4) --------------------------------------
+
+    /// The distribution whose density is ∝ p(x)^α — closed under each
+    /// family: Normal(s) → Normal(s/√α), Laplace(s) → Laplace(s/α),
+    /// t(ν, s) → t(α(ν+1)−1, s·√(ν/ν′)), Uniform unchanged.
+    pub fn power_transform(&self, alpha: f64) -> Dist {
+        assert!(alpha > 0.0);
+        match *self {
+            Dist::Normal { s } => Dist::Normal {
+                s: s / alpha.sqrt(),
+            },
+            Dist::Laplace { s } => Dist::Laplace { s: s / alpha },
+            Dist::StudentT { nu, s } => {
+                let nu_p = alpha * (nu + 1.0) - 1.0;
+                assert!(
+                    nu_p > 0.0,
+                    "power transform needs alpha(nu+1) > 1 (nu={nu}, alpha={alpha})"
+                );
+                Dist::StudentT {
+                    nu: nu_p,
+                    s: s * (nu / nu_p).sqrt(),
+                }
+            }
+            Dist::Uniform { a } => Dist::Uniform { a },
+        }
+    }
+
+    /// `power_transform(1/3)` — the optimal-density exponent.
+    pub fn cbrt(&self) -> Dist {
+        self.power_transform(1.0 / 3.0)
+    }
+
+    // ---- block absmax model (table 4 / fig. 14) ----------------------------
+
+    /// Approximate E\[max_{i<B} |x_i|\] for B iid draws (table 4; accurate
+    /// for B ≳ 16, clamped below so tiny blocks stay finite/positive).
+    pub fn expected_absmax(&self, block: usize) -> f64 {
+        let b = block.max(2) as f64;
+        match *self {
+            // E ≈ s·√(2 ln(B/π))
+            Dist::Normal { s } => s * log_term(b).sqrt(),
+            // |x| is Exponential(s): E[max] = s·H_B ≈ s·(γ + ln B)
+            Dist::Laplace { s } => s * (EULER_GAMMA + b.ln()),
+            // E ≈ s·√(ν/(ν−2))·(2 ln(B/π))^((ν−3)/(2ν))·B^(1/ν), the
+            // Fréchet-limit form interpolated so ν→∞ recovers the Normal
+            Dist::StudentT { nu, s } => {
+                let rms_ratio = if nu > 2.0 {
+                    (nu / (nu - 2.0)).sqrt()
+                } else {
+                    1.0
+                };
+                s * rms_ratio
+                    * log_term(b).powf((nu - 3.0) / (2.0 * nu))
+                    * b.powf(1.0 / nu)
+            }
+            Dist::Uniform { a } => a * b / (b + 1.0),
+        }
+    }
+
+    /// Rescale so that `E[absmax over block] = target`.
+    pub fn with_absmax(&self, block: usize, target: f64) -> Dist {
+        let e = self.expected_absmax(block);
+        assert!(e > 0.0, "degenerate absmax model");
+        self.scaled_by(target / e)
+    }
+}
+
+/// `2·ln(B/π)`, clamped positive so B < π·e^(1/4) stays usable.
+fn log_term(b: f64) -> f64 {
+    (2.0 * (b / std::f64::consts::PI).ln()).max(0.5)
+}
+
+// ---------------------------------------------------------------------------
+// Truncation (the fig. 15 mixture model, and the absmax codebook domain)
+// ---------------------------------------------------------------------------
+
+/// `base` conditioned on \[lo, hi\].
+#[derive(Clone, Copy, Debug)]
+pub struct Truncated {
+    pub base: Dist,
+    pub lo: f64,
+    pub hi: f64,
+    c_lo: f64,
+    c_hi: f64,
+}
+
+impl Truncated {
+    pub fn new(base: Dist, lo: f64, hi: f64) -> Truncated {
+        assert!(lo < hi, "bad truncation [{lo}, {hi}]");
+        let c_lo = base.cdf(lo);
+        let c_hi = base.cdf(hi);
+        assert!(c_hi > c_lo, "truncation interval has zero mass");
+        Truncated {
+            base,
+            lo,
+            hi,
+            c_lo,
+            c_hi,
+        }
+    }
+
+    pub fn cdf(&self, x: f64) -> f64 {
+        if x <= self.lo {
+            0.0
+        } else if x >= self.hi {
+            1.0
+        } else {
+            (self.base.cdf(x) - self.c_lo) / (self.c_hi - self.c_lo)
+        }
+    }
+
+    /// Inverse cdf; p = 0 / 1 hit the truncation endpoints exactly.
+    pub fn ppf(&self, p: f64) -> f64 {
+        if p <= 0.0 {
+            return self.lo;
+        }
+        if p >= 1.0 {
+            return self.hi;
+        }
+        let q = self.c_lo + p * (self.c_hi - self.c_lo);
+        self.base.ppf(q).clamp(self.lo, self.hi)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scalar numerics
+// ---------------------------------------------------------------------------
+
+/// erfc via the Numerical-Recipes Chebyshev fit (|rel err| < 1.2e-7).
+fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.265_512_23
+            + t * (1.000_023_68
+                + t * (0.374_091_96
+                    + t * (0.096_784_18
+                        + t * (-0.186_288_06
+                            + t * (0.278_868_07
+                                + t * (-1.135_203_98
+                                    + t * (1.488_515_87
+                                        + t * (-0.822_152_23
+                                            + t * 0.170_872_77)))))))))
+            .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Standard normal cdf.
+fn normal_cdf(z: f64) -> f64 {
+    0.5 * erfc(-z * std::f64::consts::FRAC_1_SQRT_2)
+}
+
+/// Standard normal pdf.
+fn normal_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Acklam's inverse normal cdf (|rel err| < 1.15e-9) plus one Newton step
+/// against our own cdf so ppf∘cdf round-trips tightly.
+fn normal_ppf(p: f64) -> f64 {
+    const A: [f64; 6] = [
+        -3.969_683_028_665_376e1,
+        2.209_460_984_245_205e2,
+        -2.759_285_104_469_687e2,
+        1.383_577_518_672_690e2,
+        -3.066_479_806_614_716e1,
+        2.506_628_277_459_239,
+    ];
+    const B: [f64; 5] = [
+        -5.447_609_879_822_406e1,
+        1.615_858_368_580_409e2,
+        -1.556_989_798_598_866e2,
+        6.680_131_188_771_972e1,
+        -1.328_068_155_288_572e1,
+    ];
+    const C: [f64; 6] = [
+        -7.784_894_002_430_293e-3,
+        -3.223_964_580_411_365e-1,
+        -2.400_758_277_161_838,
+        -2.549_732_539_343_734,
+        4.374_664_141_464_968,
+        2.938_163_982_698_783,
+    ];
+    const D: [f64; 4] = [
+        7.784_695_709_041_462e-3,
+        3.224_671_290_700_398e-1,
+        2.445_134_137_142_996,
+        3.754_408_661_907_416,
+    ];
+    const P_LOW: f64 = 0.024_25;
+    let x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5])
+            * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r
+                + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    // one Newton refinement against this module's cdf
+    let pdf = normal_pdf(x);
+    if pdf > 1e-280 {
+        x - (normal_cdf(x) - p) / pdf
+    } else {
+        x
+    }
+}
+
+/// ln Γ(x) (Lanczos, x > 0).
+fn ln_gamma(x: f64) -> f64 {
+    const COF: [f64; 6] = [
+        76.180_091_729_471_46,
+        -86.505_320_329_416_77,
+        24.014_098_240_830_91,
+        -1.231_739_572_450_155,
+        0.120_865_097_386_617_5e-2,
+        -0.539_523_938_495_3e-5,
+    ];
+    let mut y = x;
+    let tmp = x + 5.5;
+    let tmp = tmp - (x + 0.5) * tmp.ln();
+    let mut ser = 1.000_000_000_190_015;
+    for c in COF {
+        y += 1.0;
+        ser += c / y;
+    }
+    -tmp + (2.506_628_274_631_000_5 * ser / x).ln()
+}
+
+/// Continued fraction for the incomplete beta (Lentz's method, NR §6.4).
+fn betacf(a: f64, b: f64, x: f64) -> f64 {
+    const TINY: f64 = 1e-30;
+    const EPS: f64 = 3e-14;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < TINY {
+        d = TINY;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..300 {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < TINY {
+            d = TINY;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < TINY {
+            c = TINY;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < TINY {
+            d = TINY;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < TINY {
+            c = TINY;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// Regularised incomplete beta I_x(a, b).
+fn inc_beta(a: f64, b: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let ln_bt = ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b)
+        + a * x.ln()
+        + b * (1.0 - x).ln();
+    let bt = ln_bt.exp();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        bt * betacf(a, b, x) / a
+    } else {
+        1.0 - bt * betacf(b, a, 1.0 - x) / b
+    }
+}
+
+/// Unit-scale Student-t cdf.
+fn student_t_cdf(t: f64, nu: f64) -> f64 {
+    if t == 0.0 {
+        return 0.5;
+    }
+    let x = nu / (nu + t * t);
+    let tail = 0.5 * inc_beta(0.5 * nu, 0.5, x);
+    if t > 0.0 {
+        1.0 - tail
+    } else {
+        tail
+    }
+}
+
+/// Unit-scale Student-t ppf by bracketed bisection on the cdf (used only at
+/// codebook-construction time, so robustness beats speed).
+fn student_t_ppf(p: f64, nu: f64) -> f64 {
+    if p == 0.5 {
+        return 0.0;
+    }
+    let upper = p > 0.5;
+    let pu = if upper { p } else { 1.0 - p };
+    // bracket [0, hi]
+    let mut hi = 1.0f64;
+    let mut guard = 0;
+    while student_t_cdf(hi, nu) < pu && guard < 2000 {
+        hi *= 2.0;
+        guard += 1;
+    }
+    let mut lo = 0.0f64;
+    for _ in 0..120 {
+        let mid = 0.5 * (lo + hi);
+        if student_t_cdf(mid, nu) < pu {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let x = 0.5 * (lo + hi);
+    if upper {
+        x
+    } else {
+        -x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_cdf_ppf_roundtrip() {
+        let d = Dist::normal(1.0);
+        for p in [1e-6, 0.01, 0.1, 0.3, 0.5, 0.7, 0.9, 0.99, 1.0 - 1e-6] {
+            let x = d.ppf(p);
+            assert!(
+                (d.cdf(x) - p).abs() < 1e-9,
+                "p={p}: x={x}, cdf={}",
+                d.cdf(x)
+            );
+        }
+        // known quantiles
+        assert!((d.ppf(0.975) - 1.959_964).abs() < 1e-4);
+        assert!((d.cdf(0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn laplace_cdf_ppf_roundtrip() {
+        let d = Dist::laplace(0.7);
+        for p in [0.001, 0.2, 0.5, 0.8, 0.999] {
+            let x = d.ppf(p);
+            assert!((d.cdf(x) - p).abs() < 1e-12, "p={p}");
+        }
+    }
+
+    #[test]
+    fn student_t_cdf_ppf_roundtrip() {
+        for nu in [1.5, 5.0 / 3.0, 3.0, 5.0, 7.0, 30.0] {
+            let d = Dist::student_t(nu, 1.0);
+            for p in [0.01, 0.1, 0.5, 0.9, 0.99] {
+                let x = d.ppf(p);
+                assert!(
+                    (d.cdf(x) - p).abs() < 1e-9,
+                    "nu={nu} p={p}: x={x}"
+                );
+            }
+        }
+        // t(1) = Cauchy: ppf(0.75) = 1
+        let c = Dist::student_t(1.0, 1.0);
+        assert!((c.ppf(0.75) - 1.0).abs() < 1e-7);
+        // large nu approaches the normal
+        let t = Dist::student_t(1e6, 1.0);
+        let n = Dist::normal(1.0);
+        assert!((t.ppf(0.9) - n.ppf(0.9)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn standard_is_unit_rms() {
+        let mut rng = Rng::new(7);
+        for fam in [Family::Normal, Family::Laplace, Family::StudentT] {
+            let d = Dist::standard(fam, 8.0);
+            let xs = d.sample_vec(&mut rng, 200_000);
+            let rms = crate::util::stats::rms(&xs);
+            assert!(
+                (rms - 1.0).abs() < 0.03,
+                "{fam:?}: rms {rms}"
+            );
+        }
+    }
+
+    #[test]
+    fn power_transform_table4() {
+        // Normal: sqrt(3) blow-up at alpha = 1/3
+        match Dist::normal(1.0).cbrt() {
+            Dist::Normal { s } => assert!((s - 3f64.sqrt()).abs() < 1e-12),
+            _ => panic!("family changed"),
+        }
+        // Laplace: 3x
+        match Dist::laplace(2.0).cbrt() {
+            Dist::Laplace { s } => assert!((s - 6.0).abs() < 1e-12),
+            _ => panic!("family changed"),
+        }
+        // Student-t: nu' = (nu-2)/3 at alpha = 1/3
+        match Dist::student_t(7.0, 1.0).cbrt() {
+            Dist::StudentT { nu, s } => {
+                assert!((nu - 5.0 / 3.0).abs() < 1e-12);
+                assert!((s - (7.0 / (5.0 / 3.0)).sqrt()).abs() < 1e-12);
+            }
+            _ => panic!("family changed"),
+        }
+    }
+
+    #[test]
+    fn expected_absmax_tracks_monte_carlo() {
+        let mut rng = Rng::new(3);
+        for d in [
+            Dist::normal(1.0),
+            Dist::laplace(1.0),
+            Dist::student_t(5.0, 1.0),
+        ] {
+            for block in [64usize, 256] {
+                let trials = 4000;
+                let mut acc = 0.0;
+                for _ in 0..trials {
+                    let mut m = 0f64;
+                    for _ in 0..block {
+                        m = m.max(d.sample(&mut rng).abs());
+                    }
+                    acc += m;
+                }
+                let mc = acc / trials as f64;
+                let approx = d.expected_absmax(block);
+                // table-4 approximations are ~5% for light tails and
+                // within ~20% for Student-t (fig. 14 shows the same gap)
+                assert!(
+                    ((approx - mc) / mc).abs() < 0.25,
+                    "{d:?} B={block}: approx {approx} vs mc {mc}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn with_absmax_normalises() {
+        let d = Dist::student_t(7.0, 2.0).with_absmax(128, 1.0);
+        assert!((d.expected_absmax(128) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncated_endpoints_and_monotone() {
+        let t = Truncated::new(Dist::normal(0.5), -1.0, 1.0);
+        assert_eq!(t.ppf(0.0), -1.0);
+        assert_eq!(t.ppf(1.0), 1.0);
+        assert_eq!(t.cdf(-2.0), 0.0);
+        assert_eq!(t.cdf(2.0), 1.0);
+        let mut prev = -1.0;
+        for i in 0..=20 {
+            let x = t.ppf(i as f64 / 20.0);
+            assert!(x >= prev, "ppf not monotone at {i}");
+            prev = x;
+        }
+        // round trip through the conditional cdf
+        for p in [0.1, 0.4, 0.9] {
+            assert!((t.cdf(t.ppf(p)) - p).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn uniform_basics() {
+        let d = Dist::standard(Family::Uniform, 0.0);
+        assert!((d.cdf(0.0) - 0.5).abs() < 1e-12);
+        assert!((d.ppf(1.0) - 3f64.sqrt()).abs() < 1e-9);
+    }
+}

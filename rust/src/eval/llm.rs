@@ -19,6 +19,7 @@ use crate::fisher::FisherEstimate;
 use crate::kl::{cross_entropy_batch, topk_kl_batch, KlSummary};
 use crate::runtime::model::{Checkpoint, ModelRunner, TokenSplit};
 use crate::runtime::Runtime;
+use crate::util::json::Json;
 use crate::util::stats;
 
 pub const TOP_K: usize = 64;
@@ -208,6 +209,22 @@ impl Env {
             delta_ce,
             r,
         })
+    }
+
+    /// The PJRT-side unit of work of `owf sweep`: one direct-cast point as
+    /// a JSONL metrics fragment (the engine adds the identity columns).
+    pub fn sweep_row(
+        &mut self,
+        size: &str,
+        scheme: &Scheme,
+    ) -> Result<Json> {
+        let p = self.direct_cast(size, scheme, None, false)?;
+        Ok(Json::obj()
+            .push("bits", p.bits)
+            .push("kl", p.kl.mean)
+            .push("kl_sem", p.kl.sem)
+            .push("delta_ce", p.delta_ce)
+            .push("r", p.r))
     }
 
     /// Per-tensor [`TensorInfo`] for the allocator.

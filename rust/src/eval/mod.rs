@@ -5,6 +5,11 @@
 //! `run(id)` dispatches; `owf report <id>` is the CLI entry. Simulated-data
 //! analyses ([`sim`]) are pure Rust; LLM analyses ([`llm`], [`qat`]) run the
 //! microllama checkpoints through the PJRT runtime.
+//!
+//! Beyond the fixed figure list, [`sim::sweep_point`] and
+//! [`llm::Env::sweep_row`] are the per-point entry points of the
+//! [`crate::coordinator::sweep`] engine (`owf sweep`), which schedules
+//! arbitrary scheme grids over both paths with JSONL resume.
 
 pub mod llm;
 pub mod pipeline;

@@ -208,9 +208,8 @@ fn qdq_grid(scheme: &Scheme, flat: &[f32]) -> Result<TensorQdq> {
         // explicit per-tensor rate search (fixed-rate-per-tensor ablation)
         let r = grid_for_target_bits(flat, scheme.bits);
         let grid = crate::compress::grid::UniformGrid::new(r.delta);
-        let recon: Vec<f32> = flat.iter().map(|&x| grid.qdq(x)).collect();
         return Ok(TensorQdq {
-            recon,
+            recon: grid_qdq_all(&grid, flat),
             bits: r.bits_per_element,
             sq_err: r.sq_err,
         });
@@ -220,12 +219,24 @@ fn qdq_grid(scheme: &Scheme, flat: &[f32]) -> Result<TensorQdq> {
     let delta = rms * 2f64.powf(H0 - scheme.bits) * scheme.multiplier;
     let grid = crate::compress::grid::UniformGrid::new(delta);
     let (counts, sq_err) = grid.count_histogram(flat);
-    let recon: Vec<f32> = flat.iter().map(|&x| grid.qdq(x)).collect();
     Ok(TensorQdq {
-        recon,
+        recon: grid_qdq_all(&grid, flat),
         bits: entropy_bits(&counts),
         sq_err,
     })
+}
+
+/// Elementwise grid qdq, fanned over the pool for large tensors — the
+/// compressed-format reconstruction path (codebook paths parallelise inside
+/// [`crate::quant::Quantiser`]; nested calls flatten to serial when a sweep
+/// already occupies the workers).
+fn grid_qdq_all(
+    grid: &crate::compress::grid::UniformGrid,
+    flat: &[f32],
+) -> Vec<f32> {
+    let mut out = flat.to_vec();
+    crate::util::pool::par_elementwise(&mut out, |x| *x = grid.qdq(*x));
+    out
 }
 
 #[cfg(test)]
@@ -257,6 +268,27 @@ mod tests {
         assert!(t.bits > 4.0 && t.bits < 4.01, "{}", t.bits);
         let t = run("grid@3.5:tensor-rms:compress", &data, &shape);
         assert!((t.bits - 3.5).abs() < 0.1, "{}", t.bits);
+    }
+
+    #[test]
+    fn grid_parallel_path_matches_serial() {
+        // above the parallel threshold, the fanned-out grid recon must be
+        // bitwise identical to the serial path (forced via the nested-
+        // parallelism guard: inside a pool worker everything runs inline)
+        let data = data_2d(512, 512, 8);
+        let shape = [512usize, 512];
+        let par = run("grid@4:tensor-rms:compress", &data, &shape);
+        let serial = crate::util::pool::par_map(&[0, 1], |i, _| {
+            if i == 0 {
+                Some(run("grid@4:tensor-rms:compress", &data, &shape))
+            } else {
+                None
+            }
+        })
+        .swap_remove(0)
+        .unwrap();
+        assert_eq!(par.recon, serial.recon);
+        assert_eq!(par.bits, serial.bits);
     }
 
     #[test]

@@ -8,7 +8,7 @@ use crate::compress::grid::grid_for_target_bits;
 use crate::compress::huffman::HuffmanCode;
 use crate::compress::rans::{rans_decode, rans_encode, RansModel};
 use crate::compress::{entropy_bits, information_content, smoothed_probs};
-use crate::coordinator::config::Scheme;
+use crate::coordinator::config::{Element, Scheme};
 use crate::coordinator::{fmt, Report};
 use crate::dist::{Dist, Family, Truncated};
 use crate::eval::pipeline::qdq_tensor;
@@ -40,6 +40,60 @@ pub fn r_of(spec: &str, data: &[f32]) -> Result<f64> {
     let scheme = Scheme::parse(spec)?;
     let out = qdq_tensor(&scheme, data, &[data.len()], None, &[], 11)?;
     Ok(relative_rms_error(data, &out.recon))
+}
+
+/// One measured point of a simulated-data sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SimPoint {
+    /// honest bits/element (element + scale overhead, entropy when
+    /// compressed)
+    pub bits: f64,
+    /// relative RMS error
+    pub r: f64,
+    /// the paper's flattened trade-off statistic R·2^b
+    pub r2b: f64,
+}
+
+/// Fewest samples a sweep point will draw (R over a handful of values is
+/// noise; the sweep engine uses the same floor when keying resume rows).
+pub const MIN_SWEEP_SAMPLES: usize = 256;
+
+/// The CPU-side unit of work of `owf sweep`: draw `samples` iid values
+/// (seeded per point), quantise under `spec`, report (bits, R, R·2^b).
+/// The data distribution matches the scheme's cbrt family when it names
+/// one; everything else is evaluated on Student-t5, the paper's stand-in
+/// for LLM weight tails.
+pub fn sweep_point(
+    spec: &str,
+    samples: usize,
+    seed: u64,
+) -> Result<SimPoint> {
+    let scheme = Scheme::parse(spec)?;
+    let d = sweep_dist(&scheme);
+    let mut rng =
+        Rng::new(0x5EED ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+    let data = d.sample_vec(&mut rng, samples.max(MIN_SWEEP_SAMPLES));
+    let out = qdq_tensor(&scheme, &data, &[data.len()], None, &[], seed)?;
+    let r = relative_rms_error(&data, &out.recon);
+    Ok(SimPoint {
+        bits: out.bits,
+        r,
+        r2b: r * 2f64.powf(out.bits),
+    })
+}
+
+/// The data distribution a sweep evaluates a scheme against.
+fn sweep_dist(scheme: &Scheme) -> Dist {
+    match &scheme.element {
+        Element::Cbrt { family, nu } => match family {
+            Family::StudentT if *nu > 2.0 => {
+                Dist::standard(Family::StudentT, *nu)
+            }
+            Family::StudentT => Dist::standard(Family::StudentT, NU),
+            other => Dist::standard(*other, 0.0),
+        },
+        _ => Dist::standard(Family::StudentT, NU),
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -624,6 +678,24 @@ mod tests {
             samples: 1 << 14,
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn sweep_point_is_deterministic_and_sane() {
+        let a = sweep_point("cbrt-t5@4:block64-absmax", 1 << 14, 3).unwrap();
+        let b = sweep_point("cbrt-t5@4:block64-absmax", 1 << 14, 3).unwrap();
+        assert_eq!(a.bits, b.bits);
+        assert_eq!(a.r, b.r);
+        // 4-bit elements + bf16/64 scales
+        assert!((a.bits - 4.25).abs() < 1e-9, "{}", a.bits);
+        assert!(a.r > 0.0 && a.r < 0.2, "{}", a.r);
+        assert!((a.r2b - a.r * 2f64.powf(a.bits)).abs() < 1e-12);
+        // different seed ⇒ different draw
+        let c = sweep_point("cbrt-t5@4:block64-absmax", 1 << 14, 4).unwrap();
+        assert_ne!(a.r, c.r);
+        // more bits ⇒ lower error
+        let hi = sweep_point("cbrt-t5@6:block64-absmax", 1 << 14, 3).unwrap();
+        assert!(hi.r < a.r);
     }
 
     #[test]

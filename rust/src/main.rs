@@ -7,15 +7,19 @@
 //! owf report <id|sim|llm|all> [--size s|m|l] [--samples N]
 //!                                   [--eval-seqs N] [--qat-steps N]
 //!                                   [--out results.jsonl]
+//! owf sweep <grid> [--data sim|llm] [--seeds N] [--out FILE] [--resume]
+//!                                   parallel resumable scheme-grid sweep
 //! owf quantise --spec <scheme> [--size m]   one direct-cast point
 //! owf fisher --size m [--batches N]         (re)estimate + save Fisher
-//! owf schemes                       print the scheme grammar + examples
+//! owf schemes                       print the scheme + grid grammar
 //! ```
+
+use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
 use owf::coordinator::config::Scheme;
-use owf::coordinator::ResultSink;
+use owf::coordinator::{run_sweep, ResultSink, SweepData, SweepOpts};
 use owf::eval::{self, RunOpts};
 use owf::fisher::FisherEstimate;
 use owf::runtime::model::{Checkpoint, TokenSplit};
@@ -26,16 +30,21 @@ struct Args {
     flags: std::collections::HashMap<String, String>,
 }
 
+/// Flags that never take a value (so `owf sweep --resume <grid>` does not
+/// swallow the grid as the flag's value).
+const BOOL_FLAGS: &[&str] = &["resume", "empirical"];
+
 fn parse_args() -> Args {
     let mut positional = Vec::new();
     let mut flags = std::collections::HashMap::new();
     let mut it = std::env::args().skip(1).peekable();
     while let Some(arg) = it.next() {
         if let Some(key) = arg.strip_prefix("--") {
-            let value = if it
-                .peek()
-                .map(|v| !v.starts_with("--"))
-                .unwrap_or(false)
+            let value = if !BOOL_FLAGS.contains(&key)
+                && it
+                    .peek()
+                    .map(|v| !v.starts_with("--"))
+                    .unwrap_or(false)
             {
                 it.next().unwrap()
             } else {
@@ -76,6 +85,7 @@ fn main() -> Result<()> {
     match cmd {
         "list" => cmd_list(),
         "report" => cmd_report(&args),
+        "sweep" => cmd_sweep(&args),
         "quantise" | "quantize" => cmd_quantise(&args),
         "fisher" => cmd_fisher(&args),
         "schemes" => {
@@ -131,6 +141,70 @@ fn cmd_report(args: &Args) -> Result<()> {
             }
         }
         println!("[wrote {} reports to {out}]", reports.len());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let grid = args.positional.get(1).context(
+        "usage: owf sweep <grid> [--data sim|llm] [--size s|m|l] \
+         [--seeds N] [--samples N] [--out FILE] [--resume]",
+    )?;
+    let opts = opts_from(args)?;
+    let data = match args.flags.get("data").map(|s| s.as_str()) {
+        None | Some("sim") => SweepData::Sim,
+        Some("llm") => SweepData::Llm,
+        Some(other) => {
+            anyhow::bail!("--data must be sim or llm, got {other:?}")
+        }
+    };
+    let defaults = SweepOpts::default();
+    let sweep_opts = SweepOpts {
+        data,
+        out: args
+            .flags
+            .get("out")
+            .map(PathBuf::from)
+            .unwrap_or(defaults.out),
+        resume: args.flags.contains_key("resume"),
+        seeds: args
+            .flags
+            .get("seeds")
+            .map(|v| v.parse::<u64>())
+            .transpose()
+            .context("--seeds")?
+            .unwrap_or(defaults.seeds),
+        // sweeps default to 2^16 samples/point (not the report default of
+        // 2^20 — a grid multiplies the cost by its point count)
+        samples: args
+            .flags
+            .get("samples")
+            .map(|v| v.parse::<usize>())
+            .transpose()
+            .context("--samples")?
+            .unwrap_or(defaults.samples),
+        size: opts.size.clone(),
+        eval_seqs: opts.eval_seqs,
+    };
+    let t0 = std::time::Instant::now();
+    let stats = run_sweep(grid, &sweep_opts)?;
+    println!(
+        "sweep: {} points — {} skipped (resume), {} ran, {} failed — \
+         {:.1}s on {} workers -> {:?}",
+        stats.planned,
+        stats.skipped,
+        stats.ran,
+        stats.failed,
+        t0.elapsed().as_secs_f64(),
+        owf::util::pool::num_threads(),
+        sweep_opts.out,
+    );
+    if stats.failed > 0 {
+        anyhow::bail!(
+            "{} sweep points failed (rows with ok:false in {:?})",
+            stats.failed,
+            sweep_opts.out
+        );
     }
     Ok(())
 }
@@ -191,9 +265,10 @@ const HELP: &str = "owf — Optimal Weight Formats (paper reproduction)
 USAGE:
   owf list                              show artifacts & checkpoints
   owf report <id|sim|llm|all> [opts]    reproduce paper figures/tables
+  owf sweep <grid> [opts]               parallel resumable scheme sweep
   owf quantise --spec <scheme> [opts]   one direct-cast measurement
   owf fisher [--size m] [--batches N]   estimate the Fisher diagonal
-  owf schemes                           scheme grammar reference
+  owf schemes                           scheme + grid grammar reference
 
 OPTIONS:
   --size s|m|l      model for single-model reports   (default m)
@@ -201,6 +276,16 @@ OPTIONS:
   --eval-seqs N     sequences per KL evaluation      (default 24)
   --qat-steps N     QAT training steps               (default 60)
   --out FILE        append report rows as JSONL
+
+SWEEP OPTIONS:
+  --data sim|llm    evaluate on iid draws (R) or checkpoints (KL)
+                    (default sim; llm needs `make artifacts`)
+  --samples N       samples per sim point             (sweep default 2^16)
+  --seeds N         seeds per grid point, sim only    (default 1)
+  --out FILE        JSONL output / resume state       (default sweep.jsonl)
+  --resume          skip points already completed in --out (keyed by
+                    scheme, size, seed and the run parameters)
+  OWF_THREADS       worker count for CPU points       (default all cores)
 ";
 
 const SCHEME_HELP: &str = "scheme grammar:
@@ -218,4 +303,13 @@ examples:
   grid@3.5:tensor-rms:compress       entropy-coded uniform grid
   int@3:channel-absmax:sparse0.001   SpQR-style dense+sparse
   lloyd@4:tensor-rms:fisher          SqueezeLLM-style weighted k-means
+
+sweep grids (owf sweep): any {...} group in a spec expands —
+  {a,b,c}   comma alternation        {lo..hi}  inclusive integer range
+multiple groups form the cartesian product; ';' joins several grids;
+duplicates are dropped.
+
+examples:
+  cbrt-t7@{2..8}:block{32,64,128}-absmax            21 points
+  {int,nf,cbrt-t5}@4:block64-absmax ; grid@{3..5}:tensor-rms:compress
 ";

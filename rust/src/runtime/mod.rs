@@ -11,6 +11,12 @@
 //! and batch chunking for evaluation-sized workloads.
 
 pub mod model;
+pub mod stub;
+
+// The offline build has no PJRT native library; the stub type-checks
+// identically and makes `Runtime::open` fail gracefully.  To use the real
+// bindings, replace this alias with `use ::xla;` and add the `xla` crate.
+use self::stub as xla;
 
 pub use model::ModelRunner;
 

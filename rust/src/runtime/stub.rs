@@ -1,0 +1,129 @@
+//! API-compatible stand-in for the `xla` (xla_extension) bindings.
+//!
+//! The offline build has no PJRT native library, so the runtime compiles
+//! against this stub: every entry point type-checks identically to the real
+//! bindings but [`PjRtClient::cpu`] fails, which makes `Runtime::open`
+//! return an error and every LLM evaluation / test skip gracefully (the
+//! same behaviour as missing artifacts).  Swapping in the real crate is a
+//! one-line change in `runtime/mod.rs` (`use stub as xla` → `use ::xla`).
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` closely enough for `?` conversion.
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "PJRT unavailable: built without the xla_extension bindings \
+         (stubbed runtime)"
+            .to_string(),
+    )
+}
+
+/// Stub of `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: T) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(
+        _path: impl AsRef<Path>,
+    ) -> Result<HloModuleProto, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("PJRT unavailable"));
+    }
+}

@@ -3,9 +3,29 @@
 //! rayon is not available offline, so the coordinator and the simulated-data
 //! sweeps use these: `par_map` (index-preserving parallel map over items)
 //! and `par_chunks_mut` (parallel mutation of disjoint slice chunks).
+//!
+//! Nested parallelism is flattened: a closure already running on a pool
+//! worker executes nested `par_map`/`par_chunks_mut` calls serially, so a
+//! sweep fanning N jobs over N workers whose per-tensor qdq also wants to
+//! parallelise does not explode into N² threads.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+thread_local! {
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the current thread is a pool worker (nested calls go serial).
+pub fn on_worker() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+/// Element count below which the hot paths stay serial — one shared cutoff
+/// so the parallel/serial split stays consistent across `quant`, the grid
+/// recon and [`par_elementwise`].
+pub const PAR_THRESHOLD: usize = 1 << 16;
 
 /// Number of worker threads to use (respects `OWF_THREADS`).
 pub fn num_threads() -> usize {
@@ -31,7 +51,7 @@ pub fn par_map<T: Sync, R: Send>(
         return Vec::new();
     }
     let workers = num_threads().min(n);
-    if workers == 1 {
+    if workers == 1 || on_worker() {
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
     let cursor = AtomicUsize::new(0);
@@ -42,6 +62,7 @@ pub fn par_map<T: Sync, R: Send>(
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| {
+                IN_POOL.with(|c| c.set(true));
                 let mut local: Vec<(usize, R)> = Vec::new();
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
@@ -66,6 +87,13 @@ pub fn par_chunks_mut<T: Send>(
     chunk: usize,
     f: impl Fn(usize, &mut [T]) + Sync,
 ) {
+    let workers = num_threads();
+    if workers == 1 || on_worker() {
+        for (idx, slice) in data.chunks_mut(chunk.max(1)).enumerate() {
+            f(idx, slice);
+        }
+        return;
+    }
     let chunks: Vec<(usize, &mut [T])> =
         data.chunks_mut(chunk.max(1)).enumerate().collect();
     let cursor = AtomicUsize::new(0);
@@ -76,19 +104,43 @@ pub fn par_chunks_mut<T: Send>(
             .map(Some)
             .collect::<Vec<Option<(usize, &mut [T])>>>(),
     );
-    let workers = num_threads().min(n.max(1));
+    let workers = workers.min(n.max(1));
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let taken = chunks.lock().unwrap()[i].take();
-                if let Some((idx, slice)) = taken {
-                    f(idx, slice);
+            scope.spawn(|| {
+                IN_POOL.with(|c| c.set(true));
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let taken = chunks.lock().unwrap()[i].take();
+                    if let Some((idx, slice)) = taken {
+                        f(idx, slice);
+                    }
                 }
             });
+        }
+    });
+}
+
+/// Elementwise parallel transform: one contiguous chunk per worker once
+/// the slice is large enough to amortise the fan-out — the shared idiom of
+/// the grid-reconstruction and tensor-qdq hot paths.
+pub fn par_elementwise<T: Send>(
+    data: &mut [T],
+    f: impl Fn(&mut T) + Sync,
+) {
+    if data.len() < PAR_THRESHOLD {
+        for x in data.iter_mut() {
+            f(x);
+        }
+        return;
+    }
+    let chunk = data.len().div_ceil(num_threads()).max(1);
+    par_chunks_mut(data, chunk, |_, c| {
+        for x in c.iter_mut() {
+            f(x);
         }
     });
 }
@@ -112,6 +164,61 @@ mod tests {
         let empty: Vec<u32> = vec![];
         assert!(par_map(&empty, |_, &x| x).is_empty());
         assert_eq!(par_map(&[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn nested_calls_flatten_to_serial() {
+        // a nested par_map inside a pool worker must run inline (on_worker)
+        // and still produce correct results
+        let outer: Vec<usize> = (0..64).collect();
+        let out = par_map(&outer, |_, &x| {
+            assert!(
+                num_threads() == 1 || on_worker(),
+                "closure should run on a pool worker"
+            );
+            let inner: Vec<usize> = (0..50).collect();
+            let inner_out = par_map(&inner, |_, &y| y + x);
+            inner_out.iter().sum::<usize>()
+        });
+        for (x, &s) in outer.iter().zip(&out) {
+            assert_eq!(s, 50 * x + 49 * 50 / 2);
+        }
+        assert!(!on_worker(), "flag must not leak to the caller thread");
+    }
+
+    #[test]
+    fn par_map_panic_propagates_without_deadlock() {
+        // a panicking closure must panic the calling thread (via scope
+        // join), not hang the remaining workers — the scheduler relies on
+        // this to surface worker bugs instead of stalling a 500-job sweep
+        let items: Vec<usize> = (0..200).collect();
+        let result = std::panic::catch_unwind(|| {
+            par_map(&items, |_, &x| {
+                if x == 97 {
+                    panic!("worker bug");
+                }
+                x
+            })
+        });
+        assert!(result.is_err(), "panic must propagate to the caller");
+        // the pool must still be usable afterwards
+        let ok = par_map(&items, |_, &x| x * 2);
+        assert_eq!(ok[100], 200);
+    }
+
+    #[test]
+    fn par_chunks_mut_panic_propagates() {
+        let mut data = vec![0u32; 1000];
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                par_chunks_mut(&mut data, 100, |idx, _| {
+                    if idx == 3 {
+                        panic!("chunk bug");
+                    }
+                });
+            }),
+        );
+        assert!(result.is_err());
     }
 
     #[test]

@@ -1,0 +1,136 @@
+//! Property tests for the entropy coders (via `util::testing::check`):
+//! rANS and Huffman encode→decode recover exact symbol streams over
+//! adversarial count distributions, and canonical Huffman codes are
+//! prefix-free with Kraft sum ≤ 1.
+
+use owf::compress::huffman::HuffmanCode;
+use owf::compress::rans::{rans_decode, rans_encode, RansModel};
+use owf::util::testing::{check, Gen};
+
+/// Draw a stream whose empirical distribution follows `counts`.
+fn stream(counts: &[u64], len: usize, g: &mut Gen) -> Vec<u16> {
+    let weights: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+    (0..len)
+        .map(|_| g.rng.categorical(&weights) as u16)
+        .collect()
+}
+
+/// Random counts: mixes zeros, singletons and heavy spikes.
+fn random_counts(g: &mut Gen, n_symbols: usize) -> Vec<u64> {
+    (0..n_symbols)
+        .map(|_| match g.rng.below(4) {
+            0 => 0,
+            1 => 1,
+            2 => g.rng.below(50) as u64 + 1,
+            _ => g.rng.below(100_000) as u64 + 1,
+        })
+        .collect()
+}
+
+#[test]
+fn rans_roundtrips_exactly() {
+    check("rans-roundtrip-adversarial", 60, |g: &mut Gen| {
+        let n_symbols = 2 + g.rng.below(60);
+        let mut counts = random_counts(g, n_symbols);
+        if counts.iter().all(|&c| c == 0) {
+            counts[0] = 1;
+        }
+        let model = RansModel::from_counts(&counts);
+        let len = g.rng.below(4000);
+        let symbols = stream(&counts, len, g);
+        let enc = rans_encode(&model, &symbols);
+        let dec = rans_decode(&model, &enc, symbols.len());
+        assert_eq!(dec, symbols, "rANS corrupted the stream");
+    });
+}
+
+#[test]
+fn huffman_roundtrips_exactly() {
+    check("huffman-roundtrip-adversarial", 60, |g: &mut Gen| {
+        let n_symbols = 1 + g.rng.below(60);
+        let mut counts = random_counts(g, n_symbols);
+        if counts.iter().all(|&c| c == 0) {
+            counts[0] = 1;
+        }
+        let code = HuffmanCode::from_counts(&counts);
+        // stream over the *seen* symbols only
+        let len = g.rng.below(2000);
+        let symbols = stream(&counts, len, g);
+        let (bytes, bit_count) = code.encode(&symbols);
+        assert!(bytes.len() as u64 * 8 >= bit_count);
+        let dec = code.decode(&bytes, symbols.len());
+        assert_eq!(dec, symbols, "Huffman corrupted the stream");
+    });
+}
+
+#[test]
+fn huffman_codes_are_prefix_free() {
+    check("huffman-prefix-free", 60, |g: &mut Gen| {
+        let n_symbols = 2 + g.rng.below(40);
+        let counts = random_counts(g, n_symbols);
+        if counts.iter().filter(|&&c| c > 0).count() < 2 {
+            return; // degenerate alphabets are covered elsewhere
+        }
+        let code = HuffmanCode::from_counts(&counts);
+        let active: Vec<usize> =
+            (0..counts.len()).filter(|&i| counts[i] > 0).collect();
+        // every seen symbol has a code, every unseen symbol has none
+        for (i, &c) in counts.iter().enumerate() {
+            assert_eq!(
+                code.lengths[i] > 0,
+                c > 0,
+                "length table wrong at {i}"
+            );
+        }
+        // Kraft: Σ 2^-len ≤ 1 (an optimal complete code sums to exactly 1)
+        let kraft: f64 = active
+            .iter()
+            .map(|&i| 2f64.powi(-(code.lengths[i] as i32)))
+            .sum();
+        assert!(kraft <= 1.0 + 1e-12, "kraft {kraft}");
+        assert!(kraft > 1.0 - 1e-9, "huffman must be complete: {kraft}");
+        // no codeword is a prefix of another
+        for &a in &active {
+            for &b in &active {
+                if a == b {
+                    continue;
+                }
+                let (la, lb) =
+                    (code.lengths[a] as u32, code.lengths[b] as u32);
+                if la <= lb {
+                    assert_ne!(
+                        code.codes[a],
+                        code.codes[b] >> (lb - la),
+                        "code {a} prefixes {b}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn coders_agree_on_quantiser_output() {
+    // the fig.-24 pipeline end to end: quantise simulated weights, entropy
+    // code the indices with both coders, decode, reconstruct identically
+    use owf::dist::{Dist, Family};
+    use owf::formats::cbrt::{cbrt_rms, CBRT_ALPHA};
+    use owf::formats::Variant;
+    use owf::util::rng::Rng;
+
+    let mut rng = Rng::new(0xC0DEC);
+    let data = Dist::standard(Family::StudentT, 5.0)
+        .sample_vec(&mut rng, 50_000);
+    let cb = cbrt_rms(Family::StudentT, 5.0, 4, Variant::Symmetric, CBRT_ALPHA);
+    let symbols: Vec<u16> = data.iter().map(|&x| cb.quantise(x)).collect();
+    let mut counts = vec![0u64; cb.len()];
+    for &s in &symbols {
+        counts[s as usize] += 1;
+    }
+    let huff = HuffmanCode::from_counts(&counts);
+    let (hbytes, _) = huff.encode(&symbols);
+    assert_eq!(huff.decode(&hbytes, symbols.len()), symbols);
+    let model = RansModel::from_counts(&counts);
+    let renc = rans_encode(&model, &symbols);
+    assert_eq!(rans_decode(&model, &renc, symbols.len()), symbols);
+}

@@ -1,0 +1,180 @@
+//! Property tests for the quantiser invariants (via the crate's own
+//! `util::testing::check` harness):
+//!
+//! * qdq idempotence — `qdq(qdq(x)) == qdq(x)` for absmax/signmax schemes
+//!   with exact (f32) scales and ±1-endpoint codebooks;
+//! * bits accounting — `bits_per_element` agrees with the sizes of the
+//!   materialised [`owf::quant::Encoded`];
+//! * scale-multiplier 1.0 is moment matching — `:mult1` is a no-op.
+
+use owf::coordinator::config::Scheme;
+use owf::eval::pipeline::qdq_tensor;
+use owf::formats::cbrt::{cbrt_absmax, CBRT_ALPHA};
+use owf::formats::int::int_codebook;
+use owf::formats::quantile::nf;
+use owf::formats::{Codebook, Variant};
+use owf::quant::Quantiser;
+use owf::scaling::{scale_overhead_bits, Granularity, ScaleFormat, Statistic};
+use owf::util::testing::{check, Gen};
+
+fn idempotence_codebooks() -> Vec<(&'static str, Codebook, Statistic)> {
+    use owf::dist::Family;
+    vec![
+        (
+            "int4-sym",
+            int_codebook(4, Variant::Symmetric),
+            Statistic::Absmax,
+        ),
+        (
+            "int3-sym",
+            int_codebook(3, Variant::Symmetric),
+            Statistic::Absmax,
+        ),
+        (
+            "int4-signmax",
+            int_codebook(4, Variant::Signmax),
+            Statistic::Signmax,
+        ),
+        ("nf4", nf(4), Statistic::Absmax),
+        (
+            "cbrt-normal-absmax",
+            cbrt_absmax(Family::Normal, 0.0, 4, 64, Variant::Symmetric, CBRT_ALPHA),
+            Statistic::Absmax,
+        ),
+        (
+            "cbrt-t5-absmax",
+            cbrt_absmax(Family::StudentT, 5.0, 4, 64, Variant::Symmetric, CBRT_ALPHA),
+            Statistic::Absmax,
+        ),
+    ]
+}
+
+#[test]
+fn qdq_is_idempotent_for_exact_absmax_scales() {
+    // with an f32 scale and a ±1-endpoint codebook, the block maximum is
+    // reconstructed exactly, so re-quantising the reconstruction recomputes
+    // the same scale and maps every codepoint back onto itself
+    check("qdq-idempotent", 80, |g: &mut Gen| {
+        let n = 64 * (1 + g.rng.below(6));
+        let data = g.heavy_tailed_vec(n);
+        for (name, cb, stat) in idempotence_codebooks() {
+            for granularity in
+                [Granularity::Block(64), Granularity::Tensor]
+            {
+                let q = Quantiser::new(
+                    granularity,
+                    stat,
+                    ScaleFormat::F32,
+                    cb.clone(),
+                );
+                let once = q.qdq(&data, 0);
+                let twice = q.qdq(&once, 0);
+                assert_eq!(
+                    once, twice,
+                    "{name} {granularity:?} not idempotent"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn bits_accounting_matches_encoded_sizes() {
+    // bits_per_element must equal (index bits + scale bits · #scales / n)
+    // computed from the actual Encoded representation
+    check("bits-accounting", 60, |g: &mut Gen| {
+        let block = 16 << g.rng.below(4); // 16..128
+        let n_blocks = 1 + g.rng.below(20);
+        let n = block * n_blocks;
+        let data = g.f32_vec(n, 1.0);
+        let bits = g.bits(2, 6);
+        let (stat, variant) = if g.rng.below(2) == 0 {
+            (Statistic::Absmax, Variant::Symmetric)
+        } else {
+            (Statistic::Signmax, Variant::Signmax)
+        };
+        for scale_format in [
+            ScaleFormat::F32,
+            ScaleFormat::Bf16 { away: true },
+            ScaleFormat::E8M0 { away: true },
+        ] {
+            let q = Quantiser::new(
+                Granularity::Block(block),
+                stat,
+                scale_format,
+                int_codebook(bits, variant),
+            );
+            let enc = q.encode(&data, 0);
+            assert_eq!(enc.indices.len(), n);
+            assert_eq!(enc.scales.len(), n_blocks);
+            assert_eq!(enc.groups.len(), n_blocks);
+            let sign = if stat == Statistic::Signmax { 1.0 } else { 0.0 };
+            let expect = bits as f64
+                + enc.scales.len() as f64 * (scale_format.bits() + sign)
+                    / n as f64;
+            let got = q.bits_per_element(n, 0);
+            assert!(
+                (got - expect).abs() < 1e-12,
+                "bits {got} vs encoded-derived {expect}"
+            );
+            // and the helper the accounting is built on agrees
+            let overhead = scale_overhead_bits(
+                n,
+                Granularity::Block(block),
+                0,
+                scale_format,
+                stat,
+            );
+            assert!((got - bits as f64 - overhead).abs() < 1e-12);
+        }
+    });
+}
+
+#[test]
+fn multiplier_one_is_moment_matching() {
+    // `:mult1` must be byte-identical to the bare scheme through the whole
+    // tensor pipeline (multiplier 1.0 is the moment-matching default)
+    check("mult1-noop", 40, |g: &mut Gen| {
+        let n = 128 * (1 + g.rng.below(4));
+        let data = g.heavy_tailed_vec(n);
+        for base in [
+            "int@4:block64-absmax",
+            "cbrt-t5@4:block128-absmax",
+            "cbrt-normal@3:tensor-rms",
+            "nf@4:block64-absmax",
+        ] {
+            let plain = Scheme::parse(base).unwrap();
+            let mult1 =
+                Scheme::parse(&format!("{base}:mult1")).unwrap();
+            let a =
+                qdq_tensor(&plain, &data, &[n], None, &[], 5).unwrap();
+            let b =
+                qdq_tensor(&mult1, &data, &[n], None, &[], 5).unwrap();
+            assert_eq!(a.recon, b.recon, "{base}");
+            assert_eq!(a.bits, b.bits, "{base}");
+        }
+    });
+}
+
+#[test]
+fn decode_inverts_encode() {
+    // decode(encode(x)) must equal the fused qdq for every granularity
+    check("encode-decode-qdq", 50, |g: &mut Gen| {
+        let n = 64 * (1 + g.rng.below(8));
+        let data = g.heavy_tailed_vec(n);
+        for granularity in [
+            Granularity::Tensor,
+            Granularity::Block(64),
+            Granularity::Block(32),
+        ] {
+            let q = Quantiser::new(
+                granularity,
+                Statistic::Absmax,
+                ScaleFormat::Bf16 { away: true },
+                int_codebook(4, Variant::Asymmetric),
+            );
+            let enc = q.encode(&data, 0);
+            assert_eq!(q.decode(&enc), q.qdq(&data, 0), "{granularity:?}");
+        }
+    });
+}

@@ -1,0 +1,127 @@
+//! Acceptance test for the sweep engine: a 105-point grid expands, runs
+//! across `OWF_THREADS` pool workers, writes exactly one JSONL row per
+//! point, and a second `--resume` invocation re-runs zero completed points.
+
+use owf::coordinator::config::expand_grid;
+use owf::coordinator::sweep::{point_key, SIM_SIZE};
+use owf::coordinator::{run_sweep, SweepOpts};
+use owf::util::json::Json;
+
+const GRID: &str =
+    "{int,cbrt-t5,cbrt-normal,cbrt-laplace,nf}@{2..8}:block{32,64,128}-absmax";
+const POINTS: usize = 5 * 7 * 3;
+
+fn opts(out: std::path::PathBuf) -> SweepOpts {
+    SweepOpts {
+        out,
+        samples: 1 << 12,
+        ..Default::default()
+    }
+}
+
+fn read_rows(path: &std::path::Path) -> Vec<Json> {
+    std::fs::read_to_string(path)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .collect()
+}
+
+#[test]
+fn hundred_point_sweep_resumes_with_zero_reruns() {
+    // worker width comes from OWF_THREADS (scripts/check.sh pins it to 4;
+    // setting it here would race the other tests' env reads)
+    let out = std::env::temp_dir().join("owf_sweep_resume_accept.jsonl");
+    let _ = std::fs::remove_file(&out);
+
+    let specs = expand_grid(GRID).unwrap();
+    assert_eq!(specs.len(), POINTS, "grid must expand to ≥100 points");
+
+    // first run: everything executes, one row per point
+    let stats = run_sweep(GRID, &opts(out.clone())).unwrap();
+    assert_eq!(stats.planned, POINTS);
+    assert_eq!(stats.skipped, 0);
+    assert_eq!(stats.ran, POINTS);
+    assert_eq!(stats.failed, 0);
+    let rows = read_rows(&out);
+    assert_eq!(rows.len(), POINTS, "one JSONL row per point");
+    // every expanded spec appears exactly once, with sane metrics
+    let mut keys: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+            assert_eq!(r.get("size").unwrap().as_str(), Some(SIM_SIZE));
+            let bits = r.get("bits").unwrap().as_f64().unwrap();
+            let rr = r.get("r").unwrap().as_f64().unwrap();
+            assert!(bits > 1.0 && bits < 10.0, "bits {bits}");
+            assert!(rr > 0.0 && rr < 1.0, "r {rr}");
+            format!(
+                "{}|{}|{}|{}",
+                r.get("scheme").unwrap().as_str().unwrap(),
+                r.get("size").unwrap().as_str().unwrap(),
+                r.get("seed").unwrap().as_f64().unwrap() as u64,
+                r.get("params").unwrap().as_str().unwrap(),
+            )
+        })
+        .collect();
+    keys.sort();
+    let mut expect: Vec<String> = specs
+        .iter()
+        .map(|s| point_key(s, SIM_SIZE, 0, "n4096"))
+        .collect();
+    expect.sort();
+    assert_eq!(keys, expect);
+
+    // second run with resume: zero re-runs, file untouched in length
+    let mut o = opts(out.clone());
+    o.resume = true;
+    let again = run_sweep(GRID, &o).unwrap();
+    assert_eq!(again.planned, POINTS);
+    assert_eq!(again.skipped, POINTS);
+    assert_eq!(again.ran, 0, "--resume must re-run zero completed points");
+    assert_eq!(again.failed, 0);
+    assert_eq!(read_rows(&out).len(), POINTS);
+}
+
+#[test]
+fn partial_file_resumes_only_the_remainder() {
+    // simulate a killed sweep: run a sub-grid first, then resume the full
+    // grid — only the missing points execute
+    let out = std::env::temp_dir().join("owf_sweep_resume_partial.jsonl");
+    let _ = std::fs::remove_file(&out);
+    let sub = "{int,cbrt-t5}@{2..8}:block64-absmax"; // 14 of the 105
+    let first = run_sweep(sub, &opts(out.clone())).unwrap();
+    assert_eq!(first.ran, 14);
+
+    let mut o = opts(out.clone());
+    o.resume = true;
+    let rest = run_sweep(GRID, &o).unwrap();
+    assert_eq!(rest.planned, POINTS);
+    assert_eq!(rest.skipped, 14);
+    assert_eq!(rest.ran, POINTS - 14);
+    assert_eq!(read_rows(&out).len(), POINTS);
+
+    // idempotent third pass
+    let done = run_sweep(GRID, &o).unwrap();
+    assert_eq!(done.ran, 0);
+    assert_eq!(done.skipped, POINTS);
+}
+
+#[test]
+fn seeds_are_part_of_the_resume_key() {
+    let out = std::env::temp_dir().join("owf_sweep_resume_seeds.jsonl");
+    let _ = std::fs::remove_file(&out);
+    let grid = "cbrt-t5@{3,4}:block64-absmax";
+    let one_seed = opts(out.clone());
+    run_sweep(grid, &one_seed).unwrap();
+
+    // asking for 3 seeds with resume runs only the 2 new seeds per spec
+    let mut o = opts(out.clone());
+    o.resume = true;
+    o.seeds = 3;
+    let stats = run_sweep(grid, &o).unwrap();
+    assert_eq!(stats.planned, 6);
+    assert_eq!(stats.skipped, 2);
+    assert_eq!(stats.ran, 4);
+    assert_eq!(read_rows(&out).len(), 6);
+}

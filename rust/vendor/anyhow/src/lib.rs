@@ -1,0 +1,235 @@
+//! A minimal, API-compatible subset of the `anyhow` crate, vendored so the
+//! offline build needs no registry access.  Implements exactly what this
+//! workspace uses: [`Error`], [`Result`], the [`Context`] extension trait
+//! for `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics match upstream where it matters:
+//! * `Error` does **not** implement `std::error::Error` (that is what makes
+//!   the blanket `From<E: std::error::Error>` conversion coherent);
+//! * `.context(..)` prepends context; the cause is folded into the message
+//!   exactly once (upstream renders it as a `Caused by:` chain instead —
+//!   same information, flatter form), while `From`-converted errors keep
+//!   their source chain for `Debug`/`{:#}`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Drop-in subset of `anyhow::Error`: a message plus an optional source.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// `anyhow::Result` with the usual defaultable error parameter.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from a plain message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error {
+            msg: msg.to_string(),
+            source: None,
+        }
+    }
+
+    /// Construct from a std error, preserving it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(err: E) -> Error {
+        Error {
+            msg: err.to_string(),
+            source: Some(Box::new(err)),
+        }
+    }
+
+    /// Wrap with an outer context message.  The cause is folded into the
+    /// message (so `Display` stays informative) and the source is dropped,
+    /// which keeps `Debug`'s `Caused by:` chain from repeating it.
+    pub fn context(self, context: impl fmt::Display) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+            source: None,
+        }
+    }
+
+    /// The root-cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> {
+        let mut next: Option<&(dyn StdError + 'static)> =
+            self.source.as_deref().map(|s| s as _);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for cause in self.chain() {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<String> =
+            self.chain().map(|c| c.to_string()).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::new(err)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T>
+    for std::result::Result<T, E>
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+// Coherent alongside the blanket impl because `Error` (a local type) is
+// known not to implement `std::error::Error` — the same shape upstream
+// anyhow relies on.
+impl<T> Context<T> for std::result::Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_wraps_without_duplicating_the_cause() {
+        let err = io_fail().unwrap_err();
+        let display = err.to_string();
+        assert!(display.starts_with("reading config: "));
+        // the cause is folded into the message exactly once
+        assert_eq!(format!("{err:?}"), display);
+        assert_eq!(err.chain().count(), 0);
+        // an uncontexted conversion keeps its source chain
+        let raw = Error::new(
+            std::fs::read_to_string("/definitely/not/a/file").unwrap_err(),
+        );
+        assert_eq!(raw.chain().count(), 1);
+        assert!(format!("{raw:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let err = x.context("missing").unwrap_err();
+        assert_eq!(err.to_string(), "missing");
+        let y: Option<u32> = Some(3);
+        assert_eq!(y.with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable {}", 1);
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn g() -> Result<i32> {
+            let n: i32 = "12".parse()?;
+            Ok(n)
+        }
+        assert_eq!(g().unwrap(), 12);
+    }
+}

@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 build + tests, then an `owf sweep` smoke run over a
+# 12-point grid with --resume exercised twice (the second resume must re-run
+# zero points and leave the row count unchanged).
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q (OWF_THREADS=4) =="
+OWF_THREADS=4 cargo test -q
+
+BIN=target/release/owf
+GRID='cbrt-t5@{3..6}:block{32,64,128}-absmax'   # 4 x 3 = 12 points
+OUT="$(mktemp -d)/smoke_sweep.jsonl"
+
+echo "== owf sweep smoke (12 points) =="
+"$BIN" sweep "$GRID" --samples 4096 --out "$OUT"
+ROWS=$(wc -l < "$OUT")
+if [ "$ROWS" -ne 12 ]; then
+    echo "check.sh: expected 12 rows after the first sweep, got $ROWS" >&2
+    exit 1
+fi
+
+echo "== owf sweep --resume (must re-run zero points, twice) =="
+for pass in 1 2; do
+    "$BIN" sweep "$GRID" --samples 4096 --out "$OUT" --resume \
+        | tee /dev/stderr | grep -q ' 0 ran,' || {
+        echo "check.sh: resume pass $pass re-ran points" >&2
+        exit 1
+    }
+done
+ROWS=$(wc -l < "$OUT")
+if [ "$ROWS" -ne 12 ]; then
+    echo "check.sh: resume changed the row count to $ROWS" >&2
+    exit 1
+fi
+
+echo "check.sh: OK"
