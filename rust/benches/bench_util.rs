@@ -1,6 +1,7 @@
 //! Shared timing harness for the benches (criterion is unavailable in the
 //! offline registry, so this is a minimal warmup + repeated-measurement
-//! harness printing criterion-style lines and recording JSONL).
+//! harness printing criterion-style lines) plus the machine-readable
+//! trajectory writer behind `scripts/bench.sh` (`BENCH_*.json`).
 
 use std::time::Instant;
 
@@ -30,4 +31,68 @@ pub fn bench(name: &str, items_per_rep: Option<f64>, mut f: impl FnMut()) -> f64
         times[reps - 1] * 1e3,
     );
     median
+}
+
+/// One recorded bench row: name, median seconds, optional items/rep for
+/// the Melem/s figure.
+#[allow(dead_code)]
+pub struct Row {
+    pub name: String,
+    pub median_s: f64,
+    pub items: Option<f64>,
+}
+
+/// [`bench`] that also appends to a trajectory row list.
+#[allow(dead_code)]
+pub fn bench_rec(
+    rows: &mut Vec<Row>,
+    name: &str,
+    items_per_rep: Option<f64>,
+    f: impl FnMut(),
+) -> f64 {
+    let median = bench(name, items_per_rep, f);
+    rows.push(Row {
+        name: name.to_string(),
+        median_s: median,
+        items: items_per_rep,
+    });
+    median
+}
+
+/// Write the machine-readable perf trajectory when `OWF_BENCH_JSON` names
+/// a path: `{"bench": ..., ["n": ...,] "rows": [{"name", "median_ms",
+/// "items", "melem_per_s"}, ...]}` — `scripts/bench.sh` points this at the
+/// repo-root `BENCH_<bench>.json` files future PRs diff against.  Pass
+/// `n: Some(..)` only when every row shares one element count; per-row
+/// counts are always recorded as `items`.
+#[allow(dead_code)]
+pub fn write_bench_json(bench_name: &str, n: Option<usize>, rows: &[Row]) {
+    let Ok(path) = std::env::var("OWF_BENCH_JSON") else {
+        return;
+    };
+    use owf::util::json::Json;
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut obj = Json::obj()
+                .push("name", r.name.as_str())
+                .push("median_ms", r.median_s * 1e3);
+            if let Some(items) = r.items {
+                obj = obj
+                    .push("items", items)
+                    .push("melem_per_s", items / r.median_s / 1e6);
+            }
+            obj
+        })
+        .collect();
+    let mut doc = Json::obj().push("bench", bench_name);
+    if let Some(n) = n {
+        doc = doc.push("n", n);
+    }
+    let doc = doc.push("rows", Json::Arr(rows_json));
+    if let Err(e) = std::fs::write(&path, format!("{doc}\n")) {
+        eprintln!("write_bench_json: cannot write {path}: {e}");
+    } else {
+        println!("bench trajectory written to {path}");
+    }
 }

@@ -2,21 +2,84 @@
 //! side of the paper's efficiency story (EXPERIMENTS.md §Perf).
 //!
 //! One row per format family at b=4, block absmax B=128 where applicable;
-//! throughput in Melem/s over a 4M-element Student-t tensor.
+//! throughput in Melem/s over a Student-t tensor (4M elements by default,
+//! `OWF_BENCH_N` overrides — must be a multiple of 1024).  Also benches the
+//! raw LUT kernel against the reference compare-count/binary-search path
+//! (the ≥3× trajectory rows), and *gates* every benched codebook on
+//! bit-exact LUT/reference agreement first, so `scripts/check.sh` can run
+//! this at tiny n as an offline equivalence smoke test.
+//!
+//! Set `OWF_BENCH_JSON=<path>` (as `scripts/bench.sh` does) to record the
+//! rows machine-readably.
 
 #[path = "bench_util.rs"]
 mod bench_util;
-use bench_util::bench;
+use bench_util::{bench_rec, write_bench_json, Row};
 
 use owf::coordinator::config::Scheme;
 use owf::dist::{Dist, Family};
 use owf::eval::pipeline::qdq_tensor;
+use owf::formats::Codebook;
 use owf::util::rng::Rng;
 
+/// Bit-exact LUT/reference agreement on data probes plus the shared
+/// adversarial set (`Codebook::adversarial_probes`: ±inf, NaN, subnormals,
+/// exact midpoints, ULP neighbours). Panics on mismatch — the equivalence
+/// contract enforced before any timing runs.
+fn equivalence_gate(cb: &Codebook, data: &[f32], label: &str) {
+    let mut probes: Vec<f32> = data.iter().step_by(7).copied().collect();
+    probes.extend(cb.adversarial_probes());
+    for &y in &probes {
+        let (lut, reference) = (cb.quantise(y), cb.quantise_ref(y));
+        assert_eq!(
+            lut, reference,
+            "LUT/reference disagree for {label} at y={y:?}"
+        );
+    }
+}
+
 fn main() -> anyhow::Result<()> {
-    let n = 1 << 22;
+    let n: usize = std::env::var("OWF_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1 << 22);
+    assert!(n >= 1024 && n % 1024 == 0, "OWF_BENCH_N must be k·1024");
     let mut rng = Rng::new(1);
     let data = Dist::standard(Family::StudentT, 5.0).sample_vec(&mut rng, n);
+    let mut rows: Vec<Row> = Vec::new();
+
+    // --- raw kernel: LUT vs reference nearest-neighbour (fused qdq) -------
+    println!("codebook kernel (qdq_scaled_slice), {n} elements:");
+    let mut buf = vec![0f32; n];
+    for spec in [
+        "cbrt-t5@4:block128-absmax",
+        "nf@4:block128-absmax",
+        "int@8:block128-absmax",
+    ] {
+        let scheme = Scheme::parse(spec)?;
+        let cb = scheme.build_codebook(128, Some(&data), &[])?;
+        equivalence_gate(&cb, &data, spec);
+        assert!(cb.has_lut(), "{spec}: expected the LUT fast path");
+        let reference = cb.clone().with_lut_disabled();
+        for (tag, book) in [("lut", &cb), ("ref", &reference)] {
+            // seed the buffer outside the timed closure; re-quantising the
+            // (already snapped) buffer costs the same per element as fresh
+            // data — the kernel is branchless — so no memcpy dilutes the
+            // lut/ref throughput ratio
+            buf.copy_from_slice(&data);
+            bench_rec(
+                &mut rows,
+                &format!("kernel {spec} [{tag}]"),
+                Some(n as f64),
+                || {
+                    book.qdq_scaled_slice(&mut buf, 0.8, 1.25);
+                    std::hint::black_box(buf[n / 2]);
+                },
+            );
+        }
+    }
+
+    // --- full tensor pipeline per scheme -----------------------------------
     println!("qdq hot path, {n} elements:");
     for spec in [
         "int@4:block128-absmax",
@@ -28,15 +91,25 @@ fn main() -> anyhow::Result<()> {
         "cbrt-t5@4:tensor-rms",
         "cbrt-t5@4:channel-absmax",
         "int@4:block128-absmax:sparse0.001",
+        "cbrt-t5@4:block128-absmax:compress",
         "grid@4:tensor-rms:compress",
     ] {
         let scheme = Scheme::parse(spec)?;
-        bench(spec, Some(n as f64), || {
+        if !matches!(
+            scheme.element,
+            owf::coordinator::config::Element::Grid
+        ) {
+            let cb = scheme.build_codebook(128, Some(&data), &[])?;
+            equivalence_gate(&cb, &data, spec);
+        }
+        bench_rec(&mut rows, spec, Some(n as f64), || {
             let out =
                 qdq_tensor(&scheme, &data, &[n / 1024, 1024], Some(1), &[], 1)
                     .unwrap();
             std::hint::black_box(out.sq_err);
         });
     }
+
+    write_bench_json("formats", Some(n), &rows);
     Ok(())
 }

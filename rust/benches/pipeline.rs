@@ -4,18 +4,19 @@
 //! `owf sweep` engine over a simulated grid (pure CPU, always runs).
 //!
 //! The checkpoint benches require `make artifacts`; they exit quietly
-//! otherwise.
+//! otherwise.  Set `OWF_BENCH_JSON=<path>` (as `scripts/bench.sh` does)
+//! to record the rows machine-readably.
 
 #[path = "bench_util.rs"]
 mod bench_util;
-use bench_util::bench;
+use bench_util::{bench_rec, write_bench_json, Row};
 
 use owf::coordinator::config::Scheme;
 use owf::coordinator::{run_sweep, SweepOpts};
 use owf::eval::llm::Env;
 use owf::eval::RunOpts;
 
-fn bench_sweep() {
+fn bench_sweep(rows: &mut Vec<Row>) {
     // 24 points × 2^16 samples through the full sweep engine (expansion,
     // scheduling over OWF_THREADS, JSONL streaming)
     let out = std::env::temp_dir().join("owf_bench_sweep.jsonl");
@@ -26,7 +27,8 @@ fn bench_sweep() {
         ..Default::default()
     };
     let points = 3 * 4 * 2;
-    bench(
+    bench_rec(
+        rows,
         &format!("sweep sim {points}pt x 2^16"),
         Some((points * (1 << 16)) as f64),
         || {
@@ -39,13 +41,15 @@ fn bench_sweep() {
 }
 
 fn main() -> anyhow::Result<()> {
-    bench_sweep();
+    let mut rows: Vec<Row> = Vec::new();
+    bench_sweep(&mut rows);
     let opts = RunOpts {
         eval_seqs: 16,
         ..Default::default()
     };
     let Ok(mut env) = Env::open(opts) else {
         println!("artifacts missing; run `make artifacts` first");
+        write_bench_json("pipeline", None, &rows);
         return Ok(());
     };
     for size in ["s", "m"] {
@@ -57,7 +61,8 @@ fn main() -> anyhow::Result<()> {
             "grid@4:tensor-rms:compress",
         ] {
             let scheme = Scheme::parse(spec)?;
-            bench(
+            bench_rec(
+                &mut rows,
                 &format!("direct-cast {size} {spec}"),
                 Some(n_params as f64),
                 || {
@@ -69,7 +74,8 @@ fn main() -> anyhow::Result<()> {
         }
         // quantise-only (no PJRT) to split the cost
         let scheme = Scheme::parse("cbrt-t7@4:block128-absmax")?;
-        bench(
+        bench_rec(
+            &mut rows,
             &format!("quantise-only {size}"),
             Some(n_params as f64),
             || {
@@ -79,5 +85,6 @@ fn main() -> anyhow::Result<()> {
             },
         );
     }
+    write_bench_json("pipeline", None, &rows);
     Ok(())
 }

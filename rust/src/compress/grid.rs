@@ -90,16 +90,82 @@ impl UniformGrid {
     /// Fast path for the δ search: bucket-count histogram only (no dense
     /// remap, no per-element output).
     pub fn count_histogram(&self, data: &[f32]) -> (Vec<u64>, f64) {
-        let mut counts = vec![0u64; self.max_buckets];
-        let mut sq = 0f64;
-        for &x in data {
-            let i = self.quantise(x);
-            counts[i as usize] += 1;
-            let d = x as f64 - self.dequantise(i) as f64;
-            sq += d * d;
-        }
+        let mut counts = Vec::new();
+        let sq = self.occupied_histogram_into(data, &mut counts);
         (counts, sq)
     }
+
+    /// [`UniformGrid::occupied_histogram_ranged`] with the data extremes
+    /// computed inline — for one-shot callers.  δ searches should compute
+    /// [`data_extremes`] once and call the ranged form per probe, since
+    /// the extremes do not depend on δ.
+    pub fn occupied_histogram_into(
+        &self,
+        data: &[f32],
+        counts: &mut Vec<u64>,
+    ) -> f64 {
+        let (xmin, xmax) = data_extremes(data);
+        self.occupied_histogram_ranged(data, counts, xmin, xmax)
+    }
+
+    /// The fused histogram kernel: quantise, reconstruct and count in a
+    /// single walk, into a window covering only the *occupied* bucket
+    /// range (the full 2^16 table made every δ probe allocate and zero
+    /// 512 KiB, which dominated small sweeps).  `counts` is reused caller
+    /// storage and `(xmin, xmax)` the precomputed [`data_extremes`];
+    /// zeros outside the window contribute nothing to the entropy, so
+    /// `entropy_bits(counts)` is unchanged.  Returns the squared error,
+    /// bit-identical to the unfused quantise→dequantise accumulation.
+    pub fn occupied_histogram_ranged(
+        &self,
+        data: &[f32],
+        counts: &mut Vec<u64>,
+        xmin: f32,
+        xmax: f32,
+    ) -> f64 {
+        let half = self.half();
+        // bucket bounds from the data extremes (quantise is monotone, so
+        // these bracket every finite element; NaN ignored by min/max and
+        // clamped into the window below, matching its old bucket-0 fate
+        // closely enough for an entropy model)
+        let (kmin, kmax) = if xmin <= xmax {
+            (
+                ((xmin as f64 / self.delta).round() as i64)
+                    .clamp(-half, half - 1),
+                ((xmax as f64 / self.delta).round() as i64)
+                    .clamp(-half, half - 1),
+            )
+        } else {
+            (0, 0) // empty or all-NaN input: single degenerate bucket
+        };
+        let width = (kmax - kmin + 1) as usize;
+        counts.clear();
+        counts.resize(width, 0);
+        let mut sq = 0f64;
+        for &x in data {
+            let k = ((x as f64 / self.delta).round() as i64)
+                .clamp(-half, half - 1)
+                .clamp(kmin, kmax);
+            counts[(k - kmin) as usize] += 1;
+            // reconstruct through f32 exactly as dequantise() does
+            let recon = (k as f64 * self.delta) as f32;
+            let d = x as f64 - recon as f64;
+            sq += d * d;
+        }
+        sq
+    }
+}
+
+/// Min/max of a tensor (NaN-ignoring) — the δ-independent input to the
+/// occupied-bucket window, computed once per tensor and shared across all
+/// probes of a δ search.  Returns `(+inf, -inf)` for empty/all-NaN data.
+pub fn data_extremes(data: &[f32]) -> (f32, f32) {
+    let (mut xmin, mut xmax) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in data {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+    }
+    (xmin, xmax)
 }
 
 /// Result of compressing a tensor with a uniform grid + ideal entropy coder.
@@ -113,11 +179,26 @@ pub struct GridResult {
 
 /// Evaluate one δ under the Shannon-limit model.
 pub fn evaluate_grid(data: &[f32], delta: f64) -> GridResult {
+    let mut scratch = Vec::new();
+    let (xmin, xmax) = data_extremes(data);
+    evaluate_grid_scratch(data, delta, &mut scratch, xmin, xmax)
+}
+
+/// [`evaluate_grid`] with caller-owned histogram storage and precomputed
+/// extremes — the δ search probes dozens of resolutions and reuses one
+/// buffer and one min/max pass across all of them.
+fn evaluate_grid_scratch(
+    data: &[f32],
+    delta: f64,
+    scratch: &mut Vec<u64>,
+    xmin: f32,
+    xmax: f32,
+) -> GridResult {
     let grid = UniformGrid::new(delta);
-    let (counts, sq_err) = grid.count_histogram(data);
+    let sq_err = grid.occupied_histogram_ranged(data, scratch, xmin, xmax);
     GridResult {
         delta,
-        bits_per_element: entropy_bits(&counts),
+        bits_per_element: entropy_bits(scratch),
         sq_err,
     }
 }
@@ -156,17 +237,42 @@ pub fn evaluate_grid_with_model(
 }
 
 /// Search δ so the Shannon-limit rate hits `target_bits` per element.
+/// Probe evaluations are memoised by the δ bit pattern (golden-section
+/// revisits its bracket ends and the final winner) and share one
+/// histogram scratch buffer, so each distinct δ costs exactly one fused
+/// pass over the data.
 pub fn grid_for_target_bits(data: &[f32], target_bits: f64) -> GridResult {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
     let rms = crate::util::stats::rms(data).max(1e-12);
     // High-rate heuristic: H ≈ h(p) - log2 δ ⇒ δ ≈ rms · 2^-b · c.
     let centre = rms * 2f64.powf(-target_bits) * 3.5;
     let (lo, hi) = (centre.ln() - 2.5, centre.ln() + 2.5);
+    let (xmin, xmax) = data_extremes(data); // one min/max pass, all probes
+    let state: RefCell<(HashMap<u64, GridResult>, Vec<u64>)> =
+        RefCell::new((HashMap::new(), Vec::new()));
+    let eval = |ldelta: f64| -> GridResult {
+        let key = ldelta.to_bits();
+        let mut guard = state.borrow_mut();
+        if let Some(r) = guard.0.get(&key) {
+            return *r;
+        }
+        let (memo, scratch) = &mut *guard;
+        let r = evaluate_grid_scratch(
+            data,
+            ldelta.exp(),
+            scratch,
+            xmin,
+            xmax,
+        );
+        memo.insert(key, r);
+        r
+    };
     let objective = |ldelta: f64| {
-        let r = evaluate_grid(data, ldelta.exp());
-        (r.bits_per_element - target_bits).powi(2)
+        (eval(ldelta).bits_per_element - target_bits).powi(2)
     };
     let (best, _) = golden_section(lo, hi, 30, &objective);
-    evaluate_grid(data, best.exp())
+    eval(best)
 }
 
 #[cfg(test)]
@@ -237,6 +343,39 @@ mod tests {
             sampled.bits_per_element,
             ideal.bits_per_element
         );
+    }
+
+    #[test]
+    fn occupied_histogram_matches_naive_reference() {
+        let mut rng = Rng::new(9);
+        let data = Dist::standard(Family::StudentT, 5.0)
+            .sample_vec(&mut rng, 4096);
+        for delta in [0.01, 0.1, 1.0] {
+            let grid = UniformGrid::new(delta);
+            let mut counts = Vec::new();
+            let sq = grid.occupied_histogram_into(&data, &mut counts);
+            // naive reference: full-table quantise→dequantise accumulation
+            let mut full = vec![0u64; grid.max_buckets];
+            let mut want_sq = 0f64;
+            for &x in &data {
+                let i = grid.quantise(x);
+                full[i as usize] += 1;
+                let d = x as f64 - grid.dequantise(i) as f64;
+                want_sq += d * d;
+            }
+            assert_eq!(sq, want_sq, "sq must be bit-identical at δ={delta}");
+            assert_eq!(
+                crate::compress::entropy_bits(&counts),
+                crate::compress::entropy_bits(&full),
+                "windowing must not change the entropy at δ={delta}"
+            );
+            // the window holds exactly the occupied buckets, in order
+            let nonzero: Vec<u64> =
+                full.iter().copied().filter(|&c| c > 0).collect();
+            let windowed: Vec<u64> =
+                counts.iter().copied().filter(|&c| c > 0).collect();
+            assert_eq!(nonzero, windowed);
+        }
     }
 
     #[test]

@@ -6,6 +6,7 @@
 pub mod grid;
 pub mod huffman;
 pub mod rans;
+pub mod tables;
 
 /// Shannon entropy (bits/symbol) of a count histogram.
 pub fn entropy_bits(counts: &[u64]) -> f64 {

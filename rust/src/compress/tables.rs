@@ -1,0 +1,96 @@
+//! Memoised entropy-coder table construction, keyed by the exact count
+//! histogram.  Canonical-Huffman code building is O(K log K) and a rANS
+//! model materialises a 2^12-slot symbol table; the figure batteries and
+//! repeated sweep points rebuild them for *identical* histograms (same
+//! codebook, same data seed), so construction is cached process-wide.
+//!
+//! Keys are the full `Vec<u64>` count vector — exact, collision-free and
+//! cheap next to table construction.  The cache is a leak guard, not an
+//! LRU: it resets when [`MAX_ENTRIES`] distinct histograms accumulate.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::compress::huffman::HuffmanCode;
+use crate::compress::rans::RansModel;
+
+/// Distinct histograms cached per coder before the cache resets.
+pub const MAX_ENTRIES: usize = 512;
+
+type Cache<T> = OnceLock<Mutex<HashMap<Vec<u64>, Arc<T>>>>;
+
+static HUFFMAN: Cache<HuffmanCode> = OnceLock::new();
+static RANS: Cache<RansModel> = OnceLock::new();
+
+fn cached<T>(
+    cache: &'static Cache<T>,
+    counts: &[u64],
+    build: impl FnOnce(&[u64]) -> T,
+) -> Arc<T> {
+    let map = cache.get_or_init(|| Mutex::new(HashMap::new()));
+    {
+        let guard = map.lock().unwrap();
+        if let Some(hit) = guard.get(counts) {
+            return Arc::clone(hit);
+        }
+    }
+    // build outside the lock: construction dominates, and a duplicate
+    // build on a race is harmless — entry() keeps the first-inserted
+    // table and the loser's freshly built Arc is simply dropped
+    let built = Arc::new(build(counts));
+    let mut guard = map.lock().unwrap();
+    if guard.len() >= MAX_ENTRIES {
+        guard.clear();
+    }
+    Arc::clone(guard.entry(counts.to_vec()).or_insert(built))
+}
+
+/// Memoised [`HuffmanCode::from_counts`].
+pub fn huffman_for(counts: &[u64]) -> Arc<HuffmanCode> {
+    cached(&HUFFMAN, counts, HuffmanCode::from_counts)
+}
+
+/// Memoised [`RansModel::from_counts`].
+pub fn rans_for(counts: &[u64]) -> Arc<RansModel> {
+    cached(&RANS, counts, RansModel::from_counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_histograms_share_one_table() {
+        let counts = vec![7u64, 900, 13, 41, 0, 5];
+        let a = huffman_for(&counts);
+        let b = huffman_for(&counts);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must be a cache hit");
+        assert_eq!(a.lengths, HuffmanCode::from_counts(&counts).lengths);
+        let ra = rans_for(&counts);
+        let rb = rans_for(&counts);
+        assert!(Arc::ptr_eq(&ra, &rb));
+        assert_eq!(ra.freq, RansModel::from_counts(&counts).freq);
+    }
+
+    #[test]
+    fn different_histograms_get_different_tables() {
+        let a = huffman_for(&[1, 2, 3]);
+        let b = huffman_for(&[3, 2, 1]);
+        assert!(!Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn cached_tables_round_trip() {
+        let counts = vec![100u64, 50, 25, 25];
+        let symbols: Vec<u16> = (0..200u16).map(|i| i % 4).collect();
+        let huff = huffman_for(&counts);
+        let (bytes, _) = huff.encode(&symbols);
+        assert_eq!(huff.decode(&bytes, symbols.len()), symbols);
+        let model = rans_for(&counts);
+        let enc = crate::compress::rans::rans_encode(&model, &symbols);
+        assert_eq!(
+            crate::compress::rans::rans_decode(&model, &enc, symbols.len()),
+            symbols
+        );
+    }
+}

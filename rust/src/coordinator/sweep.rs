@@ -82,17 +82,28 @@ pub struct SweepStats {
     pub failed: usize,
 }
 
+/// Bumped whenever a quantisation change alters the reported metrics for
+/// the same `(scheme, size, seed)` point — e.g. the PR 3 fused encode
+/// (reciprocal-multiply indices) and dense-stream `:compress` entropy —
+/// so `--resume` reruns rows computed under older definitions instead of
+/// silently mixing incompatible metrics in one JSONL.
+pub const METRICS_VERSION: u32 = 2;
+
 /// The run-parameter tag folded into every resume key, so rows computed
-/// under different `--samples` / `--eval-seqs` are not silently reused.
-/// Sim tags use the *effective* sample count (the engine floors tiny
-/// `--samples` at [`sim::MIN_SWEEP_SAMPLES`]), so the tag always describes
-/// the computation that actually ran.
+/// under different `--samples` / `--eval-seqs` — or an older
+/// [`METRICS_VERSION`] — are not silently reused.  Sim tags use the
+/// *effective* sample count (the engine floors tiny `--samples` at
+/// [`sim::MIN_SWEEP_SAMPLES`]), so the tag always describes the
+/// computation that actually ran.
 pub fn params_tag(opts: &SweepOpts) -> String {
     match opts.data {
-        SweepData::Sim => {
-            format!("n{}", opts.samples.max(sim::MIN_SWEEP_SAMPLES))
+        SweepData::Sim => format!(
+            "n{}-v{METRICS_VERSION}",
+            opts.samples.max(sim::MIN_SWEEP_SAMPLES)
+        ),
+        SweepData::Llm => {
+            format!("e{}-v{METRICS_VERSION}", opts.eval_seqs)
         }
-        SweepData::Llm => format!("e{}", opts.eval_seqs),
     }
 }
 

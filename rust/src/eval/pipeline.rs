@@ -9,7 +9,10 @@ use anyhow::{bail, Result};
 use crate::compress::{entropy_bits, grid::grid_for_target_bits};
 use crate::coordinator::config::{Element, Scheme};
 use crate::dist::fit::{grid_then_golden, scale_search_grid};
-use crate::quant::outliers::{qdq_with_outliers, OutlierCriterion, SparseOutliers};
+use crate::quant::outliers::{
+    qdq_outliers_with_hist, qdq_with_outliers, OutlierCriterion,
+    SparseOutliers,
+};
 use crate::quant::rotation::{rotate_2d, rotate_2d_inverse, RandomRotation};
 use crate::quant::Quantiser;
 use crate::scaling::Granularity;
@@ -51,14 +54,16 @@ pub fn qdq_tensor(
     };
 
     // --- channel granularity: make scale groups contiguous -----------------
+    // (`work` is moved through, so tensors that need no relayout cost no
+    // extra copy on either side of the quantiser)
     let (mut flat, channel_len, transposed) = prepare_layout(
-        &work,
+        work,
         shape,
         channel_axis,
         scheme.granularity,
     );
 
-    let mut result = match &scheme.element {
+    let result = match &scheme.element {
         Element::Grid => qdq_grid(scheme, &flat)?,
         _ => qdq_codebook(scheme, &mut flat, channel_len, fisher)?,
     };
@@ -67,24 +72,27 @@ pub fn qdq_tensor(
     // (handled inside qdq_codebook for the dense path)
 
     // --- undo layout / rotation -------------------------------------------
-    let mut recon = restore_layout(&result.recon, shape, transposed);
+    let mut recon = restore_layout(result.recon, shape, transposed);
     if let Some((v, w)) = rot {
         rotate_2d_inverse(&mut recon, shape[0], shape[1], &v, &w);
     }
-    result.sq_err = crate::util::stats::sq_err(data, &recon);
-    result.recon = recon;
-    Ok(result)
+    let sq_err = crate::util::stats::sq_err(data, &recon);
+    Ok(TensorQdq {
+        recon,
+        bits: result.bits,
+        sq_err,
+    })
 }
 
 /// Transpose 2-D data when channel scaling wants column groups.
 fn prepare_layout(
-    data: &[f32],
+    data: Vec<f32>,
     shape: &[usize],
     channel_axis: Option<usize>,
     granularity: Granularity,
 ) -> (Vec<f32>, usize, bool) {
     if granularity != Granularity::Channel {
-        return (data.to_vec(), 0, false);
+        return (data, 0, false);
     }
     match (shape.len(), channel_axis) {
         (2, Some(1)) => {
@@ -98,18 +106,24 @@ fn prepare_layout(
             }
             (t, rows, true)
         }
-        (2, Some(0)) => (data.to_vec(), shape[1], false),
-        _ => (data.to_vec(), data.len(), false), // 1-D: tensor fallback
+        (2, Some(0)) => {
+            let cl = shape[1];
+            (data, cl, false)
+        }
+        _ => {
+            let n = data.len();
+            (data, n, false) // 1-D: tensor fallback
+        }
     }
 }
 
 fn restore_layout(
-    data: &[f32],
+    data: Vec<f32>,
     shape: &[usize],
     transposed: bool,
 ) -> Vec<f32> {
     if !transposed {
-        return data.to_vec();
+        return data;
     }
     let (rows, cols) = (shape[0], shape[1]);
     let mut out = vec![0f32; data.len()];
@@ -165,23 +179,41 @@ fn qdq_codebook(
             OutlierCriterion::FisherWeighted
         },
     };
-    let (recon, mut bits) = if scheme.sparse > 0.0 {
+    let (recon, bits) = if scheme.sparse > 0.0 && scheme.compress {
+        // fused dense+sparse pass: one selection, one encode; the element
+        // index cost is replaced by the entropy of the dense stream
+        // (outliers are stored raw and zeroed before encoding, matching
+        // what the coder actually sees)
+        let (recon, bits, counts) = qdq_outliers_with_hist(
+            &quantiser,
+            &sparse,
+            flat,
+            fisher,
+            channel_len,
+        );
+        let h = entropy_bits(&counts);
+        (recon, bits - quantiser.codebook.storage_bits() + h)
+    } else if scheme.sparse > 0.0 {
         qdq_with_outliers(&quantiser, &sparse, flat, fisher, channel_len)
+    } else if scheme.compress {
+        // fused single pass: scales, indices and the index histogram come
+        // out of one kernel; the reconstruction is decoded from the same
+        // indices (bit-identical to the fused qdq — both paths multiply by
+        // the same reciprocal), so qdq never re-walks the data
+        let (enc, stats) = quantiser.encode_with_stats(flat, channel_len);
+        let h = entropy_bits(&stats.counts);
+        let bits = quantiser.bits_per_element(flat.len(), channel_len)
+            - quantiser.codebook.storage_bits()
+            + h;
+        return Ok(TensorQdq {
+            recon: quantiser.decode(&enc),
+            bits,
+            sq_err: stats.sq_err,
+        });
     } else {
         let recon = quantiser.qdq(flat, channel_len);
         (recon, quantiser.bits_per_element(flat.len(), channel_len))
     };
-
-    // compression: replace the element-index cost with its entropy rate
-    if scheme.compress {
-        let enc = quantiser.encode(flat, channel_len);
-        let mut counts = vec![0u64; quantiser.codebook.len()];
-        for &i in &enc.indices {
-            counts[i as usize] += 1;
-        }
-        let h = entropy_bits(&counts);
-        bits = bits - quantiser.codebook.storage_bits() + h;
-    }
 
     let sq_err = crate::util::stats::sq_err(flat, &recon);
     Ok(TensorQdq {
@@ -301,6 +333,31 @@ mod tests {
         assert!(compressed.bits < plain.bits - 0.5);
         // identical reconstruction (compression is lossless)
         assert_eq!(plain.recon, compressed.recon);
+    }
+
+    #[test]
+    fn sparse_compress_prices_the_dense_stream() {
+        // with a huge spike, plain tensor-absmax compresses to near zero
+        // bits (every index collapses to the middle); the sparse overlay
+        // removes the spike from the dense stream, so its entropy — and
+        // the honest bits figure — must be *higher*, not lower
+        let mut data = data_2d(64, 64, 9);
+        data[100] = 500.0;
+        let shape = [64usize, 64];
+        let plain_c = run("int@4:tensor-absmax:compress", &data, &shape);
+        let sparse_c = run(
+            "int@4:tensor-absmax:compress,sparse0.001",
+            &data,
+            &shape,
+        );
+        assert!(
+            sparse_c.bits > plain_c.bits,
+            "dense-stream entropy {} should exceed spiked entropy {}",
+            sparse_c.bits,
+            plain_c.bits
+        );
+        // and the sparse reconstruction is far more accurate
+        assert!(sparse_c.sq_err < plain_c.sq_err * 0.5);
     }
 
     #[test]

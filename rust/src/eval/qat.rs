@@ -46,6 +46,9 @@ impl QatKind {
 
 /// Pad a codebook to the artifact's 16-slot LUT by duplicating codepoints
 /// (nearest-neighbour semantics are unchanged; verified in python tests).
+/// The artifact requires sorted slots, so sort unconditionally — callers
+/// pass `Codebook::points()` (already sorted) but this is a cold path and
+/// the guarantee is worth one ≤16-element sort.
 fn pad_codebook(points: &[f32]) -> Vec<f32> {
     let mut out = points.to_vec();
     while out.len() < 16 {

@@ -5,8 +5,7 @@
 use anyhow::Result;
 
 use crate::compress::grid::grid_for_target_bits;
-use crate::compress::huffman::HuffmanCode;
-use crate::compress::rans::{rans_decode, rans_encode, RansModel};
+use crate::compress::rans::{rans_decode, rans_encode};
 use crate::compress::{entropy_bits, information_content, smoothed_probs};
 use crate::coordinator::config::{Element, Scheme};
 use crate::coordinator::{fmt, Report};
@@ -146,7 +145,10 @@ pub fn fig2_curves(opts: &RunOpts) -> Result<Report> {
 }
 
 fn qdq_all(cb: &crate::formats::Codebook, data: &[f32]) -> Vec<f32> {
-    data.iter().map(|&x| cb.qdq(x)).collect()
+    // batch entry point: one LUT dispatch per tensor, not per element
+    let mut out = data.to_vec();
+    cb.qdq_slice(&mut out);
+    out
 }
 
 fn block_scale_absmax(data: &[f32], block: usize) -> Vec<f32> {
@@ -625,17 +627,19 @@ pub fn fig24_compressors(opts: &RunOpts) -> Result<Report> {
     let data = sample(&d, opts.samples.min(1 << 20), 0xF24);
     for b in [3u32, 4, 5, 6] {
         let cb = cbrt_rms(Family::StudentT, NU, b, Variant::Symmetric, CBRT_ALPHA);
-        let symbols: Vec<u16> =
-            data.iter().map(|&x| cb.quantise(x)).collect();
+        let mut symbols: Vec<u16> = Vec::new();
+        cb.quantise_slice(&data, &mut symbols);
         let mut counts = vec![0u64; cb.len()];
         for &s in &symbols {
             counts[s as usize] += 1;
         }
         let h = entropy_bits(&counts);
-        let huff = HuffmanCode::from_counts(&counts);
+        // memoised table construction: repeat invocations of the battery
+        // (report runs, tests) reuse the cached code for this histogram
+        let huff = crate::compress::tables::huffman_for(&counts);
         let (hbytes, _) = huff.encode(&symbols);
         let h_rate = hbytes.len() as f64 * 8.0 / symbols.len() as f64;
-        let model = RansModel::from_counts(&counts);
+        let model = crate::compress::tables::rans_for(&counts);
         let renc = rans_encode(&model, &symbols);
         // verify losslessness in passing
         assert_eq!(

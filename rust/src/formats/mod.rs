@@ -9,6 +9,33 @@
 //! | [`cbrt`] | the paper's √[3]p Normal / Laplace / Student-t for RMS, absmax and signmax scaling |
 //! | [`quantile`] | quantile-rule baselines: NF4, SF4, AF4 |
 //! | [`lloyd`] | (Fisher-weighted) Lloyd-Max, k-means++ / uniform init |
+//!
+//! # The LUT kernel layer
+//!
+//! Nearest-neighbour search is served by a precomputed uniform-bucket
+//! lookup table ([`Codebook::has_lut`]) built once per codebook.  The
+//! invariants every path relies on:
+//!
+//! * **Bucket grid.** Buckets tile the midpoint span `[mids[0],
+//!   mids[last]]`; `bucket(y) = ⌊(y − lo)·inv_step⌋` saturated into
+//!   `[0, L−1]` (Rust's float→int cast maps NaN and negatives to 0, and
+//!   +∞ to the top bucket).  The bucket map is monotone in `y`, so a
+//!   midpoint assigned to an earlier bucket is `<= y` for every `y` in a
+//!   later bucket — construction and query use the *same* float
+//!   expression, which is what makes the argument sound under rounding.
+//! * **Bucket width.** `L` starts at ~4× the codepoint count and doubles
+//!   until **every bucket holds at most one midpoint** (or the 2^16-bucket
+//!   budget is exhausted, in which case the codebook simply keeps the
+//!   reference path — correctness never depends on the LUT existing).
+//! * **Tie-break.** The stored per-bucket value is the number of midpoints
+//!   in strictly earlier buckets; the (at most one) midpoint inside the
+//!   bucket is resolved with a single `y >= mid` comparison, reproducing
+//!   the reference "ties go to the upper codepoint" rule exactly.
+//! * **Bit-exactness contract.** `quantise` (LUT) and [`Codebook::quantise_ref`]
+//!   (compare-count / binary search) return identical indices for *every*
+//!   `f32` input, including ±∞, subnormals, exact midpoints and NaN
+//!   (NaN maps to index 0 on all paths).  `rust/tests/lut_props.rs` and the
+//!   bench smoke gate in `benches/formats.rs` enforce this offline.
 
 pub mod cbrt;
 pub mod float;
@@ -41,6 +68,98 @@ impl Variant {
     }
 }
 
+/// Precomputed uniform-bucket lookup table over the midpoint span — the
+/// branchless nearest-neighbour kernel (module docs list the invariants).
+#[derive(Clone, Debug)]
+struct Lut {
+    /// Bucket-grid origin: the lowest midpoint.
+    lo: f32,
+    /// Buckets per unit: `bucket(y) = ⌊(y − lo)·inv_step⌋`, saturated.
+    inv_step: f32,
+    /// Per bucket: number of midpoints in strictly earlier buckets.
+    base: Vec<u16>,
+    /// Midpoints plus a trailing NaN sentinel so the boundary comparison
+    /// `y >= pad_mids[base]` is false (never counts) once every midpoint
+    /// is already accounted for.
+    pad_mids: Vec<f32>,
+}
+
+impl Lut {
+    /// Budget on table length; codebooks whose midpoint density exceeds it
+    /// (e.g. normalised E5M2, whose subnormal gaps are ~1e-10 of the span)
+    /// keep the reference path.
+    const MAX_BUCKETS: usize = 1 << 16;
+
+    fn build(mids: &[f32]) -> Option<Lut> {
+        let n = mids.len();
+        if n == 0 || n >= u16::MAX as usize {
+            return None;
+        }
+        let (lo, hi) = (mids[0], mids[n - 1]);
+        if !lo.is_finite() || !hi.is_finite() {
+            return None;
+        }
+        let span = hi - lo;
+        if !(span > 0.0) {
+            // degenerate span: one midpoint (or float-equal midpoints,
+            // which one comparison cannot tell apart) — reference path
+            return None;
+        }
+        let mut len = (4 * (n + 1)).next_power_of_two().max(64);
+        while len <= Self::MAX_BUCKETS {
+            let inv_step = len as f32 / span;
+            if !inv_step.is_finite() {
+                return None; // span subnormal enough to overflow the rate
+            }
+            // Assign each midpoint to a bucket with the *exact* query
+            // expression; retry with finer buckets on any collision.
+            let mut per_bucket = vec![0u16; len];
+            let mut ok = true;
+            for &m in mids {
+                let t = (((m - lo) * inv_step) as usize).min(len - 1);
+                per_bucket[t] += 1;
+                if per_bucket[t] > 1 {
+                    ok = false;
+                    break;
+                }
+            }
+            if !ok {
+                len *= 2;
+                continue;
+            }
+            let mut base = vec![0u16; len];
+            let mut acc = 0u16;
+            for (slot, c) in base.iter_mut().zip(&per_bucket) {
+                *slot = acc;
+                acc += c;
+            }
+            let mut pad_mids = mids.to_vec();
+            pad_mids.push(f32::NAN);
+            return Some(Lut {
+                lo,
+                inv_step,
+                base,
+                pad_mids,
+            });
+        }
+        None
+    }
+
+    /// Nearest-codepoint index: one multiply, one table load, at most one
+    /// midpoint comparison.  NaN/negative casts hit bucket 0 and the NaN
+    /// sentinel comparison is always false, so no input needs a branch.
+    #[inline(always)]
+    fn lookup(&self, y: f32) -> u16 {
+        let t = (((y - self.lo) * self.inv_step) as usize)
+            .min(self.base.len() - 1);
+        // SAFETY: t < base.len() by the min above; base[t] <= mids.len(),
+        // and pad_mids has exactly mids.len() + 1 entries.
+        let b = unsafe { *self.base.get_unchecked(t) };
+        let m = unsafe { *self.pad_mids.get_unchecked(b as usize) };
+        b + (y >= m) as u16
+    }
+}
+
 /// A finite, sorted set of codepoints plus nearest-neighbour machinery.
 ///
 /// `storage_bits` is the bit width of the *stored index* (may exceed
@@ -50,6 +169,7 @@ pub struct Codebook {
     points: Vec<f32>,
     mids: Vec<f32>,
     storage_bits: f64,
+    lut: Option<Lut>,
 }
 
 impl Codebook {
@@ -59,14 +179,16 @@ impl Codebook {
         assert!(!points.is_empty(), "empty codebook");
         points.sort_by(|a, b| a.total_cmp(b));
         points.dedup();
-        let mids = points
+        let mids: Vec<f32> = points
             .windows(2)
             .map(|w| 0.5 * (w[0] + w[1]))
             .collect();
+        let lut = Lut::build(&mids);
         Codebook {
             points,
             mids,
             storage_bits,
+            lut,
         }
     }
 
@@ -106,24 +228,57 @@ impl Codebook {
     }
 
     /// Index of the nearest codepoint (ties to the upper codepoint, matching
-    /// `jnp.searchsorted(mids, y, side="right")` in the Pallas kernel).
+    /// `jnp.searchsorted(mids, y, side="right")` in the Pallas kernel;
+    /// NaN maps to index 0).  Served from the precomputed LUT when one
+    /// exists — bit-exact with [`Codebook::quantise_ref`] by contract.
+    ///
+    /// Hot loops should prefer the batch entry points
+    /// ([`Codebook::quantise_slice`], [`Codebook::qdq_scaled_slice`],
+    /// [`Codebook::encode_block`]) which hoist the LUT dispatch out of the
+    /// per-element path; the scalar form is for one-offs and tests.
     #[inline]
     pub fn quantise(&self, y: f32) -> u16 {
+        match &self.lut {
+            Some(lut) => lut.lookup(y),
+            None => self.quantise_ref(y),
+        }
+    }
+
+    /// Reference nearest-codepoint search (compare-count for small books,
+    /// binary search above 32 midpoints) — the LUT-free oracle the
+    /// equivalence tests and the bench smoke gate compare against.
+    #[inline]
+    pub fn quantise_ref(&self, y: f32) -> u16 {
         let mids = &self.mids;
         if mids.len() <= 32 {
-            // branchless compare-count — the hot path for real formats
+            // branchless compare-count (NaN compares false ⇒ index 0)
             let mut idx = 0u16;
             for &m in mids {
                 idx += (y >= m) as u16;
             }
             idx
         } else {
+            if y.is_nan() {
+                return 0; // match the compare-count path's NaN convention
+            }
             match mids.binary_search_by(|m| m.total_cmp(&y)) {
                 // y == mids[i]: tie goes up
                 Ok(i) => (i + 1) as u16,
                 Err(i) => i as u16,
             }
         }
+    }
+
+    /// True when the uniform-bucket LUT fast path is active.
+    pub fn has_lut(&self) -> bool {
+        self.lut.is_some()
+    }
+
+    /// Drop the LUT so every lookup takes the reference path — for
+    /// benchmarking the kernel speedup and for equivalence tests only.
+    pub fn with_lut_disabled(mut self) -> Codebook {
+        self.lut = None;
+        self
     }
 
     #[inline]
@@ -136,24 +291,39 @@ impl Codebook {
         self.points[self.quantise(y) as usize]
     }
 
+    /// The batch nearest-neighbour entry point — hot loops go through this
+    /// (or the fused [`Codebook::qdq_scaled_slice`] /
+    /// [`Codebook::encode_block`]) rather than scalar [`Codebook::quantise`]
+    /// so the LUT dispatch happens once per slice, not once per element.
     pub fn quantise_slice(&self, ys: &[f32], out: &mut Vec<u16>) {
         out.clear();
-        out.extend(ys.iter().map(|&y| self.quantise(y)));
-    }
-
-    pub fn qdq_slice(&self, ys: &mut [f32]) {
-        for y in ys {
-            *y = self.qdq(*y);
+        out.reserve(ys.len());
+        match &self.lut {
+            Some(lut) => out.extend(ys.iter().map(|&y| lut.lookup(y))),
+            None => out.extend(ys.iter().map(|&y| self.quantise_ref(y))),
         }
     }
 
+    pub fn qdq_slice(&self, ys: &mut [f32]) {
+        // fused batch path (scale 1 ⇒ plain nearest-codepoint snap)
+        self.qdq_scaled_slice(ys, 1.0, 1.0);
+    }
+
     /// Fused scale→quantise→descale over a slice: `x ← Q(x·inv)·s`.
-    /// The hot inner loop of every block qdq; for small codebooks the
-    /// midpoints live in a fixed-size local array so the compare-count
-    /// loop has static bounds and vectorises.
+    /// The hot inner loop of every block qdq.  Tiered: LUT kernel when
+    /// available, else a padded compare-count loop with static bounds
+    /// (vectorises), else scalar binary search.
     pub fn qdq_scaled_slice(&self, xs: &mut [f32], inv: f32, s: f32) {
-        let mids = &self.mids;
         let pts = &self.points;
+        if let Some(lut) = &self.lut {
+            for x in xs.iter_mut() {
+                let idx = lut.lookup(*x * inv);
+                // SAFETY: lookup returns < points.len()
+                *x = unsafe { *pts.get_unchecked(idx as usize) } * s;
+            }
+            return;
+        }
+        let mids = &self.mids;
         if mids.len() <= 32 {
             // copy midpoints into a padded local array (pad with +inf so
             // padded lanes never increment the index)
@@ -175,6 +345,51 @@ impl Codebook {
                 *x = self.qdq(*x * inv) * s;
             }
         }
+    }
+
+    /// Fused encode kernel for one scale block: quantise `block·inv`,
+    /// write indices into `out`, bump the index histogram and accumulate
+    /// the squared reconstruction error of `points[idx]·s` — one pass,
+    /// no intermediate buffers (the [`crate::quant::Quantiser`] hot loop).
+    pub fn encode_block(
+        &self,
+        block: &[f32],
+        inv: f32,
+        s: f32,
+        out: &mut [u16],
+        sq_err: &mut f64,
+        counts: &mut [u64],
+    ) {
+        debug_assert_eq!(block.len(), out.len());
+        // hard assert: the unchecked histogram write below relies on it
+        assert_eq!(counts.len(), self.points.len());
+        let pts = &self.points;
+        let mut sq = *sq_err;
+        match &self.lut {
+            Some(lut) => {
+                for (&x, slot) in block.iter().zip(out.iter_mut()) {
+                    let idx = lut.lookup(x * inv);
+                    *slot = idx;
+                    // SAFETY: lookup returns < points.len() == counts.len()
+                    let p = unsafe { *pts.get_unchecked(idx as usize) };
+                    unsafe {
+                        *counts.get_unchecked_mut(idx as usize) += 1;
+                    }
+                    let d = x as f64 - (p * s) as f64;
+                    sq += d * d;
+                }
+            }
+            None => {
+                for (&x, slot) in block.iter().zip(out.iter_mut()) {
+                    let idx = self.quantise_ref(x * inv);
+                    *slot = idx;
+                    counts[idx as usize] += 1;
+                    let d = x as f64 - (pts[idx as usize] * s) as f64;
+                    sq += d * d;
+                }
+            }
+        }
+        *sq_err = sq;
     }
 
     /// Largest |codepoint| (the representable range).
@@ -212,14 +427,74 @@ impl Codebook {
         Codebook::with_bits(pts, bits)
     }
 
+    /// The adversarial probe set for LUT/reference equivalence checking —
+    /// the single source of truth shared by the property tests
+    /// (`rust/tests/lut_props.rs`), the unit tests and the bench smoke gate
+    /// (`benches/formats.rs`): IEEE specials, subnormals, every codepoint
+    /// and exact midpoint (the tie-break inputs) plus their one-ULP
+    /// neighbours.
+    pub fn adversarial_probes(&self) -> Vec<f32> {
+        let mut ys = vec![
+            0.0,
+            -0.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            -f32::NAN,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            1e-45, // smallest positive subnormal
+            -1e-45,
+            f32::MAX,
+            f32::MIN,
+            1.0,
+            -1.0,
+        ];
+        for &p in &self.points {
+            ys.extend([p, ulp_step(p, true), ulp_step(p, false)]);
+        }
+        for &m in &self.mids {
+            ys.extend([m, ulp_step(m, true), ulp_step(m, false)]);
+        }
+        ys
+    }
+
     /// Quantisation-bucket populations for a batch of scaled samples
     /// (probability model for entropy coding / fig. 5 histograms).
     pub fn bucket_counts(&self, ys: &[f32]) -> Vec<u64> {
         let mut counts = vec![0u64; self.len()];
-        for &y in ys {
-            counts[self.quantise(y) as usize] += 1;
+        match &self.lut {
+            Some(lut) => {
+                for &y in ys {
+                    counts[lut.lookup(y) as usize] += 1;
+                }
+            }
+            None => {
+                for &y in ys {
+                    counts[self.quantise_ref(y) as usize] += 1;
+                }
+            }
         }
         counts
+    }
+}
+
+/// One ULP toward +∞ (`up`) or −∞ from a finite `x` (non-finite inputs
+/// pass through) — probe-set helper for the equivalence contract.
+fn ulp_step(x: f32, up: bool) -> f32 {
+    if !x.is_finite() {
+        return x;
+    }
+    if x == 0.0 {
+        let tiny = f32::from_bits(1);
+        return if up { tiny } else { -tiny };
+    }
+    let bits = x.to_bits();
+    // moving the bit pattern away from zero grows the magnitude
+    if (x >= 0.0) == up {
+        f32::from_bits(bits + 1)
+    } else {
+        f32::from_bits(bits - 1)
     }
 }
 
@@ -317,5 +592,75 @@ mod tests {
         let counts = cb.bucket_counts(&ys);
         assert_eq!(counts.iter().sum::<u64>() as usize, ys.len());
         assert_eq!(counts, vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn lut_active_for_real_formats_and_matches_reference() {
+        use crate::formats::int::int_codebook;
+        let cb = int_codebook(4, Variant::Asymmetric);
+        assert!(cb.has_lut(), "int4 must take the LUT path");
+        // shared adversarial set (specials, midpoints, ULP neighbours)
+        // plus a dense linear sweep
+        let mut probes = cb.adversarial_probes();
+        for i in -400..400 {
+            probes.push(i as f32 * 0.005);
+        }
+        for &y in &probes {
+            assert_eq!(
+                cb.quantise(y),
+                cb.quantise_ref(y),
+                "LUT vs reference at y={y:?}"
+            );
+        }
+        // NaN contract: index 0 everywhere
+        assert_eq!(cb.quantise(f32::NAN), 0);
+        assert_eq!(cb.quantise_ref(f32::NAN), 0);
+        let big = Codebook::new((0..64).map(|i| i as f32 * 0.1).collect());
+        assert_eq!(big.quantise_ref(f32::NAN), 0);
+    }
+
+    #[test]
+    fn lut_disabled_still_agrees() {
+        let cb = Codebook::new(vec![-1.0, -0.4, -0.1, 0.0, 0.2, 0.7, 1.0]);
+        let plain = cb.clone().with_lut_disabled();
+        assert!(cb.has_lut() && !plain.has_lut());
+        for i in -50..50 {
+            let y = i as f32 * 0.043;
+            assert_eq!(cb.quantise(y), plain.quantise(y));
+        }
+    }
+
+    #[test]
+    fn encode_block_matches_scalar_machinery() {
+        let cb = crate::formats::int::int_codebook(4, Variant::Symmetric);
+        let block: Vec<f32> = (0..64).map(|i| (i as f32 - 31.0) * 0.11).collect();
+        let (inv, s) = (1.0 / 3.7, 3.7f32);
+        let mut out = vec![0u16; block.len()];
+        let mut sq = 0f64;
+        let mut counts = vec![0u64; cb.len()];
+        cb.encode_block(&block, inv, s, &mut out, &mut sq, &mut counts);
+        let mut want_sq = 0f64;
+        for (i, &x) in block.iter().enumerate() {
+            let idx = cb.quantise(x * inv);
+            assert_eq!(out[i], idx);
+            let d = x as f64 - (cb.dequantise(idx) * s) as f64;
+            want_sq += d * d;
+        }
+        assert_eq!(sq, want_sq);
+        assert_eq!(counts.iter().sum::<u64>() as usize, block.len());
+    }
+
+    #[test]
+    fn degenerate_codebooks_fall_back() {
+        // single point: no midpoints, no LUT, always index 0
+        let one = Codebook::new(vec![0.5]);
+        assert!(!one.has_lut());
+        assert_eq!(one.quantise(99.0), 0);
+        // non-finite codepoints: LUT refused, paths still agree
+        let inf = Codebook::new(vec![f32::NEG_INFINITY, 0.0, f32::INFINITY]);
+        assert!(!inf.has_lut());
+        for &y in &[-1e30f32, 0.0, 1e30, f32::INFINITY] {
+            assert_eq!(inf.quantise(y), inf.quantise_ref(y));
+        }
     }
 }

@@ -42,6 +42,18 @@ pub struct QdqStats {
     pub sq_err: f64,
 }
 
+/// Statistics collected by the fused encode kernel in the same pass that
+/// produces the indices — no re-walk of the data to histogram or score.
+#[derive(Clone, Debug)]
+pub struct EncodeStats {
+    /// Sum of squared reconstruction error (f64 accumulation; summed in
+    /// deterministic chunk order on the parallel path).
+    pub sq_err: f64,
+    /// Codebook-index histogram (length = codebook size) — the entropy
+    /// model `:compress` schemes feed to [`crate::compress::entropy_bits`].
+    pub counts: Vec<u64>,
+}
+
 impl Quantiser {
     pub fn new(
         granularity: Granularity,
@@ -64,73 +76,126 @@ impl Quantiser {
     }
 
     /// Effective group scale: statistic → format rounding → multiplier,
-    /// with the zero-block guard.
+    /// with the degenerate-block guard: zero (all-zero block), non-finite
+    /// (NaN data / overflowing multiplier) and — outside signmax, whose
+    /// statistic legitimately carries the max's sign — negative scales
+    /// would poison every index in the block, so they snap to the neutral
+    /// scale 1.
     fn group_scale(&self, block: &[f32]) -> f32 {
         let raw = self.statistic.compute(block);
         let rounded = self.scale_format.round(raw);
         let s = rounded * self.scale_multiplier as f32;
-        if s == 0.0 {
+        let negative_ok = self.statistic == Statistic::Signmax;
+        if !s.is_finite() || s == 0.0 || (s < 0.0 && !negative_ok) {
             1.0
         } else {
             s
         }
     }
 
-    /// Quantise to (scales, indices).  Large tensors fan the scale pass
-    /// (per group) and the index pass (group-aligned chunks) over the
-    /// worker pool — this is the hot loop of every `:compress` scheme.
+    /// Quantise to (scales, indices).  Delegates to the fused
+    /// [`Quantiser::encode_with_stats`] kernel and discards the stats —
+    /// that costs a histogram increment and an f64 error accumulation per
+    /// element; callers on a measured hot path that truly need stats-free
+    /// encoding should say so here before a split kernel is added (every
+    /// in-repo hot path wants the stats).
     pub fn encode(&self, data: &[f32], channel_len: usize) -> Encoded {
-        use crate::util::pool::PAR_THRESHOLD;
-        let groups = scale_groups(data.len(), self.granularity, channel_len);
-        let parallel = data.len() >= PAR_THRESHOLD && groups.len() > 1;
-        let scales: Vec<f32> = if parallel {
-            crate::util::pool::par_map(&groups, |_, &(start, len)| {
-                self.group_scale(&data[start..start + len])
-            })
-        } else {
-            groups
-                .iter()
-                .map(|&(start, len)| {
-                    self.group_scale(&data[start..start + len])
-                })
-                .collect()
-        };
-        let mut indices = vec![0u16; data.len()];
-        // groups are uniform-length except possibly the last, so index
-        // chunks aligned to whole groups map back to group ids by division
+        self.encode_with_stats(data, channel_len).0
+    }
+
+    /// The fused encode kernel and the batch entry point every `:compress`
+    /// call site routes through: one cache-friendly pass per scale block
+    /// computes the statistic, the rounded scale, its reciprocal, the
+    /// codebook indices, the index histogram and the squared-error
+    /// accumulator — no per-element divide (multiply by the reciprocal,
+    /// matching the fused qdq bit-for-bit) and no per-element group-id
+    /// division (blocks are walked contiguously).  Large tensors fan
+    /// group-aligned chunks over the worker pool; per-chunk partials merge
+    /// in deterministic chunk order.
+    pub fn encode_with_stats(
+        &self,
+        data: &[f32],
+        channel_len: usize,
+    ) -> (Encoded, EncodeStats) {
+        use crate::util::pool::{self, PAR_THRESHOLD};
+        let n = data.len();
+        let k = self.codebook.len();
+        let groups = scale_groups(n, self.granularity, channel_len);
+        // groups are uniform-length except possibly the last, so chunks of
+        // whole groups tile the index buffer
         let group_len = groups.first().map(|&(_, len)| len).unwrap_or(0);
-        if parallel && group_len > 0 {
+        let mut indices = vec![0u16; n];
+        let parallel =
+            n >= PAR_THRESHOLD && groups.len() > 1 && group_len > 0;
+        let mut scales = Vec::with_capacity(groups.len());
+        let mut sq_err = 0f64;
+        let mut counts = vec![0u64; k];
+        if parallel {
             let per = groups
                 .len()
-                .div_ceil(crate::util::pool::num_threads())
+                .div_ceil(pool::num_threads())
                 .max(1);
             let chunk = per * group_len;
-            crate::util::pool::par_chunks_mut(
+            let parts = pool::par_chunks_mut_map(
                 &mut indices,
                 chunk,
                 |ci, out| {
                     let base = ci * chunk;
-                    for (j, slot) in out.iter_mut().enumerate() {
-                        let gi = (base + j) / group_len;
-                        *slot = self
-                            .codebook
-                            .quantise(data[base + j] / scales[gi]);
+                    let mut chunk_scales = Vec::with_capacity(per);
+                    let mut sq = 0f64;
+                    let mut hist = vec![0u64; k];
+                    let mut off = 0usize;
+                    while off < out.len() {
+                        let len = group_len.min(out.len() - off);
+                        let block = &data[base + off..base + off + len];
+                        let s = self.group_scale(block);
+                        let inv = 1.0 / s;
+                        self.codebook.encode_block(
+                            block,
+                            inv,
+                            s,
+                            &mut out[off..off + len],
+                            &mut sq,
+                            &mut hist,
+                        );
+                        chunk_scales.push(s);
+                        off += len;
                     }
+                    (chunk_scales, sq, hist)
                 },
             );
-        } else {
-            for (gi, &(start, len)) in groups.iter().enumerate() {
-                let s = scales[gi];
-                for i in start..start + len {
-                    indices[i] = self.codebook.quantise(data[i] / s);
+            for (chunk_scales, sq, hist) in parts {
+                scales.extend(chunk_scales);
+                sq_err += sq;
+                for (acc, c) in counts.iter_mut().zip(&hist) {
+                    *acc += c;
                 }
             }
+        } else {
+            for &(start, len) in &groups {
+                let block = &data[start..start + len];
+                let s = self.group_scale(block);
+                let inv = 1.0 / s;
+                self.codebook.encode_block(
+                    block,
+                    inv,
+                    s,
+                    &mut indices[start..start + len],
+                    &mut sq_err,
+                    &mut counts,
+                );
+                scales.push(s);
+            }
         }
-        Encoded {
-            scales,
-            indices,
-            groups,
-        }
+        debug_assert_eq!(scales.len(), groups.len());
+        (
+            Encoded {
+                scales,
+                indices,
+                groups,
+            },
+            EncodeStats { sq_err, counts },
+        )
     }
 
     /// Reconstruct from an encoding.
@@ -189,12 +254,16 @@ impl Quantiser {
                     },
                 );
             }
-            // tensor granularity: one scale, then a parallel element map
+            // tensor granularity: one scale, then parallel fused chunks
+            // (qdq_scaled_slice hoists the LUT dispatch per chunk)
             Granularity::Tensor if n >= PAR_THRESHOLD => {
                 let s = self.group_scale(data);
                 let inv = 1.0 / s;
-                crate::util::pool::par_elementwise(data, |x| {
-                    *x = self.codebook.qdq(*x * inv) * s;
+                let chunk = n
+                    .div_ceil(crate::util::pool::num_threads())
+                    .max(1);
+                crate::util::pool::par_chunks_mut(data, chunk, |_, c| {
+                    self.codebook.qdq_scaled_slice(c, inv, s);
                 });
             }
             g => self.qdq_serial(data, g, channel_len),
@@ -464,6 +533,96 @@ mod tests {
         let data = vec![0f32; 256];
         let q = block_absmax_int4();
         assert_eq!(q.qdq(&data, 0), data);
+    }
+
+    #[test]
+    fn encode_with_stats_matches_decode_and_histogram() {
+        let mut rng = Rng::new(21);
+        let data = Dist::standard(Family::Laplace, 0.0).sample_vec(&mut rng, 4096);
+        let q = block_absmax_int4();
+        let (enc, stats) = q.encode_with_stats(&data, 0);
+        // histogram covers every element and matches the indices
+        assert_eq!(stats.counts.len(), q.codebook.len());
+        assert_eq!(
+            stats.counts.iter().sum::<u64>() as usize,
+            data.len()
+        );
+        let mut want = vec![0u64; q.codebook.len()];
+        for &i in &enc.indices {
+            want[i as usize] += 1;
+        }
+        assert_eq!(stats.counts, want);
+        // fused squared error equals the decode-based one
+        let recon = q.decode(&enc);
+        let direct = crate::util::stats::sq_err(&data, &recon);
+        assert!(
+            (stats.sq_err - direct).abs() <= 1e-9 * direct.max(1.0),
+            "fused {} vs direct {direct}",
+            stats.sq_err
+        );
+        // encode() is the same kernel minus the stats
+        let plain = q.encode(&data, 0);
+        assert_eq!(plain.indices, enc.indices);
+        assert_eq!(plain.scales, enc.scales);
+    }
+
+    #[test]
+    fn encode_with_stats_parallel_partials_merge_in_order() {
+        let mut rng = Rng::new(22);
+        let data = Dist::standard(Family::StudentT, 6.0)
+            .sample_vec(&mut rng, 1 << 17);
+        let q = block_absmax_int4();
+        let (enc, stats) = q.encode_with_stats(&data, 0);
+        // forced-serial run (nested guard) must agree on everything except
+        // possibly the f64 summation grouping of sq_err
+        let (enc_s, stats_s) = crate::util::pool::par_map(&[0, 1], |i, _| {
+            (i == 0).then(|| q.encode_with_stats(&data, 0))
+        })
+        .swap_remove(0)
+        .unwrap();
+        assert_eq!(enc.indices, enc_s.indices);
+        assert_eq!(enc.scales, enc_s.scales);
+        assert_eq!(stats.counts, stats_s.counts);
+        assert!(
+            (stats.sq_err - stats_s.sq_err).abs()
+                <= 1e-9 * stats_s.sq_err.max(1.0)
+        );
+    }
+
+    #[test]
+    fn degenerate_scales_snap_to_one() {
+        // NaN block: RMS statistic would be NaN — guard must neutralise it
+        let q = Quantiser::new(
+            Granularity::Block(64),
+            Statistic::Rms,
+            ScaleFormat::F32,
+            int_codebook(4, Variant::Asymmetric),
+        );
+        let mut data = vec![f32::NAN; 64];
+        data.extend(std::iter::repeat(0.5).take(64));
+        let enc = q.encode(&data, 0);
+        assert_eq!(enc.scales[0], 1.0, "NaN scale must snap to 1");
+        assert!(enc.scales[1].is_finite() && enc.scales[1] > 0.0);
+        // negative multiplier flips an absmax scale negative — also caught
+        let qneg = Quantiser::new(
+            Granularity::Block(64),
+            Statistic::Absmax,
+            ScaleFormat::F32,
+            int_codebook(4, Variant::Asymmetric),
+        )
+        .with_multiplier(-2.0);
+        let data = vec![0.25f32; 64];
+        let enc = qneg.encode(&data, 0);
+        assert_eq!(enc.scales[0], 1.0, "negative non-signmax scale snaps");
+        // signmax scales legitimately carry the max's sign — preserved
+        let qs = Quantiser::new(
+            Granularity::Block(4),
+            Statistic::Signmax,
+            ScaleFormat::F32,
+            int_codebook(4, Variant::Signmax),
+        );
+        let enc = qs.encode(&[0.1, -3.0, 0.2, 1.0], 0);
+        assert_eq!(enc.scales[0], -3.0);
     }
 
     #[test]

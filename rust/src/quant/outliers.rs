@@ -106,6 +106,35 @@ pub fn qdq_with_outliers(
     (dense, bits)
 }
 
+/// [`qdq_with_outliers`] that also returns the codebook-index histogram of
+/// the *dense* stream (outliers zeroed before encoding, exactly as the
+/// dense pass quantises them) — the entropy model for `:compress:sparseX`
+/// schemes.  One fused [`Quantiser::encode_with_stats`] pass produces the
+/// indices and histogram; the reconstruction is decoded from those same
+/// indices (bit-identical to the fused qdq) and the outliers patched back,
+/// so selection and quantisation each happen exactly once.
+pub fn qdq_outliers_with_hist(
+    quantiser: &Quantiser,
+    sparse: &SparseOutliers,
+    data: &[f32],
+    fisher: &[f32],
+    channel_len: usize,
+) -> (Vec<f32>, f64, Vec<u64>) {
+    let outlier_idx = sparse.select(data, fisher);
+    let mut dense = data.to_vec();
+    for &i in &outlier_idx {
+        dense[i as usize] = 0.0;
+    }
+    let (enc, stats) = quantiser.encode_with_stats(&dense, channel_len);
+    let mut recon = quantiser.decode(&enc);
+    for &i in &outlier_idx {
+        recon[i as usize] = data[i as usize];
+    }
+    let bits = quantiser.bits_per_element(data.len(), channel_len)
+        + sparse.overhead_bits(data.len());
+    (recon, bits, stats.counts)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,6 +218,31 @@ mod tests {
         let (recon, bits) = qdq_with_outliers(&q, &sp, &data, &[], 0);
         assert_eq!(recon, q.qdq(&data, 0));
         assert!((bits - q.bits_per_element(1000, 0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fused_outlier_hist_matches_two_pass_path() {
+        let data = spiky_data(10_000, 4);
+        let q = quantiser();
+        let sp = SparseOutliers::by_value(0.005);
+        let (recon, bits, counts) =
+            qdq_outliers_with_hist(&q, &sp, &data, &[], 0);
+        // reconstruction and bits must equal the unfused qdq_with_outliers
+        let (recon2, bits2) = qdq_with_outliers(&q, &sp, &data, &[], 0);
+        assert_eq!(recon, recon2);
+        assert_eq!(bits, bits2);
+        // the histogram covers the dense stream exactly
+        assert_eq!(counts.iter().sum::<u64>() as usize, data.len());
+        // with the spikes zeroed, the dense scale shrinks ~500× and the
+        // histogram must spread at least as widely as the spiky encoding
+        let occupied = counts.iter().filter(|&&c| c > 0).count();
+        let (_, spiky_stats) = q.encode_with_stats(&data, 0);
+        let spiky_occupied =
+            spiky_stats.counts.iter().filter(|&&c| c > 0).count();
+        assert!(
+            occupied >= spiky_occupied,
+            "dense {occupied} vs spiky {spiky_occupied}"
+        );
     }
 
     #[test]

@@ -87,12 +87,25 @@ pub fn par_chunks_mut<T: Send>(
     chunk: usize,
     f: impl Fn(usize, &mut [T]) + Sync,
 ) {
+    par_chunks_mut_map(data, chunk, |idx, slice| f(idx, slice));
+}
+
+/// [`par_chunks_mut`] that also carries a per-chunk result back to the
+/// caller, in chunk order — the fused encode kernel uses this to return
+/// per-chunk scales, error partials and index histograms from the single
+/// pass instead of re-walking the data.
+pub fn par_chunks_mut_map<T: Send, R: Send>(
+    data: &mut [T],
+    chunk: usize,
+    f: impl Fn(usize, &mut [T]) -> R + Sync,
+) -> Vec<R> {
     let workers = num_threads();
     if workers == 1 || on_worker() {
-        for (idx, slice) in data.chunks_mut(chunk.max(1)).enumerate() {
-            f(idx, slice);
-        }
-        return;
+        return data
+            .chunks_mut(chunk.max(1))
+            .enumerate()
+            .map(|(idx, slice)| f(idx, slice))
+            .collect();
     }
     let chunks: Vec<(usize, &mut [T])> =
         data.chunks_mut(chunk.max(1)).enumerate().collect();
@@ -104,11 +117,14 @@ pub fn par_chunks_mut<T: Send>(
             .map(Some)
             .collect::<Vec<Option<(usize, &mut [T])>>>(),
     );
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
     let workers = workers.min(n.max(1));
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| {
                 IN_POOL.with(|c| c.set(true));
+                let mut local: Vec<(usize, R)> = Vec::new();
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
@@ -116,12 +132,17 @@ pub fn par_chunks_mut<T: Send>(
                     }
                     let taken = chunks.lock().unwrap()[i].take();
                     if let Some((idx, slice)) = taken {
-                        f(idx, slice);
+                        local.push((idx, f(idx, slice)));
                     }
+                }
+                let mut guard = slots.lock().unwrap();
+                for (i, r) in local {
+                    guard[i] = Some(r);
                 }
             });
         }
     });
+    out.into_iter().map(|r| r.expect("worker died")).collect()
 }
 
 /// Elementwise parallel transform: one contiguous chunk per worker once
@@ -219,6 +240,22 @@ mod tests {
             }),
         );
         assert!(result.is_err());
+    }
+
+    #[test]
+    fn par_chunks_mut_map_returns_in_chunk_order() {
+        let mut data = vec![1u64; 10_000];
+        let sums = par_chunks_mut_map(&mut data, 333, |idx, chunk| {
+            for x in chunk.iter_mut() {
+                *x += idx as u64;
+            }
+            chunk.iter().sum::<u64>()
+        });
+        assert_eq!(sums.len(), 10_000usize.div_ceil(333));
+        for (idx, &s) in sums.iter().enumerate() {
+            let len = 333.min(10_000 - idx * 333) as u64;
+            assert_eq!(s, len * (1 + idx as u64), "chunk {idx}");
+        }
     }
 
     #[test]

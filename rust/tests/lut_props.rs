@@ -1,0 +1,156 @@
+//! Property tests for the LUT quantisation kernel: the uniform-bucket
+//! lookup path must agree *bit-exactly* with the reference compare-count /
+//! binary-search path for every format family and for adversarial inputs
+//! (±inf, NaN, exact midpoints, subnormals) — the contract documented in
+//! `rust/src/formats/` module docs.
+
+use owf::dist::{Dist, Family};
+use owf::formats::cbrt::{cbrt_absmax, cbrt_rms, CBRT_ALPHA};
+use owf::formats::float::float_codebook_normalised;
+use owf::formats::int::int_codebook;
+use owf::formats::lloyd::{LloydInit, LloydMax};
+use owf::formats::quantile::{af4, nf, nf4, sf};
+use owf::formats::{Codebook, Variant};
+use owf::util::rng::Rng;
+use owf::util::testing::{check, Gen};
+
+fn assert_paths_agree(cb: &Codebook, ys: &[f32], label: &str) {
+    for &y in ys {
+        let (fast, reference) = (cb.quantise(y), cb.quantise_ref(y));
+        assert_eq!(
+            fast, reference,
+            "{label}: LUT {fast} != reference {reference} at y={y:?} (bits {:#010x})",
+            y.to_bits()
+        );
+        // the index must be in range whatever the input
+        assert!((fast as usize) < cb.len(), "{label}: index out of range");
+    }
+    // batch entry point takes the same path
+    let (mut a, mut b) = (Vec::new(), Vec::new());
+    cb.quantise_slice(ys, &mut a);
+    let plain = cb.clone().with_lut_disabled();
+    plain.quantise_slice(ys, &mut b);
+    assert_eq!(a, b, "{label}: quantise_slice disagrees with reference");
+}
+
+#[test]
+fn lut_matches_reference_for_every_format_family() {
+    let mut rng = Rng::new(0x10f);
+    let fit_data = Dist::standard(Family::StudentT, 5.0)
+        .sample_vec(&mut rng, 4096);
+    // (label, codebook, lut_expected): families with midpoint gaps finer
+    // than the 2^16-bucket budget (high-exponent minifloats) legitimately
+    // keep the reference path — the equality contract still holds.
+    let mut books: Vec<(String, Codebook, bool)> = Vec::new();
+    for b in 2..=6u32 {
+        for v in [Variant::Symmetric, Variant::Asymmetric] {
+            if b <= 8 {
+                books.push((
+                    format!("int{b}-{}", v.name()),
+                    int_codebook(b, v),
+                    true,
+                ));
+            }
+        }
+        books.push((format!("int{b}-signmax"), int_codebook(b, Variant::Signmax), true));
+        books.push((format!("nf{b}"), nf(b), true));
+        books.push((format!("sf{b}-t5"), sf(b, 5.0), true));
+        books.push((
+            format!("cbrt-normal-rms{b}"),
+            cbrt_rms(Family::Normal, 0.0, b, Variant::Symmetric, CBRT_ALPHA),
+            true,
+        ));
+        books.push((
+            format!("cbrt-t5-absmax{b}"),
+            cbrt_absmax(
+                Family::StudentT,
+                5.0,
+                b,
+                128,
+                Variant::Symmetric,
+                CBRT_ALPHA,
+            ),
+            true,
+        ));
+        books.push((
+            format!("lloyd{b}"),
+            LloydMax::new(b, LloydInit::KmeansPp).fit(&fit_data, &[]),
+            false, // data-driven centroids may cluster arbitrarily close
+        ));
+    }
+    books.push(("nf4-published".into(), nf4(), true));
+    books.push(("af4-64".into(), af4(64), true));
+    for (e, m, expect_lut) in [
+        (2u32, 1u32, true),
+        (3, 0, true),
+        (3, 2, true),
+        (4, 3, false), // subnormal gap ≈ 4e-6 of the span: over budget
+        (5, 2, false),
+    ] {
+        books.push((
+            format!("e{e}m{m}"),
+            float_codebook_normalised(e, m),
+            expect_lut,
+        ));
+    }
+
+    let mut probe_rng = Rng::new(0x10f2);
+    for (label, cb, expect_lut) in &books {
+        if *expect_lut {
+            assert!(cb.has_lut(), "{label}: expected the LUT fast path");
+        }
+        let mut ys = cb.adversarial_probes();
+        for _ in 0..512 {
+            ys.push(probe_rng.normal() as f32 * 1.5);
+        }
+        assert_paths_agree(cb, &ys, label);
+    }
+}
+
+#[test]
+fn lut_matches_reference_for_random_codebooks() {
+    check("lut-random-codebooks", 200, |g: &mut Gen| {
+        // sizes straddle the compare-count/binary-search switch at 32
+        let n = 2 + g.rng.below(80);
+        // occasional extreme scales exercise the LUT bail-out paths
+        let scale = match g.case % 5 {
+            0 => 1e-38,
+            1 => 1e30,
+            _ => 2.0,
+        };
+        let pts = g.f32_vec(n, scale);
+        let cb = Codebook::new(pts);
+        let mut ys = cb.adversarial_probes();
+        ys.extend(g.f32_vec(128, scale * 1.5));
+        ys.extend(g.f32_vec(32, 1.0));
+        for &y in &ys {
+            assert_eq!(
+                cb.quantise(y),
+                cb.quantise_ref(y),
+                "n={n} scale={scale} y={y:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn lut_quantise_is_nearest_codepoint() {
+    // beyond path agreement: the result must actually be a nearest
+    // codepoint (ties allowed either side of the midpoint rule are pinned
+    // by the reference equality above, so plain nearest-ness suffices)
+    check("lut-nearest", 100, |g: &mut Gen| {
+        let n = 2 + g.rng.below(40);
+        let cb = Codebook::new(g.f32_vec(n, 2.0));
+        for _ in 0..64 {
+            let y = g.rng.normal() as f32 * 3.0;
+            let idx = cb.quantise(y) as usize;
+            let d = (cb.points()[idx] - y).abs();
+            for &p in cb.points() {
+                assert!(
+                    d <= (p - y).abs() + 1e-5 * d.max(1.0),
+                    "idx {idx} not nearest for y={y}"
+                );
+            }
+        }
+    });
+}

@@ -3,7 +3,7 @@
 //! point, and a second `--resume` invocation re-runs zero completed points.
 
 use owf::coordinator::config::expand_grid;
-use owf::coordinator::sweep::{point_key, SIM_SIZE};
+use owf::coordinator::sweep::{params_tag, point_key, SIM_SIZE};
 use owf::coordinator::{run_sweep, SweepOpts};
 use owf::util::json::Json;
 
@@ -65,9 +65,10 @@ fn hundred_point_sweep_resumes_with_zero_reruns() {
         })
         .collect();
     keys.sort();
+    let tag = params_tag(&opts(out.clone()));
     let mut expect: Vec<String> = specs
         .iter()
-        .map(|s| point_key(s, SIM_SIZE, 0, "n4096"))
+        .map(|s| point_key(s, SIM_SIZE, 0, &tag))
         .collect();
     expect.sort();
     assert_eq!(keys, expect);

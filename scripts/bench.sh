@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Perf trajectory recorder: run benches/formats.rs + benches/pipeline.rs
+# and write machine-readable BENCH_formats.json / BENCH_pipeline.json
+# (Melem/s per scheme) at the repo root.  Every perf PR diffs its numbers
+# against the committed files from the previous PR, then commits the fresh
+# ones as the next trajectory point.
+#
+# Usage: scripts/bench.sh [quick]
+#   quick — 2^20 elements instead of 2^22 (for smoke runs)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+ROOT=$(pwd)
+cd rust
+
+N=$((1 << 22))
+if [ "${1:-}" = "quick" ]; then
+    N=$((1 << 20))
+fi
+
+echo "== cargo build --release --benches =="
+cargo build --release --benches
+
+echo "== benches/formats.rs (n=$N) -> BENCH_formats.json =="
+OWF_BENCH_N=$N OWF_BENCH_JSON="$ROOT/BENCH_formats.json" \
+    cargo bench --bench formats
+
+echo "== benches/pipeline.rs -> BENCH_pipeline.json =="
+OWF_BENCH_JSON="$ROOT/BENCH_pipeline.json" \
+    cargo bench --bench pipeline
+
+echo "bench.sh: wrote $ROOT/BENCH_formats.json and $ROOT/BENCH_pipeline.json"
