@@ -5,6 +5,19 @@
 
 use std::time::Instant;
 
+/// Shared element count for size-scalable benches: `OWF_BENCH_N` (must be
+/// a multiple of 1024, as `scripts/check.sh`'s tiny-n gate and
+/// `scripts/bench.sh quick` rely on), default 2^22.
+#[allow(dead_code)]
+pub fn bench_n() -> usize {
+    let n: usize = std::env::var("OWF_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1 << 22);
+    assert!(n >= 1024 && n % 1024 == 0, "OWF_BENCH_N must be k·1024");
+    n
+}
+
 /// Run `f` with warmup and `reps` timed repetitions; prints
 /// `name  median  min..max  [throughput]` and returns the median seconds.
 pub fn bench(name: &str, items_per_rep: Option<f64>, mut f: impl FnMut()) -> f64 {

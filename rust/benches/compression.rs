@@ -1,12 +1,20 @@
 //! Bench: entropy-coder throughput (Huffman vs rANS, encode + decode) over
-//! quantised-weight symbol streams — fig. 24's practical-compressor angle.
+//! quantised-weight symbol streams — fig. 24's practical-compressor angle,
+//! now including the serving decode path: the table-driven K-lane
+//! interleaved decoders against the single-stream `[ref]` oracles.  Every
+//! interleaved container is roundtrip-gated against the oracle before any
+//! timing.  Set `OWF_BENCH_JSON=<path>` (as `scripts/bench.sh` does) to
+//! record the rows machine-readably.
 
 #[path = "bench_util.rs"]
 mod bench_util;
-use bench_util::bench;
+use bench_util::{bench_rec, write_bench_json, Row};
 
 use owf::compress::huffman::HuffmanCode;
-use owf::compress::rans::{rans_decode, rans_encode, RansModel};
+use owf::compress::rans::{
+    rans_decode, rans_decode_interleaved, rans_encode,
+    rans_encode_interleaved, RansModel,
+};
 use owf::dist::{Dist, Family};
 use owf::formats::cbrt::{cbrt_rms, CBRT_ALPHA};
 use owf::formats::Variant;
@@ -17,11 +25,13 @@ fn main() {
     let mut rng = Rng::new(2);
     let data = Dist::standard(Family::StudentT, 5.0).sample_vec(&mut rng, n);
     let cb = cbrt_rms(Family::StudentT, 5.0, 4, Variant::Symmetric, CBRT_ALPHA);
-    let symbols: Vec<u16> = data.iter().map(|&x| cb.quantise(x)).collect();
+    let mut symbols: Vec<u16> = Vec::new();
+    cb.quantise_slice(&data, &mut symbols);
     let mut counts = vec![0u64; cb.len()];
     for &s in &symbols {
         counts[s as usize] += 1;
     }
+    let mut rows: Vec<Row> = Vec::new();
 
     println!("entropy coders, {n} symbols (4-bit cbrt-t indices):");
     let huff = HuffmanCode::from_counts(&counts);
@@ -31,20 +41,67 @@ fn main() {
         owf::compress::entropy_bits(&counts),
         bits as f64 / n as f64
     );
-    bench("huffman encode", Some(n as f64), || {
+    bench_rec(&mut rows, "huffman encode", Some(n as f64), || {
         std::hint::black_box(huff.encode(&symbols).1);
     });
-    bench("huffman decode", Some(n as f64), || {
+    bench_rec(&mut rows, "huffman decode [ref]", Some(n as f64), || {
         std::hint::black_box(huff.decode(&encoded, symbols.len()).len());
     });
+    // serving pattern: build the table decoder once, reuse per container
+    let decoder = huff.decoder();
+    for lanes in [1usize, 2, 4, 8] {
+        let container = huff.encode_interleaved(&symbols, lanes);
+        assert_eq!(
+            decoder.decode_interleaved(&container, symbols.len()),
+            symbols,
+            "huffman x{lanes} roundtrip"
+        );
+        bench_rec(
+            &mut rows,
+            &format!("huffman decode x{lanes} [table]"),
+            Some(n as f64),
+            || {
+                std::hint::black_box(
+                    decoder
+                        .decode_interleaved(&container, symbols.len())
+                        .len(),
+                );
+            },
+        );
+    }
 
     let model = RansModel::from_counts(&counts);
     let renc = rans_encode(&model, &symbols);
     println!("  rans rate {:.4} b/sym", renc.len() as f64 * 8.0 / n as f64);
-    bench("rans encode", Some(n as f64), || {
+    bench_rec(&mut rows, "rans encode", Some(n as f64), || {
         std::hint::black_box(rans_encode(&model, &symbols).len());
     });
-    bench("rans decode", Some(n as f64), || {
+    bench_rec(&mut rows, "rans decode [ref]", Some(n as f64), || {
         std::hint::black_box(rans_decode(&model, &renc, symbols.len()).len());
     });
+    for lanes in [1usize, 2, 4, 8] {
+        let container = rans_encode_interleaved(&model, &symbols, lanes);
+        assert_eq!(
+            rans_decode_interleaved(&model, &container, symbols.len()),
+            symbols,
+            "rans x{lanes} roundtrip"
+        );
+        bench_rec(
+            &mut rows,
+            &format!("rans decode x{lanes}"),
+            Some(n as f64),
+            || {
+                std::hint::black_box(
+                    rans_decode_interleaved(
+                        &model,
+                        &container,
+                        symbols.len(),
+                    )
+                    .len(),
+                );
+            },
+        );
+    }
+
+    write_bench_json("compression", Some(n), &rows);
 }

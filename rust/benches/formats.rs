@@ -5,16 +5,18 @@
 //! throughput in Melem/s over a Student-t tensor (4M elements by default,
 //! `OWF_BENCH_N` overrides — must be a multiple of 1024).  Also benches the
 //! raw LUT kernel against the reference compare-count/binary-search path
-//! (the ≥3× trajectory rows), and *gates* every benched codebook on
-//! bit-exact LUT/reference agreement first, so `scripts/check.sh` can run
-//! this at tiny n as an offline equivalence smoke test.
+//! (the ≥3× encode trajectory rows) and the fused parallel decode kernel
+//! against the scalar oracle (the `[dec]` vs `[dec-ref]` rows, same ≥3×
+//! target), and *gates* every benched codebook on bit-exact LUT/reference
+//! and decode_into/decode_ref agreement first, so `scripts/check.sh` can
+//! run this at tiny n as an offline equivalence smoke test.
 //!
 //! Set `OWF_BENCH_JSON=<path>` (as `scripts/bench.sh` does) to record the
 //! rows machine-readably.
 
 #[path = "bench_util.rs"]
 mod bench_util;
-use bench_util::{bench_rec, write_bench_json, Row};
+use bench_util::{bench_n, bench_rec, write_bench_json, Row};
 
 use owf::coordinator::config::Scheme;
 use owf::dist::{Dist, Family};
@@ -39,11 +41,7 @@ fn equivalence_gate(cb: &Codebook, data: &[f32], label: &str) {
 }
 
 fn main() -> anyhow::Result<()> {
-    let n: usize = std::env::var("OWF_BENCH_N")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(1 << 22);
-    assert!(n >= 1024 && n % 1024 == 0, "OWF_BENCH_N must be k·1024");
+    let n = bench_n();
     let mut rng = Rng::new(1);
     let data = Dist::standard(Family::StudentT, 5.0).sample_vec(&mut rng, n);
     let mut rows: Vec<Row> = Vec::new();
@@ -77,6 +75,52 @@ fn main() -> anyhow::Result<()> {
                 },
             );
         }
+    }
+
+    // --- decode kernel: fused parallel decode_into vs scalar oracle --------
+    println!("decode kernel (decode_into vs decode_ref), {n} elements:");
+    let mut dec_out = vec![0f32; n];
+    for spec in [
+        "int@4:block128-absmax",
+        "cbrt-t5@4:block128-absmax",
+        "nf@4:block128-absmax",
+        "int@8:block128-absmax",
+    ] {
+        let scheme = Scheme::parse(spec)?;
+        let cb = scheme.build_codebook(128, Some(&data), &[])?;
+        let quantiser = owf::quant::Quantiser::new(
+            scheme.granularity,
+            scheme.statistic,
+            scheme.scale_format,
+            cb,
+        );
+        let enc = quantiser.encode(&data, 0);
+        // decode bit-exactness gate before any timing (check.sh runs this
+        // at tiny n, mirroring the LUT/reference encode gate)
+        let reference = quantiser.decode_ref(&enc);
+        quantiser.decode_into(&enc, &mut dec_out);
+        assert_eq!(
+            dec_out, reference,
+            "{spec}: decode_into/decode_ref disagree"
+        );
+        bench_rec(
+            &mut rows,
+            &format!("decode {spec} [dec]"),
+            Some(n as f64),
+            || {
+                quantiser.decode_into(&enc, &mut dec_out);
+                std::hint::black_box(dec_out[n / 2]);
+            },
+        );
+        bench_rec(
+            &mut rows,
+            &format!("decode {spec} [dec-ref]"),
+            Some(n as f64),
+            || {
+                let out = quantiser.decode_ref(&enc);
+                std::hint::black_box(out[n / 2]);
+            },
+        );
     }
 
     // --- full tensor pipeline per scheme -----------------------------------

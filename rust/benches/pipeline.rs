@@ -1,7 +1,8 @@
 //! Bench: end-to-end direct-cast of a full checkpoint (quantise every
 //! tensor + PJRT forward + top-k KL) — the fig.-1 inner loop, and the
 //! number EXPERIMENTS.md §Perf tracks for the whole stack — plus the
-//! `owf sweep` engine over a simulated grid (pure CPU, always runs).
+//! `owf sweep` engine over a simulated grid and the serving-scale tensor
+//! decode rows (`[dec]` vs `[dec-ref]`; both pure CPU, always run).
 //!
 //! The checkpoint benches require `make artifacts`; they exit quietly
 //! otherwise.  Set `OWF_BENCH_JSON=<path>` (as `scripts/bench.sh` does)
@@ -9,12 +10,15 @@
 
 #[path = "bench_util.rs"]
 mod bench_util;
-use bench_util::{bench_rec, write_bench_json, Row};
+use bench_util::{bench_n, bench_rec, write_bench_json, Row};
 
 use owf::coordinator::config::Scheme;
 use owf::coordinator::{run_sweep, SweepOpts};
+use owf::dist::{Dist, Family};
 use owf::eval::llm::Env;
 use owf::eval::RunOpts;
+use owf::quant::Quantiser;
+use owf::util::rng::Rng;
 
 fn bench_sweep(rows: &mut Vec<Row>) {
     // 24 points × 2^16 samples through the full sweep engine (expansion,
@@ -40,9 +44,52 @@ fn bench_sweep(rows: &mut Vec<Row>) {
     let _ = std::fs::remove_file(&out);
 }
 
+fn bench_decode(rows: &mut Vec<Row>) -> anyhow::Result<()> {
+    // serving-scale reconstruction of one checkpoint-sized tensor from its
+    // Encoded form — fused parallel kernel vs scalar oracle.  Element count
+    // follows OWF_BENCH_N (as in benches/formats.rs) so `bench.sh quick`
+    // smoke runs stay quick.
+    let n = bench_n();
+    let mut rng = Rng::new(7);
+    let data =
+        Dist::standard(Family::StudentT, 5.0).sample_vec(&mut rng, n);
+    let scheme = Scheme::parse("cbrt-t5@4:block128-absmax")?;
+    let cb = scheme.build_codebook(128, Some(&data), &[])?;
+    let q = Quantiser::new(
+        scheme.granularity,
+        scheme.statistic,
+        scheme.scale_format,
+        cb,
+    );
+    let enc = q.encode(&data, 0);
+    let mut out = vec![0f32; n];
+    q.decode_into(&enc, &mut out);
+    assert_eq!(out, q.decode_ref(&enc), "decode kernels disagree");
+    bench_rec(
+        rows,
+        "decode cbrt-t5@4:block128-absmax [dec]",
+        Some(n as f64),
+        || {
+            q.decode_into(&enc, &mut out);
+            std::hint::black_box(out[n / 2]);
+        },
+    );
+    bench_rec(
+        rows,
+        "decode cbrt-t5@4:block128-absmax [dec-ref]",
+        Some(n as f64),
+        || {
+            let r = q.decode_ref(&enc);
+            std::hint::black_box(r[n / 2]);
+        },
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let mut rows: Vec<Row> = Vec::new();
     bench_sweep(&mut rows);
+    bench_decode(&mut rows)?;
     let opts = RunOpts {
         eval_seqs: 16,
         ..Default::default()

@@ -4,8 +4,17 @@
 //! * Code construction: package-merge-free classic two-queue algorithm over
 //!   sorted counts (O(n log n)), then canonicalisation (codes assigned in
 //!   (length, symbol) order) so the decoder needs only the length table.
-//! * Encode/decode: a plain bit-packed stream; decoding walks a flat
-//!   first-code table (per-length offsets), O(1) table memory.
+//! * Encode/decode: a plain bit-packed stream; [`HuffmanCode::decode`]
+//!   walks a flat first-code table (per-length offsets) bit by bit — kept
+//!   verbatim as the bit-exact oracle.
+//! * Serving path: [`HuffmanDecoder`] resolves codes of ≤ [`TABLE_BITS`]
+//!   bits with ONE probe of a flattened `2^L`-entry table (symbol + length
+//!   per slot; longer codes take the canonical walk), and
+//!   [`HuffmanCode::encode_interleaved`] /
+//!   [`HuffmanCode::decode_interleaved`] split the symbol stream
+//!   round-robin across K independent lanes so the decoder keeps K
+//!   dependency chains in flight (container layout in `EXPERIMENTS.md`
+//!   §Interleaved).
 
 /// A canonical Huffman code over `n` symbols.
 #[derive(Clone, Debug)]
@@ -123,6 +132,63 @@ impl HuffmanCode {
         (out, total)
     }
 
+    /// Build the table-driven serving decoder for this code.
+    pub fn decoder(&self) -> HuffmanDecoder {
+        HuffmanDecoder::new(self)
+    }
+
+    /// Encode into a K-lane interleaved container: symbol `i` goes to lane
+    /// `i mod K`, each lane is an independent bit stream, and the header
+    /// records the lane count and the *exact bit length* of every lane
+    /// (byte lengths follow as ⌈bits/8⌉) so the decoder can run all K
+    /// lanes concurrently and detect over-reads bit-exactly.  `lanes == 1`
+    /// wraps the plain single-stream encoding.
+    pub fn encode_interleaved(
+        &self,
+        symbols: &[u16],
+        lanes: usize,
+    ) -> Vec<u8> {
+        super::assert_lane_count(lanes);
+        let mut lane_syms: Vec<Vec<u16>> = (0..lanes)
+            .map(|_| Vec::with_capacity(symbols.len() / lanes + 1))
+            .collect();
+        for (i, &s) in symbols.iter().enumerate() {
+            lane_syms[i % lanes].push(s);
+        }
+        let payloads: Vec<(Vec<u8>, u64)> =
+            lane_syms.iter().map(|ls| self.encode(ls)).collect();
+        let mut out = Vec::with_capacity(
+            1 + 4 * lanes
+                + payloads.iter().map(|(p, _)| p.len()).sum::<usize>(),
+        );
+        out.push(lanes as u8);
+        for (_, bits) in &payloads {
+            assert!(*bits <= u32::MAX as u64, "lane stream too long");
+            out.extend_from_slice(&(*bits as u32).to_le_bytes());
+        }
+        for (p, _) in &payloads {
+            out.extend_from_slice(p);
+        }
+        out
+    }
+
+    /// Decode `count` symbols from an [`HuffmanCode::encode_interleaved`]
+    /// container, table-driven, interleaving the K lanes round-robin (the
+    /// serving decode path).  Decoding a prefix (`count` smaller than what
+    /// was encoded) yields exactly the first `count` symbols; asking for
+    /// more panics like the oracle.  Panics on a torn container (header or
+    /// payloads shorter than declared).  Builds the decoder tables on each
+    /// call — serving loops decoding many containers under one code should
+    /// build [`HuffmanCode::decoder`] once and use
+    /// [`HuffmanDecoder::decode_interleaved`].
+    pub fn decode_interleaved(
+        &self,
+        data: &[u8],
+        count: usize,
+    ) -> Vec<u16> {
+        self.decoder().decode_interleaved(data, count)
+    }
+
     /// Decode `count` symbols.
     pub fn decode(&self, data: &[u8], count: usize) -> Vec<u16> {
         // canonical decode tables: for each length, (first_code, first_index)
@@ -178,6 +244,239 @@ impl HuffmanCode {
             }
         }
         out
+    }
+}
+
+/// Bits resolved by one flattened-table probe; codes longer than this take
+/// the canonical per-length walk (rare by construction: a symbol needs
+/// probability < 2^-12 to earn a longer code).
+pub const TABLE_BITS: usize = 12;
+
+/// Lane-container header: `[K: u8][bits_0..bits_{K-1}: u32 LE]` then the
+/// K payloads (⌈bits/8⌉ bytes each) back to back.  Returns the lane
+/// payload slices with their exact bit lengths.  Panics — rather than
+/// reading out of bounds — when the container is torn.
+fn parse_lane_container(data: &[u8]) -> (usize, Vec<(&[u8], usize)>) {
+    assert!(!data.is_empty(), "interleaved container: missing header");
+    let lanes = data[0] as usize;
+    assert!(lanes >= 1, "interleaved container: zero lanes");
+    let mut offset = 1 + 4 * lanes;
+    assert!(
+        data.len() >= offset,
+        "interleaved container: torn header ({} of {offset} bytes)",
+        data.len()
+    );
+    let mut streams = Vec::with_capacity(lanes);
+    for k in 0..lanes {
+        let at = 1 + 4 * k;
+        let bits = u32::from_le_bytes([
+            data[at],
+            data[at + 1],
+            data[at + 2],
+            data[at + 3],
+        ]) as usize;
+        let len = bits.div_ceil(8);
+        assert!(
+            data.len() >= offset + len,
+            "interleaved container: torn lane {k} ({} of {} bytes)",
+            data.len(),
+            offset + len
+        );
+        streams.push((&data[offset..offset + len], bits));
+        offset += len;
+    }
+    (lanes, streams)
+}
+
+/// One lane's bit cursor over a stream of exactly `bits` meaningful bits
+/// (the header records them; the final byte may carry zero padding).
+/// Reads are LSB-first within each byte (matching the encoder's packer).
+/// Peeks past the end read zero — harmless for valid streams, whose every
+/// codeword is fully contained — but *consuming* bits past `bits` panics
+/// ([`LaneReader::consume`] / [`LaneReader::take1`]), so asking for more
+/// symbols than were encoded errors out bit-exactly (the zero padding is
+/// never decodable as phantom symbols).
+struct LaneReader<'a> {
+    data: &'a [u8],
+    bitpos: usize,
+    bits: usize,
+}
+
+impl<'a> LaneReader<'a> {
+    fn new(data: &'a [u8], bits: usize) -> LaneReader<'a> {
+        debug_assert!(bits <= data.len() * 8);
+        LaneReader {
+            data,
+            bitpos: 0,
+            bits,
+        }
+    }
+
+    /// Peek `nbits` (≤ 16) without advancing.
+    #[inline]
+    fn peek(&self, nbits: usize) -> usize {
+        debug_assert!(nbits <= 16);
+        let byte = self.bitpos >> 3;
+        let shift = self.bitpos & 7;
+        let mut acc = 0u32;
+        for k in 0..3 {
+            if let Some(&b) = self.data.get(byte + k) {
+                acc |= (b as u32) << (8 * k);
+            }
+        }
+        ((acc >> shift) as usize) & ((1usize << nbits) - 1)
+    }
+
+    /// Advance past `nbits` just peeked; panics if that crosses the
+    /// stream's encoded bit count (a codeword never does in a valid
+    /// stream).
+    #[inline]
+    fn consume(&mut self, nbits: usize) {
+        self.bitpos += nbits;
+        assert!(
+            self.bitpos <= self.bits,
+            "Huffman lane over-read: more symbols requested than encoded"
+        );
+    }
+
+    /// Read one bit and advance; panics past the encoded bit count.
+    #[inline]
+    fn take1(&mut self) -> u32 {
+        assert!(
+            self.bitpos < self.bits,
+            "Huffman lane over-read: more symbols requested than encoded"
+        );
+        let b = self.data[self.bitpos >> 3];
+        let bit = (b >> (self.bitpos & 7)) & 1;
+        self.bitpos += 1;
+        bit as u32
+    }
+}
+
+/// Table-driven canonical decoder: a flattened `2^L`-entry table maps any
+/// L-bit stream window straight to (symbol, code length) for codes of
+/// ≤ L = [`TABLE_BITS`] bits — one probe instead of the oracle's per-bit
+/// walk — with the canonical first-code/rank fallback for longer codes.
+/// Build once per code ([`HuffmanCode::decoder`]) and reuse across every
+/// container and lane encoded under that code.
+pub struct HuffmanDecoder {
+    table_sym: Vec<u16>,
+    /// Matched code length per table slot; 0 = no code of ≤ L bits matches
+    /// (over-long or invalid prefix → fallback walk).
+    table_len: Vec<u8>,
+    table_bits: usize,
+    first_code: Vec<u32>,
+    first_idx: Vec<usize>,
+    count_at: Vec<u32>,
+    order: Vec<u16>,
+    max_len: usize,
+}
+
+impl HuffmanDecoder {
+    fn new(code: &HuffmanCode) -> HuffmanDecoder {
+        let max_len = *code.lengths.iter().max().unwrap_or(&0) as usize;
+        let mut order: Vec<u16> = (0..code.lengths.len() as u16)
+            .filter(|&s| code.lengths[s as usize] > 0)
+            .collect();
+        order.sort_by_key(|&s| (code.lengths[s as usize], s));
+        let mut first_code = vec![0u32; max_len + 2];
+        let mut first_idx = vec![0usize; max_len + 2];
+        let mut count_at = vec![0u32; max_len + 2];
+        {
+            let mut c = 0u32;
+            let mut idx = 0usize;
+            for len in 1..=max_len {
+                first_code[len] = c;
+                first_idx[len] = idx;
+                while idx < order.len()
+                    && code.lengths[order[idx] as usize] as usize == len
+                {
+                    c += 1;
+                    idx += 1;
+                }
+                count_at[len] = (idx - first_idx[len]) as u32;
+                c <<= 1;
+            }
+        }
+        let table_bits = max_len.min(TABLE_BITS);
+        let size = 1usize << table_bits;
+        let mut table_sym = vec![0u16; size];
+        let mut table_len = vec![0u8; size];
+        for (s, &l) in code.lengths.iter().enumerate() {
+            let l = l as usize;
+            if l == 0 || l > table_bits {
+                continue;
+            }
+            // stream order is the codeword's bits MSB-first, read LSB-first
+            // from the packed bytes — i.e. the reversed canonical code is
+            // the low-l-bit pattern every matching window shares
+            let prefix = reverse_bits(code.codes[s], l as u32) as usize;
+            for hi in 0..(1usize << (table_bits - l)) {
+                let slot = (hi << l) | prefix;
+                table_sym[slot] = s as u16;
+                table_len[slot] = l as u8;
+            }
+        }
+        HuffmanDecoder {
+            table_sym,
+            table_len,
+            table_bits,
+            first_code,
+            first_idx,
+            count_at,
+            order,
+            max_len,
+        }
+    }
+
+    /// Decode `count` symbols from an [`HuffmanCode::encode_interleaved`]
+    /// container with these prebuilt tables — the entry point for serving
+    /// loops that decode many containers under one code (semantics as in
+    /// [`HuffmanCode::decode_interleaved`], which delegates here).
+    pub fn decode_interleaved(
+        &self,
+        data: &[u8],
+        count: usize,
+    ) -> Vec<u16> {
+        let (lanes, streams) = parse_lane_container(data);
+        let mut readers: Vec<LaneReader> = streams
+            .iter()
+            .map(|&(s, bits)| LaneReader::new(s, bits))
+            .collect();
+        let mut out = Vec::with_capacity(count);
+        for i in 0..count {
+            out.push(self.decode_one(&mut readers[i % lanes]));
+        }
+        out
+    }
+
+    /// Decode one symbol from a lane: one table probe for codes of
+    /// ≤ `table_bits` bits, canonical walk otherwise.  Panics (max-length
+    /// assert) on a prefix no codeword matches — a corrupt/torn stream.
+    #[inline]
+    fn decode_one(&self, r: &mut LaneReader) -> u16 {
+        let probe = r.peek(self.table_bits);
+        let len = self.table_len[probe] as usize;
+        if len != 0 {
+            r.consume(len);
+            return self.table_sym[probe];
+        }
+        // over-long code: the table covers every code of ≤ table_bits
+        // bits, so only lengths beyond it can still match
+        let mut code = 0u32;
+        let mut l = 0usize;
+        loop {
+            code = (code << 1) | r.take1();
+            l += 1;
+            assert!(l <= self.max_len, "corrupt or torn Huffman stream");
+            if l <= self.table_bits {
+                continue;
+            }
+            let rank = code.wrapping_sub(self.first_code[l]);
+            if code >= self.first_code[l] && rank < self.count_at[l] {
+                return self.order[self.first_idx[l] + rank as usize];
+            }
+        }
     }
 }
 
@@ -310,6 +609,83 @@ mod tests {
             let (bytes, _) = code.encode(&stream);
             assert_eq!(code.decode(&bytes, stream.len()), stream);
         });
+    }
+
+    #[test]
+    fn table_decoder_matches_oracle_across_lane_counts() {
+        let counts = [900u64, 400, 220, 90, 40, 17, 6, 2, 1, 1];
+        let code = HuffmanCode::from_counts(&counts);
+        let mut rng = Rng::new(7);
+        let symbols = stream_from_counts(&counts, &mut rng);
+        let (bytes, _) = code.encode(&symbols);
+        let oracle = code.decode(&bytes, symbols.len());
+        assert_eq!(oracle, symbols);
+        for lanes in [1usize, 2, 4, 8] {
+            let container = code.encode_interleaved(&symbols, lanes);
+            assert_eq!(
+                code.decode_interleaved(&container, symbols.len()),
+                oracle,
+                "lanes={lanes}"
+            );
+            // prefix decode: the first count' symbols come out identically
+            let short = symbols.len() / 3;
+            assert_eq!(
+                code.decode_interleaved(&container, short),
+                symbols[..short],
+                "lanes={lanes} short"
+            );
+        }
+    }
+
+    #[test]
+    fn over_long_codes_take_the_fallback_walk() {
+        // near-Fibonacci counts force code lengths beyond TABLE_BITS so
+        // the flattened table cannot hold them all
+        let mut counts = vec![0u64; 20];
+        let (mut a, mut b) = (1u64, 1u64);
+        for c in counts.iter_mut() {
+            *c = a;
+            let next = a + b;
+            b = a;
+            a = next;
+        }
+        let code = HuffmanCode::from_counts(&counts);
+        let max_len = *code.lengths.iter().max().unwrap() as usize;
+        assert!(
+            max_len > super::TABLE_BITS,
+            "want over-long codes, got max {max_len}"
+        );
+        let symbols: Vec<u16> =
+            (0..counts.len() as u16).chain((0..10).map(|_| 0)).collect();
+        let container = code.encode_interleaved(&symbols, 3);
+        assert_eq!(
+            code.decode_interleaved(&container, symbols.len()),
+            symbols
+        );
+    }
+
+    #[test]
+    fn torn_containers_panic_cleanly() {
+        let counts = [10u64, 5, 2, 1];
+        let code = HuffmanCode::from_counts(&counts);
+        let symbols = vec![0u16, 1, 2, 3, 0, 1, 0];
+        let container = code.encode_interleaved(&symbols, 2);
+        for cut in [0usize, 1, 5, container.len() - 1] {
+            let torn = &container[..cut];
+            let r = std::panic::catch_unwind(|| {
+                code.decode_interleaved(torn, symbols.len())
+            });
+            assert!(r.is_err(), "cut at {cut} must panic, not misread");
+        }
+        // asking for more symbols than were encoded must panic (lane
+        // over-read), not fabricate symbols from the zero padding — the
+        // header's exact bit counts make even a +1 over-count detectable
+        for extra in [1usize, 100] {
+            let r = std::panic::catch_unwind(|| {
+                code.decode_interleaved(&container, symbols.len() + extra)
+            });
+            assert!(r.is_err(), "over-count (+{extra}) decode must panic");
+        }
     }
 
     #[test]

@@ -2,11 +2,33 @@
 //! model, a canonical Huffman coder, a range-Asymmetric-Numeral-System
 //! coder, and the entropy-constrained uniform-grid quantiser that is optimal
 //! when followed by a lossless compressor (appendix B.3).
+//!
+//! Both practical coders carry a serving-scale decode path alongside the
+//! single-stream oracle: K-way lane-interleaved containers
+//! ([`huffman::HuffmanCode::encode_interleaved`] with a flattened
+//! table-driven decoder, [`rans::rans_encode_interleaved`] with K
+//! round-robin states over one shared stream).  Lane counts live in the
+//! container header; K = 1 stays bit-compatible with the oracle coders
+//! (`EXPERIMENTS.md` §Interleaved).
 
 pub mod grid;
 pub mod huffman;
 pub mod rans;
 pub mod tables;
+
+/// Most lanes an interleaved container can carry — shared by the Huffman
+/// and rANS containers so a stream produced under one coder's limit is
+/// always within the other's (the count is a header byte; 0 is reserved
+/// as invalid).
+pub const MAX_LANES: usize = 255;
+
+/// Validate an interleaved lane count against [`MAX_LANES`].
+pub(crate) fn assert_lane_count(lanes: usize) {
+    assert!(
+        (1..=MAX_LANES).contains(&lanes),
+        "lane count {lanes} outside 1..={MAX_LANES}"
+    );
+}
 
 /// Shannon entropy (bits/symbol) of a count histogram.
 pub fn entropy_bits(counts: &[u64]) -> f64 {

@@ -5,6 +5,14 @@
 //!
 //! 32-bit state, 8-bit renormalisation, 12-bit quantised frequencies.
 //! Symbols are encoded in reverse so decode is forward.
+//!
+//! Serving path: [`rans_encode_interleaved`] / [`rans_decode_interleaved`]
+//! carry symbol `i` in state `i mod K`, K states renormalising round-robin
+//! into ONE shared byte stream (the decoder's reads replay the encoder's
+//! writes exactly in reverse, so no per-lane framing is needed — only the
+//! lane count in the container header).  K independent decode chains hide
+//! the div-free state-update latency behind each other.  `K == 1` emits a
+//! bit-identical payload to the single-stream [`rans_encode`] oracle.
 
 const PROB_BITS: u32 = 12;
 const PROB_SCALE: u32 = 1 << PROB_BITS;
@@ -100,6 +108,90 @@ pub fn rans_encode(model: &RansModel, symbols: &[u16]) -> Vec<u8> {
         state >>= 8;
     }
     out.reverse();
+    out
+}
+
+/// Encode with K interleaved rANS states into a lane-count-prefixed
+/// container: `[K: u8][shared byte stream]`.  Symbol `i` updates state
+/// `i mod K`; states renormalise round-robin into one stream, encoded in
+/// reverse so the decoder runs forward.  `lanes == 1` reproduces the
+/// [`rans_encode`] payload byte for byte.
+pub fn rans_encode_interleaved(
+    model: &RansModel,
+    symbols: &[u16],
+    lanes: usize,
+) -> Vec<u8> {
+    super::assert_lane_count(lanes);
+    let mut out: Vec<u8> =
+        Vec::with_capacity(symbols.len() + 4 * lanes + 1);
+    let mut states = vec![RANS_LOW; lanes];
+    for (i, &s) in symbols.iter().enumerate().rev() {
+        let f = model.freq[s as usize];
+        assert!(f > 0, "symbol {s} not in model");
+        let c = model.cum[s as usize];
+        let x_max = ((RANS_LOW >> PROB_BITS) << 8) * f;
+        let state = &mut states[i % lanes];
+        while *state >= x_max {
+            out.push((*state & 0xFF) as u8);
+            *state >>= 8;
+        }
+        *state = (*state / f) * PROB_SCALE + (*state % f) + c;
+    }
+    // flush lane K-1 first so lane 0's state bytes — then the header — are
+    // at the front once the stream is reversed
+    for k in (0..lanes).rev() {
+        let mut st = states[k];
+        for _ in 0..4 {
+            out.push((st & 0xFF) as u8);
+            st >>= 8;
+        }
+    }
+    out.push(lanes as u8);
+    out.reverse();
+    out
+}
+
+/// Decode `count` symbols from a [`rans_encode_interleaved`] container,
+/// running the K states round-robin over the shared stream.  Decoding a
+/// prefix (`count` below what was encoded) yields exactly the first
+/// `count` symbols.  Panics on a container too short to hold the header
+/// and the K flushed states.
+pub fn rans_decode_interleaved(
+    model: &RansModel,
+    data: &[u8],
+    count: usize,
+) -> Vec<u16> {
+    assert!(!data.is_empty(), "interleaved container: missing header");
+    let lanes = data[0] as usize;
+    assert!(lanes >= 1, "interleaved container: zero lanes");
+    assert!(
+        data.len() >= 1 + 4 * lanes,
+        "interleaved container: torn state flush ({} of {} bytes)",
+        data.len(),
+        1 + 4 * lanes
+    );
+    let mut pos = 1usize;
+    let mut states = vec![0u32; lanes];
+    for st in states.iter_mut() {
+        for _ in 0..4 {
+            *st = (*st << 8) | data[pos] as u32;
+            pos += 1;
+        }
+    }
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let state = &mut states[i % lanes];
+        let slot = *state & (PROB_SCALE - 1);
+        let s = model.slot_to_symbol[slot as usize];
+        out.push(s);
+        let f = model.freq[s as usize];
+        let c = model.cum[s as usize];
+        *state = f * (*state >> PROB_BITS) + slot - c;
+        while *state < RANS_LOW && pos < data.len() {
+            *state = (*state << 8) | data[pos] as u32;
+            pos += 1;
+        }
+    }
     out
 }
 
@@ -202,5 +294,52 @@ mod tests {
         let model = RansModel::from_counts(&[1, 1]);
         let enc = rans_encode(&model, &[]);
         assert_eq!(rans_decode(&model, &enc, 0), Vec::<u16>::new());
+    }
+
+    #[test]
+    fn interleaved_roundtrips_and_single_lane_is_bit_identical() {
+        let counts = [100u64, 37, 4, 1, 220];
+        let model = RansModel::from_counts(&counts);
+        let mut rng = Rng::new(9);
+        let stream = random_stream(&counts, 5000, &mut rng);
+        let oracle = rans_encode(&model, &stream);
+        for lanes in [1usize, 2, 4, 8] {
+            let container =
+                rans_encode_interleaved(&model, &stream, lanes);
+            assert_eq!(container[0] as usize, lanes);
+            assert_eq!(
+                rans_decode_interleaved(&model, &container, stream.len()),
+                stream,
+                "lanes={lanes}"
+            );
+            // prefix decode yields exactly the head of the stream
+            let short = stream.len() / 3;
+            assert_eq!(
+                rans_decode_interleaved(&model, &container, short),
+                stream[..short],
+                "lanes={lanes} short"
+            );
+        }
+        // K=1 wraps the oracle payload byte for byte
+        let one = rans_encode_interleaved(&model, &stream, 1);
+        assert_eq!(&one[1..], &oracle[..]);
+    }
+
+    #[test]
+    fn interleaved_empty_and_torn() {
+        let model = RansModel::from_counts(&[3, 1]);
+        let enc = rans_encode_interleaved(&model, &[], 4);
+        assert_eq!(enc.len(), 1 + 16, "4 flushed states + header");
+        assert_eq!(
+            rans_decode_interleaved(&model, &enc, 0),
+            Vec::<u16>::new()
+        );
+        for cut in [0usize, 1, 9] {
+            let torn = enc[..cut].to_vec();
+            let r = std::panic::catch_unwind(|| {
+                rans_decode_interleaved(&model, &torn, 0)
+            });
+            assert!(r.is_err(), "cut at {cut} must panic");
+        }
     }
 }

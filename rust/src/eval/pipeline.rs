@@ -26,6 +26,15 @@ pub struct TensorQdq {
     pub sq_err: f64,
 }
 
+/// Internal result of the per-path helpers: reconstruction + honest bits.
+/// `sq_err` is *not* computed here — [`qdq_tensor`] measures it once
+/// against the original (pre-rotation, pre-layout) data, so any per-path
+/// error pass would be dead work.
+struct Reconstructed {
+    recon: Vec<f32>,
+    bits: f64,
+}
+
 /// Quantise→dequantise one tensor under a scheme.
 ///
 /// * `shape`/`channel_axis` drive channel granularity (2-D tensors with
@@ -56,7 +65,7 @@ pub fn qdq_tensor(
     // --- channel granularity: make scale groups contiguous -----------------
     // (`work` is moved through, so tensors that need no relayout cost no
     // extra copy on either side of the quantiser)
-    let (mut flat, channel_len, transposed) = prepare_layout(
+    let (flat, channel_len, transposed) = prepare_layout(
         work,
         shape,
         channel_axis,
@@ -65,7 +74,9 @@ pub fn qdq_tensor(
 
     let result = match &scheme.element {
         Element::Grid => qdq_grid(scheme, &flat)?,
-        _ => qdq_codebook(scheme, &mut flat, channel_len, fisher)?,
+        // codebook paths take the layout buffer by value: the compressed
+        // path decodes straight back into it (no per-tensor recon Vec)
+        _ => qdq_codebook(scheme, flat, channel_len, fisher)?,
     };
 
     // --- sparse outliers are patched on the *layout* buffer ---------------
@@ -135,20 +146,21 @@ fn restore_layout(
     out
 }
 
-/// Dense codebook path (everything except Grid).
+/// Dense codebook path (everything except Grid).  Owns the layout buffer
+/// so the compressed path can decode back into it zero-copy.
 fn qdq_codebook(
     scheme: &Scheme,
-    flat: &mut [f32],
+    mut flat: Vec<f32>,
     channel_len: usize,
     fisher: &[f32],
-) -> Result<TensorQdq> {
+) -> Result<Reconstructed> {
     let group_len = match scheme.granularity {
         Granularity::Block(b) => b,
         Granularity::Channel => channel_len.max(1),
         Granularity::Tensor => flat.len(),
     };
     let codebook =
-        scheme.build_codebook(group_len, Some(flat), fisher)?;
+        scheme.build_codebook(group_len, Some(flat.as_slice()), fisher)?;
     let mut quantiser = Quantiser::new(
         scheme.granularity,
         scheme.statistic,
@@ -160,7 +172,7 @@ fn qdq_codebook(
     if scheme.multiplier.is_nan() {
         let weights = if fisher.is_empty() { &[][..] } else { fisher };
         let base = quantiser.clone();
-        let flat_ref: &[f32] = flat;
+        let flat_ref: &[f32] = &flat;
         let (best, _) = grid_then_golden(&scale_search_grid(), |m| {
             let q = base.clone().with_multiplier(m);
             let recon = q.qdq(flat_ref, channel_len);
@@ -187,40 +199,33 @@ fn qdq_codebook(
         let (recon, bits, counts) = qdq_outliers_with_hist(
             &quantiser,
             &sparse,
-            flat,
+            &flat,
             fisher,
             channel_len,
         );
         let h = entropy_bits(&counts);
         (recon, bits - quantiser.codebook.storage_bits() + h)
     } else if scheme.sparse > 0.0 {
-        qdq_with_outliers(&quantiser, &sparse, flat, fisher, channel_len)
+        qdq_with_outliers(&quantiser, &sparse, &flat, fisher, channel_len)
     } else if scheme.compress {
         // fused single pass: scales, indices and the index histogram come
         // out of one kernel; the reconstruction is decoded from the same
         // indices (bit-identical to the fused qdq — both paths multiply by
-        // the same reciprocal), so qdq never re-walks the data
-        let (enc, stats) = quantiser.encode_with_stats(flat, channel_len);
+        // the same reciprocal) straight back into the layout buffer, so
+        // qdq never re-walks the data and never allocates a recon Vec
+        let (enc, stats) = quantiser.encode_with_stats(&flat, channel_len);
         let h = entropy_bits(&stats.counts);
         let bits = quantiser.bits_per_element(flat.len(), channel_len)
             - quantiser.codebook.storage_bits()
             + h;
-        return Ok(TensorQdq {
-            recon: quantiser.decode(&enc),
-            bits,
-            sq_err: stats.sq_err,
-        });
+        quantiser.decode_into(&enc, &mut flat);
+        return Ok(Reconstructed { recon: flat, bits });
     } else {
-        let recon = quantiser.qdq(flat, channel_len);
+        let recon = quantiser.qdq(&flat, channel_len);
         (recon, quantiser.bits_per_element(flat.len(), channel_len))
     };
 
-    let sq_err = crate::util::stats::sq_err(flat, &recon);
-    Ok(TensorQdq {
-        recon,
-        bits,
-        sq_err,
-    })
+    Ok(Reconstructed { recon, bits })
 }
 
 /// Compressed uniform grid path (§2.3/§4): tensor-RMS scaling is *folded
@@ -232,7 +237,7 @@ fn qdq_codebook(
 /// for the compressed format's win; the realised entropy is reported as
 /// the honest bits figure.  A per-tensor δ search to a *fixed* rate
 /// (`:search` flag) is also available, and measurably worse at low b.
-fn qdq_grid(scheme: &Scheme, flat: &[f32]) -> Result<TensorQdq> {
+fn qdq_grid(scheme: &Scheme, flat: &[f32]) -> Result<Reconstructed> {
     if scheme.granularity != Granularity::Tensor {
         bail!("grid schemes use tensor granularity (scale folds into δ)");
     }
@@ -240,21 +245,19 @@ fn qdq_grid(scheme: &Scheme, flat: &[f32]) -> Result<TensorQdq> {
         // explicit per-tensor rate search (fixed-rate-per-tensor ablation)
         let r = grid_for_target_bits(flat, scheme.bits);
         let grid = crate::compress::grid::UniformGrid::new(r.delta);
-        return Ok(TensorQdq {
+        return Ok(Reconstructed {
             recon: grid_qdq_all(&grid, flat),
             bits: r.bits_per_element,
-            sq_err: r.sq_err,
         });
     }
     const H0: f64 = 2.047; // ½·log2(2πe)
     let rms = crate::util::stats::rms(flat).max(1e-30);
     let delta = rms * 2f64.powf(H0 - scheme.bits) * scheme.multiplier;
     let grid = crate::compress::grid::UniformGrid::new(delta);
-    let (counts, sq_err) = grid.count_histogram(flat);
-    Ok(TensorQdq {
+    let (counts, _sq_err) = grid.count_histogram(flat);
+    Ok(Reconstructed {
         recon: grid_qdq_all(&grid, flat),
         bits: entropy_bits(&counts),
-        sq_err,
     })
 }
 

@@ -5,7 +5,10 @@
 use anyhow::Result;
 
 use crate::compress::grid::grid_for_target_bits;
-use crate::compress::rans::{rans_decode, rans_encode};
+use crate::compress::rans::{
+    rans_decode, rans_decode_interleaved, rans_encode,
+    rans_encode_interleaved,
+};
 use crate::compress::{entropy_bits, information_content, smoothed_probs};
 use crate::coordinator::config::{Element, Scheme};
 use crate::coordinator::{fmt, Report};
@@ -646,6 +649,16 @@ pub fn fig24_compressors(opts: &RunOpts) -> Result<Report> {
             rans_decode(&model, &renc, symbols.len())[..100],
             symbols[..100]
         );
+        // and that the 4-lane interleaved serving decoders agree with the
+        // single-lane oracles on a probe slice of the same stream
+        let probe = symbols.len().min(10_000);
+        let ri = rans_encode_interleaved(&model, &symbols[..probe], 4);
+        assert_eq!(
+            rans_decode_interleaved(&model, &ri, probe),
+            symbols[..probe]
+        );
+        let hi = huff.encode_interleaved(&symbols[..probe], 4);
+        assert_eq!(huff.decode_interleaved(&hi, probe), symbols[..probe]);
         let r_rate = renc.len() as f64 * 8.0 / symbols.len() as f64;
         // information content under the smoothed sample model
         let probs = smoothed_probs(&counts);

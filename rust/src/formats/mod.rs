@@ -36,6 +36,19 @@
 //!   `f32` input, including ±∞, subnormals, exact midpoints and NaN
 //!   (NaN maps to index 0 on all paths).  `rust/tests/lut_props.rs` and the
 //!   bench smoke gate in `benches/formats.rs` enforce this offline.
+//! * **Batched gather.** The hot batch kernels ([`Codebook::qdq_scaled_slice`],
+//!   [`Codebook::encode_block`]) walk the LUT in tiles of [`Lut::TILE`]
+//!   elements: the bucket slots for the whole tile are computed as `u32`s in
+//!   a straight arithmetic pass (subtract / multiply / saturating cast —
+//!   auto-vectorisable) before any table load, then the `base`/`pad_mids`
+//!   gathers pipeline behind it.  The `f32 → u32` saturating cast agrees
+//!   with the scalar `f32 → usize` cast for every input (NaN and negatives
+//!   to 0, +∞ and overflow to the top, both clamped by the same `min`), so
+//!   tiled and scalar lookups are bit-identical.
+//!
+//! The decode side mirrors this: [`Codebook::decode_block`] hoists the
+//!   per-block scale into a scaled-codepoint table once, making the inner
+//!   dequantise loop a single gather (invariants in `EXPERIMENTS.md` §Decode).
 
 pub mod cbrt;
 pub mod float;
@@ -157,6 +170,35 @@ impl Lut {
         let b = unsafe { *self.base.get_unchecked(t) };
         let m = unsafe { *self.pad_mids.get_unchecked(b as usize) };
         b + (y >= m) as u16
+    }
+
+    /// Elements per batched-gather tile (module docs, "Batched gather").
+    const TILE: usize = 32;
+
+    /// Batched [`Lut::lookup`] over one tile: bucket slots for all lanes
+    /// are computed as `u32`s in a pure-arithmetic pass (vectorises) before
+    /// the table gathers run.  Bit-identical to the scalar lookup: the
+    /// saturating `f32 → u32` cast matches `f32 → usize` for every input
+    /// once both are clamped to the (≤ 2^16-entry) table.
+    #[inline]
+    fn lookup_tile(
+        &self,
+        ys: &[f32; Self::TILE],
+        out: &mut [u16; Self::TILE],
+    ) {
+        let top = (self.base.len() - 1) as u32;
+        let mut slots = [0u32; Self::TILE];
+        for (slot, &y) in slots.iter_mut().zip(ys.iter()) {
+            *slot = (((y - self.lo) * self.inv_step) as u32).min(top);
+        }
+        for ((o, &t), &y) in out.iter_mut().zip(slots.iter()).zip(ys.iter())
+        {
+            // SAFETY: t <= top < base.len(); base[t] <= mids.len(), and
+            // pad_mids has exactly mids.len() + 1 entries.
+            let b = unsafe { *self.base.get_unchecked(t as usize) };
+            let m = unsafe { *self.pad_mids.get_unchecked(b as usize) };
+            *o = b + (y >= m) as u16;
+        }
     }
 }
 
@@ -316,10 +358,25 @@ impl Codebook {
     pub fn qdq_scaled_slice(&self, xs: &mut [f32], inv: f32, s: f32) {
         let pts = &self.points;
         if let Some(lut) = &self.lut {
-            for x in xs.iter_mut() {
-                let idx = lut.lookup(*x * inv);
+            // batched-gather tiles: scale the whole tile, resolve all
+            // bucket slots, then gather codepoints (module docs)
+            let mut ys = [0f32; Lut::TILE];
+            let mut idx = [0u16; Lut::TILE];
+            let mut chunks = xs.chunks_exact_mut(Lut::TILE);
+            for chunk in chunks.by_ref() {
+                for (y, &x) in ys.iter_mut().zip(chunk.iter()) {
+                    *y = x * inv;
+                }
+                lut.lookup_tile(&ys, &mut idx);
+                for (x, &i) in chunk.iter_mut().zip(idx.iter()) {
+                    // SAFETY: lookup_tile returns < points.len()
+                    *x = unsafe { *pts.get_unchecked(i as usize) } * s;
+                }
+            }
+            for x in chunks.into_remainder().iter_mut() {
+                let i = lut.lookup(*x * inv);
                 // SAFETY: lookup returns < points.len()
-                *x = unsafe { *pts.get_unchecked(idx as usize) } * s;
+                *x = unsafe { *pts.get_unchecked(i as usize) } * s;
             }
             return;
         }
@@ -367,13 +424,42 @@ impl Codebook {
         let mut sq = *sq_err;
         match &self.lut {
             Some(lut) => {
-                for (&x, slot) in block.iter().zip(out.iter_mut()) {
-                    let idx = lut.lookup(x * inv);
-                    *slot = idx;
+                // same tile shape as qdq_scaled_slice: bucket arithmetic
+                // for the whole tile first, then the gather + accumulate
+                let mut ys = [0f32; Lut::TILE];
+                let mut idx = [0u16; Lut::TILE];
+                let n = block.len();
+                let mut base = 0usize;
+                while base + Lut::TILE <= n {
+                    let tile = &block[base..base + Lut::TILE];
+                    for (y, &x) in ys.iter_mut().zip(tile.iter()) {
+                        *y = x * inv;
+                    }
+                    lut.lookup_tile(&ys, &mut idx);
+                    for (j, (&x, &i)) in
+                        tile.iter().zip(idx.iter()).enumerate()
+                    {
+                        out[base + j] = i;
+                        // SAFETY: lookup_tile returns < points.len()
+                        //         == counts.len()
+                        let p = unsafe { *pts.get_unchecked(i as usize) };
+                        unsafe {
+                            *counts.get_unchecked_mut(i as usize) += 1;
+                        }
+                        let d = x as f64 - (p * s) as f64;
+                        sq += d * d;
+                    }
+                    base += Lut::TILE;
+                }
+                for (&x, slot) in
+                    block[base..].iter().zip(out[base..].iter_mut())
+                {
+                    let i = lut.lookup(x * inv);
+                    *slot = i;
                     // SAFETY: lookup returns < points.len() == counts.len()
-                    let p = unsafe { *pts.get_unchecked(idx as usize) };
+                    let p = unsafe { *pts.get_unchecked(i as usize) };
                     unsafe {
-                        *counts.get_unchecked_mut(idx as usize) += 1;
+                        *counts.get_unchecked_mut(i as usize) += 1;
                     }
                     let d = x as f64 - (p * s) as f64;
                     sq += d * d;
@@ -390,6 +476,37 @@ impl Codebook {
             }
         }
         *sq_err = sq;
+    }
+
+    /// Fused dequantise kernel for one scale block — the decode-side mirror
+    /// of [`Codebook::encode_block`]: `out[i] = points[indices[i]]·s` with
+    /// the scale multiplied into a per-block scaled-codepoint table once
+    /// (`scaled` is caller-owned scratch, reused across blocks), so the
+    /// inner loop is a single gather with no per-element multiply.
+    /// Bit-exact with the scalar `dequantise(idx) * s` — the same f32
+    /// multiply, hoisted.  Blocks shorter than the codebook skip the table
+    /// (building it would dominate) and multiply per element instead.
+    /// Panics on an out-of-range index (corrupt [`crate::quant::Encoded`]).
+    pub fn decode_block(
+        &self,
+        indices: &[u16],
+        s: f32,
+        out: &mut [f32],
+        scaled: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(indices.len(), out.len());
+        let pts = &self.points;
+        if indices.len() >= pts.len() {
+            scaled.clear();
+            scaled.extend(pts.iter().map(|&p| p * s));
+            for (slot, &i) in out.iter_mut().zip(indices.iter()) {
+                *slot = scaled[i as usize];
+            }
+        } else {
+            for (slot, &i) in out.iter_mut().zip(indices.iter()) {
+                *slot = pts[i as usize] * s;
+            }
+        }
     }
 
     /// Largest |codepoint| (the representable range).
@@ -648,6 +765,68 @@ mod tests {
         }
         assert_eq!(sq, want_sq);
         assert_eq!(counts.iter().sum::<u64>() as usize, block.len());
+    }
+
+    #[test]
+    fn tiled_batch_paths_match_scalar_lookup() {
+        // qdq_scaled_slice / encode_block now walk the LUT in TILE-sized
+        // batches; lengths straddling tile boundaries (and the remainder
+        // loop) must agree with the scalar lookup bit-for-bit, including
+        // on the adversarial probe set
+        let cb = crate::formats::int::int_codebook(4, Variant::Asymmetric);
+        assert!(cb.has_lut());
+        let mut probes = cb.adversarial_probes();
+        for i in -300..300 {
+            probes.push(i as f32 * 0.0071);
+        }
+        for len in [1usize, 31, 32, 33, 64, 95, 97] {
+            let base: Vec<f32> =
+                probes.iter().cycle().take(len).copied().collect();
+            let (inv, s) = (1.0 / 1.3, 1.3f32);
+            let mut batch = base.clone();
+            cb.qdq_scaled_slice(&mut batch, inv, s);
+            let mut idx = vec![0u16; len];
+            let mut sq = 0f64;
+            let mut counts = vec![0u64; cb.len()];
+            cb.encode_block(&base, inv, s, &mut idx, &mut sq, &mut counts);
+            for (j, &x) in base.iter().enumerate() {
+                let want = cb.quantise(x * inv);
+                assert_eq!(idx[j], want, "len={len} j={j} x={x:?}");
+                let want_q = cb.dequantise(want) * s;
+                assert!(
+                    batch[j] == want_q
+                        || (batch[j].is_nan() && want_q.is_nan()),
+                    "len={len} j={j}: {} vs {want_q}",
+                    batch[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_block_matches_scalar_dequantise() {
+        let cb = crate::formats::int::int_codebook(4, Variant::Symmetric);
+        let mut scratch = Vec::new();
+        for len in [1usize, 8, 64, 129] {
+            // len 8 < codebook len 16 exercises the no-table fallback
+            let indices: Vec<u16> =
+                (0..len).map(|i| (i % cb.len()) as u16).collect();
+            let s = 2.7f32;
+            let mut out = vec![0f32; len];
+            cb.decode_block(&indices, s, &mut out, &mut scratch);
+            for (j, &i) in indices.iter().enumerate() {
+                assert_eq!(out[j], cb.dequantise(i) * s, "len={len} j={j}");
+            }
+        }
+        // out-of-range index must panic, not read out of bounds
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let mut out = vec![0f32; 2];
+                let mut scratch = Vec::new();
+                cb.decode_block(&[0, 999], 1.0, &mut out, &mut scratch);
+            }),
+        );
+        assert!(r.is_err(), "corrupt index must panic");
     }
 
     #[test]

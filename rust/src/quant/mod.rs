@@ -198,8 +198,125 @@ impl Quantiser {
         )
     }
 
-    /// Reconstruct from an encoding.
+    /// Reconstruct from an encoding.  Allocates the output once and
+    /// delegates to the fused [`Quantiser::decode_into`] kernel; callers on
+    /// the serving path that already own a buffer should call `decode_into`
+    /// directly and skip the allocation.
     pub fn decode(&self, enc: &Encoded) -> Vec<f32> {
+        let mut out = vec![0f32; enc.indices.len()];
+        self.decode_into(enc, &mut out);
+        out
+    }
+
+    /// The fused decode kernel — the serving-scale counterpart of
+    /// [`Quantiser::encode_with_stats`]: per block, the scale is hoisted
+    /// into a scaled-codepoint table once ([`Codebook::decode_block`]) so
+    /// the inner loop is a single gather, and large tensors fan
+    /// group-aligned chunks over the worker pool exactly like the encode
+    /// kernel (bit-identical to the serial path — every element is
+    /// `points[idx]·s` whichever thread computes it).  Bit-exact with
+    /// [`Quantiser::decode_ref`] and with the fused qdq by construction
+    /// (`EXPERIMENTS.md` §Decode); `rust/tests/decode_props.rs` and the
+    /// bench gate in `benches/formats.rs` enforce this.
+    ///
+    /// Panics if `out.len()`, the index count or the scale count disagree
+    /// with the group table.  Group *start* offsets are redundant with the
+    /// lengths and ignored, exactly as in `decode_ref`'s running-cursor
+    /// walk, so no hand-built encoding can make the two paths diverge.
+    pub fn decode_into(&self, enc: &Encoded, out: &mut [f32]) {
+        use crate::util::pool::{self, PAR_THRESHOLD};
+        let n: usize = enc.groups.iter().map(|&(_, l)| l).sum();
+        assert_eq!(
+            out.len(),
+            n,
+            "decode_into: output buffer length mismatch"
+        );
+        assert_eq!(
+            enc.indices.len(),
+            n,
+            "decode_into: index/group length mismatch"
+        );
+        assert_eq!(
+            enc.scales.len(),
+            enc.groups.len(),
+            "decode_into: scale/group count mismatch"
+        );
+        let k = self.codebook.len();
+        let group_len = enc.groups.first().map(|&(_, len)| len).unwrap_or(0);
+        // single-group (tensor) encodings parallelise within the group:
+        // every chunk shares the one scale
+        if enc.groups.len() == 1 && n >= PAR_THRESHOLD {
+            let s = enc.scales[0];
+            let chunk = n.div_ceil(pool::num_threads()).max(1);
+            pool::par_chunks_mut(out, chunk, |ci, chunk_out| {
+                let base = ci * chunk;
+                let mut scaled = Vec::with_capacity(k);
+                self.codebook.decode_block(
+                    &enc.indices[base..base + chunk_out.len()],
+                    s,
+                    chunk_out,
+                    &mut scaled,
+                );
+            });
+            return;
+        }
+        // the chunked fan-out assumes the scale_groups layout (uniform
+        // group length except possibly the last); anything else — hand-built
+        // encodings — takes the serial per-group walk below
+        let uniform = group_len > 0
+            && enc.groups.iter().enumerate().all(|(i, &(start, len))| {
+                start == i * group_len
+                    && (len == group_len
+                        || (i + 1 == enc.groups.len()
+                            && len <= group_len))
+            });
+        if uniform && n >= PAR_THRESHOLD && enc.groups.len() > 1 {
+            let per = enc
+                .groups
+                .len()
+                .div_ceil(pool::num_threads())
+                .max(1);
+            let chunk = per * group_len;
+            pool::par_chunks_mut(out, chunk, |ci, chunk_out| {
+                let base = ci * chunk;
+                let mut scaled = Vec::with_capacity(k);
+                let mut gi = ci * per;
+                let mut off = 0usize;
+                while off < chunk_out.len() {
+                    let len = group_len.min(chunk_out.len() - off);
+                    self.codebook.decode_block(
+                        &enc.indices[base + off..base + off + len],
+                        enc.scales[gi],
+                        &mut chunk_out[off..off + len],
+                        &mut scaled,
+                    );
+                    gi += 1;
+                    off += len;
+                }
+            });
+        } else {
+            // running-cursor walk, exactly like decode_ref (group start
+            // offsets are redundant with the lengths and are ignored on
+            // both paths, so hand-built encodings cannot diverge)
+            let mut scaled = Vec::with_capacity(k);
+            let mut cursor = 0usize;
+            for (gi, &(_, len)) in enc.groups.iter().enumerate() {
+                self.codebook.decode_block(
+                    &enc.indices[cursor..cursor + len],
+                    enc.scales[gi],
+                    &mut out[cursor..cursor + len],
+                    &mut scaled,
+                );
+                cursor += len;
+            }
+        }
+    }
+
+    /// Reference reconstruction — the scalar per-element walk the fused
+    /// [`Quantiser::decode_into`] kernel is property-tested against (and
+    /// the `[dec-ref]` rows in `benches/formats.rs` time).  Kept verbatim
+    /// as the oracle; not for hot paths.
+    pub fn decode_ref(&self, enc: &Encoded) -> Vec<f32> {
         let n: usize = enc.groups.iter().map(|&(_, l)| l).sum();
         let mut out = Vec::with_capacity(n);
         let mut cursor = 0usize;
@@ -341,6 +458,90 @@ mod tests {
         let dec = q.decode(&enc);
         let direct = q.qdq(&data, 0);
         assert_eq!(dec, direct);
+        // the fused kernel, the zero-copy entry point and the scalar
+        // oracle are one bit pattern
+        assert_eq!(dec, q.decode_ref(&enc));
+        let mut buf = vec![0f32; data.len()];
+        q.decode_into(&enc, &mut buf);
+        assert_eq!(buf, dec);
+    }
+
+    #[test]
+    fn decode_into_parallel_matches_serial_and_ref() {
+        // above the parallel threshold the fanned-out decode must agree
+        // bitwise with the forced-serial path (nested guard) and with the
+        // scalar oracle, for multi-group and single-group (tensor) layouts
+        let mut rng = Rng::new(31);
+        let data = Dist::standard(Family::StudentT, 6.0)
+            .sample_vec(&mut rng, 1 << 17);
+        for q in [
+            block_absmax_int4(),
+            Quantiser::new(
+                Granularity::Tensor,
+                Statistic::Rms,
+                ScaleFormat::F32,
+                int_codebook(4, Variant::Symmetric),
+            ),
+        ] {
+            let enc = q.encode(&data, 0);
+            let mut par = vec![0f32; data.len()];
+            q.decode_into(&enc, &mut par);
+            let serial = crate::util::pool::par_map(&[0, 1], |i, _| {
+                (i == 0).then(|| {
+                    let mut out = vec![0f32; data.len()];
+                    q.decode_into(&enc, &mut out);
+                    out
+                })
+            })
+            .swap_remove(0)
+            .unwrap();
+            assert_eq!(par, serial);
+            assert_eq!(par, q.decode_ref(&enc));
+        }
+    }
+
+    #[test]
+    fn decode_into_handles_nonuniform_groups_and_mismatch() {
+        // hand-built group layouts fall back to the serial walk and still
+        // match the oracle; a wrong-length buffer panics
+        let q = block_absmax_int4();
+        let enc = Encoded {
+            scales: vec![2.0, 0.5, 4.0],
+            indices: vec![0, 3, 7, 15, 1, 2, 9],
+            groups: vec![(0, 1), (1, 4), (5, 2)],
+        };
+        let mut out = vec![0f32; 7];
+        q.decode_into(&enc, &mut out);
+        assert_eq!(out, q.decode_ref(&enc));
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let mut short = vec![0f32; 6];
+                q.decode_into(&enc, &mut short);
+            }),
+        );
+        assert!(r.is_err(), "length mismatch must panic");
+        // group starts are redundant with the lengths and ignored on both
+        // paths: even inconsistent starts cannot diverge from the oracle
+        let weird = Encoded {
+            scales: vec![1.0, 2.0],
+            indices: vec![1, 2, 3, 4, 5, 6, 7],
+            groups: vec![(0, 4), (0, 3)],
+        };
+        let mut out = vec![0f32; 7];
+        q.decode_into(&weird, &mut out);
+        assert_eq!(out, q.decode_ref(&weird));
+        // an oversized LAST group (internally consistent, but not a
+        // scale_groups layout) must take the serial fallback above the
+        // parallel threshold, not the chunked fan-out
+        let big = 1 << 17;
+        let enc = Encoded {
+            scales: vec![2.0, 0.5],
+            indices: vec![3u16; 64 + big],
+            groups: vec![(0, 64), (64, big)],
+        };
+        let mut out = vec![0f32; 64 + big];
+        q.decode_into(&enc, &mut out);
+        assert_eq!(out, q.decode_ref(&enc));
     }
 
     #[test]

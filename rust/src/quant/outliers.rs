@@ -111,8 +111,10 @@ pub fn qdq_with_outliers(
 /// dense pass quantises them) — the entropy model for `:compress:sparseX`
 /// schemes.  One fused [`Quantiser::encode_with_stats`] pass produces the
 /// indices and histogram; the reconstruction is decoded from those same
-/// indices (bit-identical to the fused qdq) and the outliers patched back,
-/// so selection and quantisation each happen exactly once.
+/// indices (bit-identical to the fused qdq) *into the dense buffer* via
+/// the fused [`Quantiser::decode_into`] kernel — one copy of the tensor
+/// total — and the outliers scatter back over it, so selection,
+/// quantisation and reconstruction each touch the data exactly once.
 pub fn qdq_outliers_with_hist(
     quantiser: &Quantiser,
     sparse: &SparseOutliers,
@@ -126,13 +128,13 @@ pub fn qdq_outliers_with_hist(
         dense[i as usize] = 0.0;
     }
     let (enc, stats) = quantiser.encode_with_stats(&dense, channel_len);
-    let mut recon = quantiser.decode(&enc);
+    quantiser.decode_into(&enc, &mut dense);
     for &i in &outlier_idx {
-        recon[i as usize] = data[i as usize];
+        dense[i as usize] = data[i as usize];
     }
     let bits = quantiser.bits_per_element(data.len(), channel_len)
         + sparse.overhead_bits(data.len());
-    (recon, bits, stats.counts)
+    (dense, bits, stats.counts)
 }
 
 #[cfg(test)]

@@ -1,0 +1,360 @@
+//! Property tests for the serving-scale decode engine:
+//!
+//! * `decode_into` (fused, parallel) ≡ `decode_ref` (scalar oracle) ≡ the
+//!   fused `qdq` across every format family — int / float / cbrt /
+//!   quantile / lloyd — including adversarial data built from
+//!   `Codebook::adversarial_probes` (±inf, NaN, subnormals, exact
+//!   midpoints);
+//! * the sparse-outlier overlay reconstructs identically through the fused
+//!   scatter-back and the two-pass reference;
+//! * K-lane interleaved Huffman / rANS roundtrips agree with the
+//!   single-lane oracles for K ∈ {1, 2, 4, 8}, prefix ("short") decodes
+//!   yield exactly the stream head, and torn containers panic instead of
+//!   misreading.
+
+use owf::compress::huffman::HuffmanCode;
+use owf::compress::rans::{
+    rans_decode_interleaved, rans_encode, rans_encode_interleaved, RansModel,
+};
+use owf::dist::Family;
+use owf::formats::cbrt::{cbrt_absmax, cbrt_rms, CBRT_ALPHA};
+use owf::formats::float::float_codebook_normalised;
+use owf::formats::int::int_codebook;
+use owf::formats::lloyd::{LloydInit, LloydMax};
+use owf::formats::quantile::{af4, nf};
+use owf::formats::{Codebook, Variant};
+use owf::quant::outliers::{
+    qdq_outliers_with_hist, qdq_with_outliers, OutlierCriterion,
+    SparseOutliers,
+};
+use owf::quant::Quantiser;
+use owf::scaling::{Granularity, ScaleFormat, Statistic, DEFAULT_SCALE};
+use owf::util::testing::{check, Gen};
+
+/// One codebook per format family (fit data for Lloyd drawn per call).
+fn family_books(g: &mut Gen) -> Vec<(&'static str, Codebook, Statistic)> {
+    let fit = g.heavy_tailed_vec(2048);
+    vec![
+        ("int4", int_codebook(4, Variant::Asymmetric), Statistic::Absmax),
+        (
+            "int4-signmax",
+            int_codebook(4, Variant::Signmax),
+            Statistic::Signmax,
+        ),
+        ("e2m1", float_codebook_normalised(2, 1), Statistic::Absmax),
+        ("e5m2", float_codebook_normalised(5, 2), Statistic::Absmax),
+        (
+            "cbrt-t5",
+            cbrt_absmax(
+                Family::StudentT,
+                5.0,
+                4,
+                64,
+                Variant::Symmetric,
+                CBRT_ALPHA,
+            ),
+            Statistic::Absmax,
+        ),
+        (
+            "cbrt-normal-rms",
+            cbrt_rms(Family::Normal, 0.0, 4, Variant::Symmetric, CBRT_ALPHA),
+            Statistic::Rms,
+        ),
+        ("nf4", nf(4), Statistic::Absmax),
+        ("af4", af4(64), Statistic::Absmax),
+        (
+            "lloyd4",
+            LloydMax::new(4, LloydInit::KmeansPp).fit(&fit, &[]),
+            Statistic::Rms,
+        ),
+    ]
+}
+
+#[test]
+fn decode_into_matches_ref_and_qdq_across_families() {
+    check("decode-parity-families", 30, |g: &mut Gen| {
+        let n = 64 * (1 + g.rng.below(6));
+        let base = g.heavy_tailed_vec(n);
+        for (name, cb, stat) in family_books(g) {
+            // adversarial data: the codebook's own probe set (specials,
+            // exact midpoints, ULP neighbours) spliced over a random tail
+            let mut data = base.clone();
+            for (slot, probe) in
+                data.iter_mut().zip(cb.adversarial_probes())
+            {
+                *slot = probe;
+            }
+            for granularity in
+                [Granularity::Block(64), Granularity::Tensor]
+            {
+                let q = Quantiser::new(
+                    granularity,
+                    stat,
+                    DEFAULT_SCALE,
+                    cb.clone(),
+                );
+                let (enc, _) = q.encode_with_stats(&data, 0);
+                let reference = q.decode_ref(&enc);
+                let mut fused = vec![0f32; n];
+                q.decode_into(&enc, &mut fused);
+                let fused_bits: Vec<u32> =
+                    fused.iter().map(|x| x.to_bits()).collect();
+                let ref_bits: Vec<u32> =
+                    reference.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(
+                    fused_bits, ref_bits,
+                    "{name} {granularity:?}: decode_into != decode_ref"
+                );
+                let qdq_bits: Vec<u32> = q
+                    .qdq(&data, 0)
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect();
+                assert_eq!(
+                    fused_bits, qdq_bits,
+                    "{name} {granularity:?}: decode_into != qdq"
+                );
+                // decode() is the same kernel behind an allocation
+                let alloc_bits: Vec<u32> = q
+                    .decode(&enc)
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect();
+                assert_eq!(fused_bits, alloc_bits);
+            }
+        }
+    });
+}
+
+#[test]
+fn decode_parallel_path_is_bit_identical() {
+    // big enough to fan out; the nested-parallelism guard forces the
+    // serial path for the comparison run
+    let mut g = Gen {
+        rng: owf::util::rng::Rng::new(0xDEC0DE),
+        case: 0,
+    };
+    let data = g.heavy_tailed_vec(1 << 17);
+    for granularity in [Granularity::Block(128), Granularity::Tensor] {
+        let q = Quantiser::new(
+            granularity,
+            Statistic::Absmax,
+            ScaleFormat::Bf16 { away: true },
+            int_codebook(4, Variant::Asymmetric),
+        );
+        let enc = q.encode(&data, 0);
+        let mut par = vec![0f32; data.len()];
+        q.decode_into(&enc, &mut par);
+        let serial = owf::util::pool::par_map(&[0, 1], |i, _| {
+            (i == 0).then(|| {
+                let mut out = vec![0f32; data.len()];
+                q.decode_into(&enc, &mut out);
+                out
+            })
+        })
+        .swap_remove(0)
+        .unwrap();
+        assert_eq!(par, serial, "{granularity:?}");
+        assert_eq!(par, q.decode_ref(&enc), "{granularity:?}");
+    }
+}
+
+#[test]
+fn sparse_overlay_fused_matches_two_pass() {
+    check("sparse-decode-parity", 25, |g: &mut Gen| {
+        let n = 256 * (1 + g.rng.below(8));
+        let mut data = g.heavy_tailed_vec(n);
+        // spike a few elements so selection is non-trivial
+        for k in 0..4 {
+            let at = g.rng.below(n);
+            data[at] = 80.0 * if k % 2 == 0 { 1.0 } else { -1.0 };
+        }
+        let criterion = if g.rng.below(2) == 0 {
+            OutlierCriterion::AbsValue
+        } else {
+            OutlierCriterion::FisherWeighted
+        };
+        let fisher: Vec<f32> = if criterion
+            == OutlierCriterion::FisherWeighted
+        {
+            g.f32_vec(n, 1.0).iter().map(|x| x.abs()).collect()
+        } else {
+            Vec::new()
+        };
+        let sparse = SparseOutliers {
+            fraction: [0.0, 1e-3, 0.01][g.rng.below(3)],
+            criterion,
+        };
+        let q = Quantiser::new(
+            Granularity::Block(64),
+            Statistic::Absmax,
+            DEFAULT_SCALE,
+            int_codebook(4, Variant::Asymmetric),
+        );
+        let (fused, bits_f, counts) =
+            qdq_outliers_with_hist(&q, &sparse, &data, &fisher, 0);
+        let (two_pass, bits_t) =
+            qdq_with_outliers(&q, &sparse, &data, &fisher, 0);
+        assert_eq!(fused, two_pass);
+        assert_eq!(bits_f, bits_t);
+        assert_eq!(counts.iter().sum::<u64>() as usize, n);
+        // every selected outlier is reconstructed exactly
+        for &i in &sparse.select(&data, &fisher) {
+            assert_eq!(fused[i as usize], data[i as usize]);
+        }
+    });
+}
+
+/// Random counts mixing zeros, singletons and heavy spikes.
+fn random_counts(g: &mut Gen, n_symbols: usize) -> Vec<u64> {
+    (0..n_symbols)
+        .map(|_| match g.rng.below(4) {
+            0 => 0,
+            1 => 1,
+            2 => g.rng.below(50) as u64 + 1,
+            _ => g.rng.below(100_000) as u64 + 1,
+        })
+        .collect()
+}
+
+fn stream(counts: &[u64], len: usize, g: &mut Gen) -> Vec<u16> {
+    let weights: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+    (0..len)
+        .map(|_| g.rng.categorical(&weights) as u16)
+        .collect()
+}
+
+#[test]
+fn huffman_interleaved_equals_single_lane_for_all_k() {
+    check("huffman-lanes", 40, |g: &mut Gen| {
+        let n_symbols = 2 + g.rng.below(40);
+        let mut counts = random_counts(g, n_symbols);
+        if counts.iter().all(|&c| c == 0) {
+            counts[0] = 1;
+        }
+        let code = HuffmanCode::from_counts(&counts);
+        let len = g.rng.below(1500);
+        let symbols = stream(&counts, len, g);
+        let (bytes, _) = code.encode(&symbols);
+        let oracle = code.decode(&bytes, len);
+        assert_eq!(oracle, symbols);
+        for lanes in [1usize, 2, 4, 8] {
+            let container = code.encode_interleaved(&symbols, lanes);
+            assert_eq!(
+                code.decode_interleaved(&container, len),
+                oracle,
+                "K={lanes}"
+            );
+            // short stream: prefix decode returns exactly the head
+            let short = len / 2;
+            assert_eq!(
+                code.decode_interleaved(&container, short),
+                symbols[..short],
+                "K={lanes} prefix"
+            );
+        }
+    });
+}
+
+#[test]
+fn rans_interleaved_equals_single_lane_for_all_k() {
+    check("rans-lanes", 40, |g: &mut Gen| {
+        let n_symbols = 2 + g.rng.below(40);
+        let mut counts = random_counts(g, n_symbols);
+        if counts.iter().all(|&c| c == 0) {
+            counts[0] = 1;
+        }
+        let model = RansModel::from_counts(&counts);
+        let len = g.rng.below(1500);
+        let symbols = stream(&counts, len, g);
+        let oracle_bytes = rans_encode(&model, &symbols);
+        for lanes in [1usize, 2, 4, 8] {
+            let container =
+                rans_encode_interleaved(&model, &symbols, lanes);
+            assert_eq!(
+                rans_decode_interleaved(&model, &container, len),
+                symbols,
+                "K={lanes}"
+            );
+            let short = len / 2;
+            assert_eq!(
+                rans_decode_interleaved(&model, &container, short),
+                symbols[..short],
+                "K={lanes} prefix"
+            );
+        }
+        // the K=1 container wraps the oracle payload byte for byte
+        let one = rans_encode_interleaved(&model, &symbols, 1);
+        assert_eq!(&one[1..], &oracle_bytes[..]);
+    });
+}
+
+#[test]
+fn torn_containers_panic_instead_of_misreading() {
+    let counts = [500u64, 120, 40, 9, 2];
+    let code = HuffmanCode::from_counts(&counts);
+    let model = RansModel::from_counts(&counts);
+    let mut g = Gen {
+        rng: owf::util::rng::Rng::new(0x70A4),
+        case: 0,
+    };
+    let symbols = stream(&counts, 400, &mut g);
+    let hc = code.encode_interleaved(&symbols, 4);
+    let rc = rans_encode_interleaved(&model, &symbols, 4);
+    for cut in [0usize, 1, 3, 9, 16] {
+        let h = hc[..cut.min(hc.len())].to_vec();
+        let r = std::panic::catch_unwind(|| {
+            code.decode_interleaved(&h, symbols.len())
+        });
+        assert!(r.is_err(), "huffman cut {cut} must panic");
+        let rr = rc[..cut.min(rc.len())].to_vec();
+        let r = std::panic::catch_unwind(|| {
+            rans_decode_interleaved(&model, &rr, symbols.len())
+        });
+        assert!(r.is_err(), "rans cut {cut} must panic");
+    }
+    // cutting payload bytes (header intact) must also be detected
+    let h_torn = hc[..hc.len() - 3].to_vec();
+    let r = std::panic::catch_unwind(|| {
+        code.decode_interleaved(&h_torn, symbols.len())
+    });
+    assert!(r.is_err(), "huffman payload tear must panic");
+}
+
+#[test]
+fn end_to_end_quantise_entropy_code_decode_reconstruct() {
+    // the full serving loop: fused encode → interleaved entropy coding →
+    // interleaved decode → fused dequantise must reproduce the direct qdq
+    let mut g = Gen {
+        rng: owf::util::rng::Rng::new(0xE2E),
+        case: 0,
+    };
+    let data = g.heavy_tailed_vec(20_000);
+    let q = Quantiser::new(
+        Granularity::Block(128),
+        Statistic::Absmax,
+        DEFAULT_SCALE,
+        int_codebook(4, Variant::Asymmetric),
+    );
+    let (enc, stats) = q.encode_with_stats(&data, 0);
+    let code = HuffmanCode::from_counts(&stats.counts);
+    let container = code.encode_interleaved(&enc.indices, 8);
+    let decoded = code.decode_interleaved(&container, enc.indices.len());
+    assert_eq!(decoded, enc.indices);
+    let wire = Quantiser::new(
+        q.granularity,
+        q.statistic,
+        q.scale_format,
+        q.codebook.clone(),
+    );
+    let mut recon = vec![0f32; data.len()];
+    wire.decode_into(
+        &owf::quant::Encoded {
+            scales: enc.scales.clone(),
+            indices: decoded,
+            groups: enc.groups.clone(),
+        },
+        &mut recon,
+    );
+    assert_eq!(recon, q.qdq(&data, 0));
+}

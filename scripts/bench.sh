@@ -13,6 +13,15 @@ cd "$(dirname "$0")/.."
 ROOT=$(pwd)
 cd rust
 
+# A trajectory point without a toolchain is not a trajectory point:
+# refuse loudly instead of silently writing nothing.
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "bench.sh: FATAL: cargo not found on PATH — cannot record a" >&2
+    echo "bench.sh: trajectory point.  Install a Rust toolchain and" >&2
+    echo "bench.sh: re-run; no BENCH_*.json was written." >&2
+    exit 1
+fi
+
 N=$((1 << 22))
 if [ "${1:-}" = "quick" ]; then
     N=$((1 << 20))
@@ -25,8 +34,12 @@ echo "== benches/formats.rs (n=$N) -> BENCH_formats.json =="
 OWF_BENCH_N=$N OWF_BENCH_JSON="$ROOT/BENCH_formats.json" \
     cargo bench --bench formats
 
-echo "== benches/pipeline.rs -> BENCH_pipeline.json =="
-OWF_BENCH_JSON="$ROOT/BENCH_pipeline.json" \
+echo "== benches/pipeline.rs (decode rows at n=$N) -> BENCH_pipeline.json =="
+OWF_BENCH_N=$N OWF_BENCH_JSON="$ROOT/BENCH_pipeline.json" \
     cargo bench --bench pipeline
 
-echo "bench.sh: wrote $ROOT/BENCH_formats.json and $ROOT/BENCH_pipeline.json"
+echo "== benches/compression.rs -> BENCH_compression.json =="
+OWF_BENCH_JSON="$ROOT/BENCH_compression.json" \
+    cargo bench --bench compression
+
+echo "bench.sh: wrote $ROOT/BENCH_formats.json, $ROOT/BENCH_pipeline.json and $ROOT/BENCH_compression.json"

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 build + tests, a bench smoke run at tiny n (which
-# gates the LUT-vs-reference quantisation equivalence contract before any
-# timing), then an `owf sweep` smoke run over a 12-point grid with
-# --resume exercised twice (the second resume must re-run zero points and
-# leave the row count unchanged).
+# gates the LUT-vs-reference quantisation equivalence contract AND the
+# decode_into-vs-decode_ref bit-exactness contract before any timing),
+# then an `owf sweep` smoke run over a 12-point grid with --resume
+# exercised twice (the second resume must re-run zero points and leave
+# the row count unchanged).
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -14,9 +15,10 @@ cargo build --release
 echo "== cargo test -q (OWF_THREADS=4) =="
 OWF_THREADS=4 cargo test -q
 
-echo "== bench smoke: LUT/reference equivalence gate (n=2^14) =="
+echo "== bench smoke: LUT/reference + decode bit-exactness gates (n=2^14) =="
 # benches/formats.rs asserts bit-exact LUT/reference agreement for every
-# benched codebook before timing; at 2^14 elements this is a fast gate
+# benched codebook AND decode_into/decode_ref parity for every benched
+# encoding before timing; at 2^14 elements this is a fast gate
 OWF_BENCH_N=$((1 << 14)) OWF_THREADS=4 cargo bench --bench formats \
     > /dev/null
 
