@@ -1,8 +1,9 @@
 //! Bench: end-to-end direct-cast of a full checkpoint (quantise every
 //! tensor + PJRT forward + top-k KL) — the fig.-1 inner loop, and the
 //! number EXPERIMENTS.md §Perf tracks for the whole stack — plus the
-//! `owf sweep` engine over a simulated grid and the serving-scale tensor
-//! decode rows (`[dec]` vs `[dec-ref]`; both pure CPU, always run).
+//! `owf sweep` engine over a simulated grid, the serving-scale tensor
+//! decode rows (`[dec]` vs `[dec-ref]`) and the OWQ1 artifact round trip
+//! (`[pack]` / `[unpack]`; all pure CPU, always run).
 //!
 //! The checkpoint benches require `make artifacts`; they exit quietly
 //! otherwise.  Set `OWF_BENCH_JSON=<path>` (as `scripts/bench.sh` does)
@@ -12,12 +13,18 @@
 mod bench_util;
 use bench_util::{bench_n, bench_rec, write_bench_json, Row};
 
+use std::collections::HashMap;
+
+use owf::artifact::writer::{pack_store, AllocMode, PackOptions};
+use owf::artifact::{Artifact, Codec};
 use owf::coordinator::config::Scheme;
 use owf::coordinator::{run_sweep, SweepOpts};
 use owf::dist::{Dist, Family};
 use owf::eval::llm::Env;
 use owf::eval::RunOpts;
 use owf::quant::Quantiser;
+use owf::tensorstore::{Store, Tensor};
+use owf::util::json::Json;
 use owf::util::rng::Rng;
 
 fn bench_sweep(rows: &mut Vec<Row>) {
@@ -86,10 +93,81 @@ fn bench_decode(rows: &mut Vec<Row>) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn bench_artifact(rows: &mut Vec<Row>) -> anyhow::Result<()> {
+    // the OWQ1 round trip at checkpoint-tensor scale: [pack] = fused
+    // encode + Fisher-free flat alloc + interleaved Huffman coding +
+    // checksummed atomic write; [unpack] = checksum-verified sections +
+    // table-driven interleaved entropy decode + fused dequantise.  The
+    // packed decode is gated bit-exact against the in-memory pipeline
+    // before any timing (EXPERIMENTS.md §Artifact).
+    let n = bench_n();
+    let (rows_n, cols) = (n / 1024, 1024);
+    let mut rng = Rng::new(23);
+    let data =
+        Dist::standard(Family::StudentT, 5.0).sample_vec(&mut rng, n);
+    let mut store = Store::new(Json::obj().push("kind", "bench-source"));
+    let mut t = Tensor::from_f32("bench.w", vec![rows_n, cols], &data);
+    t.channel_axis = Some(1);
+    store.push(t);
+    let spec = "cbrt-t5@4:block64-absmax:compress";
+    let opts = PackOptions {
+        spec: spec.to_string(),
+        alloc: AllocMode::Flat,
+        codec: Codec::Huffman,
+        lanes: 4,
+        meta: Json::obj().push("source", "bench"),
+    };
+    let path = std::env::temp_dir().join(format!(
+        "owf_bench_pack_{}.owq",
+        std::process::id()
+    ));
+    let empty: HashMap<String, f64> = HashMap::new();
+    pack_store(&store, &empty, &opts, &path)?;
+    let art = Artifact::open(&path)?;
+    let scheme = Scheme::parse(&art.tensors[0].spec)?;
+    let reference = owf::eval::pipeline::qdq_tensor(
+        &scheme,
+        &data,
+        &[rows_n, cols],
+        Some(1),
+        &[],
+        0,
+    )?;
+    let decoded = art.decode_tensor(0)?;
+    assert!(
+        decoded
+            .iter()
+            .zip(&reference.recon)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "packed decode is not bit-identical to the in-memory pipeline"
+    );
+    bench_rec(
+        rows,
+        &format!("artifact {spec} [pack]"),
+        Some(n as f64),
+        || {
+            pack_store(&store, &empty, &opts, &path).unwrap();
+        },
+    );
+    let mut out = vec![0f32; n];
+    bench_rec(
+        rows,
+        &format!("artifact {spec} [unpack]"),
+        Some(n as f64),
+        || {
+            art.decode_tensor_into(0, &mut out).unwrap();
+            std::hint::black_box(out[n / 2]);
+        },
+    );
+    let _ = std::fs::remove_file(&path);
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let mut rows: Vec<Row> = Vec::new();
     bench_sweep(&mut rows);
     bench_decode(&mut rows)?;
+    bench_artifact(&mut rows)?;
     let opts = RunOpts {
         eval_seqs: 16,
         ..Default::default()

@@ -1,0 +1,669 @@
+//! The `OWQ1` quantised-artifact store: a durable, self-describing
+//! container for entropy-coded quantised tensors, and the serving-side
+//! reader that streams them back through the fused decode kernels.
+//!
+//! This is where the in-memory pipeline (`eval::pipeline`) meets disk:
+//! [`writer::pack_store`] runs the *same* quantiser construction, outlier
+//! selection and fused encode as the in-memory qdq path (via
+//! [`crate::eval::pipeline::encode_tensor`]) and persists the result;
+//! [`Artifact`] decodes any tensor lazily, bit-identical to what
+//! `qdq_tensor` would have produced; [`server::ArtifactServer`] wraps the
+//! reader for concurrent serving with an LRU decoded-tensor cache.
+//!
+//! # Byte layout (also documented in `EXPERIMENTS.md` §Artifact)
+//!
+//! ```text
+//! [0..4)            magic  b"OWQ1"
+//! [4..8)            manifest byte length M, u32 LE
+//! [8..8+M)          manifest, UTF-8 JSON
+//! [8+M..8+M+8)      FNV-1a 64 of the manifest bytes, u64 LE
+//! [8+M+8..)         payload: per-tensor sections, each 64-byte aligned
+//!                   relative to the payload base, offsets in the manifest
+//! ```
+//!
+//! Per tensor the manifest records name/shape/channel-axis, the resolved
+//! scheme spec, layout (`channel_len`, `transposed`), the resolved scale
+//! multiplier, storage bits, honest bits accounting and the pipeline
+//! sq-err (all four f64s as 16-hex-digit bit patterns — exact, no decimal
+//! round-trip in the loop), plus six sections:
+//!
+//! | section       | contents                                  |
+//! |---------------|-------------------------------------------|
+//! | `codebook`    | sorted codepoints, f32 LE                 |
+//! | `scales`      | per-group scales, f32 LE                  |
+//! | `payload`     | indices: raw u16 LE, or a K-lane interleaved Huffman/rANS container |
+//! | `counts`      | index histogram, u64 LE (the entropy model the payload was coded under) |
+//! | `outlier_idx` | sorted outlier positions (layout space), u32 LE |
+//! | `outlier_val` | exact outlier values, f32 LE              |
+//!
+//! Every section carries an FNV-1a 64 checksum in the manifest; the
+//! manifest itself is checksummed in the header.  Truncated files fail at
+//! [`Artifact::open`] (section bounds are validated eagerly); corrupted
+//! bytes fail at first decode of the affected tensor (checksums are
+//! verified lazily, per section read — [`Artifact::verify_all`] forces
+//! them all).  Checksum verification runs *before* entropy decoding, so
+//! the panicking coder paths only ever see writer-produced bytes.
+
+pub mod server;
+pub mod writer;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::config::Scheme;
+use crate::quant::{Encoded, Quantiser};
+use crate::scaling::scale_groups;
+use crate::util::json::Json;
+
+pub const MAGIC: &[u8; 4] = b"OWQ1";
+pub const VERSION: usize = 1;
+/// Section alignment within the payload region (matches `.owt`).
+pub const ALIGN: usize = 64;
+
+/// FNV-1a 64-bit — the container checksum (from scratch; no external
+/// crates offline).  Not cryptographic: it detects torn writes and bit
+/// rot, which is the failure model for a local artifact store.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Exact f64 interchange: 16 hex digits of the IEEE bit pattern.  Used for
+/// the multiplier / storage-bits / bits / sq-err manifest fields so
+/// "bit-identical to the in-memory pipeline" survives serialisation
+/// (and NaN/∞ never hit the JSON number grammar).
+pub fn f64_to_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+pub fn f64_from_hex(s: &str) -> Result<f64> {
+    ensure!(s.len() == 16, "bad f64 hex field {s:?}");
+    let bits = u64::from_str_radix(s, 16)
+        .with_context(|| format!("bad f64 hex field {s:?}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+pub fn u64_to_hex(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+pub fn u64_from_hex(s: &str) -> Result<u64> {
+    ensure!(s.len() == 16, "bad u64 hex field {s:?}");
+    u64::from_str_radix(s, 16)
+        .with_context(|| format!("bad u64 hex field {s:?}"))
+}
+
+/// Index-payload codec of a container (one per artifact).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// Indices stored verbatim as u16 LE (no entropy coding).
+    Raw,
+    /// K-lane interleaved canonical Huffman
+    /// ([`crate::compress::huffman::HuffmanCode::encode_interleaved`]).
+    Huffman,
+    /// K interleaved rANS states over one shared stream
+    /// ([`crate::compress::rans::rans_encode_interleaved`]).
+    Rans,
+}
+
+impl Codec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::Raw => "raw",
+            Codec::Huffman => "huffman",
+            Codec::Rans => "rans",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Codec> {
+        match s {
+            "raw" => Ok(Codec::Raw),
+            "huffman" => Ok(Codec::Huffman),
+            "rans" => Ok(Codec::Rans),
+            other => bail!("unknown codec {other:?} (raw|huffman|rans)"),
+        }
+    }
+}
+
+/// One checksummed byte range in the payload region.
+#[derive(Clone, Copy, Debug)]
+pub struct Section {
+    pub off: usize,
+    pub len: usize,
+    pub fnv: u64,
+}
+
+/// Manifest record of one packed tensor.
+#[derive(Clone, Debug)]
+pub struct TensorRecord {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub channel_axis: Option<usize>,
+    /// Resolved per-tensor scheme spec (bits may differ from the pack spec
+    /// under variable allocation); parses back through [`Scheme::parse`].
+    pub spec: String,
+    pub n: usize,
+    /// Resolved scale multiplier (search already performed at pack time).
+    pub multiplier: f64,
+    pub storage_bits: f64,
+    /// Layout channel-group length (0 for non-channel granularities).
+    pub channel_len: usize,
+    pub transposed: bool,
+    /// Honest bits/element, same accounting as the in-memory pipeline.
+    pub bits: f64,
+    /// Pipeline sq-err vs the source tensor, bit-exact.
+    pub sq_err: f64,
+    pub codebook: Section,
+    pub scales: Section,
+    pub payload: Section,
+    pub counts: Section,
+    pub outlier_idx: Section,
+    pub outlier_val: Section,
+}
+
+impl TensorRecord {
+    pub fn numel(&self) -> usize {
+        self.n
+    }
+
+    fn sections(&self) -> [(&'static str, &Section); 6] {
+        [
+            ("codebook", &self.codebook),
+            ("scales", &self.scales),
+            ("payload", &self.payload),
+            ("counts", &self.counts),
+            ("outlier_idx", &self.outlier_idx),
+            ("outlier_val", &self.outlier_val),
+        ]
+    }
+}
+
+/// The bit-allocation record carried in the manifest (eq. 5 / fig. 6).
+#[derive(Clone, Debug)]
+pub struct AllocRecord {
+    /// "flat" or "variable".
+    pub scheme: String,
+    pub target: f64,
+    pub average: f64,
+    /// Per-tensor bit widths, same order as `tensors`.
+    pub bits: Vec<f64>,
+}
+
+/// A parsed `OWQ1` container: manifest + in-memory payload, with lazy
+/// per-tensor decoding.
+pub struct Artifact {
+    pub meta: Json,
+    pub codec: Codec,
+    pub lanes: usize,
+    pub alloc: Option<AllocRecord>,
+    pub tensors: Vec<TensorRecord>,
+    index: HashMap<String, usize>,
+    payload: Vec<u8>,
+}
+
+fn req(j: &Json, key: &str) -> Result<Json> {
+    Ok(j.req(key).map_err(anyhow::Error::from)?.clone())
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.req_str(key).map_err(anyhow::Error::from)?.to_string())
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req_usize(key).map_err(anyhow::Error::from)
+}
+
+fn req_hex_f64(j: &Json, key: &str) -> Result<f64> {
+    f64_from_hex(&req_str(j, key)?)
+        .with_context(|| format!("field {key:?}"))
+}
+
+fn section_from(j: &Json, key: &str) -> Result<Section> {
+    let s = j
+        .get("sections")
+        .and_then(|s| s.get(key))
+        .with_context(|| format!("missing section {key:?}"))?;
+    Ok(Section {
+        off: req_usize(s, "off")?,
+        len: req_usize(s, "len")?,
+        fnv: u64_from_hex(&req_str(s, "fnv")?)
+            .with_context(|| format!("section {key:?}"))?,
+    })
+}
+
+impl Artifact {
+    pub fn open(path: impl AsRef<Path>) -> Result<Artifact> {
+        let path = path.as_ref();
+        let raw = std::fs::read(path)
+            .with_context(|| format!("open {path:?}"))?;
+        Artifact::from_bytes(raw)
+            .with_context(|| format!("parse {path:?}"))
+    }
+
+    /// Parse a container from raw bytes.  Structural problems — bad magic,
+    /// torn manifest, manifest checksum mismatch, sections out of range —
+    /// error here; payload *corruption* is caught at first decode of the
+    /// affected tensor (per-section checksums).
+    pub fn from_bytes(raw: Vec<u8>) -> Result<Artifact> {
+        ensure!(
+            raw.len() >= 8 && &raw[..4] == MAGIC,
+            "not an OWQ1 container"
+        );
+        let mlen =
+            u32::from_le_bytes([raw[4], raw[5], raw[6], raw[7]]) as usize;
+        let base = 8 + mlen + 8;
+        ensure!(
+            raw.len() >= base,
+            "torn container: {} of {base} header+manifest bytes",
+            raw.len()
+        );
+        let manifest_bytes = &raw[8..8 + mlen];
+        let want = u64::from_le_bytes(
+            raw[8 + mlen..base].try_into().unwrap(),
+        );
+        ensure!(
+            fnv1a64(manifest_bytes) == want,
+            "manifest checksum mismatch (corrupt or torn container)"
+        );
+        let manifest = Json::parse(
+            std::str::from_utf8(manifest_bytes)
+                .context("manifest not utf-8")?,
+        )
+        .context("manifest parse")?;
+        ensure!(
+            req_usize(&manifest, "version")? == VERSION,
+            "unsupported OWQ version"
+        );
+        let codec = Codec::parse(&req_str(&manifest, "codec")?)?;
+        let lanes = req_usize(&manifest, "lanes")?;
+        ensure!(
+            (1..=crate::compress::MAX_LANES).contains(&lanes),
+            "lane count {lanes} out of range"
+        );
+        let meta = manifest.get("meta").cloned().unwrap_or(Json::obj());
+        let payload = raw[base..].to_vec();
+
+        let mut tensors = Vec::new();
+        let mut index = HashMap::new();
+        for entry in req(&manifest, "tensors")?
+            .as_arr()
+            .context("tensors not an array")?
+        {
+            let name = req_str(entry, "name")?;
+            let shape: Vec<usize> = req(entry, "shape")?
+                .as_arr()
+                .context("shape not an array")?
+                .iter()
+                .map(|j| j.as_usize().context("bad shape entry"))
+                .collect::<Result<_>>()?;
+            let channel_axis = entry
+                .get("channel_axis")
+                .filter(|j| !j.is_null())
+                .and_then(|j| j.as_usize());
+            let rec = TensorRecord {
+                spec: req_str(entry, "spec")?,
+                n: req_usize(entry, "n")?,
+                multiplier: req_hex_f64(entry, "multiplier")?,
+                storage_bits: req_hex_f64(entry, "storage_bits")?,
+                channel_len: req_usize(entry, "channel_len")?,
+                transposed: entry
+                    .get("transposed")
+                    .and_then(|j| j.as_bool())
+                    .context("missing transposed flag")?,
+                bits: req_hex_f64(entry, "bits")?,
+                sq_err: req_hex_f64(entry, "sq_err")?,
+                codebook: section_from(entry, "codebook")?,
+                scales: section_from(entry, "scales")?,
+                payload: section_from(entry, "payload")?,
+                counts: section_from(entry, "counts")?,
+                outlier_idx: section_from(entry, "outlier_idx")?,
+                outlier_val: section_from(entry, "outlier_val")?,
+                name: name.clone(),
+                shape,
+                channel_axis,
+            };
+            ensure!(
+                rec.shape.iter().product::<usize>() == rec.n,
+                "{name}: shape/numel mismatch"
+            );
+            ensure!(
+                !rec.transposed || rec.shape.len() == 2,
+                "{name}: transposed layout requires a 2-D shape"
+            );
+            for (sname, s) in rec.sections() {
+                ensure!(
+                    s.off.checked_add(s.len).is_some_and(|end| {
+                        end <= payload.len()
+                    }),
+                    "{name}: section {sname} out of range (torn file?)"
+                );
+            }
+            ensure!(
+                index.insert(name, tensors.len()).is_none(),
+                "duplicate tensor {:?}",
+                rec.name
+            );
+            tensors.push(rec);
+        }
+        let alloc = match manifest.get("alloc") {
+            None | Some(Json::Null) => None,
+            Some(a) => Some(AllocRecord {
+                scheme: req_str(a, "scheme")?,
+                target: req_hex_f64(a, "target")?,
+                average: req_hex_f64(a, "average")?,
+                bits: req(a, "bits")?
+                    .as_arr()
+                    .context("alloc bits not an array")?
+                    .iter()
+                    .map(|j| {
+                        j.as_str()
+                            .context("alloc bit not hex")
+                            .and_then(f64_from_hex)
+                    })
+                    .collect::<Result<_>>()?,
+            }),
+        };
+        if let Some(a) = &alloc {
+            ensure!(
+                a.bits.len() == tensors.len(),
+                "alloc record covers {} of {} tensors",
+                a.bits.len(),
+                tensors.len()
+            );
+        }
+        Ok(Artifact {
+            meta,
+            codec,
+            lanes,
+            alloc,
+            tensors,
+            index,
+            payload,
+        })
+    }
+
+    pub fn position(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.n).sum()
+    }
+
+    pub fn payload_bytes(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// Fetch one section with its checksum verified.
+    fn section(&self, name: &str, owner: &str, s: &Section) -> Result<&[u8]> {
+        let bytes = &self.payload[s.off..s.off + s.len];
+        ensure!(
+            fnv1a64(bytes) == s.fnv,
+            "{owner}: section {name} checksum mismatch (corrupt container)"
+        );
+        Ok(bytes)
+    }
+
+    fn f32_section(&self, name: &str, owner: &str, s: &Section) -> Result<Vec<f32>> {
+        let bytes = self.section(name, owner, s)?;
+        ensure!(bytes.len() % 4 == 0, "{owner}: ragged {name} section");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn u64_section(&self, name: &str, owner: &str, s: &Section) -> Result<Vec<u64>> {
+        let bytes = self.section(name, owner, s)?;
+        ensure!(bytes.len() % 8 == 0, "{owner}: ragged {name} section");
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u32_section(&self, name: &str, owner: &str, s: &Section) -> Result<Vec<u32>> {
+        let bytes = self.section(name, owner, s)?;
+        ensure!(bytes.len() % 4 == 0, "{owner}: ragged {name} section");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Force every section checksum (the eager complement of the lazy
+    /// per-decode verification).
+    pub fn verify_all(&self) -> Result<()> {
+        for rec in &self.tensors {
+            for (sname, s) in rec.sections() {
+                self.section(sname, &rec.name, s)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode tensor `i` into a fresh buffer (original row-major layout).
+    pub fn decode_tensor(&self, i: usize) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; self.tensors[i].n];
+        self.decode_tensor_into(i, &mut out)?;
+        Ok(out)
+    }
+
+    /// Decode tensor `i` into a caller-owned buffer: checksum-verified
+    /// section reads → entropy decode (table-driven interleaved Huffman /
+    /// K-state rANS / raw) → fused [`Quantiser::decode_into`] → outlier
+    /// scatter-back → layout restore.  Bit-identical to the in-memory
+    /// pipeline's reconstruction for the recorded spec (enforced by
+    /// `rust/tests/artifact_props.rs` and the `scripts/check.sh` gate).
+    pub fn decode_tensor_into(&self, i: usize, out: &mut [f32]) -> Result<()> {
+        let rec = &self.tensors[i];
+        let name = &rec.name;
+        ensure!(
+            out.len() == rec.n,
+            "{name}: output buffer holds {} of {} elements",
+            out.len(),
+            rec.n
+        );
+        if rec.n == 0 {
+            return Ok(());
+        }
+        let scheme = Scheme::parse(&rec.spec)
+            .with_context(|| format!("{name}: stored spec"))?;
+        let points = self.f32_section("codebook", name, &rec.codebook)?;
+        ensure!(!points.is_empty(), "{name}: empty codebook");
+        let counts = self.u64_section("counts", name, &rec.counts)?;
+        ensure!(
+            counts.len() == points.len(),
+            "{name}: histogram/codebook length mismatch"
+        );
+        ensure!(
+            counts.iter().sum::<u64>() as usize == rec.n,
+            "{name}: index histogram does not cover the tensor"
+        );
+        let scales = self.f32_section("scales", name, &rec.scales)?;
+        let indices = self.decode_indices(rec, &counts)?;
+        ensure!(
+            indices.len() == rec.n,
+            "{name}: decoded {} of {} indices",
+            indices.len(),
+            rec.n
+        );
+
+        let groups =
+            scale_groups(rec.n, scheme.granularity, rec.channel_len);
+        ensure!(
+            scales.len() == groups.len(),
+            "{name}: {} scales for {} groups",
+            scales.len(),
+            groups.len()
+        );
+        let codebook = crate::formats::Codebook::with_bits(
+            points,
+            rec.storage_bits,
+        );
+        let quantiser = Quantiser::new(
+            scheme.granularity,
+            scheme.statistic,
+            scheme.scale_format,
+            codebook,
+        )
+        .with_multiplier(rec.multiplier);
+        let enc = Encoded {
+            scales,
+            indices,
+            groups,
+        };
+
+        let idx = self.u32_section("outlier_idx", name, &rec.outlier_idx)?;
+        let val = self.f32_section("outlier_val", name, &rec.outlier_val)?;
+        ensure!(
+            idx.len() == val.len(),
+            "{name}: outlier index/value count mismatch"
+        );
+        ensure!(
+            idx.iter().all(|&i| (i as usize) < rec.n),
+            "{name}: outlier index out of range"
+        );
+
+        if rec.transposed {
+            // layout space is the transpose; decode + scatter there, then
+            // permute into the caller's row-major buffer (the exact
+            // restore_layout permutation — values bit-identical)
+            let mut buf = vec![0f32; rec.n];
+            quantiser.decode_into(&enc, &mut buf);
+            for (&i, &v) in idx.iter().zip(&val) {
+                buf[i as usize] = v;
+            }
+            let (rows, cols) = (rec.shape[0], rec.shape[1]);
+            for c in 0..cols {
+                for r in 0..rows {
+                    out[r * cols + c] = buf[c * rows + r];
+                }
+            }
+        } else {
+            quantiser.decode_into(&enc, out);
+            for (&i, &v) in idx.iter().zip(&val) {
+                out[i as usize] = v;
+            }
+        }
+        Ok(())
+    }
+
+    /// Entropy-decode the index payload under the stored histogram model.
+    fn decode_indices(
+        &self,
+        rec: &TensorRecord,
+        counts: &[u64],
+    ) -> Result<Vec<u16>> {
+        let name = &rec.name;
+        let payload = self.section("payload", name, &rec.payload)?;
+        match self.codec {
+            Codec::Raw => {
+                ensure!(
+                    payload.len() == 2 * rec.n,
+                    "{name}: raw payload holds {} of {} bytes",
+                    payload.len(),
+                    2 * rec.n
+                );
+                let k = counts.len() as u16;
+                let indices: Vec<u16> = payload
+                    .chunks_exact(2)
+                    .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                    .collect();
+                ensure!(
+                    indices.iter().all(|&i| i < k),
+                    "{name}: raw index out of codebook range"
+                );
+                Ok(indices)
+            }
+            Codec::Huffman => {
+                ensure!(!payload.is_empty(), "{name}: empty Huffman payload");
+                let code = crate::compress::tables::huffman_for(counts);
+                Ok(code.decoder().decode_interleaved(payload, rec.n))
+            }
+            Codec::Rans => {
+                ensure!(!payload.is_empty(), "{name}: empty rANS payload");
+                let model = crate::compress::tables::rans_for(counts);
+                Ok(crate::compress::rans::rans_decode_interleaved(
+                    &model, payload, rec.n,
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        // incremental property: differs on any single-byte flip
+        let base = fnv1a64(b"owq-artifact");
+        let mut flipped = b"owq-artifact".to_vec();
+        flipped[3] ^= 1;
+        assert_ne!(base, fnv1a64(&flipped));
+    }
+
+    #[test]
+    fn hex_f64_roundtrip_is_exact() {
+        for x in [
+            0.0f64,
+            -0.0,
+            1.0,
+            4.25,
+            std::f64::consts::PI,
+            1e-308,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MAX,
+        ] {
+            let h = f64_to_hex(x);
+            assert_eq!(
+                f64_from_hex(&h).unwrap().to_bits(),
+                x.to_bits(),
+                "{x}"
+            );
+        }
+        // NaN preserves its exact payload
+        let nan = f64::from_bits(0x7ff8dead_beef0001);
+        assert_eq!(
+            f64_from_hex(&f64_to_hex(nan)).unwrap().to_bits(),
+            nan.to_bits()
+        );
+        assert!(f64_from_hex("xyz").is_err());
+        assert!(f64_from_hex("0123").is_err());
+    }
+
+    #[test]
+    fn codec_names_roundtrip() {
+        for c in [Codec::Raw, Codec::Huffman, Codec::Rans] {
+            assert_eq!(Codec::parse(c.name()).unwrap(), c);
+        }
+        assert!(Codec::parse("zstd").is_err());
+    }
+
+    #[test]
+    fn garbage_bytes_rejected() {
+        assert!(Artifact::from_bytes(b"NOPE....".to_vec()).is_err());
+        assert!(Artifact::from_bytes(Vec::new()).is_err());
+        // magic ok but manifest length runs past the end
+        let mut torn = Vec::new();
+        torn.extend_from_slice(MAGIC);
+        torn.extend_from_slice(&1000u32.to_le_bytes());
+        torn.extend_from_slice(b"{}");
+        assert!(Artifact::from_bytes(torn).is_err());
+    }
+}

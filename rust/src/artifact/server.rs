@@ -1,0 +1,186 @@
+//! Concurrent serving front-end over an [`Artifact`]: thread-safe decode
+//! requests, an LRU decoded-tensor cache and per-request statistics — the
+//! piece `owf serve-bench` drives and `owf quantise --from` feeds into the
+//! KL evaluation harness.
+//!
+//! Concurrency model: the artifact itself is immutable, so decodes run
+//! lock-free in parallel; only the cache map sits behind a mutex, held for
+//! map operations (never across a decode).  Two threads missing on the
+//! same tensor may both decode it — the second insert defers to the first,
+//! so at most one copy is ever resident — a deliberate trade of duplicate
+//! work for zero convoying on the decode path.
+//!
+//! Cache invariants (also in `EXPERIMENTS.md` §Artifact):
+//! * resident bytes never exceed `cap_bytes` plus the most recently
+//!   inserted tensor (which is always kept, even alone over cap);
+//! * eviction is strict LRU by request stamp;
+//! * `cap_bytes == 0` disables caching entirely (every get decodes);
+//! * hits + misses == requests, and every miss adds exactly one decode's
+//!   bytes to `decoded_bytes`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::Artifact;
+
+struct CacheEntry {
+    data: Arc<Vec<f32>>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Cache {
+    entries: HashMap<String, CacheEntry>,
+    clock: u64,
+    bytes: usize,
+}
+
+/// A point-in-time view of the server counters.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Bytes produced by cache-miss decodes (4·elements each).
+    pub decoded_bytes: u64,
+    pub cached_tensors: usize,
+    pub cached_bytes: usize,
+}
+
+/// Thread-safe serving reader with an LRU decoded-tensor cache.
+pub struct ArtifactServer {
+    artifact: Artifact,
+    cap_bytes: usize,
+    cache: Mutex<Cache>,
+    requests: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    decoded_bytes: AtomicU64,
+}
+
+impl ArtifactServer {
+    pub fn new(artifact: Artifact, cap_bytes: usize) -> ArtifactServer {
+        ArtifactServer {
+            artifact,
+            cap_bytes,
+            cache: Mutex::new(Cache::default()),
+            requests: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            decoded_bytes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn artifact(&self) -> &Artifact {
+        &self.artifact
+    }
+
+    /// Serve one tensor: cache hit returns the shared buffer; a miss
+    /// decodes outside the lock, then inserts (first inserter wins on a
+    /// race) and evicts LRU entries down to the capacity.
+    pub fn get(&self, name: &str) -> Result<Arc<Vec<f32>>> {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let i = self
+            .artifact
+            .position(name)
+            .with_context(|| format!("tensor {name:?} not in artifact"))?;
+        if self.cap_bytes > 0 {
+            let mut c = self.cache.lock().unwrap();
+            c.clock += 1;
+            let now = c.clock;
+            if let Some(e) = c.entries.get_mut(name) {
+                e.last_used = now;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(e.data.clone());
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let data = Arc::new(self.artifact.decode_tensor(i)?);
+        self.decoded_bytes
+            .fetch_add(4 * data.len() as u64, Ordering::Relaxed);
+        if self.cap_bytes == 0 {
+            return Ok(data);
+        }
+        let mut c = self.cache.lock().unwrap();
+        c.clock += 1;
+        let now = c.clock;
+        if let Some(e) = c.entries.get_mut(name) {
+            // another thread inserted while we decoded: keep its copy so
+            // only one buffer stays resident
+            e.last_used = now;
+            return Ok(e.data.clone());
+        }
+        c.bytes += 4 * data.len();
+        c.entries.insert(
+            name.to_string(),
+            CacheEntry {
+                data: data.clone(),
+                last_used: now,
+            },
+        );
+        // strict-LRU eviction; the entry just inserted is `now` and is
+        // never selected while anything older remains
+        while c.bytes > self.cap_bytes && c.entries.len() > 1 {
+            let victim = c
+                .entries
+                .iter()
+                .filter(|(_, e)| e.last_used != now)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else { break };
+            if let Some(e) = c.entries.remove(&victim) {
+                c.bytes -= 4 * e.data.len();
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(data)
+    }
+
+    /// Cache-bypassing decode into a caller-owned buffer (the zero-copy
+    /// serving path).  Counted as a request + miss.
+    pub fn decode_into(&self, name: &str, out: &mut [f32]) -> Result<()> {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let i = self
+            .artifact
+            .position(name)
+            .with_context(|| format!("tensor {name:?} not in artifact"))?;
+        self.artifact.decode_tensor_into(i, out)?;
+        self.decoded_bytes
+            .fetch_add(4 * out.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Decode every tensor into a name → values map — the adapter that
+    /// lets the LLM evaluation harness ([`crate::eval::llm::Env::evaluate`])
+    /// score a packed artifact exactly like an in-memory quantisation.
+    pub fn params(&self) -> Result<HashMap<String, Vec<f32>>> {
+        let mut out = HashMap::new();
+        for (i, rec) in self.artifact.tensors.iter().enumerate() {
+            out.insert(rec.name.clone(), self.artifact.decode_tensor(i)?);
+        }
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        let (cached_tensors, cached_bytes) = {
+            let c = self.cache.lock().unwrap();
+            (c.entries.len(), c.bytes)
+        };
+        ServerStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            decoded_bytes: self.decoded_bytes.load(Ordering::Relaxed),
+            cached_tensors,
+            cached_bytes,
+        }
+    }
+}

@@ -1,0 +1,337 @@
+//! The `OWQ1` pack path: Fisher/RMS bit allocation → the pipeline's fused
+//! encode ([`crate::eval::pipeline::encode_tensor`], bit-identical to the
+//! in-memory qdq) → K-lane interleaved entropy coding → checksummed
+//! sections → crash-safe atomic write (temp file + rename, like
+//! [`crate::tensorstore::Store::save`]).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{
+    f64_to_hex, fnv1a64, u64_to_hex, Codec, ALIGN, MAGIC, VERSION,
+};
+use crate::alloc::{
+    round_allocation, variable_allocation, TensorInfo,
+};
+use crate::compress::rans::rans_encode_interleaved;
+use crate::compress::{tables, MAX_LANES};
+use crate::coordinator::config::{Element, Scheme};
+use crate::eval::pipeline::encode_tensor;
+use crate::tensorstore::{Dtype, Store};
+use crate::util::json::Json;
+
+/// How per-tensor bit widths are chosen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocMode {
+    /// Every tensor at the spec's bit width.
+    Flat,
+    /// Eq.-(5) Fisher/RMS variable allocation targeting the spec's bit
+    /// width as the model-level average, rounded to integers by the
+    /// largest-remainder rule ([`crate::alloc::round_allocation`]).
+    Variable,
+}
+
+impl AllocMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllocMode::Flat => "flat",
+            AllocMode::Variable => "variable",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<AllocMode> {
+        match s {
+            "flat" => Ok(AllocMode::Flat),
+            "variable" => Ok(AllocMode::Variable),
+            other => bail!("unknown alloc mode {other:?} (flat|variable)"),
+        }
+    }
+}
+
+/// Pack configuration.
+pub struct PackOptions {
+    /// Base scheme spec (`:rot` and `grid` are not packable).
+    pub spec: String,
+    pub alloc: AllocMode,
+    pub codec: Codec,
+    /// Interleaved lanes for the entropy-coded payload (ignored by
+    /// [`Codec::Raw`]).
+    pub lanes: usize,
+    /// Free-form source description stored in the manifest (`owf pack`
+    /// records enough here — sim seed/shapes/dist or checkpoint size —
+    /// for `owf inspect --verify` to regenerate the input and prove the
+    /// packed reconstruction bit-identical to the in-memory pipeline).
+    pub meta: Json,
+}
+
+/// What [`pack_store`] wrote.
+#[derive(Clone, Debug)]
+pub struct PackSummary {
+    pub tensors: usize,
+    pub elements: usize,
+    pub payload_bytes: usize,
+    pub file_bytes: usize,
+    /// Element-weighted mean of the honest per-tensor bits accounting.
+    pub mean_bits: f64,
+    /// Realised container rate: 8·payload bytes / elements (includes
+    /// scales, codebooks, histograms and overlays, unlike `mean_bits`
+    /// which prices scales at their format width and outliers at 32+idx).
+    pub packed_bits: f64,
+    /// Summed pipeline sq-err across tensors.
+    pub sq_err: f64,
+}
+
+/// Append one section to the payload buffer (64-byte aligned) and return
+/// its manifest JSON.
+fn push_section(payload: &mut Vec<u8>, bytes: &[u8]) -> Json {
+    let pad = (ALIGN - payload.len() % ALIGN) % ALIGN;
+    payload.extend(std::iter::repeat(0u8).take(pad));
+    let off = payload.len();
+    payload.extend_from_slice(bytes);
+    Json::obj()
+        .push("off", off)
+        .push("len", bytes.len())
+        .push("fnv", u64_to_hex(fnv1a64(bytes)))
+}
+
+fn f32_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn u16_bytes(xs: &[u16]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn u32_bytes(xs: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn u64_bytes(xs: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Quantise every f32 tensor of `store` under `opts` and write the `OWQ1`
+/// container to `path` atomically.  `fisher_mean` feeds the variable
+/// allocator (missing tensors default to 1.0 — a *constant* Fisher shifts
+/// every eq.-(5) offset equally and cancels in the bisection, so an empty
+/// map degrades gracefully to pure-RMS allocation).
+pub fn pack_store(
+    store: &Store,
+    fisher_mean: &HashMap<String, f64>,
+    opts: &PackOptions,
+    path: impl AsRef<Path>,
+) -> Result<PackSummary> {
+    let base = Scheme::parse(&opts.spec)
+        .with_context(|| format!("pack spec {:?}", opts.spec))?;
+    if base.rotate {
+        bail!("cannot pack :rot schemes (rotation has no durable form yet)");
+    }
+    if base.element == Element::Grid {
+        bail!("cannot pack grid schemes (no codebook indices to persist)");
+    }
+    ensure!(
+        (1..=MAX_LANES).contains(&opts.lanes),
+        "lane count {} outside 1..={MAX_LANES}",
+        opts.lanes
+    );
+    let tensors: Vec<&crate::tensorstore::Tensor> = store
+        .tensors
+        .iter()
+        .filter(|t| t.dtype == Dtype::F32 && t.numel() > 0)
+        .collect();
+    ensure!(!tensors.is_empty(), "store has no non-empty f32 tensors");
+
+    // --- per-tensor bit widths ------------------------------------------------
+    let (alloc_json, bits_per_tensor): (Json, Vec<f64>) = match opts.alloc {
+        AllocMode::Flat => {
+            let bits = vec![base.bits; tensors.len()];
+            let j = Json::obj()
+                .push("scheme", "flat")
+                .push("target", f64_to_hex(base.bits))
+                .push("average", f64_to_hex(base.bits))
+                .push(
+                    "bits",
+                    Json::Arr(
+                        bits.iter()
+                            .map(|&b| Json::Str(f64_to_hex(b)))
+                            .collect(),
+                    ),
+                );
+            (j, bits)
+        }
+        AllocMode::Variable => {
+            let infos: Vec<TensorInfo> = tensors
+                .iter()
+                .map(|t| TensorInfo {
+                    name: t.name.clone(),
+                    numel: t.numel(),
+                    rms: crate::util::stats::rms(&t.as_f32()),
+                    fisher_mean: *fisher_mean
+                        .get(&t.name)
+                        .unwrap_or(&1.0),
+                })
+                .collect();
+            let alloc = variable_allocation(&infos, base.bits);
+            let rounded = round_allocation(&infos, &alloc, base.bits);
+            let j = Json::obj()
+                .push("scheme", "variable")
+                .push("target", f64_to_hex(base.bits))
+                .push("average", f64_to_hex(rounded.average))
+                .push(
+                    "bits",
+                    Json::Arr(
+                        rounded
+                            .bits
+                            .iter()
+                            .map(|&b| Json::Str(f64_to_hex(b)))
+                            .collect(),
+                    ),
+                );
+            (j, rounded.bits)
+        }
+    };
+
+    // --- encode + serialize ---------------------------------------------------
+    let mut payload: Vec<u8> = Vec::new();
+    let mut entries: Vec<Json> = Vec::new();
+    let mut elements = 0usize;
+    let mut bits_weighted = 0f64;
+    let mut sq_err = 0f64;
+    for (t, &bits) in tensors.iter().zip(&bits_per_tensor) {
+        let mut scheme = base.clone();
+        scheme.bits = bits;
+        let data = t.as_f32();
+        let et = encode_tensor(
+            &scheme,
+            &data,
+            &t.shape,
+            t.channel_axis,
+            &[],
+        )
+        .with_context(|| format!("encode {:?}", t.name))?;
+
+        let coded: Vec<u8> = match opts.codec {
+            Codec::Raw => u16_bytes(&et.enc.indices),
+            Codec::Huffman => tables::huffman_for(&et.counts)
+                .encode_interleaved(&et.enc.indices, opts.lanes),
+            Codec::Rans => rans_encode_interleaved(
+                &tables::rans_for(&et.counts),
+                &et.enc.indices,
+                opts.lanes,
+            ),
+        };
+
+        let mut entry = Json::obj()
+            .push("name", t.name.as_str())
+            .push("shape", t.shape.clone())
+            .push("n", t.numel());
+        entry = match t.channel_axis {
+            Some(ax) => entry.push("channel_axis", ax),
+            None => entry.push("channel_axis", Json::Null),
+        };
+        let entry = entry
+            .push("spec", scheme.name())
+            .push(
+                "multiplier",
+                f64_to_hex(et.quantiser.scale_multiplier),
+            )
+            .push(
+                "storage_bits",
+                f64_to_hex(et.quantiser.codebook.storage_bits()),
+            )
+            .push("channel_len", et.channel_len)
+            .push("transposed", et.transposed)
+            .push("bits", f64_to_hex(et.bits))
+            .push("sq_err", f64_to_hex(et.sq_err))
+            .push(
+                "sections",
+                Json::Obj(vec![
+                    (
+                        "codebook".to_string(),
+                        push_section(
+                            &mut payload,
+                            &f32_bytes(et.quantiser.codebook.points()),
+                        ),
+                    ),
+                    (
+                        "scales".to_string(),
+                        push_section(&mut payload, &f32_bytes(&et.enc.scales)),
+                    ),
+                    (
+                        "payload".to_string(),
+                        push_section(&mut payload, &coded),
+                    ),
+                    (
+                        "counts".to_string(),
+                        push_section(&mut payload, &u64_bytes(&et.counts)),
+                    ),
+                    (
+                        "outlier_idx".to_string(),
+                        push_section(
+                            &mut payload,
+                            &u32_bytes(&et.outlier_idx),
+                        ),
+                    ),
+                    (
+                        "outlier_val".to_string(),
+                        push_section(
+                            &mut payload,
+                            &f32_bytes(&et.outlier_val),
+                        ),
+                    ),
+                ]),
+            );
+        entries.push(entry);
+        elements += t.numel();
+        bits_weighted += et.bits * t.numel() as f64;
+        sq_err += et.sq_err;
+    }
+
+    let manifest = Json::obj()
+        .push("kind", "owq-artifact")
+        .push("version", VERSION)
+        .push("meta", opts.meta.clone())
+        .push("spec", opts.spec.as_str())
+        .push("codec", opts.codec.name())
+        .push("lanes", opts.lanes)
+        .push("alloc", alloc_json)
+        .push("tensors", Json::Arr(entries))
+        .to_string();
+
+    let mut out =
+        Vec::with_capacity(8 + manifest.len() + 8 + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(manifest.len() as u32).to_le_bytes());
+    out.extend_from_slice(manifest.as_bytes());
+    out.extend_from_slice(&fnv1a64(manifest.as_bytes()).to_le_bytes());
+    out.extend_from_slice(&payload);
+    crate::util::fsx::atomic_write(path.as_ref(), &out)?;
+
+    Ok(PackSummary {
+        tensors: tensors.len(),
+        elements,
+        payload_bytes: payload.len(),
+        file_bytes: out.len(),
+        mean_bits: bits_weighted / elements as f64,
+        packed_bits: payload.len() as f64 * 8.0 / elements as f64,
+        sq_err,
+    })
+}

@@ -9,7 +9,10 @@
 //! table-driven decoder, [`rans::rans_encode_interleaved`] with K
 //! round-robin states over one shared stream).  Lane counts live in the
 //! container header; K = 1 stays bit-compatible with the oracle coders
-//! (`EXPERIMENTS.md` §Interleaved).
+//! (`EXPERIMENTS.md` §Interleaved).  These interleaved streams are also
+//! the durable on-disk form: the `OWQ1` artifact store
+//! ([`crate::artifact`]) persists each tensor's index payload as one such
+//! container next to the count histogram it was modelled on.
 
 pub mod grid;
 pub mod huffman;

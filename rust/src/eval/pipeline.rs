@@ -96,7 +96,9 @@ pub fn qdq_tensor(
 }
 
 /// Transpose 2-D data when channel scaling wants column groups.
-fn prepare_layout(
+/// `pub(crate)` for the artifact writer, which must lay tensors out
+/// exactly as the in-memory path does.
+pub(crate) fn prepare_layout(
     data: Vec<f32>,
     shape: &[usize],
     channel_axis: Option<usize>,
@@ -128,7 +130,9 @@ fn prepare_layout(
     }
 }
 
-fn restore_layout(
+/// Undo [`prepare_layout`]'s transpose (`pub(crate)` for the artifact
+/// reader — same permutation, so packed reconstructions are bit-identical).
+pub(crate) fn restore_layout(
     data: Vec<f32>,
     shape: &[usize],
     transposed: bool,
@@ -146,21 +150,24 @@ fn restore_layout(
     out
 }
 
-/// Dense codebook path (everything except Grid).  Owns the layout buffer
-/// so the compressed path can decode back into it zero-copy.
-fn qdq_codebook(
+/// Build the fully configured quantiser for a scheme over the laid-out
+/// tensor: the (possibly data-fitted) codebook, then the scale multiplier —
+/// fixed, or searched to minimise (Fisher-weighted) squared error.  The one
+/// construction path shared by [`qdq_tensor`] and the artifact writer's
+/// [`encode_tensor`], which is what makes packed reconstructions
+/// bit-identical to the in-memory pipeline.
+pub(crate) fn build_quantiser(
     scheme: &Scheme,
-    mut flat: Vec<f32>,
+    flat: &[f32],
     channel_len: usize,
     fisher: &[f32],
-) -> Result<Reconstructed> {
+) -> Result<Quantiser> {
     let group_len = match scheme.granularity {
         Granularity::Block(b) => b,
         Granularity::Channel => channel_len.max(1),
         Granularity::Tensor => flat.len(),
     };
-    let codebook =
-        scheme.build_codebook(group_len, Some(flat.as_slice()), fisher)?;
+    let codebook = scheme.build_codebook(group_len, Some(flat), fisher)?;
     let mut quantiser = Quantiser::new(
         scheme.granularity,
         scheme.statistic,
@@ -172,16 +179,27 @@ fn qdq_codebook(
     if scheme.multiplier.is_nan() {
         let weights = if fisher.is_empty() { &[][..] } else { fisher };
         let base = quantiser.clone();
-        let flat_ref: &[f32] = &flat;
         let (best, _) = grid_then_golden(&scale_search_grid(), |m| {
             let q = base.clone().with_multiplier(m);
-            let recon = q.qdq(flat_ref, channel_len);
-            crate::dist::fit::weighted_sq_err(flat_ref, &recon, weights)
+            let recon = q.qdq(flat, channel_len);
+            crate::dist::fit::weighted_sq_err(flat, &recon, weights)
         });
         quantiser = quantiser.with_multiplier(best);
     } else {
         quantiser = quantiser.with_multiplier(scheme.multiplier);
     }
+    Ok(quantiser)
+}
+
+/// Dense codebook path (everything except Grid).  Owns the layout buffer
+/// so the compressed path can decode back into it zero-copy.
+fn qdq_codebook(
+    scheme: &Scheme,
+    mut flat: Vec<f32>,
+    channel_len: usize,
+    fisher: &[f32],
+) -> Result<Reconstructed> {
+    let quantiser = build_quantiser(scheme, &flat, channel_len, fisher)?;
 
     let sparse = SparseOutliers {
         fraction: scheme.sparse,
@@ -226,6 +244,126 @@ fn qdq_codebook(
     };
 
     Ok(Reconstructed { recon, bits })
+}
+
+/// Everything the quantisation pipeline produced for one tensor, in the
+/// durable form the `OWQ1` artifact writer persists: the configured
+/// quantiser (codebook + resolved multiplier), the encoding (scales +
+/// indices + groups), the index histogram (the entropy model the coded
+/// payload is built from), the sparse outlier overlay, the honest bits
+/// accounting and the reconstruction — which is **bit-identical** to
+/// [`qdq_tensor`]'s for the same scheme (`decode(encode(x)) ≡ qdq(x)` by
+/// the fused-kernel contract, and both paths share [`build_quantiser`],
+/// the layout helpers and the same bits/sq-err expressions; enforced by
+/// `rust/tests/artifact_props.rs`).
+pub struct EncodedTensor {
+    pub quantiser: Quantiser,
+    pub enc: crate::quant::Encoded,
+    /// Codebook-index histogram of the dense stream (outliers zeroed).
+    pub counts: Vec<u64>,
+    /// Sorted outlier positions in *layout* space, with their exact values.
+    pub outlier_idx: Vec<u32>,
+    pub outlier_val: Vec<f32>,
+    /// Honest average storage bits per element (same accounting as
+    /// [`qdq_tensor`]: entropy rate when `:compress`, outlier overhead
+    /// when `:sparse`).
+    pub bits: f64,
+    /// Contiguous channel-group length in layout space (0 for non-channel
+    /// granularities) — what `scale_groups` needs to rebuild `groups`.
+    pub channel_len: usize,
+    /// True when the layout pass transposed a 2-D column-scaled tensor.
+    pub transposed: bool,
+    /// Σ(x−x̂)² vs the original (pre-layout) data, f64 accumulation.
+    pub sq_err: f64,
+    /// Reconstruction in the original row-major layout.
+    pub recon: Vec<f32>,
+}
+
+/// Quantise one tensor under a scheme and keep the *encoded* form — the
+/// artifact-pack counterpart of [`qdq_tensor`] (which discards indices on
+/// its fast paths).  Rotation (`:rot`) and the codebook-free `grid` element
+/// are not packable and error out; everything else — all codebook families,
+/// `:compress`, `:sparse`, `:search`, channel layout — round-trips.
+pub fn encode_tensor(
+    scheme: &Scheme,
+    data: &[f32],
+    shape: &[usize],
+    channel_axis: Option<usize>,
+    fisher: &[f32],
+) -> Result<EncodedTensor> {
+    if scheme.rotate {
+        bail!("artifact packing does not support :rot schemes");
+    }
+    if scheme.element == Element::Grid {
+        bail!(
+            "artifact packing does not support the grid element \
+             (no codebook indices to persist)"
+        );
+    }
+    let (mut flat, channel_len, transposed) = prepare_layout(
+        data.to_vec(),
+        shape,
+        channel_axis,
+        scheme.granularity,
+    );
+    let quantiser = build_quantiser(scheme, &flat, channel_len, fisher)?;
+
+    // sparse overlay: same selection as the in-memory dense+sparse path —
+    // outliers are removed before the dense encode (so they don't inflate
+    // block scales) and scattered back over the decoded buffer after
+    let sparse = SparseOutliers {
+        fraction: scheme.sparse,
+        criterion: if fisher.is_empty() {
+            OutlierCriterion::AbsValue
+        } else {
+            OutlierCriterion::FisherWeighted
+        },
+    };
+    let outlier_idx = if scheme.sparse > 0.0 {
+        sparse.select(&flat, fisher)
+    } else {
+        Vec::new()
+    };
+    let outlier_val: Vec<f32> = outlier_idx
+        .iter()
+        .map(|&i| flat[i as usize])
+        .collect();
+    for &i in &outlier_idx {
+        flat[i as usize] = 0.0;
+    }
+
+    let (enc, stats) = quantiser.encode_with_stats(&flat, channel_len);
+    quantiser.decode_into(&enc, &mut flat);
+    for (&i, &v) in outlier_idx.iter().zip(&outlier_val) {
+        flat[i as usize] = v;
+    }
+
+    // bits accounting: term order mirrors qdq_codebook exactly so the two
+    // paths agree to the last f64 bit
+    let n = data.len();
+    let mut bits = quantiser.bits_per_element(n, channel_len);
+    if scheme.sparse > 0.0 {
+        bits += sparse.overhead_bits(n);
+    }
+    if scheme.compress {
+        let h = entropy_bits(&stats.counts);
+        bits = bits - quantiser.codebook.storage_bits() + h;
+    }
+
+    let recon = restore_layout(flat, shape, transposed);
+    let sq_err = crate::util::stats::sq_err(data, &recon);
+    Ok(EncodedTensor {
+        quantiser,
+        enc,
+        counts: stats.counts,
+        outlier_idx,
+        outlier_val,
+        bits,
+        channel_len,
+        transposed,
+        sq_err,
+        recon,
+    })
 }
 
 /// Compressed uniform grid path (§2.3/§4): tensor-RMS scaling is *folded

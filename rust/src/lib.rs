@@ -15,10 +15,13 @@
 //!   allocation (eq. 5) and the top-k KL metric (§2.4/§D);
 //! * [`coordinator`], [`eval`] — the experiment scheduler/CLI and the
 //!   per-figure/table reproduction harness (§3/§4);
+//! * [`artifact`] — the `OWQ1` quantised-artifact store (pack path +
+//!   concurrent serving reader with decoded-tensor cache);
 //! * [`util`] — from-scratch JSON / RNG / thread-pool / stats / property
 //!   testing (the offline build has no external crates beyond `xla`).
 
 pub mod alloc;
+pub mod artifact;
 pub mod compress;
 pub mod coordinator;
 pub mod dist;

@@ -10,20 +10,36 @@
 //! owf sweep <grid> [--data sim|llm] [--seeds N] [--out FILE] [--resume]
 //!                                   parallel resumable scheme-grid sweep
 //! owf quantise --spec <scheme> [--size m]   one direct-cast point
+//! owf quantise --from <file.owq>    evaluate a packed artifact's KL
+//! owf pack --spec <scheme> --out F  quantise + entropy-code to an OWQ1
+//!                                   container (checkpoint or --sim data)
+//! owf inspect <file.owq> [--verify] print a container's manifest; verify
+//!                                   checksums + bit-exactness vs the
+//!                                   in-memory pipeline
+//! owf serve-bench <file.owq>        concurrent decode benchmark with
+//!                                   cache-hit stats
 //! owf fisher --size m [--batches N]         (re)estimate + save Fisher
 //! owf schemes                       print the scheme + grid grammar
 //! ```
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
+use owf::artifact::writer::{pack_store, AllocMode, PackOptions};
+use owf::artifact::{Artifact, Codec};
+use owf::artifact::server::ArtifactServer;
 use owf::coordinator::config::Scheme;
 use owf::coordinator::{run_sweep, ResultSink, SweepData, SweepOpts};
+use owf::dist::{Dist, Family};
+use owf::eval::pipeline::qdq_tensor;
 use owf::eval::{self, RunOpts};
 use owf::fisher::FisherEstimate;
 use owf::runtime::model::{Checkpoint, TokenSplit};
 use owf::runtime::Runtime;
+use owf::tensorstore::{Store, Tensor};
+use owf::util::json::Json;
+use owf::util::rng::Rng;
 
 struct Args {
     positional: Vec<String>,
@@ -32,7 +48,7 @@ struct Args {
 
 /// Flags that never take a value (so `owf sweep --resume <grid>` does not
 /// swallow the grid as the flag's value).
-const BOOL_FLAGS: &[&str] = &["resume", "empirical"];
+const BOOL_FLAGS: &[&str] = &["resume", "empirical", "verify"];
 
 fn parse_args() -> Args {
     let mut positional = Vec::new();
@@ -87,6 +103,9 @@ fn main() -> Result<()> {
         "report" => cmd_report(&args),
         "sweep" => cmd_sweep(&args),
         "quantise" | "quantize" => cmd_quantise(&args),
+        "pack" => cmd_pack(&args),
+        "inspect" => cmd_inspect(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "fisher" => cmd_fisher(&args),
         "schemes" => {
             println!("{SCHEME_HELP}");
@@ -210,9 +229,56 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_quantise(args: &Args) -> Result<()> {
-    let spec = args.flags.get("spec").context("--spec <scheme> required")?;
     let opts = opts_from(args)?;
     let size = opts.size.clone();
+    // packed-artifact evaluation: serve the quantised parameters out of an
+    // OWQ1 container and score them exactly like an in-memory direct cast
+    if let Some(from) = args.flags.get("from") {
+        let art = Artifact::open(from)?;
+        // KL evaluation needs the model the artifact was packed from:
+        // default the size from the manifest (an explicit --size still
+        // wins), and refuse sources that have no checkpoint to run
+        let meta_source =
+            art.meta.get("source").and_then(|j| j.as_str());
+        if meta_source.is_some() && meta_source != Some("checkpoint") {
+            bail!(
+                "{from}: packed from source {:?} — KL evaluation needs \
+                 a checkpoint-sourced artifact (owf pack --size ...)",
+                meta_source.unwrap()
+            );
+        }
+        let size = if args.flags.contains_key("size") {
+            size
+        } else {
+            art.meta
+                .get("size")
+                .and_then(|j| j.as_str())
+                .map(|s| s.to_string())
+                .unwrap_or(size)
+        };
+        let total: usize = art.total_elements();
+        let bits: f64 = art
+            .tensors
+            .iter()
+            .map(|r| r.bits * r.n as f64)
+            .sum::<f64>()
+            / total.max(1) as f64;
+        let server = ArtifactServer::new(art, 0);
+        let params = server.params()?;
+        let mut env = eval::llm::Env::open(opts)?;
+        let (kl, delta_ce) = env.evaluate(&size, &params)?;
+        println!(
+            "packed {from} on microllama-{size}: b={bits:.3} \
+             KL={:.5}±{:.5} ΔCE={:.5}",
+            kl.mean,
+            2.0 * kl.sem,
+            delta_ce,
+        );
+        return Ok(());
+    }
+    let spec = args.flags.get("spec").context(
+        "--spec <scheme> (or --from <file.owq>) required",
+    )?;
     let scheme = Scheme::parse(spec)?;
     let mut env = eval::llm::Env::open(opts)?;
     let p = env.direct_cast(&size, &scheme, None, false)?;
@@ -223,6 +289,412 @@ fn cmd_quantise(args: &Args) -> Result<()> {
         2.0 * p.kl.sem,
         p.delta_ce,
         p.r
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// OWQ1 artifact commands
+// ---------------------------------------------------------------------------
+
+/// Parse a `--dist` spec: `normal`, `laplace`, or `t<nu>` (default t5).
+fn parse_sim_dist(s: &str) -> Result<Dist> {
+    if s == "normal" {
+        return Ok(Dist::standard(Family::Normal, 0.0));
+    }
+    if s == "laplace" {
+        return Ok(Dist::standard(Family::Laplace, 0.0));
+    }
+    if let Some(nu) = s.strip_prefix('t') {
+        let nu: f64 = nu.parse().context("bad t<nu> dist")?;
+        return Ok(Dist::standard(Family::StudentT, nu));
+    }
+    bail!("unknown dist {s:?} (normal|laplace|t<nu>)")
+}
+
+/// Deterministically rebuild the synthetic source tensors for a
+/// `--sim`-packed artifact: shapes like `64x96,4096`, one fork of the
+/// seeded RNG per tensor, `channel_axis = 1` for 2-D tensors (matching
+/// checkpoint weight conventions).  `owf inspect --verify` re-runs this to
+/// prove the packed bytes decode bit-identically to the in-memory
+/// pipeline over the *same* data.
+fn sim_store(shapes: &str, dist: &str, seed: u64) -> Result<Store> {
+    let d = parse_sim_dist(dist)?;
+    let mut store = Store::new(
+        Json::obj()
+            .push("kind", "owq-sim-source")
+            // decimal string: JSON numbers are f64 and would corrupt
+            // seeds >= 2^53
+            .push("seed", format!("{seed}"))
+            .push("shapes", shapes)
+            .push("dist", dist),
+    );
+    let mut rng = Rng::new(seed);
+    for (i, spec) in shapes
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .enumerate()
+    {
+        let dims: Vec<usize> = spec
+            .split('x')
+            .map(|p| p.trim().parse().context("bad shape"))
+            .collect::<Result<_>>()
+            .with_context(|| format!("--sim shape {spec:?}"))?;
+        let n: usize = dims.iter().product();
+        if n == 0 {
+            bail!("--sim shape {spec:?} has zero elements");
+        }
+        let mut fork = rng.fork(i as u64);
+        let data = d.sample_vec(&mut fork, n);
+        let mut t = Tensor::from_f32(&format!("sim.{i}"), dims, &data);
+        if t.shape.len() == 2 {
+            t.channel_axis = Some(1);
+        }
+        store.push(t);
+    }
+    if store.tensors.is_empty() {
+        bail!("--sim expands to zero tensors");
+    }
+    Ok(store)
+}
+
+/// Rebuild the source tensors an artifact was packed from (sim
+/// regeneration or checkpoint load), per its manifest meta.
+fn source_store(art: &Artifact) -> Result<Store> {
+    let meta = &art.meta;
+    match meta.get("source").and_then(|j| j.as_str()) {
+        Some("sim") => {
+            let shapes = meta
+                .get("shapes")
+                .and_then(|j| j.as_str())
+                .context("sim artifact missing shapes meta")?;
+            let dist = meta
+                .get("dist")
+                .and_then(|j| j.as_str())
+                .unwrap_or("t5");
+            let seed: u64 = meta
+                .get("seed")
+                .and_then(|j| j.as_str())
+                .context("sim artifact missing seed meta")?
+                .parse()
+                .context("sim artifact seed meta not a u64")?;
+            sim_store(shapes, dist, seed)
+        }
+        Some("checkpoint") => {
+            let size = meta
+                .get("size")
+                .and_then(|j| j.as_str())
+                .context("checkpoint artifact missing size meta")?;
+            let rt = Runtime::open_default()?;
+            Ok(Checkpoint::load(&rt, size)?.store)
+        }
+        other => bail!(
+            "cannot rebuild source for meta.source = {other:?} \
+             (verification needs a sim or checkpoint source)"
+        ),
+    }
+}
+
+/// The acceptance gate: every tensor's packed decode must be bit-identical
+/// to the in-memory pipeline's reconstruction over the regenerated source
+/// data, and the stored sq-err/bits must match the pipeline's to the last
+/// f64 bit.
+fn verify_artifact(art: &Artifact) -> Result<()> {
+    art.verify_all().context("section checksums")?;
+    let store = source_store(art)?;
+    for (i, rec) in art.tensors.iter().enumerate() {
+        let t = store.require(&rec.name)?;
+        if t.shape != rec.shape {
+            bail!(
+                "{}: source shape {:?} != packed {:?}",
+                rec.name,
+                t.shape,
+                rec.shape
+            );
+        }
+        let data = t.as_f32();
+        let scheme = Scheme::parse(&rec.spec)?;
+        let reference =
+            qdq_tensor(&scheme, &data, &t.shape, t.channel_axis, &[], 0)?;
+        let decoded = art.decode_tensor(i)?;
+        for (j, (&a, &b)) in
+            decoded.iter().zip(&reference.recon).enumerate()
+        {
+            if a.to_bits() != b.to_bits() {
+                bail!(
+                    "{}: packed decode diverges from the in-memory \
+                     pipeline at element {j}: {a:?} vs {b:?}",
+                    rec.name
+                );
+            }
+        }
+        if rec.sq_err.to_bits() != reference.sq_err.to_bits() {
+            bail!(
+                "{}: stored sq-err {} != pipeline {}",
+                rec.name,
+                rec.sq_err,
+                reference.sq_err
+            );
+        }
+        if rec.bits.to_bits() != reference.bits.to_bits() {
+            bail!(
+                "{}: stored bits {} != pipeline {}",
+                rec.name,
+                rec.bits,
+                reference.bits
+            );
+        }
+    }
+    println!(
+        "verify: {} tensors bit-identical to the in-memory pipeline \
+         (recon, sq-err, bits)",
+        art.tensors.len()
+    );
+    Ok(())
+}
+
+fn cmd_pack(args: &Args) -> Result<()> {
+    let spec = args
+        .flags
+        .get("spec")
+        .context("--spec <scheme> required")?
+        .clone();
+    let out = args
+        .flags
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("packed.owq"));
+    let codec = args
+        .flags
+        .get("codec")
+        .map(|s| Codec::parse(s))
+        .transpose()?
+        .unwrap_or(Codec::Huffman);
+    let lanes: usize = args
+        .flags
+        .get("lanes")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--lanes")?
+        .unwrap_or(4);
+    let alloc = args
+        .flags
+        .get("alloc")
+        .map(|s| AllocMode::parse(s))
+        .transpose()?
+        .unwrap_or(AllocMode::Flat);
+
+    let (store, fisher_mean, meta) = if let Some(shapes) =
+        args.flags.get("sim")
+    {
+        let seed: u64 = args
+            .flags
+            .get("seed")
+            .map(|v| v.parse())
+            .transpose()
+            .context("--seed")?
+            .unwrap_or(1234);
+        let dist = args
+            .flags
+            .get("dist")
+            .cloned()
+            .unwrap_or_else(|| "t5".to_string());
+        let store = sim_store(shapes, &dist, seed)?;
+        let meta = Json::obj()
+            .push("source", "sim")
+            .push("seed", format!("{seed}"))
+            .push("shapes", shapes.as_str())
+            .push("dist", dist);
+        (store, std::collections::HashMap::new(), meta)
+    } else {
+        let opts = opts_from(args)?;
+        let size = opts.size.clone();
+        let rt = Runtime::open_default()?;
+        let ck = Checkpoint::load(&rt, &size)?;
+        // Fisher means feed the variable allocator when a saved estimate
+        // exists (owf fisher); otherwise allocation falls back to pure RMS
+        let fisher_path = rt.data_path(&format!("fisher_{size}.owt"));
+        let fisher_mean = if fisher_path.exists() {
+            FisherEstimate::load(&fisher_path)?.tensor_means()
+        } else {
+            if alloc == AllocMode::Variable {
+                println!(
+                    "[no {fisher_path:?}; variable allocation will use \
+                     RMS only — run `owf fisher --size {size}` first]"
+                );
+            }
+            std::collections::HashMap::new()
+        };
+        let meta = Json::obj()
+            .push("source", "checkpoint")
+            .push("size", size.as_str());
+        (ck.store, fisher_mean, meta)
+    };
+
+    let opts = PackOptions {
+        spec,
+        alloc,
+        codec,
+        lanes,
+        meta,
+    };
+    let t0 = std::time::Instant::now();
+    let summary = pack_store(&store, &fisher_mean, &opts, &out)?;
+    println!(
+        "pack: {} tensors, {} elements -> {:?} ({} bytes) in {:.2}s",
+        summary.tensors,
+        summary.elements,
+        out,
+        summary.file_bytes,
+        t0.elapsed().as_secs_f64(),
+    );
+    println!(
+        "  {} x{} | scheme bits {:.3}/elem | container {:.3} b/elem \
+         | sq-err {:.6e}",
+        opts.codec.name(),
+        opts.lanes,
+        summary.mean_bits,
+        summary.packed_bits,
+        summary.sq_err,
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: owf inspect <file.owq> [--verify]")?;
+    let art = Artifact::open(path)?;
+    println!(
+        "{path}: OWQ1, {} tensors, {} elements, {} payload bytes, \
+         codec {} x{}",
+        art.tensors.len(),
+        art.total_elements(),
+        art.payload_bytes(),
+        art.codec.name(),
+        art.lanes,
+    );
+    if let Some(a) = &art.alloc {
+        println!(
+            "  alloc: {} (target {:.3}, average {:.3})",
+            a.scheme, a.target, a.average
+        );
+    }
+    println!("  meta: {}", art.meta);
+    for rec in &art.tensors {
+        let packed =
+            rec.payload.len as f64 * 8.0 / rec.n.max(1) as f64;
+        println!(
+            "  {:<24} {:?}{} {:<36} {:>9.3} b/elem (payload {:.3}) \
+             sq-err {:.4e} outliers {}",
+            rec.name,
+            rec.shape,
+            if rec.transposed { " T" } else { "" },
+            rec.spec,
+            rec.bits,
+            packed,
+            rec.sq_err,
+            rec.outlier_idx.len / 4,
+        );
+    }
+    if args.flags.contains_key("verify") {
+        verify_artifact(&art)?;
+    }
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let path = args.positional.get(1).context(
+        "usage: owf serve-bench <file.owq> [--threads N] [--requests N] \
+         [--cache-mb M] [--verify]",
+    )?;
+    let threads: usize = args
+        .flags
+        .get("threads")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--threads")?
+        .unwrap_or(4)
+        .max(1);
+    let requests: usize = args
+        .flags
+        .get("requests")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--requests")?
+        .unwrap_or(256)
+        .max(1);
+    let cache_mb: usize = args
+        .flags
+        .get("cache-mb")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--cache-mb")?
+        .unwrap_or(64);
+    let art = Artifact::open(path)?;
+    if args.flags.contains_key("verify") {
+        verify_artifact(&art)?;
+    }
+    let names: Vec<String> =
+        art.tensors.iter().map(|r| r.name.clone()).collect();
+    if names.is_empty() {
+        bail!("{path}: artifact holds no tensors");
+    }
+    let server = ArtifactServer::new(art, cache_mb * (1 << 20));
+    let per_thread = requests.div_ceil(threads);
+    let t0 = std::time::Instant::now();
+    let mut served: Vec<Result<u64>> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let server = &server;
+            let names = &names;
+            handles.push(scope.spawn(move || -> Result<u64> {
+                let mut elems = 0u64;
+                for i in 0..per_thread {
+                    let name = &names[(t + i) % names.len()];
+                    let data = server.get(name)?;
+                    elems += data.len() as u64;
+                    std::hint::black_box(data.first().copied());
+                }
+                Ok(elems)
+            }));
+        }
+        for h in handles {
+            served.push(h.join().expect("serve thread panicked"));
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mut total_elems = 0u64;
+    for r in served {
+        total_elems += r?;
+    }
+    let s = server.stats();
+    let total_requests = per_thread * threads;
+    println!(
+        "serve-bench: {threads} threads x {total_requests} requests \
+         over {} tensors in {elapsed:.3}s",
+        names.len()
+    );
+    println!(
+        "  served {:.1} MB ({:.1} Melem) — {:.0} req/s, {:.1} Melem/s",
+        total_elems as f64 * 4.0 / 1e6,
+        total_elems as f64 / 1e6,
+        total_requests as f64 / elapsed,
+        total_elems as f64 / elapsed / 1e6,
+    );
+    println!(
+        "  cache: {} hits / {} misses ({:.1}% hit rate), {} evictions, \
+         {} resident ({:.1} MB), cap {cache_mb} MB; decoded {:.1} MB",
+        s.hits,
+        s.misses,
+        100.0 * s.hits as f64 / s.requests.max(1) as f64,
+        s.evictions,
+        s.cached_tensors,
+        s.cached_bytes as f64 / 1e6,
+        s.decoded_bytes as f64 / 1e6,
     );
     Ok(())
 }
@@ -267,6 +739,10 @@ USAGE:
   owf report <id|sim|llm|all> [opts]    reproduce paper figures/tables
   owf sweep <grid> [opts]               parallel resumable scheme sweep
   owf quantise --spec <scheme> [opts]   one direct-cast measurement
+  owf quantise --from <file.owq>        KL-evaluate a packed artifact
+  owf pack --spec <scheme> [opts]       write an OWQ1 quantised artifact
+  owf inspect <file.owq> [--verify]     print / verify a container
+  owf serve-bench <file.owq> [opts]     concurrent decode benchmark
   owf fisher [--size m] [--batches N]   estimate the Fisher diagonal
   owf schemes                           scheme + grid grammar reference
 
@@ -286,6 +762,23 @@ SWEEP OPTIONS:
   --resume          skip points already completed in --out (keyed by
                     scheme, size, seed and the run parameters)
   OWF_THREADS       worker count for CPU points       (default all cores)
+
+PACK OPTIONS (owf pack):
+  --spec <scheme>   base scheme (no :rot / grid)      (required)
+  --out FILE        output container                  (default packed.owq)
+  --size s|m|l      pack a checkpoint (needs `make artifacts`)
+  --sim SHAPES      pack synthetic tensors instead, e.g. 96x64,4096
+  --seed N          sim RNG seed                      (default 1234)
+  --dist D          sim distribution: t<nu>|normal|laplace (default t5)
+  --alloc MODE      flat | variable (eq.-5 Fisher/RMS) (default flat)
+  --codec C         huffman | rans | raw               (default huffman)
+  --lanes K         interleaved entropy-coder lanes    (default 4)
+
+SERVE-BENCH OPTIONS:
+  --threads N       concurrent reader threads          (default 4)
+  --requests N      total decode requests              (default 256)
+  --cache-mb M      decoded-tensor LRU cache capacity  (default 64)
+  --verify          first prove bit-exactness vs the in-memory pipeline
 ";
 
 const SCHEME_HELP: &str = "scheme grammar:

@@ -26,6 +26,13 @@ pub struct Quantiser {
 }
 
 /// Quantised representation of one tensor (scales + codebook indices).
+///
+/// This is also the unit the `OWQ1` artifact store persists
+/// ([`crate::artifact`]): scales and entropy-coded indices travel as
+/// container sections, and `groups` is reconstructed on read from
+/// `scale_groups(n, granularity, channel_len)` — so the decode contract
+/// below (group starts redundant with lengths) is what makes the packed
+/// round trip bit-exact.
 #[derive(Clone, Debug)]
 pub struct Encoded {
     pub scales: Vec<f32>,

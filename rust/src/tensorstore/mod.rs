@@ -6,7 +6,7 @@
 //! between the Python build path and the Rust runtime.
 
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -115,12 +115,13 @@ impl Tensor {
         match self.channel_axis {
             None => self.numel(),
             Some(ax) => {
-                self.shape[ax + 1..].iter().product::<usize>().max(1)
-                    * if ax + 1 == self.shape.len() {
-                        1
-                    } else {
-                        1
-                    }
+                if ax + 1 == self.shape.len() {
+                    // last axis: a contiguous channel group is one row of
+                    // the transpose view — its length is the axis size
+                    self.shape[ax]
+                } else {
+                    self.shape[ax + 1..].iter().product::<usize>().max(1)
+                }
             }
         }
     }
@@ -258,19 +259,25 @@ impl Store {
             .push("meta", self.meta.clone())
             .push("tensors", Json::Arr(entries))
             .to_string();
-        let mut f = std::fs::File::create(path.as_ref())?;
-        f.write_all(MAGIC)?;
-        f.write_all(&(manifest.len() as u32).to_le_bytes())?;
-        f.write_all(manifest.as_bytes())?;
+        // serialize fully in memory, then replace the target atomically
+        // (temp file in the same directory + rename) so a crash mid-save
+        // never leaves a torn container behind
+        let payload: usize =
+            self.tensors.iter().map(|t| t.data.len() + ALIGN).sum();
+        let mut buf =
+            Vec::with_capacity(8 + manifest.len() + payload);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(manifest.len() as u32).to_le_bytes());
+        buf.extend_from_slice(manifest.as_bytes());
         let mut written = 0usize;
         for t in &self.tensors {
-            f.write_all(&t.data)?;
+            buf.extend_from_slice(&t.data);
             written += t.data.len();
             let pad = (ALIGN - written % ALIGN) % ALIGN;
-            f.write_all(&vec![0u8; pad])?;
+            buf.extend(std::iter::repeat(0u8).take(pad));
             written += pad;
         }
-        Ok(())
+        crate::util::fsx::atomic_write(path.as_ref(), &buf)
     }
 }
 
@@ -347,12 +354,26 @@ mod tests {
     #[test]
     fn channel_group_len() {
         let mut t = Tensor::from_f32("w", vec![4, 6], &vec![0.0; 24]);
+        // last axis (ax == ndim-1): the group is a column of the row-major
+        // layout, contiguous only in the transpose view — its length is
+        // the axis size, per the doc comment
         t.channel_axis = Some(1);
-        // axis 1 of (4, 6): trailing product after axis 1 = 1
-        assert_eq!(t.channel_group_len(), 1);
+        assert_eq!(t.channel_group_len(), 6);
         t.channel_axis = Some(0);
         assert_eq!(t.channel_group_len(), 6);
         t.channel_axis = None;
         assert_eq!(t.channel_group_len(), 24);
+        // 3-D: interior axis takes the trailing product, last axis its size
+        let mut t3 = Tensor::from_f32("w3", vec![2, 3, 5], &vec![0.0; 30]);
+        t3.channel_axis = Some(1);
+        assert_eq!(t3.channel_group_len(), 5);
+        t3.channel_axis = Some(2);
+        assert_eq!(t3.channel_group_len(), 5);
+        t3.channel_axis = Some(0);
+        assert_eq!(t3.channel_group_len(), 15);
+        // 1-D with channel axis 0 (the ax == ndim-1 degenerate case)
+        let mut t1 = Tensor::from_f32("v", vec![7], &vec![0.0; 7]);
+        t1.channel_axis = Some(0);
+        assert_eq!(t1.channel_group_len(), 7);
     }
 }

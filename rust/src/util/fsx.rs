@@ -1,0 +1,88 @@
+//! Filesystem helpers: crash-safe atomic file replacement.
+//!
+//! Every durable container in the crate (`.owt` tensor stores, `OWQ1`
+//! quantised artifacts) goes through [`atomic_write`]: the bytes land in a
+//! unique temp file *in the target directory* (same filesystem, so the
+//! final rename cannot degrade to a copy), are synced, then renamed over
+//! the destination.  A crash mid-write leaves either the old file or a
+//! stray `.tmp` — never a torn target.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+/// Per-process uniquifier so concurrent writers (pool workers, tests)
+/// never collide on a temp name even within one pid.
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Write `bytes` to `path` via a same-directory temp file + rename.
+pub fn atomic_write(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    let path = path.as_ref();
+    let dir = path
+        .parent()
+        .filter(|p| !p.as_os_str().is_empty())
+        .unwrap_or_else(|| Path::new("."));
+    let base = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "file".to_string());
+    let tmp = dir.join(format!(
+        ".{base}.tmp.{}.{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    let result = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create temp file {tmp:?}"))?;
+        f.write_all(bytes)
+            .with_context(|| format!("write {tmp:?}"))?;
+        f.sync_all().with_context(|| format!("sync {tmp:?}"))?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+        Ok(())
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_replaces() {
+        let dir = std::env::temp_dir().join("owf_fsx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("target.bin");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second, longer payload").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer payload");
+        // no stray temp files left behind
+        let strays: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.file_name().to_string_lossy().contains(".tmp.")
+            })
+            .collect();
+        assert!(strays.is_empty(), "stray temp files: {strays:?}");
+    }
+
+    #[test]
+    fn bare_filename_uses_cwd() {
+        // a path with no parent component must not panic
+        let name = format!(
+            "owf_fsx_bare_{}.tmp_target",
+            std::process::id()
+        );
+        atomic_write(&name, b"x").unwrap();
+        assert_eq!(std::fs::read(&name).unwrap(), b"x");
+        std::fs::remove_file(&name).unwrap();
+    }
+}

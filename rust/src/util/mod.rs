@@ -1,7 +1,8 @@
 //! Foundation utilities implemented from scratch for the offline build:
-//! seeded RNG + samplers, JSON, data-parallel helpers, summary statistics
-//! and a miniature property-testing harness.
+//! seeded RNG + samplers, JSON, data-parallel helpers, summary statistics,
+//! crash-safe file replacement and a miniature property-testing harness.
 
+pub mod fsx;
 pub mod json;
 pub mod pool;
 pub mod rng;

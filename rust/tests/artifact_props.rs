@@ -1,0 +1,466 @@
+//! Property tests for the `OWQ1` quantised-artifact store:
+//!
+//! * `encode_tensor` (the pack path) produces reconstructions, bits and
+//!   sq-err **bit-identical** to `qdq_tensor` (the in-memory pipeline)
+//!   across format families, granularities, sparse overlays and the
+//!   multiplier search;
+//! * pack → open → decode round-trips bit-exactly for every codec
+//!   (raw / interleaved Huffman / interleaved rANS) and lane count, and
+//!   the stored sq-err/bits fields match the pipeline's to the last bit;
+//! * the variable (eq. 5) allocation is recorded in the manifest and
+//!   applied per tensor;
+//! * truncated, torn and checksum-corrupted containers are rejected
+//!   instead of misread (the `decode_props.rs` adversarial style);
+//! * `ArtifactServer` serves concurrent readers bit-identically with
+//!   coherent cache-hit statistics and strict-LRU eviction.
+
+use std::collections::HashMap;
+
+use owf::artifact::server::ArtifactServer;
+use owf::artifact::writer::{pack_store, AllocMode, PackOptions};
+use owf::artifact::{Artifact, Codec};
+use owf::coordinator::config::Scheme;
+use owf::eval::pipeline::{encode_tensor, qdq_tensor};
+use owf::tensorstore::{Store, Tensor};
+use owf::util::json::Json;
+use owf::util::testing::{check, Gen};
+
+/// A store mixing the shapes the pipeline cares about: a 2-D column-scaled
+/// tensor with spikes (outlier + transpose coverage), a small-RMS 1-D
+/// tensor, a large-RMS 2-D tensor and an all-zero tensor (degenerate
+/// scales, single-symbol histograms).
+fn test_store(g: &mut Gen) -> Store {
+    let mut store = Store::new(Json::obj().push("kind", "test-source"));
+    let mut a = g.heavy_tailed_vec(64 * 96);
+    for k in 0..6 {
+        let at = g.rng.below(a.len());
+        a[at] = 60.0 * if k % 2 == 0 { 1.0 } else { -1.0 };
+    }
+    let mut t = Tensor::from_f32("a", vec![64, 96], &a);
+    t.channel_axis = Some(1);
+    store.push(t);
+    let b: Vec<f32> =
+        g.heavy_tailed_vec(4096).iter().map(|x| x * 0.01).collect();
+    store.push(Tensor::from_f32("b", vec![4096], &b));
+    let c: Vec<f32> =
+        g.heavy_tailed_vec(32 * 128).iter().map(|x| x * 75.0).collect();
+    let mut t = Tensor::from_f32("c", vec![32, 128], &c);
+    t.channel_axis = Some(1);
+    store.push(t);
+    store.push(Tensor::from_f32("z", vec![256], &vec![0f32; 256]));
+    store
+}
+
+fn assert_f32_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i}: {x:?} vs {y:?}"
+        );
+    }
+}
+
+/// The schemes the pack path must reproduce bit-exactly.
+const SCHEMES: &[&str] = &[
+    "int@4:block64-absmax",
+    "int@3:tensor-absmax:compress",
+    "cbrt-t5@4:block64-absmax:compress",
+    "cbrt-t5@4:block64-absmax:sparse0.01,compress",
+    "nf@4:block64-absmax:sparse0.01",
+    "e2m1@4:channel-absmax",
+    "int@4:block64-signmax",
+    "lloyd@4:tensor-rms",
+    "cbrt-normal@4:tensor-rms:search",
+];
+
+#[test]
+fn encode_tensor_matches_qdq_tensor_bit_for_bit() {
+    check("encode-tensor-parity", 8, |g: &mut Gen| {
+        let store = test_store(g);
+        for spec in SCHEMES {
+            let scheme = Scheme::parse(spec).unwrap();
+            for t in &store.tensors {
+                let data = t.as_f32();
+                let reference = qdq_tensor(
+                    &scheme,
+                    &data,
+                    &t.shape,
+                    t.channel_axis,
+                    &[],
+                    0,
+                )
+                .unwrap();
+                let et = encode_tensor(
+                    &scheme,
+                    &data,
+                    &t.shape,
+                    t.channel_axis,
+                    &[],
+                )
+                .unwrap();
+                assert_f32_bits_eq(
+                    &et.recon,
+                    &reference.recon,
+                    &format!("{spec} on {}", t.name),
+                );
+                assert_eq!(
+                    et.bits.to_bits(),
+                    reference.bits.to_bits(),
+                    "{spec} on {}: bits {} vs {}",
+                    t.name,
+                    et.bits,
+                    reference.bits
+                );
+                assert_eq!(
+                    et.sq_err.to_bits(),
+                    reference.sq_err.to_bits(),
+                    "{spec} on {}: sq_err {} vs {}",
+                    t.name,
+                    et.sq_err,
+                    reference.sq_err
+                );
+            }
+        }
+    });
+}
+
+fn pack_opts(spec: &str, codec: Codec, lanes: usize) -> PackOptions {
+    PackOptions {
+        spec: spec.to_string(),
+        alloc: AllocMode::Flat,
+        codec,
+        lanes,
+        meta: Json::obj().push("source", "test"),
+    }
+}
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("owf_artifact_props");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}_{}.owq", std::process::id()))
+}
+
+#[test]
+fn pack_unpack_roundtrips_bit_exactly_for_every_codec() {
+    check("pack-roundtrip", 5, |g: &mut Gen| {
+        let store = test_store(g);
+        let spec = "cbrt-t5@4:block64-absmax:sparse0.01,compress";
+        for (codec, lanes) in [
+            (Codec::Raw, 1),
+            (Codec::Huffman, 1),
+            (Codec::Huffman, 4),
+            (Codec::Rans, 1),
+            (Codec::Rans, 8),
+        ] {
+            let path = tmp_path(&format!(
+                "rt_{}_{lanes}",
+                codec.name()
+            ));
+            let summary = pack_store(
+                &store,
+                &HashMap::new(),
+                &pack_opts(spec, codec, lanes),
+                &path,
+            )
+            .unwrap();
+            assert_eq!(summary.tensors, store.tensors.len());
+            let art = Artifact::open(&path).unwrap();
+            assert_eq!(art.codec, codec);
+            assert_eq!(art.lanes, lanes);
+            art.verify_all().unwrap();
+            let scheme = Scheme::parse(spec).unwrap();
+            for (i, rec) in art.tensors.iter().enumerate() {
+                let t = store.require(&rec.name).unwrap();
+                let data = t.as_f32();
+                let reference = qdq_tensor(
+                    &scheme,
+                    &data,
+                    &t.shape,
+                    t.channel_axis,
+                    &[],
+                    0,
+                )
+                .unwrap();
+                let decoded = art.decode_tensor(i).unwrap();
+                assert_f32_bits_eq(
+                    &decoded,
+                    &reference.recon,
+                    &format!("{} x{lanes} on {}", codec.name(), rec.name),
+                );
+                assert_eq!(
+                    rec.sq_err.to_bits(),
+                    reference.sq_err.to_bits(),
+                    "{}: stored sq_err",
+                    rec.name
+                );
+                assert_eq!(
+                    rec.bits.to_bits(),
+                    reference.bits.to_bits(),
+                    "{}: stored bits",
+                    rec.name
+                );
+                // decode into a caller-owned buffer is the same kernel
+                let mut buf = vec![0f32; rec.n];
+                art.decode_tensor_into(i, &mut buf).unwrap();
+                assert_f32_bits_eq(&buf, &decoded, "decode_into");
+            }
+            std::fs::remove_file(&path).unwrap();
+        }
+    });
+}
+
+#[test]
+fn variable_allocation_is_recorded_and_applied() {
+    let mut g = Gen {
+        rng: owf::util::rng::Rng::new(0xA110C),
+        case: 0,
+    };
+    // three tensors with 10^4-spread RMS so eq. (5) must differentiate
+    let mut store = Store::new(Json::obj());
+    for (name, scale) in [("lo", 0.01f32), ("mid", 1.0), ("hi", 100.0)] {
+        let data: Vec<f32> = g
+            .heavy_tailed_vec(64 * 64)
+            .iter()
+            .map(|x| x * scale)
+            .collect();
+        let mut t = Tensor::from_f32(name, vec![64, 64], &data);
+        t.channel_axis = Some(1);
+        store.push(t);
+    }
+    let path = tmp_path("alloc");
+    let opts = PackOptions {
+        spec: "int@4:block64-absmax:compress".to_string(),
+        alloc: AllocMode::Variable,
+        codec: Codec::Huffman,
+        lanes: 4,
+        meta: Json::obj().push("source", "test"),
+    };
+    pack_store(&store, &HashMap::new(), &opts, &path).unwrap();
+    let art = Artifact::open(&path).unwrap();
+    let alloc = art.alloc.as_ref().expect("alloc record missing");
+    assert_eq!(alloc.scheme, "variable");
+    assert_eq!(alloc.bits.len(), 3);
+    let max = alloc.bits.iter().fold(f64::MIN, |m, &b| m.max(b));
+    let min = alloc.bits.iter().fold(f64::MAX, |m, &b| m.min(b));
+    assert!(
+        max > min,
+        "RMS spread must induce unequal bits: {:?}",
+        alloc.bits
+    );
+    // integral bits (round_allocation), average within the budget
+    let total: f64 = art.tensors.iter().map(|r| r.n as f64).sum();
+    let avg: f64 = art
+        .tensors
+        .iter()
+        .zip(&alloc.bits)
+        .map(|(r, &b)| b * r.n as f64)
+        .sum::<f64>()
+        / total;
+    assert!(avg <= 4.0 + 1e-9, "avg {avg}");
+    for (rec, &b) in art.tensors.iter().zip(&alloc.bits) {
+        assert_eq!(b.fract(), 0.0, "{}: non-integral bits", rec.name);
+        let s = Scheme::parse(&rec.spec).unwrap();
+        assert_eq!(s.bits, b, "{}: spec bits != alloc bits", rec.name);
+        // the per-tensor spec reproduces the packed reconstruction
+        let t = store.require(&rec.name).unwrap();
+        let reference = qdq_tensor(
+            &s,
+            &t.as_f32(),
+            &t.shape,
+            t.channel_axis,
+            &[],
+            0,
+        )
+        .unwrap();
+        let i = art.position(&rec.name).unwrap();
+        assert_f32_bits_eq(
+            &art.decode_tensor(i).unwrap(),
+            &reference.recon,
+            &rec.name,
+        );
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn truncated_torn_and_corrupted_containers_are_rejected() {
+    let mut g = Gen {
+        rng: owf::util::rng::Rng::new(0x70A2),
+        case: 0,
+    };
+    let store = test_store(&mut g);
+    let path = tmp_path("adversarial");
+    pack_store(
+        &store,
+        &HashMap::new(),
+        &pack_opts("cbrt-t5@4:block64-absmax:sparse0.01,compress", Codec::Huffman, 4),
+        &path,
+    )
+    .unwrap();
+    let raw = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    let full = Artifact::from_bytes(raw.clone()).unwrap();
+    full.verify_all().unwrap();
+
+    // every strict prefix must fail to open (bounds or checksums), never
+    // silently decode
+    let mlen = u32::from_le_bytes([raw[4], raw[5], raw[6], raw[7]]) as usize;
+    for cut in [
+        0usize,
+        3,
+        7,
+        8 + mlen / 2,     // mid-manifest
+        8 + mlen + 4,     // mid manifest-checksum
+        8 + mlen + 8 + 1, // one payload byte
+        raw.len() * 2 / 3,
+        raw.len() - 1,
+    ] {
+        let torn = raw[..cut].to_vec();
+        assert!(
+            Artifact::from_bytes(torn).is_err(),
+            "cut at {cut} must be rejected"
+        );
+    }
+
+    // a flipped manifest byte fails the header checksum at open
+    let mut bad = raw.clone();
+    bad[10] ^= 0x40;
+    assert!(
+        Artifact::from_bytes(bad).is_err(),
+        "manifest corruption must fail at open"
+    );
+
+    // a flipped payload byte inside a section opens fine (bounds intact)
+    // but fails that tensor's checksum at decode / verify
+    let base = 8 + mlen + 8;
+    let first_payload = &full.tensors[0].payload;
+    let mut bad = raw.clone();
+    bad[base + first_payload.off + first_payload.len / 2] ^= 0x01;
+    let art = Artifact::from_bytes(bad).unwrap();
+    assert!(art.verify_all().is_err(), "verify_all must catch bit rot");
+    assert!(
+        art.decode_tensor(0).is_err(),
+        "decoding the corrupted tensor must fail"
+    );
+    // untouched tensors still decode
+    assert!(art.decode_tensor(1).is_ok());
+
+    // not-our-magic
+    assert!(Artifact::from_bytes(b"OWT1....rest".to_vec()).is_err());
+}
+
+#[test]
+fn pack_rejects_rot_and_grid_schemes() {
+    let mut g = Gen {
+        rng: owf::util::rng::Rng::new(0xBAD),
+        case: 0,
+    };
+    let store = test_store(&mut g);
+    let path = tmp_path("reject");
+    for spec in ["cbrt-normal@4:tensor-rms:rot", "grid@4:tensor-rms:compress"]
+    {
+        let r = pack_store(
+            &store,
+            &HashMap::new(),
+            &pack_opts(spec, Codec::Huffman, 4),
+            &path,
+        );
+        assert!(r.is_err(), "{spec} must be rejected");
+    }
+    assert!(!path.exists(), "rejected pack must not leave a file");
+}
+
+#[test]
+fn server_concurrent_reads_are_bit_identical_with_coherent_stats() {
+    let mut g = Gen {
+        rng: owf::util::rng::Rng::new(0x5E17E),
+        case: 0,
+    };
+    let store = test_store(&mut g);
+    let path = tmp_path("server");
+    pack_store(
+        &store,
+        &HashMap::new(),
+        &pack_opts("cbrt-t5@4:block64-absmax:compress", Codec::Huffman, 4),
+        &path,
+    )
+    .unwrap();
+    let art = Artifact::open(&path).unwrap();
+    let expected: Vec<(String, Vec<f32>)> = art
+        .tensors
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (r.name.clone(), art.decode_tensor(i).unwrap()))
+        .collect();
+    let n_tensors = expected.len();
+
+    let server = ArtifactServer::new(Artifact::open(&path).unwrap(), 1 << 30);
+    let threads = 4;
+    let per_thread = 16;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let server = &server;
+            let expected = &expected;
+            scope.spawn(move || {
+                for i in 0..per_thread {
+                    let (name, want) = &expected[(t + i) % expected.len()];
+                    let got = server.get(name).unwrap();
+                    assert_f32_bits_eq(&got, want, name);
+                }
+            });
+        }
+    });
+    let s = server.stats();
+    let total = (threads * per_thread) as u64;
+    assert_eq!(s.requests, total);
+    assert_eq!(s.hits + s.misses, total);
+    // worst racing case: every thread misses each tensor once
+    assert!(
+        s.misses >= n_tensors as u64
+            && s.misses <= (threads * n_tensors) as u64,
+        "misses {} outside [{n_tensors}, {}]",
+        s.misses,
+        threads * n_tensors
+    );
+    assert!(s.hits > 0, "a warm cache must produce hits");
+    assert_eq!(s.cached_tensors, n_tensors);
+    assert_eq!(s.evictions, 0);
+    assert_eq!(
+        s.decoded_bytes % 4,
+        0,
+        "decoded bytes are whole f32s"
+    );
+
+    // cap 0 disables the cache: all misses
+    let cold = ArtifactServer::new(Artifact::open(&path).unwrap(), 0);
+    for _ in 0..3 {
+        cold.get(&expected[0].0).unwrap();
+    }
+    let s = cold.stats();
+    assert_eq!((s.requests, s.hits, s.misses), (3, 0, 3));
+    assert_eq!(s.cached_tensors, 0);
+
+    // a 1-byte cap holds exactly the most recent tensor and evicts the
+    // rest in strict LRU order
+    let tiny = ArtifactServer::new(Artifact::open(&path).unwrap(), 1);
+    for (name, want) in &expected {
+        let got = tiny.get(name).unwrap();
+        assert_f32_bits_eq(&got, want, name);
+    }
+    let s = tiny.stats();
+    assert_eq!(s.cached_tensors, 1);
+    assert_eq!(s.evictions, n_tensors as u64 - 1);
+    assert_eq!(s.hits, 0);
+
+    // unknown tensors error cleanly
+    assert!(server.get("nope").is_err());
+    // params() hands the whole artifact to the eval harness
+    let params = server.params().unwrap();
+    assert_eq!(params.len(), n_tensors);
+    for (name, want) in &expected {
+        assert_f32_bits_eq(&params[name], want, name);
+    }
+    std::fs::remove_file(&path).unwrap();
+}

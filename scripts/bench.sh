@@ -34,7 +34,7 @@ echo "== benches/formats.rs (n=$N) -> BENCH_formats.json =="
 OWF_BENCH_N=$N OWF_BENCH_JSON="$ROOT/BENCH_formats.json" \
     cargo bench --bench formats
 
-echo "== benches/pipeline.rs (decode rows at n=$N) -> BENCH_pipeline.json =="
+echo "== benches/pipeline.rs (decode + pack/unpack rows at n=$N) -> BENCH_pipeline.json =="
 OWF_BENCH_N=$N OWF_BENCH_JSON="$ROOT/BENCH_pipeline.json" \
     cargo bench --bench pipeline
 

@@ -2,9 +2,11 @@
 # CI entry point: tier-1 build + tests, a bench smoke run at tiny n (which
 # gates the LUT-vs-reference quantisation equivalence contract AND the
 # decode_into-vs-decode_ref bit-exactness contract before any timing),
-# then an `owf sweep` smoke run over a 12-point grid with --resume
-# exercised twice (the second resume must re-run zero points and leave
-# the row count unchanged).
+# an `owf pack`/unpack bit-exactness gate at tiny n (packed OWQ1 decode
+# must be bit-identical to the in-memory pipeline, for both entropy
+# codecs), then an `owf sweep` smoke run over a 12-point grid with
+# --resume exercised twice (the second resume must re-run zero points and
+# leave the row count unchanged).
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -23,6 +25,27 @@ OWF_BENCH_N=$((1 << 14)) OWF_THREADS=4 cargo bench --bench formats \
     > /dev/null
 
 BIN=target/release/owf
+
+echo "== owf pack/unpack bit-exactness gate (tiny n, huffman + rans) =="
+# pack deterministic synthetic tensors, then prove the packed decode
+# bit-identical to the in-memory pipeline (inspect --verify regenerates
+# the sim source from the manifest seed and compares recon/sq-err/bits
+# to the last bit), and that the concurrent server reports cache stats
+PACK_DIR="$(mktemp -d)"
+for codec in huffman rans; do
+    OWQ="$PACK_DIR/gate_$codec.owq"
+    "$BIN" pack --spec 'cbrt-t5@4:block64-absmax:sparse0.01,compress' \
+        --sim 96x64,4096 --seed 7 --codec "$codec" --lanes 4 \
+        --alloc variable --out "$OWQ"
+    "$BIN" inspect "$OWQ" --verify
+    SERVE_OUT=$("$BIN" serve-bench "$OWQ" --threads 4 --requests 64)
+    echo "$SERVE_OUT"
+    echo "$SERVE_OUT" | grep -q 'hit rate' || {
+        echo "check.sh: serve-bench ($codec) reported no cache stats" >&2
+        exit 1
+    }
+done
+
 GRID='cbrt-t5@{3..6}:block{32,64,128}-absmax'   # 4 x 3 = 12 points
 OUT="$(mktemp -d)/smoke_sweep.jsonl"
 
