@@ -3,7 +3,8 @@
 //! number EXPERIMENTS.md §Perf tracks for the whole stack — plus the
 //! `owf sweep` engine over a simulated grid, the serving-scale tensor
 //! decode rows (`[dec]` vs `[dec-ref]`) and the OWQ1 artifact round trip
-//! (`[pack]` / `[unpack]`; all pure CPU, always run).
+//! (`[pack]` / `[unpack]`) plus the contended serving path through the
+//! single-flight server (`[get-coalesced]`; all pure CPU, always run).
 //!
 //! The checkpoint benches require `make artifacts`; they exit quietly
 //! otherwise.  Set `OWF_BENCH_JSON=<path>` (as `scripts/bench.sh` does)
@@ -158,6 +159,38 @@ fn bench_artifact(rows: &mut Vec<Row>) -> anyhow::Result<()> {
             art.decode_tensor_into(0, &mut out).unwrap();
             std::hint::black_box(out[n / 2]);
         },
+    );
+    // the fault-tolerant serving path under contention: 4 threads
+    // cold-miss the single tensor each round (clear_cache forces it);
+    // single-flight coalescing means exactly one decode per iteration,
+    // so the row prices the coalescing + cache machinery on top of
+    // [unpack] rather than 4 decodes.
+    let server = owf::artifact::server::ArtifactServer::new(
+        Artifact::open(&path)?,
+        1 << 30,
+    );
+    bench_rec(
+        rows,
+        &format!("artifact {spec} [get-coalesced]"),
+        Some(n as f64),
+        || {
+            server.clear_cache();
+            std::thread::scope(|scope| {
+                for _ in 0..4 {
+                    let server = &server;
+                    scope.spawn(move || {
+                        let t = server.get("bench.w").unwrap();
+                        std::hint::black_box(t[n / 2]);
+                    });
+                }
+            });
+        },
+    );
+    let s = server.stats();
+    assert_eq!(
+        s.decode_errors + s.coalesced_errors + s.quarantined as u64,
+        0,
+        "serving bench must stay fault-free"
     );
     let _ = std::fs::remove_file(&path);
     Ok(())

@@ -1,0 +1,227 @@
+//! Structured error taxonomy for the artifact layer.
+//!
+//! The serving path needs to *dispatch* on failure, not just print it:
+//! transient I/O is retried with backoff, corruption is quarantined (never
+//! retried — re-reading flipped bits does not unflip them), truncation is
+//! reported as a torn container, and an overloaded server sheds load with a
+//! typed rejection the caller can turn into backpressure.  `ArtifactError`
+//! is `Clone` so a single decode failure can be shared verbatim with every
+//! coalesced waiter and stored in the quarantine map as the poison cause.
+//!
+//! The type implements `std::error::Error`, so existing `anyhow` call sites
+//! keep working unchanged via the blanket `From` conversion.
+
+use std::fmt;
+
+/// Typed failure for artifact open/read/decode/serve operations.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ArtifactError {
+    /// Stored bytes fail validation: a checksum mismatch, an impossible
+    /// index, or a decoder panic contained at the artifact boundary.
+    /// `tensor` is empty for container-level damage (e.g. the manifest).
+    Corrupt {
+        tensor: String,
+        section: String,
+        detail: String,
+    },
+    /// The container is structurally incomplete: bad magic, or bytes
+    /// missing relative to what the header/manifest promise (truncation,
+    /// a partial non-atomic write).
+    TornContainer { detail: String },
+    /// An I/O failure reading or writing container bytes. `transient`
+    /// failures (EINTR/EAGAIN/timeouts) are safe to retry; permanent ones
+    /// (ENOENT, ENOSPC, EACCES) are not.
+    Io { transient: bool, detail: String },
+    /// The named tensor does not exist in the artifact manifest.
+    NotFound { tensor: String },
+    /// The server's admission gate rejected the request: `limit` decodes
+    /// were already in flight.
+    Overloaded { limit: usize },
+    /// The tensor was previously found corrupt and is poisoned; `cause`
+    /// is the original failure. Requests fail fast without re-decoding.
+    Quarantined {
+        tensor: String,
+        cause: Box<ArtifactError>,
+    },
+    /// A usage or configuration error (bad spec, wrong buffer length,
+    /// unsupported version) — the container bytes themselves are fine.
+    Invalid { detail: String },
+}
+
+impl ArtifactError {
+    pub fn corrupt(
+        tensor: &str,
+        section: &str,
+        detail: impl fmt::Display,
+    ) -> ArtifactError {
+        ArtifactError::Corrupt {
+            tensor: tensor.to_string(),
+            section: section.to_string(),
+            detail: detail.to_string(),
+        }
+    }
+
+    pub fn torn(detail: impl fmt::Display) -> ArtifactError {
+        ArtifactError::TornContainer {
+            detail: detail.to_string(),
+        }
+    }
+
+    pub fn invalid(detail: impl fmt::Display) -> ArtifactError {
+        ArtifactError::Invalid {
+            detail: detail.to_string(),
+        }
+    }
+
+    /// Classify a raw `io::Error` (retryability decided by its kind).
+    pub fn io(err: &std::io::Error, what: impl fmt::Display) -> ArtifactError {
+        ArtifactError::Io {
+            transient: is_transient_kind(err.kind()),
+            detail: format!("{what}: {err}"),
+        }
+    }
+
+    /// True only for `Io { transient: true }` — the sole retryable class.
+    pub fn is_transient_io(&self) -> bool {
+        matches!(self, ArtifactError::Io { transient: true, .. })
+    }
+
+    /// True for damage that should poison the tensor in the quarantine
+    /// map: validated-bytes corruption, never I/O or load shedding.
+    pub fn is_corrupt(&self) -> bool {
+        matches!(self, ArtifactError::Corrupt { .. })
+    }
+
+    /// Short class name for stats lines and fsck verdict tables.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            ArtifactError::Corrupt { .. } => "corrupt",
+            ArtifactError::TornContainer { .. } => "torn",
+            ArtifactError::Io { transient: true, .. } => "io-transient",
+            ArtifactError::Io { transient: false, .. } => "io",
+            ArtifactError::NotFound { .. } => "not-found",
+            ArtifactError::Overloaded { .. } => "overloaded",
+            ArtifactError::Quarantined { .. } => "quarantined",
+            ArtifactError::Invalid { .. } => "invalid",
+        }
+    }
+}
+
+/// Retry is safe only when the failure is environmental and momentary.
+/// Everything else (missing file, full disk, permissions) will fail the
+/// same way again, so retrying just adds latency before the same error.
+pub fn is_transient_kind(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::Interrupted
+            | std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+    )
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::Corrupt {
+                tensor,
+                section,
+                detail,
+            } => {
+                if tensor.is_empty() {
+                    write!(f, "corrupt container: section {section}: {detail}")
+                } else {
+                    write!(
+                        f,
+                        "corrupt artifact: tensor {tensor:?} section \
+                         {section}: {detail}"
+                    )
+                }
+            }
+            ArtifactError::TornContainer { detail } => {
+                write!(f, "torn container: {detail}")
+            }
+            ArtifactError::Io { transient, detail } => {
+                let class = if *transient { "transient" } else { "permanent" };
+                write!(f, "i/o error ({class}): {detail}")
+            }
+            ArtifactError::NotFound { tensor } => {
+                write!(f, "tensor {tensor:?} not found in artifact")
+            }
+            ArtifactError::Overloaded { limit } => {
+                write!(
+                    f,
+                    "server overloaded: {limit} concurrent decodes already \
+                     in flight"
+                )
+            }
+            ArtifactError::Quarantined { tensor, cause } => {
+                write!(f, "tensor {tensor:?} quarantined: {cause}")
+            }
+            ArtifactError::Invalid { detail } => write!(f, "{detail}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Quarantined { cause, .. } => Some(cause.as_ref()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_classification() {
+        let eintr = std::io::Error::new(
+            std::io::ErrorKind::Interrupted,
+            "injected",
+        );
+        let enoent = std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing",
+        );
+        assert!(ArtifactError::io(&eintr, "read").is_transient_io());
+        assert!(!ArtifactError::io(&enoent, "read").is_transient_io());
+    }
+
+    #[test]
+    fn corrupt_classification_and_display() {
+        let e = ArtifactError::corrupt("w0", "payload", "checksum mismatch");
+        assert!(e.is_corrupt());
+        assert!(!e.is_transient_io());
+        let msg = e.to_string();
+        assert!(msg.contains("corrupt"), "{msg}");
+        assert!(msg.contains("w0"), "{msg}");
+        assert!(msg.contains("payload"), "{msg}");
+        // container-level corruption omits the tensor
+        let m = ArtifactError::corrupt("", "manifest", "bad fnv").to_string();
+        assert!(m.contains("manifest"), "{m}");
+    }
+
+    #[test]
+    fn quarantine_preserves_cause_via_source() {
+        use std::error::Error as _;
+        let cause = ArtifactError::corrupt("a", "scales", "bit flip");
+        let q = ArtifactError::Quarantined {
+            tensor: "a".into(),
+            cause: Box::new(cause.clone()),
+        };
+        let src = q.source().expect("quarantine must expose its cause");
+        assert_eq!(src.to_string(), cause.to_string());
+        assert!(q.to_string().contains("quarantined"));
+    }
+
+    #[test]
+    fn converts_into_anyhow_at_existing_call_sites() {
+        fn speaks_anyhow() -> anyhow::Result<()> {
+            Err(ArtifactError::torn("short read"))?
+        }
+        let err = speaks_anyhow().unwrap_err();
+        assert!(err.to_string().contains("torn container"));
+    }
+}

@@ -8,7 +8,8 @@
 //! [`crate::eval::pipeline::encode_tensor`]) and persists the result;
 //! [`Artifact`] decodes any tensor lazily, bit-identical to what
 //! `qdq_tensor` would have produced; [`server::ArtifactServer`] wraps the
-//! reader for concurrent serving with an LRU decoded-tensor cache.
+//! reader for concurrent serving with an LRU decoded-tensor cache,
+//! single-flight decode coalescing and a corruption quarantine.
 //!
 //! # Byte layout (also documented in `EXPERIMENTS.md` §Artifact)
 //!
@@ -36,26 +37,57 @@
 //! | `outlier_idx` | sorted outlier positions (layout space), u32 LE |
 //! | `outlier_val` | exact outlier values, f32 LE              |
 //!
-//! Every section carries an FNV-1a 64 checksum in the manifest; the
-//! manifest itself is checksummed in the header.  Truncated files fail at
-//! [`Artifact::open`] (section bounds are validated eagerly); corrupted
-//! bytes fail at first decode of the affected tensor (checksums are
-//! verified lazily, per section read — [`Artifact::verify_all`] forces
-//! them all).  Checksum verification runs *before* entropy decoding, so
-//! the panicking coder paths only ever see writer-produced bytes.
+//! # Fault model (see `EXPERIMENTS.md` §Fault-model)
+//!
+//! Every failure is a typed [`ArtifactError`], not a string.  Container
+//! bytes come through a [`ByteSource`] so the same reader serves pristine
+//! memory and the fault-injecting [`crate::util::faultfs::FaultFs`];
+//! transient read errors retry with bounded exponential backoff through an
+//! injectable [`retry::Clock`] — corruption never retries.
+//!
+//! Detection is layered.  Truncation and bad magic fail at
+//! [`Artifact::open`] as [`ArtifactError::TornContainer`] (section bounds
+//! are validated eagerly against the source length).  Flipped bits fail at
+//! first decode of the affected tensor as [`ArtifactError::Corrupt`]
+//! naming the tensor and section: FNV-1a's per-byte step `h = (h ^ b) * p`
+//! is a bijection of the running state, so *any* single corrupted byte in
+//! a checksummed range is guaranteed to change the digest — there is no
+//! single-bit-flip that slips through ([`Artifact::verify_all`] forces
+//! every checksum eagerly; `owf fsck` builds on it).  Checksums verify
+//! before entropy decoding, so the panicking coder paths normally only see
+//! writer-produced bytes; as defence in depth the whole decode runs under
+//! `catch_unwind`, converting any decoder panic into a typed `Corrupt` at
+//! the artifact boundary, and the rANS path additionally verifies the
+//! final decoder state (`rans_decode_interleaved_checked`) so trailing
+//! damage cannot yield silently wrong indices.  The guarantee enforced by
+//! `rust/tests/fault_props.rs`: any single-bit flip anywhere in a
+//! container yields a typed error or bit-exact output — never a panic,
+//! never silent wrong data.
 
+pub mod error;
+pub mod retry;
 pub mod server;
 pub mod writer;
 
+pub use error::ArtifactError;
+pub use retry::{Clock, RetryPolicy, SystemClock};
+
+use std::borrow::Cow;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{bail, Context};
 
 use crate::coordinator::config::Scheme;
 use crate::quant::{Encoded, Quantiser};
 use crate::scaling::scale_groups;
+use crate::util::faultfs::ByteSource;
 use crate::util::json::Json;
+
+/// Shorthand for artifact-layer results (typed errors only).
+pub type AResult<T> = std::result::Result<T, ArtifactError>;
 
 pub const MAGIC: &[u8; 4] = b"OWQ1";
 pub const VERSION: usize = 1;
@@ -64,7 +96,10 @@ pub const ALIGN: usize = 64;
 
 /// FNV-1a 64-bit — the container checksum (from scratch; no external
 /// crates offline).  Not cryptographic: it detects torn writes and bit
-/// rot, which is the failure model for a local artifact store.
+/// rot, which is the failure model for a local artifact store.  Each step
+/// `h = (h ^ b) * prime` is a bijection of `h` (odd multiplier mod 2^64),
+/// so two inputs differing in exactly one byte can never collide — the
+/// single-bit-flip detection guarantee the fault suite leans on.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for &b in bytes {
@@ -82,8 +117,8 @@ pub fn f64_to_hex(x: f64) -> String {
     format!("{:016x}", x.to_bits())
 }
 
-pub fn f64_from_hex(s: &str) -> Result<f64> {
-    ensure!(s.len() == 16, "bad f64 hex field {s:?}");
+pub fn f64_from_hex(s: &str) -> anyhow::Result<f64> {
+    anyhow::ensure!(s.len() == 16, "bad f64 hex field {s:?}");
     let bits = u64::from_str_radix(s, 16)
         .with_context(|| format!("bad f64 hex field {s:?}"))?;
     Ok(f64::from_bits(bits))
@@ -93,8 +128,8 @@ pub fn u64_to_hex(x: u64) -> String {
     format!("{x:016x}")
 }
 
-pub fn u64_from_hex(s: &str) -> Result<u64> {
-    ensure!(s.len() == 16, "bad u64 hex field {s:?}");
+pub fn u64_from_hex(s: &str) -> anyhow::Result<u64> {
+    anyhow::ensure!(s.len() == 16, "bad u64 hex field {s:?}");
     u64::from_str_radix(s, 16)
         .with_context(|| format!("bad u64 hex field {s:?}"))
 }
@@ -121,7 +156,7 @@ impl Codec {
         }
     }
 
-    pub fn parse(s: &str) -> Result<Codec> {
+    pub fn parse(s: &str) -> anyhow::Result<Codec> {
         match s {
             "raw" => Ok(Codec::Raw),
             "huffman" => Ok(Codec::Huffman),
@@ -172,7 +207,9 @@ impl TensorRecord {
         self.n
     }
 
-    fn sections(&self) -> [(&'static str, &Section); 6] {
+    /// The six named sections, in container order (fsck, fault injection
+    /// and the flip-sweep tests walk these to map offsets to owners).
+    pub fn sections(&self) -> [(&'static str, &Section); 6] {
         [
             ("codebook", &self.codebook),
             ("scales", &self.scales),
@@ -195,8 +232,8 @@ pub struct AllocRecord {
     pub bits: Vec<f64>,
 }
 
-/// A parsed `OWQ1` container: manifest + in-memory payload, with lazy
-/// per-tensor decoding.
+/// A parsed `OWQ1` container: manifest + byte source, with lazy,
+/// checksum-verified, panic-contained per-tensor decoding.
 pub struct Artifact {
     pub meta: Json,
     pub codec: Codec,
@@ -204,104 +241,172 @@ pub struct Artifact {
     pub alloc: Option<AllocRecord>,
     pub tensors: Vec<TensorRecord>,
     index: HashMap<String, usize>,
-    payload: Vec<u8>,
+    source: ByteSource,
+    /// Absolute file offset where the payload region begins.
+    payload_base: usize,
+    retry: RetryPolicy,
+    clock: Arc<dyn Clock>,
+    io_retries: AtomicU64,
 }
 
-fn req(j: &Json, key: &str) -> Result<Json> {
-    Ok(j.req(key).map_err(anyhow::Error::from)?.clone())
+fn invalid(e: impl std::fmt::Display) -> ArtifactError {
+    ArtifactError::invalid(e)
 }
 
-fn req_str(j: &Json, key: &str) -> Result<String> {
-    Ok(j.req_str(key).map_err(anyhow::Error::from)?.to_string())
+fn req(j: &Json, key: &str) -> AResult<Json> {
+    Ok(j.req(key).map_err(invalid)?.clone())
 }
 
-fn req_usize(j: &Json, key: &str) -> Result<usize> {
-    j.req_usize(key).map_err(anyhow::Error::from)
+fn req_str(j: &Json, key: &str) -> AResult<String> {
+    Ok(j.req_str(key).map_err(invalid)?.to_string())
 }
 
-fn req_hex_f64(j: &Json, key: &str) -> Result<f64> {
+fn req_usize(j: &Json, key: &str) -> AResult<usize> {
+    j.req_usize(key).map_err(invalid)
+}
+
+fn req_hex_f64(j: &Json, key: &str) -> AResult<f64> {
     f64_from_hex(&req_str(j, key)?)
-        .with_context(|| format!("field {key:?}"))
+        .map_err(|e| invalid(format!("field {key:?}: {e}")))
 }
 
-fn section_from(j: &Json, key: &str) -> Result<Section> {
+fn section_from(j: &Json, key: &str) -> AResult<Section> {
     let s = j
         .get("sections")
         .and_then(|s| s.get(key))
-        .with_context(|| format!("missing section {key:?}"))?;
+        .ok_or_else(|| invalid(format!("missing section {key:?}")))?;
     Ok(Section {
         off: req_usize(s, "off")?,
         len: req_usize(s, "len")?,
         fnv: u64_from_hex(&req_str(s, "fnv")?)
-            .with_context(|| format!("section {key:?}"))?,
+            .map_err(|e| invalid(format!("section {key:?}: {e}")))?,
     })
 }
 
+/// Read with bounded retry on transient faults.  `UnexpectedEof` means the
+/// container is shorter than its metadata promises — torn, not retryable.
+fn read_retry<'a>(
+    source: &'a ByteSource,
+    off: usize,
+    len: usize,
+    what: &str,
+    policy: &RetryPolicy,
+    clock: &dyn Clock,
+    retries: &AtomicU64,
+) -> AResult<Cow<'a, [u8]>> {
+    retry::with_retry(policy, clock, retries, || {
+        source.read_at(off, len).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                ArtifactError::torn(format!("{what}: {e}"))
+            } else {
+                ArtifactError::io(&e, what)
+            }
+        })
+    })
+}
+
+/// Best-effort panic payload message (mirrors `util::testing`).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<String>()
+        .map(|s| s.as_str())
+        .or_else(|| payload.downcast_ref::<&str>().copied())
+        .unwrap_or("<non-string panic>")
+}
+
 impl Artifact {
-    pub fn open(path: impl AsRef<Path>) -> Result<Artifact> {
+    pub fn open(path: impl AsRef<Path>) -> AResult<Artifact> {
         let path = path.as_ref();
         let raw = std::fs::read(path)
-            .with_context(|| format!("open {path:?}"))?;
+            .map_err(|e| ArtifactError::io(&e, format!("open {path:?}")))?;
         Artifact::from_bytes(raw)
-            .with_context(|| format!("parse {path:?}"))
     }
 
-    /// Parse a container from raw bytes.  Structural problems — bad magic,
-    /// torn manifest, manifest checksum mismatch, sections out of range —
-    /// error here; payload *corruption* is caught at first decode of the
-    /// affected tensor (per-section checksums).
-    pub fn from_bytes(raw: Vec<u8>) -> Result<Artifact> {
-        ensure!(
-            raw.len() >= 8 && &raw[..4] == MAGIC,
-            "not an OWQ1 container"
-        );
-        let mlen =
-            u32::from_le_bytes([raw[4], raw[5], raw[6], raw[7]]) as usize;
-        let base = 8 + mlen + 8;
-        ensure!(
-            raw.len() >= base,
-            "torn container: {} of {base} header+manifest bytes",
-            raw.len()
-        );
-        let manifest_bytes = &raw[8..8 + mlen];
-        let want = u64::from_le_bytes(
-            raw[8 + mlen..base].try_into().unwrap(),
-        );
-        ensure!(
-            fnv1a64(manifest_bytes) == want,
-            "manifest checksum mismatch (corrupt or torn container)"
-        );
-        let manifest = Json::parse(
-            std::str::from_utf8(manifest_bytes)
-                .context("manifest not utf-8")?,
-        )
-        .context("manifest parse")?;
-        ensure!(
-            req_usize(&manifest, "version")? == VERSION,
-            "unsupported OWQ version"
-        );
-        let codec = Codec::parse(&req_str(&manifest, "codec")?)?;
-        let lanes = req_usize(&manifest, "lanes")?;
-        ensure!(
-            (1..=crate::compress::MAX_LANES).contains(&lanes),
-            "lane count {lanes} out of range"
-        );
-        let meta = manifest.get("meta").cloned().unwrap_or(Json::obj());
-        let payload = raw[base..].to_vec();
+    /// Parse a container from raw in-memory bytes (zero-copy reads).
+    pub fn from_bytes(raw: Vec<u8>) -> AResult<Artifact> {
+        Artifact::from_source(ByteSource::Mem(raw))
+    }
 
-        let mut tensors = Vec::new();
+    /// Parse a container from any byte source with the default retry
+    /// policy and the system clock.
+    pub fn from_source(source: ByteSource) -> AResult<Artifact> {
+        Artifact::from_source_with(
+            source,
+            RetryPolicy::default(),
+            Arc::new(SystemClock),
+        )
+    }
+
+    /// Parse a container from any byte source.  Structural problems — bad
+    /// magic, torn manifest, sections out of range — error here as
+    /// [`ArtifactError::TornContainer`]; a manifest checksum mismatch is
+    /// [`ArtifactError::Corrupt`] on section `manifest`; payload
+    /// corruption is caught at first decode of the affected tensor.
+    /// Transient source faults retry under `policy`, sleeping via `clock`.
+    pub fn from_source_with(
+        source: ByteSource,
+        policy: RetryPolicy,
+        clock: Arc<dyn Clock>,
+    ) -> AResult<Artifact> {
+        let io_retries = AtomicU64::new(0);
+        let read = |off: usize, len: usize, what: &str| {
+            read_retry(
+                &source, off, len, what, &policy, &*clock, &io_retries,
+            )
+            .map(Cow::into_owned)
+        };
+        let head = read(0, 8, "header")?;
+        if &head[..4] != MAGIC {
+            return Err(ArtifactError::torn("not an OWQ1 container"));
+        }
+        let mlen =
+            u32::from_le_bytes([head[4], head[5], head[6], head[7]]) as usize;
+        let base = 8 + mlen + 8;
+        let mbytes = read(8, mlen + 8, "manifest")?;
+        let manifest_bytes = &mbytes[..mlen];
+        let want =
+            u64::from_le_bytes(mbytes[mlen..].try_into().unwrap());
+        if fnv1a64(manifest_bytes) != want {
+            return Err(ArtifactError::corrupt(
+                "",
+                "manifest",
+                "manifest checksum mismatch (corrupt or torn container)",
+            ));
+        }
+        // Past the checksum, manifest problems are writer bugs or version
+        // skew, not media damage — they classify as Invalid.
+        let text = std::str::from_utf8(manifest_bytes)
+            .map_err(|e| invalid(format!("manifest not utf-8: {e}")))?;
+        let manifest = Json::parse(text)
+            .map_err(|e| invalid(format!("manifest parse: {e}")))?;
+        if req_usize(&manifest, "version")? != VERSION {
+            return Err(invalid("unsupported OWQ version"));
+        }
+        let codec =
+            Codec::parse(&req_str(&manifest, "codec")?).map_err(invalid)?;
+        let lanes = req_usize(&manifest, "lanes")?;
+        if !(1..=crate::compress::MAX_LANES).contains(&lanes) {
+            return Err(invalid(format!("lane count {lanes} out of range")));
+        }
+        let meta = manifest.get("meta").cloned().unwrap_or(Json::obj());
+        let payload_len = source.len().saturating_sub(base);
+
+        let mut tensors: Vec<TensorRecord> = Vec::new();
         let mut index = HashMap::new();
-        for entry in req(&manifest, "tensors")?
+        let entries = req(&manifest, "tensors")?;
+        let entries = entries
             .as_arr()
-            .context("tensors not an array")?
-        {
+            .ok_or_else(|| invalid("tensors not an array"))?;
+        for entry in entries {
             let name = req_str(entry, "name")?;
             let shape: Vec<usize> = req(entry, "shape")?
                 .as_arr()
-                .context("shape not an array")?
+                .ok_or_else(|| invalid("shape not an array"))?
                 .iter()
-                .map(|j| j.as_usize().context("bad shape entry"))
-                .collect::<Result<_>>()?;
+                .map(|j| {
+                    j.as_usize().ok_or_else(|| invalid("bad shape entry"))
+                })
+                .collect::<AResult<_>>()?;
             let channel_axis = entry
                 .get("channel_axis")
                 .filter(|j| !j.is_null())
@@ -315,7 +420,7 @@ impl Artifact {
                 transposed: entry
                     .get("transposed")
                     .and_then(|j| j.as_bool())
-                    .context("missing transposed flag")?,
+                    .ok_or_else(|| invalid("missing transposed flag"))?,
                 bits: req_hex_f64(entry, "bits")?,
                 sq_err: req_hex_f64(entry, "sq_err")?,
                 codebook: section_from(entry, "codebook")?,
@@ -328,27 +433,32 @@ impl Artifact {
                 shape,
                 channel_axis,
             };
-            ensure!(
-                rec.shape.iter().product::<usize>() == rec.n,
-                "{name}: shape/numel mismatch"
-            );
-            ensure!(
-                !rec.transposed || rec.shape.len() == 2,
-                "{name}: transposed layout requires a 2-D shape"
-            );
-            for (sname, s) in rec.sections() {
-                ensure!(
-                    s.off.checked_add(s.len).is_some_and(|end| {
-                        end <= payload.len()
-                    }),
-                    "{name}: section {sname} out of range (torn file?)"
-                );
+            if rec.shape.iter().product::<usize>() != rec.n {
+                return Err(invalid(format!("{name}: shape/numel mismatch")));
             }
-            ensure!(
-                index.insert(name, tensors.len()).is_none(),
-                "duplicate tensor {:?}",
-                rec.name
-            );
+            if rec.transposed && rec.shape.len() != 2 {
+                return Err(invalid(format!(
+                    "{name}: transposed layout requires a 2-D shape"
+                )));
+            }
+            for (sname, s) in rec.sections() {
+                let fits = s
+                    .off
+                    .checked_add(s.len)
+                    .is_some_and(|end| end <= payload_len);
+                if !fits {
+                    return Err(ArtifactError::torn(format!(
+                        "{name}: section {sname} out of range \
+                         (truncated or torn file)"
+                    )));
+                }
+            }
+            if index.insert(name, tensors.len()).is_some() {
+                return Err(invalid(format!(
+                    "duplicate tensor {:?}",
+                    rec.name
+                )));
+            }
             tensors.push(rec);
         }
         let alloc = match manifest.get("alloc") {
@@ -359,23 +469,26 @@ impl Artifact {
                 average: req_hex_f64(a, "average")?,
                 bits: req(a, "bits")?
                     .as_arr()
-                    .context("alloc bits not an array")?
+                    .ok_or_else(|| invalid("alloc bits not an array"))?
                     .iter()
                     .map(|j| {
                         j.as_str()
-                            .context("alloc bit not hex")
-                            .and_then(f64_from_hex)
+                            .ok_or_else(|| invalid("alloc bit not hex"))
+                            .and_then(|s| {
+                                f64_from_hex(s).map_err(invalid)
+                            })
                     })
-                    .collect::<Result<_>>()?,
+                    .collect::<AResult<_>>()?,
             }),
         };
         if let Some(a) = &alloc {
-            ensure!(
-                a.bits.len() == tensors.len(),
-                "alloc record covers {} of {} tensors",
-                a.bits.len(),
-                tensors.len()
-            );
+            if a.bits.len() != tensors.len() {
+                return Err(invalid(format!(
+                    "alloc record covers {} of {} tensors",
+                    a.bits.len(),
+                    tensors.len()
+                )));
+            }
         }
         Ok(Artifact {
             meta,
@@ -384,7 +497,11 @@ impl Artifact {
             alloc,
             tensors,
             index,
-            payload,
+            source,
+            payload_base: base,
+            retry: policy,
+            clock,
+            io_retries,
         })
     }
 
@@ -401,59 +518,155 @@ impl Artifact {
     }
 
     pub fn payload_bytes(&self) -> usize {
-        self.payload.len()
+        self.source.len().saturating_sub(self.payload_base)
     }
 
-    /// Fetch one section with its checksum verified.
-    fn section(&self, name: &str, owner: &str, s: &Section) -> Result<&[u8]> {
-        let bytes = &self.payload[s.off..s.off + s.len];
-        ensure!(
-            fnv1a64(bytes) == s.fnv,
-            "{owner}: section {name} checksum mismatch (corrupt container)"
-        );
+    /// Absolute file offset of the payload region (header + manifest +
+    /// manifest checksum precede it).  Fault injection tooling uses this
+    /// to aim at specific sections.
+    pub fn payload_base(&self) -> usize {
+        self.payload_base
+    }
+
+    /// Absolute file byte range of one section of one tensor, for
+    /// targeted fault injection (`owf fault-inject`).
+    pub fn section_file_range(
+        &self,
+        tensor: &str,
+        section: &str,
+    ) -> Option<(usize, usize)> {
+        let rec = &self.tensors[self.position(tensor)?];
+        let (_, s) = rec
+            .sections()
+            .into_iter()
+            .find(|(name, _)| *name == section)?;
+        Some((self.payload_base + s.off, s.len))
+    }
+
+    /// Transient reads retried so far (across all section fetches).
+    pub fn io_retries(&self) -> u64 {
+        self.io_retries.load(Ordering::Relaxed)
+    }
+
+    /// Fetch one section with bounded retry and its checksum verified.
+    fn section(
+        &self,
+        name: &str,
+        owner: &str,
+        s: &Section,
+    ) -> AResult<Cow<'_, [u8]>> {
+        let bytes = read_retry(
+            &self.source,
+            self.payload_base + s.off,
+            s.len,
+            name,
+            &self.retry,
+            &*self.clock,
+            &self.io_retries,
+        )?;
+        if fnv1a64(&bytes) != s.fnv {
+            return Err(ArtifactError::corrupt(
+                owner,
+                name,
+                "checksum mismatch (corrupt container)",
+            ));
+        }
         Ok(bytes)
     }
 
-    fn f32_section(&self, name: &str, owner: &str, s: &Section) -> Result<Vec<f32>> {
+    fn f32_section(
+        &self,
+        name: &str,
+        owner: &str,
+        s: &Section,
+    ) -> AResult<Vec<f32>> {
         let bytes = self.section(name, owner, s)?;
-        ensure!(bytes.len() % 4 == 0, "{owner}: ragged {name} section");
+        if bytes.len() % 4 != 0 {
+            return Err(ArtifactError::corrupt(
+                owner,
+                name,
+                "ragged section length",
+            ));
+        }
         Ok(bytes
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
 
-    fn u64_section(&self, name: &str, owner: &str, s: &Section) -> Result<Vec<u64>> {
+    fn u64_section(
+        &self,
+        name: &str,
+        owner: &str,
+        s: &Section,
+    ) -> AResult<Vec<u64>> {
         let bytes = self.section(name, owner, s)?;
-        ensure!(bytes.len() % 8 == 0, "{owner}: ragged {name} section");
+        if bytes.len() % 8 != 0 {
+            return Err(ArtifactError::corrupt(
+                owner,
+                name,
+                "ragged section length",
+            ));
+        }
         Ok(bytes
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
 
-    fn u32_section(&self, name: &str, owner: &str, s: &Section) -> Result<Vec<u32>> {
+    fn u32_section(
+        &self,
+        name: &str,
+        owner: &str,
+        s: &Section,
+    ) -> AResult<Vec<u32>> {
         let bytes = self.section(name, owner, s)?;
-        ensure!(bytes.len() % 4 == 0, "{owner}: ragged {name} section");
+        if bytes.len() % 4 != 0 {
+            return Err(ArtifactError::corrupt(
+                owner,
+                name,
+                "ragged section length",
+            ));
+        }
         Ok(bytes
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
 
+    /// Force every section checksum of tensor `i` (no decode).
+    pub fn verify_tensor(&self, i: usize) -> AResult<()> {
+        let rec = &self.tensors[i];
+        for (sname, s) in rec.sections() {
+            self.section(sname, &rec.name, s)?;
+        }
+        Ok(())
+    }
+
+    /// Checksum one named section of tensor `i` (`owf fsck` uses this for
+    /// per-section verdicts; `None` if the section name is unknown).
+    pub fn verify_section(
+        &self,
+        i: usize,
+        section: &str,
+    ) -> Option<AResult<()>> {
+        let rec = &self.tensors[i];
+        let (sname, s) =
+            rec.sections().into_iter().find(|(n, _)| *n == section)?;
+        Some(self.section(sname, &rec.name, s).map(|_| ()))
+    }
+
     /// Force every section checksum (the eager complement of the lazy
     /// per-decode verification).
-    pub fn verify_all(&self) -> Result<()> {
-        for rec in &self.tensors {
-            for (sname, s) in rec.sections() {
-                self.section(sname, &rec.name, s)?;
-            }
+    pub fn verify_all(&self) -> AResult<()> {
+        for i in 0..self.tensors.len() {
+            self.verify_tensor(i)?;
         }
         Ok(())
     }
 
     /// Decode tensor `i` into a fresh buffer (original row-major layout).
-    pub fn decode_tensor(&self, i: usize) -> Result<Vec<f32>> {
+    pub fn decode_tensor(&self, i: usize) -> AResult<Vec<f32>> {
         let mut out = vec![0f32; self.tensors[i].n];
         self.decode_tensor_into(i, &mut out)?;
         Ok(out)
@@ -465,48 +678,93 @@ impl Artifact {
     /// scatter-back → layout restore.  Bit-identical to the in-memory
     /// pipeline's reconstruction for the recorded spec (enforced by
     /// `rust/tests/artifact_props.rs` and the `scripts/check.sh` gate).
-    pub fn decode_tensor_into(&self, i: usize, out: &mut [f32]) -> Result<()> {
+    ///
+    /// No panic escapes: the decode runs under `catch_unwind`, so damage
+    /// that slipped past a checksum (or a decoder bug) surfaces as a typed
+    /// [`ArtifactError::Corrupt`], never an abort of the serving thread.
+    /// On error the buffer contents are unspecified.
+    pub fn decode_tensor_into(
+        &self,
+        i: usize,
+        out: &mut [f32],
+    ) -> AResult<()> {
         let rec = &self.tensors[i];
-        let name = &rec.name;
-        ensure!(
-            out.len() == rec.n,
-            "{name}: output buffer holds {} of {} elements",
-            out.len(),
-            rec.n
-        );
+        if out.len() != rec.n {
+            return Err(invalid(format!(
+                "{}: output buffer holds {} of {} elements",
+                rec.name,
+                out.len(),
+                rec.n
+            )));
+        }
         if rec.n == 0 {
             return Ok(());
         }
+        let guarded = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| self.decode_guarded(rec, out)),
+        );
+        match guarded {
+            Ok(result) => result,
+            Err(payload) => Err(ArtifactError::corrupt(
+                &rec.name,
+                "decode",
+                format!(
+                    "decoder panic contained at artifact boundary: {}",
+                    panic_message(&*payload)
+                ),
+            )),
+        }
+    }
+
+    fn decode_guarded(
+        &self,
+        rec: &TensorRecord,
+        out: &mut [f32],
+    ) -> AResult<()> {
+        let name = &rec.name;
+        let corrupt = |section: &str, detail: String| {
+            ArtifactError::corrupt(name, section, detail)
+        };
         let scheme = Scheme::parse(&rec.spec)
-            .with_context(|| format!("{name}: stored spec"))?;
+            .map_err(|e| invalid(format!("{name}: stored spec: {e}")))?;
         let points = self.f32_section("codebook", name, &rec.codebook)?;
-        ensure!(!points.is_empty(), "{name}: empty codebook");
+        if points.is_empty() {
+            return Err(corrupt("codebook", "empty codebook".into()));
+        }
         let counts = self.u64_section("counts", name, &rec.counts)?;
-        ensure!(
-            counts.len() == points.len(),
-            "{name}: histogram/codebook length mismatch"
-        );
-        ensure!(
-            counts.iter().sum::<u64>() as usize == rec.n,
-            "{name}: index histogram does not cover the tensor"
-        );
+        if counts.len() != points.len() {
+            return Err(corrupt(
+                "counts",
+                format!(
+                    "histogram covers {} of {} codepoints",
+                    counts.len(),
+                    points.len()
+                ),
+            ));
+        }
+        if counts.iter().sum::<u64>() as usize != rec.n {
+            return Err(corrupt(
+                "counts",
+                "index histogram does not cover the tensor".into(),
+            ));
+        }
         let scales = self.f32_section("scales", name, &rec.scales)?;
         let indices = self.decode_indices(rec, &counts)?;
-        ensure!(
-            indices.len() == rec.n,
-            "{name}: decoded {} of {} indices",
-            indices.len(),
-            rec.n
-        );
+        if indices.len() != rec.n {
+            return Err(corrupt(
+                "payload",
+                format!("decoded {} of {} indices", indices.len(), rec.n),
+            ));
+        }
 
         let groups =
             scale_groups(rec.n, scheme.granularity, rec.channel_len);
-        ensure!(
-            scales.len() == groups.len(),
-            "{name}: {} scales for {} groups",
-            scales.len(),
-            groups.len()
-        );
+        if scales.len() != groups.len() {
+            return Err(corrupt(
+                "scales",
+                format!("{} scales for {} groups", scales.len(), groups.len()),
+            ));
+        }
         let codebook = crate::formats::Codebook::with_bits(
             points,
             rec.storage_bits,
@@ -526,14 +784,18 @@ impl Artifact {
 
         let idx = self.u32_section("outlier_idx", name, &rec.outlier_idx)?;
         let val = self.f32_section("outlier_val", name, &rec.outlier_val)?;
-        ensure!(
-            idx.len() == val.len(),
-            "{name}: outlier index/value count mismatch"
-        );
-        ensure!(
-            idx.iter().all(|&i| (i as usize) < rec.n),
-            "{name}: outlier index out of range"
-        );
+        if idx.len() != val.len() {
+            return Err(corrupt(
+                "outlier_idx",
+                "outlier index/value count mismatch".into(),
+            ));
+        }
+        if idx.iter().any(|&i| (i as usize) >= rec.n) {
+            return Err(corrupt(
+                "outlier_idx",
+                "outlier index out of range".into(),
+            ));
+        }
 
         if rec.transposed {
             // layout space is the transpose; decode + scatter there, then
@@ -560,43 +822,92 @@ impl Artifact {
     }
 
     /// Entropy-decode the index payload under the stored histogram model.
+    /// Runs under its own `catch_unwind` so a coder panic on
+    /// checksum-evading damage names the `payload` section specifically.
     fn decode_indices(
         &self,
         rec: &TensorRecord,
         counts: &[u64],
-    ) -> Result<Vec<u16>> {
+    ) -> AResult<Vec<u16>> {
         let name = &rec.name;
         let payload = self.section("payload", name, &rec.payload)?;
+        let decoded = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                self.decode_indices_inner(rec, counts, &payload)
+            }),
+        );
+        match decoded {
+            Ok(result) => result,
+            Err(p) => Err(ArtifactError::corrupt(
+                name,
+                "payload",
+                format!("entropy decoder panic: {}", panic_message(&*p)),
+            )),
+        }
+    }
+
+    fn decode_indices_inner(
+        &self,
+        rec: &TensorRecord,
+        counts: &[u64],
+        payload: &[u8],
+    ) -> AResult<Vec<u16>> {
+        let name = &rec.name;
         match self.codec {
             Codec::Raw => {
-                ensure!(
-                    payload.len() == 2 * rec.n,
-                    "{name}: raw payload holds {} of {} bytes",
-                    payload.len(),
-                    2 * rec.n
-                );
+                if payload.len() != 2 * rec.n {
+                    return Err(ArtifactError::corrupt(
+                        name,
+                        "payload",
+                        format!(
+                            "raw payload holds {} of {} bytes",
+                            payload.len(),
+                            2 * rec.n
+                        ),
+                    ));
+                }
                 let k = counts.len() as u16;
                 let indices: Vec<u16> = payload
                     .chunks_exact(2)
                     .map(|c| u16::from_le_bytes([c[0], c[1]]))
                     .collect();
-                ensure!(
-                    indices.iter().all(|&i| i < k),
-                    "{name}: raw index out of codebook range"
-                );
+                if indices.iter().any(|&i| i >= k) {
+                    return Err(ArtifactError::corrupt(
+                        name,
+                        "payload",
+                        "raw index out of codebook range",
+                    ));
+                }
                 Ok(indices)
             }
             Codec::Huffman => {
-                ensure!(!payload.is_empty(), "{name}: empty Huffman payload");
+                if payload.is_empty() {
+                    return Err(ArtifactError::corrupt(
+                        name,
+                        "payload",
+                        "empty Huffman payload",
+                    ));
+                }
                 let code = crate::compress::tables::huffman_for(counts);
-                Ok(code.decoder().decode_interleaved(payload, rec.n))
+                code.decoder()
+                    .decode_interleaved_checked(payload, rec.n)
+                    .map_err(|e| {
+                        ArtifactError::corrupt(name, "payload", e)
+                    })
             }
             Codec::Rans => {
-                ensure!(!payload.is_empty(), "{name}: empty rANS payload");
+                if payload.is_empty() {
+                    return Err(ArtifactError::corrupt(
+                        name,
+                        "payload",
+                        "empty rANS payload",
+                    ));
+                }
                 let model = crate::compress::tables::rans_for(counts);
-                Ok(crate::compress::rans::rans_decode_interleaved(
+                crate::compress::rans::rans_decode_interleaved_checked(
                     &model, payload, rec.n,
-                ))
+                )
+                .map_err(|e| ArtifactError::corrupt(name, "payload", e))
             }
         }
     }
@@ -615,6 +926,21 @@ mod tests {
         let mut flipped = b"owq-artifact".to_vec();
         flipped[3] ^= 1;
         assert_ne!(base, fnv1a64(&flipped));
+    }
+
+    #[test]
+    fn fnv_single_byte_change_never_collides() {
+        // The bijection argument behind the single-bit-flip guarantee:
+        // exhaustively check a small input against every 1-byte variant.
+        let base = b"owq";
+        let h = fnv1a64(base);
+        for pos in 0..base.len() {
+            for delta in 1..=255u8 {
+                let mut v = base.to_vec();
+                v[pos] ^= delta;
+                assert_ne!(fnv1a64(&v), h, "collision at {pos} ^ {delta}");
+            }
+        }
     }
 
     #[test]
@@ -656,14 +982,35 @@ mod tests {
     }
 
     #[test]
-    fn garbage_bytes_rejected() {
-        assert!(Artifact::from_bytes(b"NOPE....".to_vec()).is_err());
-        assert!(Artifact::from_bytes(Vec::new()).is_err());
-        // magic ok but manifest length runs past the end
+    fn garbage_bytes_rejected_with_typed_errors() {
+        // wrong magic → torn (not our container)
+        let err = Artifact::from_bytes(b"NOPE....".to_vec()).unwrap_err();
+        assert!(matches!(err, ArtifactError::TornContainer { .. }), "{err}");
+        // empty file → torn
+        let err = Artifact::from_bytes(Vec::new()).unwrap_err();
+        assert!(matches!(err, ArtifactError::TornContainer { .. }), "{err}");
+        // magic ok but manifest length runs past the end → torn
         let mut torn = Vec::new();
         torn.extend_from_slice(MAGIC);
         torn.extend_from_slice(&1000u32.to_le_bytes());
         torn.extend_from_slice(b"{}");
-        assert!(Artifact::from_bytes(torn).is_err());
+        let err = Artifact::from_bytes(torn).unwrap_err();
+        assert!(matches!(err, ArtifactError::TornContainer { .. }), "{err}");
+        // intact framing, damaged manifest byte → corrupt on `manifest`
+        let manifest = br#"{"version":1}"#;
+        let mut raw = Vec::new();
+        raw.extend_from_slice(MAGIC);
+        raw.extend_from_slice(&(manifest.len() as u32).to_le_bytes());
+        raw.extend_from_slice(manifest);
+        raw.extend_from_slice(&fnv1a64(manifest).to_le_bytes());
+        let mut bad = raw.clone();
+        bad[10] ^= 0x40;
+        let err = Artifact::from_bytes(bad).unwrap_err();
+        match &err {
+            ArtifactError::Corrupt { section, .. } => {
+                assert_eq!(section, "manifest");
+            }
+            other => panic!("expected manifest corruption, got {other}"),
+        }
     }
 }

@@ -1,0 +1,282 @@
+//! Bounded retry with exponential backoff for transient I/O.
+//!
+//! Only `ArtifactError::Io { transient: true }` is ever retried; corruption
+//! and torn containers fail immediately (re-reading flipped bits does not
+//! unflip them — they go to the quarantine map instead).  Sleeping goes
+//! through an injectable [`Clock`] so tests assert the exact backoff
+//! schedule without wall-clock time: [`RecordingClock`] captures the
+//! requested durations, and [`GateClock`] turns a backoff sleep into a
+//! rendezvous point for deterministic concurrency tests (a blocked retry
+//! holds its decode permit, which lets tests pin `Overloaded` and
+//! coalesced-waiter interleavings exactly).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::error::ArtifactError;
+
+/// Injectable time source. Production uses [`SystemClock`]; tests inject
+/// deterministic clocks so no test depends on real sleeps.
+pub trait Clock: Send + Sync {
+    fn sleep(&self, d: Duration);
+}
+
+/// Real wall-clock sleeps for production use.
+pub struct SystemClock;
+
+impl Clock for SystemClock {
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// Test clock: records every requested sleep, never actually sleeps.
+#[derive(Default)]
+pub struct RecordingClock {
+    slept: Mutex<Vec<Duration>>,
+}
+
+impl RecordingClock {
+    pub fn new() -> RecordingClock {
+        RecordingClock::default()
+    }
+
+    pub fn slept(&self) -> Vec<Duration> {
+        self.slept.lock().unwrap().clone()
+    }
+}
+
+impl Clock for RecordingClock {
+    fn sleep(&self, d: Duration) {
+        self.slept.lock().unwrap().push(d);
+    }
+}
+
+/// Test clock whose `sleep` blocks until the test opens the gate. The
+/// sleeper count is observable, so a test can wait until a thread is
+/// provably parked inside a retry backoff before acting.
+pub struct GateClock {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    open: bool,
+    entered: u64,
+    waiting: usize,
+}
+
+impl Default for GateClock {
+    fn default() -> Self {
+        GateClock {
+            state: Mutex::new(GateState {
+                open: false,
+                entered: 0,
+                waiting: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+impl GateClock {
+    pub fn new() -> GateClock {
+        GateClock::default()
+    }
+
+    /// Total number of sleep calls observed so far.
+    pub fn entered(&self) -> u64 {
+        self.state.lock().unwrap().entered
+    }
+
+    /// Number of threads currently parked inside `sleep`.
+    pub fn waiting(&self) -> usize {
+        self.state.lock().unwrap().waiting
+    }
+
+    /// Release every current and future sleeper.
+    pub fn open(&self) {
+        self.state.lock().unwrap().open = true;
+        self.cv.notify_all();
+    }
+}
+
+impl Clock for GateClock {
+    fn sleep(&self, _d: Duration) {
+        let mut st = self.state.lock().unwrap();
+        st.entered += 1;
+        st.waiting += 1;
+        while !st.open {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.waiting -= 1;
+    }
+}
+
+/// Bounded exponential backoff: attempt `k` sleeps `base * 2^k`, capped at
+/// `cap`. Deliberately jitter-free — retries must be exactly reproducible
+/// in tests, and the fan-in here is per-process, not thundering-herd.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (>= 1).
+    pub attempts: u32,
+    /// Backoff before the first retry.
+    pub base: Duration,
+    /// Upper bound on any single backoff.
+    pub cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 3,
+            base: Duration::from_millis(5),
+            cap: Duration::from_millis(500),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries: fail on the first error of any class.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 1,
+            base: Duration::ZERO,
+            cap: Duration::ZERO,
+        }
+    }
+
+    /// Backoff to sleep after failed attempt index `attempt` (0-based).
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let factor = 1u32.checked_shl(attempt).unwrap_or(u32::MAX);
+        self.base.saturating_mul(factor).min(self.cap)
+    }
+}
+
+/// Run `op` under `policy`: transient I/O errors back off and retry (each
+/// retry bumps `retries`); every other error — and transient errors once
+/// attempts are exhausted — returns immediately.
+pub fn with_retry<T>(
+    policy: &RetryPolicy,
+    clock: &dyn Clock,
+    retries: &AtomicU64,
+    mut op: impl FnMut() -> Result<T, ArtifactError>,
+) -> Result<T, ArtifactError> {
+    let attempts = policy.attempts.max(1);
+    let mut attempt = 0u32;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) if e.is_transient_io() && attempt + 1 < attempts => {
+                clock.sleep(policy.backoff(attempt));
+                retries.fetch_add(1, Ordering::Relaxed);
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn transient() -> ArtifactError {
+        ArtifactError::Io {
+            transient: true,
+            detail: "injected".into(),
+        }
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        let p = RetryPolicy {
+            attempts: 8,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(70),
+        };
+        assert_eq!(p.backoff(0), Duration::from_millis(10));
+        assert_eq!(p.backoff(1), Duration::from_millis(20));
+        assert_eq!(p.backoff(2), Duration::from_millis(40));
+        assert_eq!(p.backoff(3), Duration::from_millis(70)); // capped
+        assert_eq!(p.backoff(31), Duration::from_millis(70));
+        assert_eq!(p.backoff(40), Duration::from_millis(70)); // shl overflow
+    }
+
+    #[test]
+    fn retries_transient_then_succeeds() {
+        let clock = RecordingClock::new();
+        let retries = AtomicU64::new(0);
+        let p = RetryPolicy {
+            attempts: 4,
+            base: Duration::from_millis(10),
+            cap: Duration::from_secs(1),
+        };
+        let mut left = 2;
+        let out = with_retry(&p, &clock, &retries, || {
+            if left > 0 {
+                left -= 1;
+                Err(transient())
+            } else {
+                Ok(7)
+            }
+        });
+        assert_eq!(out.unwrap(), 7);
+        assert_eq!(retries.load(Ordering::Relaxed), 2);
+        assert_eq!(
+            clock.slept(),
+            vec![Duration::from_millis(10), Duration::from_millis(20)]
+        );
+    }
+
+    #[test]
+    fn exhausts_attempts_on_persistent_transient() {
+        let clock = RecordingClock::new();
+        let retries = AtomicU64::new(0);
+        let p = RetryPolicy {
+            attempts: 3,
+            base: Duration::from_millis(1),
+            cap: Duration::from_secs(1),
+        };
+        let out: Result<(), _> =
+            with_retry(&p, &clock, &retries, || Err(transient()));
+        assert!(out.unwrap_err().is_transient_io());
+        assert_eq!(retries.load(Ordering::Relaxed), 2);
+        assert_eq!(clock.slept().len(), 2);
+    }
+
+    #[test]
+    fn corruption_never_retries() {
+        let clock = RecordingClock::new();
+        let retries = AtomicU64::new(0);
+        let p = RetryPolicy::default();
+        let mut calls = 0;
+        let out: Result<(), _> = with_retry(&p, &clock, &retries, || {
+            calls += 1;
+            Err(ArtifactError::corrupt("t", "payload", "flip"))
+        });
+        assert!(out.unwrap_err().is_corrupt());
+        assert_eq!(calls, 1, "corruption must fail on the first attempt");
+        assert_eq!(retries.load(Ordering::Relaxed), 0);
+        assert!(clock.slept().is_empty(), "corruption must never sleep");
+    }
+
+    #[test]
+    fn permanent_io_never_retries() {
+        let clock = RecordingClock::new();
+        let retries = AtomicU64::new(0);
+        let mut calls = 0;
+        let out: Result<(), _> =
+            with_retry(&RetryPolicy::default(), &clock, &retries, || {
+                calls += 1;
+                Err(ArtifactError::Io {
+                    transient: false,
+                    detail: "enospc".into(),
+                })
+            });
+        assert!(!out.unwrap_err().is_transient_io());
+        assert_eq!(calls, 1);
+        assert!(clock.slept().is_empty());
+    }
+}

@@ -1,30 +1,51 @@
 //! Concurrent serving front-end over an [`Artifact`]: thread-safe decode
-//! requests, an LRU decoded-tensor cache and per-request statistics — the
+//! requests, an LRU decoded-tensor cache, single-flight decode
+//! coalescing, a corruption quarantine and a bounded admission gate — the
 //! piece `owf serve-bench` drives and `owf quantise --from` feeds into the
 //! KL evaluation harness.
 //!
 //! Concurrency model: the artifact itself is immutable, so decodes run
-//! lock-free in parallel; only the cache map sits behind a mutex, held for
-//! map operations (never across a decode).  Two threads missing on the
-//! same tensor may both decode it — the second insert defers to the first,
-//! so at most one copy is ever resident — a deliberate trade of duplicate
-//! work for zero convoying on the decode path.
+//! in parallel outside the lock; one mutex guards the cache map, the
+//! in-flight table, the quarantine map and the decode-permit count, held
+//! only for map operations (never across a decode).
 //!
-//! Cache invariants (also in `EXPERIMENTS.md` §Artifact):
+//! **Single-flight**: concurrent cold misses on one tensor coalesce onto
+//! a single decode.  The first requester registers an in-flight slot and
+//! decodes; later requesters block on the slot's condvar and share the
+//! resulting `Arc` (or the owner's error, verbatim).  N threads missing
+//! on a cold tensor perform exactly one decode — enforced by
+//! `rust/tests/server_props.rs` via `misses`/`decoded_bytes`.
+//!
+//! **Quarantine**: a decode that fails with [`ArtifactError::Corrupt`]
+//! poisons the tensor; subsequent requests fail fast with
+//! [`ArtifactError::Quarantined`] carrying the original cause, without
+//! re-decoding damaged bytes.  Clean tensors — including still-cached
+//! copies — keep serving (graceful degradation).  Transient I/O is the
+//! artifact layer's job: it retries with backoff and never quarantines.
+//!
+//! **Admission gate**: with `with_max_decodes(n)`, at most `n` decodes
+//! run concurrently; requests that would exceed the bound are rejected
+//! with a typed [`ArtifactError::Overloaded`] instead of queueing without
+//! bound (coalesced waiters don't hold permits — they consume no decode
+//! resources).
+//!
+//! Cache invariants (also in `EXPERIMENTS.md` §Artifact / §Fault-model):
 //! * resident bytes never exceed `cap_bytes` plus the most recently
 //!   inserted tensor (which is always kept, even alone over cap);
 //! * eviction is strict LRU by request stamp;
-//! * `cap_bytes == 0` disables caching entirely (every get decodes);
-//! * hits + misses == requests, and every miss adds exactly one decode's
-//!   bytes to `decoded_bytes`.
+//! * `cap_bytes == 0` disables caching (every served buffer comes from a
+//!   decode, though concurrent requests still coalesce onto one);
+//! * on the fault-free path `hits + misses == requests`: coalesced
+//!   waiters count as hits (they got a shared buffer without decoding),
+//!   misses count decodes this server performed.  With faults the full
+//!   partition is `requests == hits + misses + coalesced_errors +
+//!   quarantine_hits + overloads + not_found` once all requests resolve.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
-use anyhow::{Context, Result};
-
-use super::Artifact;
+use super::{AResult, Artifact, ArtifactError};
 
 struct CacheEntry {
     data: Arc<Vec<f32>>,
@@ -38,29 +59,94 @@ struct Cache {
     bytes: usize,
 }
 
+/// One in-flight decode: waiters block on the condvar until the owner
+/// fills the result, then share it (data `Arc` or error, cloned verbatim).
+struct Slot {
+    result: Mutex<Option<AResult<Arc<Vec<f32>>>>>,
+    cv: Condvar,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            result: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn wait(&self) -> AResult<Arc<Vec<f32>>> {
+        let mut r = self.result.lock().unwrap();
+        while r.is_none() {
+            r = self.cv.wait(r).unwrap();
+        }
+        r.as_ref().unwrap().clone()
+    }
+
+    fn fill(&self, outcome: AResult<Arc<Vec<f32>>>) {
+        *self.result.lock().unwrap() = Some(outcome);
+        self.cv.notify_all();
+    }
+}
+
+#[derive(Default)]
+struct ServerState {
+    cache: Cache,
+    inflight: HashMap<String, Arc<Slot>>,
+    quarantine: HashMap<String, ArtifactError>,
+    active_decodes: usize,
+}
+
 /// A point-in-time view of the server counters.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerStats {
     pub requests: u64,
+    /// Requests served without this thread decoding: cache hits plus
+    /// coalesced waits that received the owner's buffer.
     pub hits: u64,
+    /// Decodes this server performed (successful or not).
     pub misses: u64,
     pub evictions: u64,
-    /// Bytes produced by cache-miss decodes (4·elements each).
+    /// Bytes produced by successful decodes (4·elements each).
     pub decoded_bytes: u64,
+    /// Requests that attached to another thread's in-flight decode.
+    pub coalesced: u64,
+    /// Coalesced waits that inherited the owner's error.
+    pub coalesced_errors: u64,
+    /// Own decodes that returned an error.
+    pub decode_errors: u64,
+    /// Requests rejected fast because the tensor was quarantined.
+    pub quarantine_hits: u64,
+    /// Requests rejected by the admission gate.
+    pub overloads: u64,
+    /// Requests for names not in the manifest.
+    pub not_found: u64,
+    /// Transient I/O retries performed by the artifact layer.
+    pub io_retries: u64,
+    /// Tensors currently poisoned in the quarantine map.
+    pub quarantined: usize,
     pub cached_tensors: usize,
     pub cached_bytes: usize,
 }
 
-/// Thread-safe serving reader with an LRU decoded-tensor cache.
+/// Thread-safe serving reader: LRU cache + single-flight + quarantine +
+/// admission gate.
 pub struct ArtifactServer {
     artifact: Artifact,
     cap_bytes: usize,
-    cache: Mutex<Cache>,
+    /// Max concurrent decodes; 0 = unbounded.
+    max_decodes: usize,
+    state: Mutex<ServerState>,
     requests: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
     decoded_bytes: AtomicU64,
+    coalesced: AtomicU64,
+    coalesced_errors: AtomicU64,
+    decode_errors: AtomicU64,
+    quarantine_hits: AtomicU64,
+    overloads: AtomicU64,
+    not_found: AtomicU64,
 }
 
 impl ArtifactServer {
@@ -68,99 +154,223 @@ impl ArtifactServer {
         ArtifactServer {
             artifact,
             cap_bytes,
-            cache: Mutex::new(Cache::default()),
+            max_decodes: 0,
+            state: Mutex::new(ServerState::default()),
             requests: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             decoded_bytes: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            coalesced_errors: AtomicU64::new(0),
+            decode_errors: AtomicU64::new(0),
+            quarantine_hits: AtomicU64::new(0),
+            overloads: AtomicU64::new(0),
+            not_found: AtomicU64::new(0),
         }
+    }
+
+    /// Bound concurrent decodes: the `n+1`-th simultaneous cold decode is
+    /// rejected with a typed [`ArtifactError::Overloaded`].  `0` (the
+    /// default) leaves admission unbounded.
+    pub fn with_max_decodes(mut self, n: usize) -> ArtifactServer {
+        self.max_decodes = n;
+        self
     }
 
     pub fn artifact(&self) -> &Artifact {
         &self.artifact
     }
 
-    /// Serve one tensor: cache hit returns the shared buffer; a miss
-    /// decodes outside the lock, then inserts (first inserter wins on a
-    /// race) and evicts LRU entries down to the capacity.
-    pub fn get(&self, name: &str) -> Result<Arc<Vec<f32>>> {
+    /// Serve one tensor.  Quarantined names fail fast with the recorded
+    /// cause; a cache hit returns the shared buffer; a miss either
+    /// attaches to an in-flight decode of the same tensor (sharing its
+    /// outcome) or — admission gate permitting — decodes outside the
+    /// lock, fills the cache and wakes every waiter.
+    pub fn get(&self, name: &str) -> AResult<Arc<Vec<f32>>> {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        let i = self
-            .artifact
-            .position(name)
-            .with_context(|| format!("tensor {name:?} not in artifact"))?;
-        if self.cap_bytes > 0 {
-            let mut c = self.cache.lock().unwrap();
-            c.clock += 1;
-            let now = c.clock;
-            if let Some(e) = c.entries.get_mut(name) {
-                e.last_used = now;
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                return Ok(e.data.clone());
+        let Some(i) = self.artifact.position(name) else {
+            self.not_found.fetch_add(1, Ordering::Relaxed);
+            return Err(ArtifactError::NotFound {
+                tensor: name.to_string(),
+            });
+        };
+        let slot = {
+            let mut st = self.state.lock().unwrap();
+            if let Some(cause) = st.quarantine.get(name) {
+                self.quarantine_hits.fetch_add(1, Ordering::Relaxed);
+                return Err(ArtifactError::Quarantined {
+                    tensor: name.to_string(),
+                    cause: Box::new(cause.clone()),
+                });
+            }
+            if self.cap_bytes > 0 {
+                st.cache.clock += 1;
+                let now = st.cache.clock;
+                if let Some(e) = st.cache.entries.get_mut(name) {
+                    e.last_used = now;
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(e.data.clone());
+                }
+            }
+            if let Some(existing) = st.inflight.get(name) {
+                // coalesce: counted at attach (before the wait) so tests
+                // can observe waiters deterministically
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                let slot = existing.clone();
+                drop(st);
+                return match slot.wait() {
+                    Ok(data) => {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        Ok(data)
+                    }
+                    Err(e) => {
+                        self.coalesced_errors
+                            .fetch_add(1, Ordering::Relaxed);
+                        Err(e)
+                    }
+                };
+            }
+            if self.max_decodes > 0
+                && st.active_decodes >= self.max_decodes
+            {
+                self.overloads.fetch_add(1, Ordering::Relaxed);
+                return Err(ArtifactError::Overloaded {
+                    limit: self.max_decodes,
+                });
+            }
+            st.active_decodes += 1;
+            let slot = Arc::new(Slot::new());
+            st.inflight.insert(name.to_string(), slot.clone());
+            slot
+        };
+
+        // own decode, outside the lock
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let outcome = match self.artifact.decode_tensor(i) {
+            Ok(data) => {
+                let data = Arc::new(data);
+                self.decoded_bytes
+                    .fetch_add(4 * data.len() as u64, Ordering::Relaxed);
+                Ok(data)
+            }
+            Err(e) => {
+                self.decode_errors.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        };
+        {
+            let mut st = self.state.lock().unwrap();
+            st.active_decodes -= 1;
+            st.inflight.remove(name);
+            match &outcome {
+                Ok(data) => {
+                    if self.cap_bytes > 0 {
+                        self.cache_insert(&mut st.cache, name, data.clone());
+                    }
+                }
+                Err(e) => {
+                    if e.is_corrupt() {
+                        st.quarantine
+                            .insert(name.to_string(), e.clone());
+                    }
+                }
             }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let data = Arc::new(self.artifact.decode_tensor(i)?);
-        self.decoded_bytes
-            .fetch_add(4 * data.len() as u64, Ordering::Relaxed);
-        if self.cap_bytes == 0 {
-            return Ok(data);
-        }
-        let mut c = self.cache.lock().unwrap();
-        c.clock += 1;
-        let now = c.clock;
-        if let Some(e) = c.entries.get_mut(name) {
-            // another thread inserted while we decoded: keep its copy so
-            // only one buffer stays resident
-            e.last_used = now;
-            return Ok(e.data.clone());
-        }
-        c.bytes += 4 * data.len();
-        c.entries.insert(
+        slot.fill(outcome.clone());
+        outcome
+    }
+
+    /// Insert under the state lock, then strict-LRU evict down to cap.
+    /// Single-flight guarantees no concurrent insert of the same name.
+    fn cache_insert(
+        &self,
+        cache: &mut Cache,
+        name: &str,
+        data: Arc<Vec<f32>>,
+    ) {
+        cache.clock += 1;
+        let now = cache.clock;
+        cache.bytes += 4 * data.len();
+        cache.entries.insert(
             name.to_string(),
             CacheEntry {
-                data: data.clone(),
+                data,
                 last_used: now,
             },
         );
-        // strict-LRU eviction; the entry just inserted is `now` and is
-        // never selected while anything older remains
-        while c.bytes > self.cap_bytes && c.entries.len() > 1 {
-            let victim = c
+        // the entry just inserted is `now` and is never selected while
+        // anything older remains
+        while cache.bytes > self.cap_bytes && cache.entries.len() > 1 {
+            let victim = cache
                 .entries
                 .iter()
                 .filter(|(_, e)| e.last_used != now)
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(k, _)| k.clone());
             let Some(victim) = victim else { break };
-            if let Some(e) = c.entries.remove(&victim) {
-                c.bytes -= 4 * e.data.len();
+            if let Some(e) = cache.entries.remove(&victim) {
+                cache.bytes -= 4 * e.data.len();
                 self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
-        Ok(data)
     }
 
     /// Cache-bypassing decode into a caller-owned buffer (the zero-copy
-    /// serving path).  Counted as a request + miss.
-    pub fn decode_into(&self, name: &str, out: &mut [f32]) -> Result<()> {
+    /// serving path).  Counted as a request + miss; respects the
+    /// quarantine and the admission gate, and quarantines on corruption,
+    /// exactly like [`ArtifactServer::get`] — but never coalesces (the
+    /// caller owns the output buffer, so there is nothing to share).
+    pub fn decode_into(&self, name: &str, out: &mut [f32]) -> AResult<()> {
         self.requests.fetch_add(1, Ordering::Relaxed);
+        let Some(i) = self.artifact.position(name) else {
+            self.not_found.fetch_add(1, Ordering::Relaxed);
+            return Err(ArtifactError::NotFound {
+                tensor: name.to_string(),
+            });
+        };
+        {
+            let mut st = self.state.lock().unwrap();
+            if let Some(cause) = st.quarantine.get(name) {
+                self.quarantine_hits.fetch_add(1, Ordering::Relaxed);
+                return Err(ArtifactError::Quarantined {
+                    tensor: name.to_string(),
+                    cause: Box::new(cause.clone()),
+                });
+            }
+            if self.max_decodes > 0
+                && st.active_decodes >= self.max_decodes
+            {
+                self.overloads.fetch_add(1, Ordering::Relaxed);
+                return Err(ArtifactError::Overloaded {
+                    limit: self.max_decodes,
+                });
+            }
+            st.active_decodes += 1;
+        }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let i = self
-            .artifact
-            .position(name)
-            .with_context(|| format!("tensor {name:?} not in artifact"))?;
-        self.artifact.decode_tensor_into(i, out)?;
-        self.decoded_bytes
-            .fetch_add(4 * out.len() as u64, Ordering::Relaxed);
-        Ok(())
+        let result = self.artifact.decode_tensor_into(i, out);
+        let mut st = self.state.lock().unwrap();
+        st.active_decodes -= 1;
+        match &result {
+            Ok(()) => {
+                self.decoded_bytes
+                    .fetch_add(4 * out.len() as u64, Ordering::Relaxed);
+            }
+            Err(e) => {
+                self.decode_errors.fetch_add(1, Ordering::Relaxed);
+                if e.is_corrupt() {
+                    st.quarantine.insert(name.to_string(), e.clone());
+                }
+            }
+        }
+        result
     }
 
     /// Decode every tensor into a name → values map — the adapter that
     /// lets the LLM evaluation harness ([`crate::eval::llm::Env::evaluate`])
     /// score a packed artifact exactly like an in-memory quantisation.
-    pub fn params(&self) -> Result<HashMap<String, Vec<f32>>> {
+    pub fn params(&self) -> AResult<HashMap<String, Vec<f32>>> {
         let mut out = HashMap::new();
         for (i, rec) in self.artifact.tensors.iter().enumerate() {
             out.insert(rec.name.clone(), self.artifact.decode_tensor(i)?);
@@ -168,10 +378,43 @@ impl ArtifactServer {
         Ok(out)
     }
 
+    /// Drop every cached tensor (bench/ops tool: forces the next round of
+    /// requests cold).  Quarantine, in-flight decodes and counters are
+    /// untouched; the drops are not counted as evictions.
+    pub fn clear_cache(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.cache.entries.clear();
+        st.cache.bytes = 0;
+    }
+
+    /// Lift a tensor's quarantine (ops tool — e.g. after `owf fsck`
+    /// verified a repaired container).  Returns the recorded cause.
+    pub fn clear_quarantine(&self, name: &str) -> Option<ArtifactError> {
+        self.state.lock().unwrap().quarantine.remove(name)
+    }
+
+    /// Recompute cache occupancy from the entries themselves — test
+    /// support for proving the incremental `cached_bytes` accounting
+    /// exact under racing insert/evict.
+    pub fn cache_audit(&self) -> (usize, usize) {
+        let st = self.state.lock().unwrap();
+        let bytes: usize = st
+            .cache
+            .entries
+            .values()
+            .map(|e| 4 * e.data.len())
+            .sum();
+        (st.cache.entries.len(), bytes)
+    }
+
     pub fn stats(&self) -> ServerStats {
-        let (cached_tensors, cached_bytes) = {
-            let c = self.cache.lock().unwrap();
-            (c.entries.len(), c.bytes)
+        let (cached_tensors, cached_bytes, quarantined) = {
+            let st = self.state.lock().unwrap();
+            (
+                st.cache.entries.len(),
+                st.cache.bytes,
+                st.quarantine.len(),
+            )
         };
         ServerStats {
             requests: self.requests.load(Ordering::Relaxed),
@@ -179,6 +422,14 @@ impl ArtifactServer {
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             decoded_bytes: self.decoded_bytes.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            coalesced_errors: self.coalesced_errors.load(Ordering::Relaxed),
+            decode_errors: self.decode_errors.load(Ordering::Relaxed),
+            quarantine_hits: self.quarantine_hits.load(Ordering::Relaxed),
+            overloads: self.overloads.load(Ordering::Relaxed),
+            not_found: self.not_found.load(Ordering::Relaxed),
+            io_retries: self.artifact.io_retries(),
+            quarantined,
             cached_tensors,
             cached_bytes,
         }

@@ -3,14 +3,20 @@
 //! in-memory qdq) → K-lane interleaved entropy coding → checksummed
 //! sections → crash-safe atomic write (temp file + rename, like
 //! [`crate::tensorstore::Store::save`]).
+//!
+//! Failures are typed [`ArtifactError`]s: configuration problems (bad
+//! spec, unpackable scheme) are `Invalid`, write failures are `Io` with
+//! transiency classified from the underlying `ErrorKind` (via
+//! [`crate::util::fsx::atomic_write_io`], which preserves it).
 
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{bail, Result};
 
 use super::{
-    f64_to_hex, fnv1a64, u64_to_hex, Codec, ALIGN, MAGIC, VERSION,
+    f64_to_hex, fnv1a64, u64_to_hex, AResult, ArtifactError, Codec, ALIGN,
+    MAGIC, VERSION,
 };
 use crate::alloc::{
     round_allocation, variable_allocation, TensorInfo,
@@ -138,26 +144,36 @@ pub fn pack_store(
     fisher_mean: &HashMap<String, f64>,
     opts: &PackOptions,
     path: impl AsRef<Path>,
-) -> Result<PackSummary> {
-    let base = Scheme::parse(&opts.spec)
-        .with_context(|| format!("pack spec {:?}", opts.spec))?;
+) -> AResult<PackSummary> {
+    let base = Scheme::parse(&opts.spec).map_err(|e| {
+        ArtifactError::invalid(format!("pack spec {:?}: {e}", opts.spec))
+    })?;
     if base.rotate {
-        bail!("cannot pack :rot schemes (rotation has no durable form yet)");
+        return Err(ArtifactError::invalid(
+            "cannot pack :rot schemes (rotation has no durable form yet)",
+        ));
     }
     if base.element == Element::Grid {
-        bail!("cannot pack grid schemes (no codebook indices to persist)");
+        return Err(ArtifactError::invalid(
+            "cannot pack grid schemes (no codebook indices to persist)",
+        ));
     }
-    ensure!(
-        (1..=MAX_LANES).contains(&opts.lanes),
-        "lane count {} outside 1..={MAX_LANES}",
-        opts.lanes
-    );
+    if !(1..=MAX_LANES).contains(&opts.lanes) {
+        return Err(ArtifactError::invalid(format!(
+            "lane count {} outside 1..={MAX_LANES}",
+            opts.lanes
+        )));
+    }
     let tensors: Vec<&crate::tensorstore::Tensor> = store
         .tensors
         .iter()
         .filter(|t| t.dtype == Dtype::F32 && t.numel() > 0)
         .collect();
-    ensure!(!tensors.is_empty(), "store has no non-empty f32 tensors");
+    if tensors.is_empty() {
+        return Err(ArtifactError::invalid(
+            "store has no non-empty f32 tensors",
+        ));
+    }
 
     // --- per-tensor bit widths ------------------------------------------------
     let (alloc_json, bits_per_tensor): (Json, Vec<f64>) = match opts.alloc {
@@ -226,7 +242,9 @@ pub fn pack_store(
             t.channel_axis,
             &[],
         )
-        .with_context(|| format!("encode {:?}", t.name))?;
+        .map_err(|e| {
+            ArtifactError::invalid(format!("encode {:?}: {e}", t.name))
+        })?;
 
         let coded: Vec<u8> = match opts.codec {
             Codec::Raw => u16_bytes(&et.enc.indices),
@@ -323,7 +341,9 @@ pub fn pack_store(
     out.extend_from_slice(manifest.as_bytes());
     out.extend_from_slice(&fnv1a64(manifest.as_bytes()).to_le_bytes());
     out.extend_from_slice(&payload);
-    crate::util::fsx::atomic_write(path.as_ref(), &out)?;
+    crate::util::fsx::atomic_write_io(path.as_ref(), &out).map_err(
+        |e| ArtifactError::io(&e, format!("write {:?}", path.as_ref())),
+    )?;
 
     Ok(PackSummary {
         tensors: tensors.len(),

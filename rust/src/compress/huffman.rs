@@ -450,6 +450,40 @@ impl HuffmanDecoder {
         out
     }
 
+    /// Decode exactly `count` symbols and verify the container is fully
+    /// consumed: every lane's cursor must land exactly on its recorded
+    /// bit count.  Leftover bits mean the payload encodes more symbols
+    /// than the caller expects — damage a prefix decode would silently
+    /// ignore; this surfaces it as an error instead of wrong data.
+    /// Serving paths (the `OWQ1` artifact reader) use this variant;
+    /// panics on torn containers are unchanged and contained at the
+    /// artifact boundary.
+    pub fn decode_interleaved_checked(
+        &self,
+        data: &[u8],
+        count: usize,
+    ) -> Result<Vec<u16>, String> {
+        let (lanes, streams) = parse_lane_container(data);
+        let mut readers: Vec<LaneReader> = streams
+            .iter()
+            .map(|&(s, bits)| LaneReader::new(s, bits))
+            .collect();
+        let mut out = Vec::with_capacity(count);
+        for i in 0..count {
+            out.push(self.decode_one(&mut readers[i % lanes]));
+        }
+        for (k, r) in readers.iter().enumerate() {
+            if r.bitpos != r.bits {
+                return Err(format!(
+                    "Huffman lane {k} under-consumed: {} of {} bits after \
+                     {count} symbols (payload encodes more than expected)",
+                    r.bitpos, r.bits
+                ));
+            }
+        }
+        Ok(out)
+    }
+
     /// Decode one symbol from a lane: one table probe for codes of
     /// ≤ `table_bits` bits, canonical walk otherwise.  Panics (max-length
     /// assert) on a prefix no codeword matches — a corrupt/torn stream.
@@ -531,6 +565,33 @@ mod tests {
         let (bytes, _) = code.encode(&symbols);
         let decoded = code.decode(&bytes, symbols.len());
         assert_eq!(decoded, symbols);
+    }
+
+    #[test]
+    fn checked_interleaved_decode_agrees_and_rejects_undercount() {
+        let counts = [40u64, 13, 2, 1, 80, 9, 0, 5];
+        let code = HuffmanCode::from_counts(&counts);
+        let dec = code.decoder();
+        let mut rng = Rng::new(3);
+        let symbols = stream_from_counts(&counts, &mut rng);
+        for lanes in [1usize, 2, 5] {
+            let container = code.encode_interleaved(&symbols, lanes);
+            let ok = dec
+                .decode_interleaved_checked(&container, symbols.len())
+                .unwrap();
+            assert_eq!(
+                ok,
+                dec.decode_interleaved(&container, symbols.len())
+            );
+            assert_eq!(ok, symbols);
+            // fewer symbols than encoded leaves unconsumed bits — the
+            // checked decoder must refuse where a prefix decode succeeds
+            let short = dec.decode_interleaved_checked(
+                &container,
+                symbols.len() - 1,
+            );
+            assert!(short.is_err(), "lanes {lanes}: undercount accepted");
+        }
     }
 
     #[test]

@@ -13,6 +13,19 @@
 //! the durable on-disk form: the `OWQ1` artifact store
 //! ([`crate::artifact`]) persists each tensor's index payload as one such
 //! container next to the count histogram it was modelled on.
+//!
+//! # Panic contract (fault model)
+//!
+//! The coders here assume writer-produced input: torn containers and
+//! invalid prefixes **panic** (deliberately — these paths stay lean and
+//! bit-exact against the oracles).  Robustness lives one layer up: the
+//! artifact reader verifies per-section checksums *before* any coder sees
+//! the bytes, runs every decode under `catch_unwind` so a coder panic
+//! surfaces as a typed `Corrupt` error, and uses the `*_checked` decode
+//! variants ([`huffman::HuffmanDecoder::decode_interleaved_checked`],
+//! [`rans::rans_decode_interleaved_checked`]) that verify the stream is
+//! exactly consumed — damage that evades a checksum can therefore never
+//! yield silently wrong indices or abort a serving thread.
 
 pub mod grid;
 pub mod huffman;

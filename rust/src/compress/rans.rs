@@ -195,6 +195,74 @@ pub fn rans_decode_interleaved(
     out
 }
 
+/// Decode exactly `count` symbols and verify stream integrity end to end:
+/// after the final symbol, every lane state must return to the encoder's
+/// initial `RANS_LOW` and every stream byte must be consumed.  The
+/// unchecked decoder yields garbage without complaint when the trailing
+/// bytes are damaged or `count` disagrees with what was encoded; serving
+/// paths (the `OWQ1` artifact reader) use this variant so such damage
+/// surfaces as an error instead of silently wrong indices.  Asserts on a
+/// torn header exactly like [`rans_decode_interleaved`] — callers contain
+/// panics at the artifact boundary.
+pub fn rans_decode_interleaved_checked(
+    model: &RansModel,
+    data: &[u8],
+    count: usize,
+) -> Result<Vec<u16>, String> {
+    assert!(!data.is_empty(), "interleaved container: missing header");
+    let lanes = data[0] as usize;
+    assert!(lanes >= 1, "interleaved container: zero lanes");
+    assert!(
+        data.len() >= 1 + 4 * lanes,
+        "interleaved container: torn state flush ({} of {} bytes)",
+        data.len(),
+        1 + 4 * lanes
+    );
+    let mut pos = 1usize;
+    let mut states = vec![0u32; lanes];
+    for st in states.iter_mut() {
+        for _ in 0..4 {
+            *st = (*st << 8) | data[pos] as u32;
+            pos += 1;
+        }
+    }
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let state = &mut states[i % lanes];
+        let slot = *state & (PROB_SCALE - 1);
+        let s = model.slot_to_symbol[slot as usize];
+        out.push(s);
+        let f = model.freq[s as usize];
+        let c = model.cum[s as usize];
+        *state = f
+            .checked_mul(*state >> PROB_BITS)
+            .and_then(|x| x.checked_add(slot - c))
+            .ok_or_else(|| {
+                format!("rANS lane {} state overflow (corrupt stream)", i % lanes)
+            })?;
+        while *state < RANS_LOW && pos < data.len() {
+            *state = (*state << 8) | data[pos] as u32;
+            pos += 1;
+        }
+    }
+    if pos != data.len() {
+        return Err(format!(
+            "rANS stream under-consumed: {pos} of {} bytes after {count} \
+             symbols (payload encodes more than expected)",
+            data.len()
+        ));
+    }
+    for (k, st) in states.iter().enumerate() {
+        if *st != RANS_LOW {
+            return Err(format!(
+                "rANS lane {k} final state {st:#x} != {RANS_LOW:#x} \
+                 (corrupt or mis-counted stream)"
+            ));
+        }
+    }
+    Ok(out)
+}
+
 /// Decode `count` symbols.
 pub fn rans_decode(model: &RansModel, data: &[u8], count: usize) -> Vec<u16> {
     let mut pos = 0usize;
@@ -252,6 +320,42 @@ mod tests {
         let enc = rans_encode(&model, &stream);
         let dec = rans_decode(&model, &enc, stream.len());
         assert_eq!(dec, stream);
+    }
+
+    #[test]
+    fn checked_decode_agrees_and_rejects_damage() {
+        let counts = [90u64, 31, 6, 2, 140, 11];
+        let model = RansModel::from_counts(&counts);
+        let mut rng = Rng::new(9);
+        let stream = random_stream(&counts, 4_000, &mut rng);
+        for lanes in [1usize, 3, 8] {
+            let enc = rans_encode_interleaved(&model, &stream, lanes);
+            // intact: agrees with the unchecked decoder, byte for byte
+            let ok =
+                rans_decode_interleaved_checked(&model, &enc, stream.len())
+                    .unwrap();
+            assert_eq!(
+                ok,
+                rans_decode_interleaved(&model, &enc, stream.len())
+            );
+            assert_eq!(ok, stream);
+            // mis-counted: asking for fewer symbols than encoded must
+            // error (the unchecked decoder would happily return a prefix)
+            let short = rans_decode_interleaved_checked(
+                &model,
+                &enc,
+                stream.len() - 1,
+            );
+            assert!(short.is_err(), "lanes {lanes}: undercount accepted");
+            // trailing truncation: drop the final stream byte
+            let torn = &enc[..enc.len() - 1];
+            let r = rans_decode_interleaved_checked(
+                &model,
+                torn,
+                stream.len(),
+            );
+            assert!(r.is_err(), "lanes {lanes}: torn tail accepted");
+        }
     }
 
     #[test]

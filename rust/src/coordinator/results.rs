@@ -93,6 +93,37 @@ impl ResultSink {
             .filter_map(|l| Json::parse(l).ok())
             .collect())
     }
+
+    /// [`ResultSink::read_valid`], plus repair: when damaged lines are
+    /// present the file is atomically rewritten with only the valid rows
+    /// (original line text, no re-serialisation).  Without this a torn
+    /// trailing fragment has no newline, so the *next* append would fuse
+    /// with it into one corrupt row — silently losing a finished point.
+    /// Returns the valid rows and how many damaged lines were dropped.
+    pub fn repair(&self) -> Result<(Vec<Json>, usize)> {
+        if !self.path.exists() {
+            return Ok((Vec::new(), 0));
+        }
+        let text = std::fs::read_to_string(&self.path)?;
+        let mut rows = Vec::new();
+        let mut keep = String::new();
+        let mut dropped = 0usize;
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            match Json::parse(line) {
+                Ok(row) => {
+                    rows.push(row);
+                    keep.push_str(line);
+                    keep.push('\n');
+                }
+                Err(_) => dropped += 1,
+            }
+        }
+        if dropped > 0 {
+            crate::util::fsx::atomic_write(&self.path, keep.as_bytes())
+                .with_context(|| format!("repair {:?}", self.path))?;
+        }
+        Ok((rows, dropped))
+    }
 }
 
 /// A JSONL-backed completed-work cache: rows already in the file are
@@ -119,9 +150,19 @@ impl SweepCache {
             // fail fast on an unwritable output — otherwise a long resumed
             // sweep would compute everything and drop every row
             sink.probe_writable()?;
-            // lenient read: a row torn by a mid-append kill is simply not
-            // done, so its point reruns
-            sink.read_valid()?.iter().filter_map(key_of).collect()
+            // lenient read + repair: a row torn by a mid-append kill is
+            // simply not done (its point reruns), and the file is rewritten
+            // without the fragment so later appends cannot fuse with it
+            let (rows, dropped) = sink.repair()?;
+            if dropped > 0 {
+                eprintln!(
+                    "[{:?}: dropped {dropped} torn/corrupt line(s) on \
+                     resume; rewrote the {} valid rows]",
+                    sink.path(),
+                    rows.len()
+                );
+            }
+            rows.iter().filter_map(key_of).collect()
         } else {
             sink.truncate()?;
             HashSet::new()
@@ -323,13 +364,49 @@ mod tests {
                 .unwrap();
             f.write_all(b"{\"key\":\"b\",\"ok\":tr").unwrap(); // torn
         }
+        {
+            let sink = ResultSink::open(&path).unwrap();
+            assert!(
+                sink.read_all().is_err(),
+                "strict read must error on the torn file"
+            );
+            assert_eq!(sink.read_valid().unwrap().len(), 1);
+        }
         let cache = SweepCache::open(&path, true, key_of).unwrap();
         assert_eq!(cache.completed(), 1);
         assert!(cache.is_done("a"));
         assert!(!cache.is_done("b"));
+        // resume repaired the file: the fragment is gone, the next append
+        // lands on its own line, and strict reads work again
+        cache.append(&Json::obj().push("key", "c")).unwrap();
+        let rows = ResultSink::open(&path).unwrap().read_all().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("key").unwrap().as_str(), Some("c"));
+    }
+
+    #[test]
+    fn repair_drops_fragment_and_preserves_valid_rows() {
+        use std::io::Write as _;
+        let path = std::env::temp_dir().join("owf_results_repair.jsonl");
+        let _ = std::fs::remove_file(&path);
         let sink = ResultSink::open(&path).unwrap();
-        assert!(sink.read_all().is_err(), "strict read must still error");
-        assert_eq!(sink.read_valid().unwrap().len(), 1);
+        sink.append(&Json::obj().push("key", "a").push("x", 1.5))
+            .unwrap();
+        sink.append(&Json::obj().push("key", "b")).unwrap();
+        // clean file: repair is a no-op
+        let (rows, dropped) = sink.repair().unwrap();
+        assert_eq!((rows.len(), dropped), (2, 0));
+        let before = std::fs::read_to_string(&path).unwrap();
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .unwrap();
+        f.write_all(b"{\"key\":\"c\",\"x\":").unwrap(); // torn, no newline
+        drop(f);
+        let (rows, dropped) = sink.repair().unwrap();
+        assert_eq!((rows.len(), dropped), (2, 1));
+        // the valid prefix survives byte-for-byte
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), before);
     }
 
     #[test]

@@ -17,7 +17,15 @@
 //!                                   checksums + bit-exactness vs the
 //!                                   in-memory pipeline
 //! owf serve-bench <file.owq>        concurrent decode benchmark with
-//!                                   cache-hit stats
+//!                                   cache-hit stats; optional fault
+//!                                   injection (--fault-eio-rate,
+//!                                   --fault-flips, --max-decodes)
+//! owf fsck <file.owq>               eagerly verify every checksum and
+//!                                   decode every tensor; per-tensor
+//!                                   verdict table, nonzero exit on damage
+//! owf fault-inject <in> --out <out>  write a deliberately damaged copy
+//!                                   (bit flip per section / manifest /
+//!                                   header, or truncation) for drills
 //! owf fisher --size m [--batches N]         (re)estimate + save Fisher
 //! owf schemes                       print the scheme + grid grammar
 //! ```
@@ -30,7 +38,7 @@ use owf::artifact::writer::{pack_store, AllocMode, PackOptions};
 use owf::artifact::{Artifact, Codec};
 use owf::artifact::server::ArtifactServer;
 use owf::coordinator::config::Scheme;
-use owf::coordinator::{run_sweep, ResultSink, SweepData, SweepOpts};
+use owf::coordinator::{run_sweep, Report, ResultSink, SweepData, SweepOpts};
 use owf::dist::{Dist, Family};
 use owf::eval::pipeline::qdq_tensor;
 use owf::eval::{self, RunOpts};
@@ -38,6 +46,9 @@ use owf::fisher::FisherEstimate;
 use owf::runtime::model::{Checkpoint, TokenSplit};
 use owf::runtime::Runtime;
 use owf::tensorstore::{Store, Tensor};
+use owf::util::faultfs::{
+    flip_bit_in_file, write_torn_copy, ByteSource, FaultFs,
+};
 use owf::util::json::Json;
 use owf::util::rng::Rng;
 
@@ -106,6 +117,8 @@ fn main() -> Result<()> {
         "pack" => cmd_pack(&args),
         "inspect" => cmd_inspect(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "fsck" => cmd_fsck(&args),
+        "fault-inject" => cmd_fault_inject(&args),
         "fisher" => cmd_fisher(&args),
         "schemes" => {
             println!("{SCHEME_HELP}");
@@ -605,10 +618,178 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `owf fsck <file.owq>`: eager integrity walk.  Every section checksum
+/// is forced and every tensor is decoded end-to-end (the lazy serving
+/// path only verifies what it touches), with a per-tensor verdict table.
+/// Exits nonzero if the container is unreadable or any tensor is damaged.
+fn cmd_fsck(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: owf fsck <file.owq>")?;
+    let art = match Artifact::open(path) {
+        Ok(a) => a,
+        Err(e) => bail!("fsck {path}: unreadable container — {e}"),
+    };
+    let mut report = Report::new(
+        "fsck",
+        &format!("fsck {path}"),
+        &["tensor", "elems", "sections", "decode", "verdict"],
+    );
+    let mut damaged = 0usize;
+    for (i, rec) in art.tensors.iter().enumerate() {
+        let mut bad: Vec<&str> = Vec::new();
+        for (sname, _) in rec.sections() {
+            if let Some(Err(_)) = art.verify_section(i, sname) {
+                bad.push(sname);
+            }
+        }
+        let sections = if bad.is_empty() {
+            "ok".to_string()
+        } else {
+            bad.join(",")
+        };
+        let decode = match art.decode_tensor(i) {
+            Ok(_) => "ok".to_string(),
+            Err(e) => e.kind_name().to_string(),
+        };
+        let ok = bad.is_empty() && decode == "ok";
+        if !ok {
+            damaged += 1;
+        }
+        report.row(vec![
+            rec.name.clone(),
+            rec.n.to_string(),
+            sections,
+            decode,
+            if ok { "ok" } else { "DAMAGED" }.to_string(),
+        ]);
+    }
+    print!("{}", report.render());
+    if damaged > 0 {
+        bail!(
+            "fsck {path}: {damaged} of {} tensors damaged \
+             (corrupt sections / failed decodes above)",
+            art.tensors.len()
+        );
+    }
+    println!(
+        "fsck {path}: clean — {} tensors, every checksum verified, \
+         every tensor decoded",
+        art.tensors.len()
+    );
+    Ok(())
+}
+
+/// `owf fault-inject <in.owq> --out <out.owq> ...`: write a deliberately
+/// damaged copy of a container.  Damage modes: a single bit flip aimed at
+/// the middle of one tensor's section (`--section codebook|scales|payload|
+/// counts|outlier_idx|outlier_val`, tensor via `--tensor`, bit via
+/// `--bit`), the manifest or header, or truncation (`--truncate-frac`).
+/// Drives the `scripts/check.sh` fault gate and manual fsck drills.
+fn cmd_fault_inject(args: &Args) -> Result<()> {
+    let input = args.positional.get(1).context(
+        "usage: owf fault-inject <in.owq> --out <out.owq> \
+         (--section <name>|manifest|header [--tensor T] [--bit K] \
+         | --truncate-frac F)",
+    )?;
+    let out = args
+        .flags
+        .get("out")
+        .context("--out <file.owq> required")?;
+    let bytes = std::fs::read(input)
+        .with_context(|| format!("read {input}"))?;
+    if let Some(frac) = args.flags.get("truncate-frac") {
+        let frac: f64 = frac.parse().context("--truncate-frac")?;
+        write_torn_copy(out, &bytes, frac)
+            .with_context(|| format!("write torn copy {out}"))?;
+        let kept = std::fs::metadata(out)?.len();
+        println!(
+            "fault-inject: {input} ({} bytes) truncated -> {out} \
+             ({kept} bytes)",
+            bytes.len()
+        );
+        return Ok(());
+    }
+    let section = args.flags.get("section").context(
+        "--section <codebook|scales|payload|counts|outlier_idx|\
+         outlier_val|manifest|header> or --truncate-frac required",
+    )?;
+    let bit: u8 = args
+        .flags
+        .get("bit")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--bit")?
+        .unwrap_or(0);
+    let (offset, target) = match section.as_str() {
+        // magic byte: detected structurally before any checksum
+        "header" => (2usize, "header magic".to_string()),
+        "manifest" => {
+            if bytes.len() < 16 {
+                bail!("{input}: too short to hold an OWQ1 manifest");
+            }
+            let mlen = u32::from_le_bytes(
+                bytes[4..8].try_into().unwrap(),
+            ) as usize;
+            if mlen == 0 || 8 + mlen > bytes.len() {
+                bail!("{input}: manifest length {mlen} out of range");
+            }
+            (8 + mlen / 2, "manifest json".to_string())
+        }
+        name => {
+            // open the clean container to resolve the section's file range
+            let art = Artifact::open(input)
+                .map_err(|e| anyhow::anyhow!("{input}: {e}"))?;
+            let tensor = match args.flags.get("tensor") {
+                Some(t) => t.clone(),
+                None => art
+                    .tensors
+                    .iter()
+                    .find(|r| {
+                        art.section_file_range(&r.name, name)
+                            .map(|(_, len)| len > 0)
+                            .unwrap_or(false)
+                    })
+                    .map(|r| r.name.clone())
+                    .with_context(|| {
+                        format!(
+                            "no tensor has a non-empty {name:?} section"
+                        )
+                    })?,
+            };
+            let (off, len) = art
+                .section_file_range(&tensor, name)
+                .with_context(|| {
+                    format!(
+                        "unknown tensor/section {tensor:?}/{name:?} \
+                         (sections: codebook scales payload counts \
+                         outlier_idx outlier_val)"
+                    )
+                })?;
+            if len == 0 {
+                bail!("{tensor}: section {name:?} is empty");
+            }
+            (off + len / 2, format!("{tensor}/{name}"))
+        }
+    };
+    std::fs::write(out, &bytes)
+        .with_context(|| format!("write {out}"))?;
+    flip_bit_in_file(out, offset, bit)
+        .with_context(|| format!("flip bit in {out}"))?;
+    println!(
+        "fault-inject: {input} -> {out}, flipped bit {bit} of byte \
+         {offset} ({target})"
+    );
+    Ok(())
+}
+
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     let path = args.positional.get(1).context(
         "usage: owf serve-bench <file.owq> [--threads N] [--requests N] \
-         [--cache-mb M] [--verify]",
+         [--cache-mb M] [--max-decodes N] [--fault-eio-rate R] \
+         [--fault-eio-seed S] [--fault-flips N] [--fault-seed S] \
+         [--verify]",
     )?;
     let threads: usize = args
         .flags
@@ -633,7 +814,70 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         .transpose()
         .context("--cache-mb")?
         .unwrap_or(64);
-    let art = Artifact::open(path)?;
+    let max_decodes: usize = args
+        .flags
+        .get("max-decodes")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--max-decodes")?
+        .unwrap_or(0);
+    let eio_rate: f64 = args
+        .flags
+        .get("fault-eio-rate")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--fault-eio-rate")?
+        .unwrap_or(0.0);
+    let eio_seed: u64 = args
+        .flags
+        .get("fault-eio-seed")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--fault-eio-seed")?
+        .unwrap_or(7);
+    let flips: usize = args
+        .flags
+        .get("fault-flips")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--fault-flips")?
+        .unwrap_or(0);
+    let fault_seed: u64 = args
+        .flags
+        .get("fault-seed")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--fault-seed")?
+        .unwrap_or(42);
+    let faulty = eio_rate > 0.0 || flips > 0;
+    let art = if faulty {
+        // chaos mode: serve through a seeded fault-injecting byte source
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read {path}"))?;
+        if bytes.len() < 16 {
+            bail!("{path}: too short to be an OWQ1 container");
+        }
+        let mlen =
+            u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        let base = (8 + mlen + 8).min(bytes.len().saturating_sub(1));
+        let len = bytes.len();
+        let mut fs = FaultFs::new(bytes);
+        // aim flips at the payload region so each lands inside some
+        // tensor's checksummed section, exercising quarantine
+        let mut rng = Rng::new(fault_seed);
+        for _ in 0..flips {
+            let off = base + rng.below((len - base).max(1));
+            fs = fs.with_flip(off, rng.below(8) as u8);
+        }
+        if eio_rate > 0.0 {
+            fs = fs.with_transient_rate(eio_rate, eio_seed);
+        }
+        Artifact::from_source(ByteSource::Fault(fs))
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+    } else {
+        Artifact::open(path)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+    };
     if args.flags.contains_key("verify") {
         verify_artifact(&art)?;
     }
@@ -642,24 +886,32 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     if names.is_empty() {
         bail!("{path}: artifact holds no tensors");
     }
-    let server = ArtifactServer::new(art, cache_mb * (1 << 20));
+    let server = ArtifactServer::new(art, cache_mb * (1 << 20))
+        .with_max_decodes(max_decodes);
     let per_thread = requests.div_ceil(threads);
     let t0 = std::time::Instant::now();
-    let mut served: Vec<Result<u64>> = Vec::new();
+    let mut served: Vec<(u64, u64)> = Vec::new();
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for t in 0..threads {
             let server = &server;
             let names = &names;
-            handles.push(scope.spawn(move || -> Result<u64> {
+            handles.push(scope.spawn(move || -> (u64, u64) {
                 let mut elems = 0u64;
+                let mut errors = 0u64;
                 for i in 0..per_thread {
                     let name = &names[(t + i) % names.len()];
-                    let data = server.get(name)?;
-                    elems += data.len() as u64;
-                    std::hint::black_box(data.first().copied());
+                    // fault drills keep serving through failures: count
+                    // them, never abort the thread
+                    match server.get(name) {
+                        Ok(data) => {
+                            elems += data.len() as u64;
+                            std::hint::black_box(data.first().copied());
+                        }
+                        Err(_) => errors += 1,
+                    }
                 }
-                Ok(elems)
+                (elems, errors)
             }));
         }
         for h in handles {
@@ -668,8 +920,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     });
     let elapsed = t0.elapsed().as_secs_f64();
     let mut total_elems = 0u64;
-    for r in served {
-        total_elems += r?;
+    let mut total_errors = 0u64;
+    for (elems, errors) in served {
+        total_elems += elems;
+        total_errors += errors;
     }
     let s = server.stats();
     let total_requests = per_thread * threads;
@@ -696,6 +950,25 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         s.cached_bytes as f64 / 1e6,
         s.decoded_bytes as f64 / 1e6,
     );
+    println!(
+        "  resilience: {} coalesced, {} io retries, {} overloads; \
+         {} failed requests ({} decode errors, {} coalesced errors, \
+         {} quarantine hits), {} tensors quarantined",
+        s.coalesced,
+        s.io_retries,
+        s.overloads,
+        total_errors,
+        s.decode_errors,
+        s.coalesced_errors,
+        s.quarantine_hits,
+        s.quarantined,
+    );
+    if total_errors > 0 && !faulty && max_decodes == 0 {
+        bail!(
+            "serve-bench: {total_errors} requests failed on a clean \
+             container with no admission gate"
+        );
+    }
     Ok(())
 }
 
@@ -743,6 +1016,9 @@ USAGE:
   owf pack --spec <scheme> [opts]       write an OWQ1 quantised artifact
   owf inspect <file.owq> [--verify]     print / verify a container
   owf serve-bench <file.owq> [opts]     concurrent decode benchmark
+  owf fsck <file.owq>                   eager integrity check; verdict
+                                        table, nonzero exit on damage
+  owf fault-inject <in> --out <out>     write a damaged container copy
   owf fisher [--size m] [--batches N]   estimate the Fisher diagonal
   owf schemes                           scheme + grid grammar reference
 
@@ -778,7 +1054,21 @@ SERVE-BENCH OPTIONS:
   --threads N       concurrent reader threads          (default 4)
   --requests N      total decode requests              (default 256)
   --cache-mb M      decoded-tensor LRU cache capacity  (default 64)
+  --max-decodes N   admission gate: max concurrent decodes (0 = unbounded)
+  --fault-eio-rate R  inject transient EIO on reads with probability R
+  --fault-eio-seed S  seed for the EIO roll               (default 7)
+  --fault-flips N   flip N random payload bits (exercises quarantine)
+  --fault-seed S    seed for flip placement               (default 42)
   --verify          first prove bit-exactness vs the in-memory pipeline
+
+FAULT-INJECT OPTIONS (owf fault-inject <in> --out <out>):
+  --section S       damage target: codebook|scales|payload|counts|
+                    outlier_idx|outlier_val (middle byte of that section)
+                    or manifest|header
+  --tensor T        which tensor's section              (default: first
+                    tensor with a non-empty such section)
+  --bit K           bit index 0..7 to flip              (default 0)
+  --truncate-frac F keep only the first F of the file (torn write) instead
 ";
 
 const SCHEME_HELP: &str = "scheme grammar:

@@ -1,0 +1,356 @@
+//! Deterministic fault injection for artifact byte access.
+//!
+//! [`ByteSource`] abstracts "where container bytes come from" so the
+//! artifact reader runs identically over a pristine in-memory image
+//! (`Mem`, the production path after `fs::read` — zero-copy reads) and a
+//! fault-injecting wrapper (`Fault`).  [`FaultFs`] injects the fault
+//! classes the serving layer must survive:
+//!
+//! * **single-bit flips** at chosen byte/bit offsets (silent media or DMA
+//!   corruption — the checksum layer must catch every one);
+//! * **truncation** (a torn non-atomic write or short download);
+//! * **transient `EIO`** that fails the next N reads and then succeeds
+//!   (flaky NFS / overloaded block layer — the retry layer's territory),
+//!   either counted or as a seeded per-read probability;
+//! * **torn temp+rename** simulation via [`write_torn_copy`] (what a crash
+//!   mid-`atomic_write` would leave if the write were *not* atomic).
+//!
+//! All randomness is seeded ([`crate::util::rng::Rng`]) so every fault
+//! plan reproduces bit-for-bit from its seed — no `Date::now`, no OS RNG.
+
+use std::borrow::Cow;
+use std::io;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::rng::Rng;
+
+/// Byte provider for artifact readers: pristine memory or faulty memory.
+pub enum ByteSource {
+    /// Production path: the whole container image in memory. Reads borrow.
+    Mem(Vec<u8>),
+    /// Test/chaos path: reads copy, with faults injected per the plan.
+    Fault(FaultFs),
+}
+
+impl ByteSource {
+    /// Visible length of the container (truncation shrinks it).
+    pub fn len(&self) -> usize {
+        match self {
+            ByteSource::Mem(b) => b.len(),
+            ByteSource::Fault(f) => f.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Read `len` bytes at `off`. Out-of-range reads fail with
+    /// `UnexpectedEof` (a permanent shape error, not a retry candidate);
+    /// injected transient faults surface as `Interrupted`.
+    pub fn read_at(&self, off: usize, len: usize) -> io::Result<Cow<'_, [u8]>> {
+        match self {
+            ByteSource::Mem(b) => {
+                let end = off.checked_add(len).filter(|&e| e <= b.len());
+                match end {
+                    Some(end) => Ok(Cow::Borrowed(&b[off..end])),
+                    None => Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        format!(
+                            "read {len} bytes at {off} beyond container \
+                             end {}",
+                            b.len()
+                        ),
+                    )),
+                }
+            }
+            ByteSource::Fault(f) => f.read_at(off, len).map(Cow::Owned),
+        }
+    }
+}
+
+/// A seeded fault plan over one container image. Built with the
+/// `with_*` builders, then handed to `Artifact::from_source`.
+pub struct FaultFs {
+    bytes: Vec<u8>,
+    /// Visible length; reads past it fail `UnexpectedEof`.
+    visible_len: usize,
+    /// (byte offset, bit index 0..8) flips applied to read results.
+    flips: Vec<(usize, u8)>,
+    /// The next N reads fail with a transient `Interrupted` error.
+    transient_reads: AtomicU64,
+    /// Per-offset budgets: the next N reads *covering that byte* fail
+    /// transiently.  Unlike the global counter this spares unrelated
+    /// reads (e.g. the open-time header/manifest reads), so a test can
+    /// park one specific decode in a retry backoff.
+    transient_at: Vec<(usize, AtomicU64)>,
+    /// Seeded per-read probability of a transient failure (0 disables).
+    transient_rate: f64,
+    rng: Mutex<Rng>,
+    /// Total reads that were failed transiently (for test assertions).
+    transient_fired: AtomicU64,
+}
+
+impl FaultFs {
+    pub fn new(bytes: Vec<u8>) -> FaultFs {
+        let visible_len = bytes.len();
+        FaultFs {
+            bytes,
+            visible_len,
+            flips: Vec::new(),
+            transient_reads: AtomicU64::new(0),
+            transient_at: Vec::new(),
+            transient_rate: 0.0,
+            rng: Mutex::new(Rng::new(0)),
+            transient_fired: AtomicU64::new(0),
+        }
+    }
+
+    /// Flip bit `bit` (0..8) of the byte at `offset` in every read that
+    /// covers it.
+    pub fn with_flip(mut self, offset: usize, bit: u8) -> FaultFs {
+        assert!(bit < 8, "bit index out of range");
+        self.flips.push((offset, bit));
+        self
+    }
+
+    /// Truncate the visible container to its first `keep` bytes.
+    pub fn with_truncation(mut self, keep: usize) -> FaultFs {
+        self.visible_len = keep.min(self.bytes.len());
+        self
+    }
+
+    /// Fail the next `n` reads with a transient error, then succeed.
+    pub fn with_transient_reads(self, n: u64) -> FaultFs {
+        self.transient_reads.store(n, Ordering::Relaxed);
+        self
+    }
+
+    /// Fail the next `n` reads that cover byte `offset` with a transient
+    /// error, then succeed.  Reads elsewhere are untouched.
+    pub fn with_transient_at(mut self, offset: usize, n: u64) -> FaultFs {
+        self.transient_at.push((offset, AtomicU64::new(n)));
+        self
+    }
+
+    /// Fail each read independently with probability `rate`, seeded.
+    pub fn with_transient_rate(mut self, rate: f64, seed: u64) -> FaultFs {
+        self.transient_rate = rate.clamp(0.0, 1.0);
+        self.rng = Mutex::new(Rng::new(seed));
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.visible_len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.visible_len == 0
+    }
+
+    /// Number of reads that have been failed transiently so far.
+    pub fn transient_fired(&self) -> u64 {
+        self.transient_fired.load(Ordering::Relaxed)
+    }
+
+    /// The damaged image as the reader would see it end-to-end
+    /// (truncation + flips applied) — for `from_bytes`-style tests.
+    pub fn image(&self) -> Vec<u8> {
+        let mut out = self.bytes[..self.visible_len].to_vec();
+        for &(off, bit) in &self.flips {
+            if off < out.len() {
+                out[off] ^= 1 << bit;
+            }
+        }
+        out
+    }
+
+    pub fn read_at(&self, off: usize, len: usize) -> io::Result<Vec<u8>> {
+        // Transient faults fire before any byte inspection, like a real
+        // block-layer error would.
+        let counted = loop {
+            let n = self.transient_reads.load(Ordering::Relaxed);
+            if n == 0 {
+                break false;
+            }
+            if self
+                .transient_reads
+                .compare_exchange(
+                    n,
+                    n - 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                )
+                .is_ok()
+            {
+                break true;
+            }
+        };
+        let targeted = self.transient_at.iter().any(|(toff, budget)| {
+            if *toff < off || *toff >= off.saturating_add(len) {
+                return false;
+            }
+            loop {
+                let n = budget.load(Ordering::Relaxed);
+                if n == 0 {
+                    return false;
+                }
+                if budget
+                    .compare_exchange(
+                        n,
+                        n - 1,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok()
+                {
+                    return true;
+                }
+            }
+        });
+        let rolled = self.transient_rate > 0.0
+            && self.rng.lock().unwrap().f64() < self.transient_rate;
+        if counted || targeted || rolled {
+            self.transient_fired.fetch_add(1, Ordering::Relaxed);
+            return Err(io::Error::new(
+                io::ErrorKind::Interrupted,
+                "injected transient read fault",
+            ));
+        }
+        let end = off.checked_add(len).filter(|&e| e <= self.visible_len);
+        let end = end.ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!(
+                    "read {len} bytes at {off} beyond container end {}",
+                    self.visible_len
+                ),
+            )
+        })?;
+        let mut out = self.bytes[off..end].to_vec();
+        for &(foff, bit) in &self.flips {
+            if foff >= off && foff < end {
+                out[foff - off] ^= 1 << bit;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Simulate a crash mid non-atomic write: write only the first
+/// `frac` of `bytes` to `path`, leaving a torn file on disk.
+pub fn write_torn_copy(
+    path: impl AsRef<Path>,
+    bytes: &[u8],
+    frac: f64,
+) -> io::Result<()> {
+    let keep = ((bytes.len() as f64) * frac.clamp(0.0, 1.0)) as usize;
+    std::fs::write(path, &bytes[..keep.min(bytes.len())])
+}
+
+/// Flip one bit of a file in place (fault-injection CLI + tests).
+pub fn flip_bit_in_file(
+    path: impl AsRef<Path>,
+    offset: usize,
+    bit: u8,
+) -> io::Result<()> {
+    let path = path.as_ref();
+    let mut bytes = std::fs::read(path)?;
+    if offset >= bytes.len() {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("offset {offset} beyond file end {}", bytes.len()),
+        ));
+    }
+    bytes[offset] ^= 1 << (bit & 7);
+    std::fs::write(path, &bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_reads_borrow_and_bound_check() {
+        let src = ByteSource::Mem(vec![1, 2, 3, 4]);
+        assert_eq!(&*src.read_at(1, 2).unwrap(), &[2, 3]);
+        let err = src.read_at(3, 2).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        // overflow-safe bounds
+        assert!(src.read_at(usize::MAX, 2).is_err());
+    }
+
+    #[test]
+    fn flips_apply_only_inside_read_window() {
+        let f = FaultFs::new(vec![0u8; 8]).with_flip(4, 0);
+        assert_eq!(f.read_at(0, 4).unwrap(), vec![0, 0, 0, 0]);
+        assert_eq!(f.read_at(4, 1).unwrap(), vec![1]);
+        assert_eq!(f.read_at(2, 4).unwrap(), vec![0, 0, 1, 0]);
+        assert_eq!(f.image(), vec![0, 0, 0, 0, 1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn truncation_shrinks_visible_length() {
+        let f = FaultFs::new(vec![9u8; 10]).with_truncation(6);
+        assert_eq!(f.len(), 6);
+        assert!(f.read_at(0, 6).is_ok());
+        let err = f.read_at(4, 4).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn counted_transient_faults_then_recover() {
+        let f = FaultFs::new(vec![7u8; 4]).with_transient_reads(2);
+        let e1 = f.read_at(0, 4).unwrap_err();
+        assert_eq!(e1.kind(), io::ErrorKind::Interrupted);
+        let e2 = f.read_at(0, 4).unwrap_err();
+        assert_eq!(e2.kind(), io::ErrorKind::Interrupted);
+        assert_eq!(f.read_at(0, 4).unwrap(), vec![7, 7, 7, 7]);
+        assert_eq!(f.transient_fired(), 2);
+    }
+
+    #[test]
+    fn targeted_transients_spare_other_reads() {
+        let f = FaultFs::new(vec![5u8; 16]).with_transient_at(10, 2);
+        // reads not covering byte 10 never fire
+        assert!(f.read_at(0, 8).is_ok());
+        assert!(f.read_at(11, 4).is_ok());
+        // covering reads fire exactly twice, then recover
+        assert_eq!(
+            f.read_at(8, 4).unwrap_err().kind(),
+            io::ErrorKind::Interrupted
+        );
+        assert_eq!(
+            f.read_at(10, 1).unwrap_err().kind(),
+            io::ErrorKind::Interrupted
+        );
+        assert_eq!(f.read_at(8, 4).unwrap(), vec![5; 4]);
+        assert_eq!(f.transient_fired(), 2);
+    }
+
+    #[test]
+    fn seeded_rate_is_reproducible() {
+        let run = |seed| {
+            let f = FaultFs::new(vec![0u8; 2]).with_transient_rate(0.5, seed);
+            (0..64).map(|_| f.read_at(0, 1).is_err()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(41), run(41));
+        assert_ne!(run(41), run(42), "different seeds, different plans");
+        let fired = run(41).iter().filter(|&&e| e).count();
+        assert!(fired > 8 && fired < 56, "rate wildly off: {fired}/64");
+    }
+
+    #[test]
+    fn torn_copy_writes_prefix() {
+        let dir = std::env::temp_dir().join("owf_faultfs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("torn_{}.bin", std::process::id()));
+        write_torn_copy(&path, &[1, 2, 3, 4, 5, 6, 7, 8], 0.5).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), vec![1, 2, 3, 4]);
+        flip_bit_in_file(&path, 0, 1).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap()[0], 3);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -20,6 +20,19 @@ static COUNTER: AtomicU64 = AtomicU64::new(0);
 /// Write `bytes` to `path` via a same-directory temp file + rename.
 pub fn atomic_write(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
     let path = path.as_ref();
+    atomic_write_io(path, bytes)
+        .with_context(|| format!("atomic write {path:?}"))
+}
+
+/// [`atomic_write`] core, preserving the raw `io::Error` (and with it the
+/// `ErrorKind`) so callers with a typed error taxonomy — the artifact
+/// writer classifying transient vs permanent failures — keep the kind.
+/// Each step's context is folded into the error message instead.
+pub fn atomic_write_io(
+    path: impl AsRef<Path>,
+    bytes: &[u8],
+) -> std::io::Result<()> {
+    let path = path.as_ref();
     let dir = path
         .parent()
         .filter(|p| !p.as_os_str().is_empty())
@@ -33,15 +46,19 @@ pub fn atomic_write(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
         std::process::id(),
         COUNTER.fetch_add(1, Ordering::Relaxed)
     ));
-    let result = (|| -> Result<()> {
+    let step = |what: &str, e: std::io::Error| {
+        std::io::Error::new(e.kind(), format!("{what}: {e}"))
+    };
+    let result = (|| -> std::io::Result<()> {
         let mut f = std::fs::File::create(&tmp)
-            .with_context(|| format!("create temp file {tmp:?}"))?;
+            .map_err(|e| step(&format!("create temp file {tmp:?}"), e))?;
         f.write_all(bytes)
-            .with_context(|| format!("write {tmp:?}"))?;
-        f.sync_all().with_context(|| format!("sync {tmp:?}"))?;
+            .map_err(|e| step(&format!("write {tmp:?}"), e))?;
+        f.sync_all().map_err(|e| step(&format!("sync {tmp:?}"), e))?;
         drop(f);
-        std::fs::rename(&tmp, path)
-            .with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            step(&format!("rename {tmp:?} -> {path:?}"), e)
+        })?;
         Ok(())
     })();
     if result.is_err() {
@@ -72,6 +89,14 @@ mod tests {
             })
             .collect();
         assert!(strays.is_empty(), "stray temp files: {strays:?}");
+    }
+
+    #[test]
+    fn io_variant_preserves_error_kind() {
+        let missing = Path::new("/nonexistent_owf_dir_zz/x/y.bin");
+        let err = atomic_write_io(missing, b"x").unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::NotFound);
+        assert!(err.to_string().contains("create temp file"), "{err}");
     }
 
     #[test]

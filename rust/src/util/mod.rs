@@ -1,7 +1,9 @@
 //! Foundation utilities implemented from scratch for the offline build:
 //! seeded RNG + samplers, JSON, data-parallel helpers, summary statistics,
-//! crash-safe file replacement and a miniature property-testing harness.
+//! crash-safe file replacement, deterministic fault injection and a
+//! miniature property-testing harness.
 
+pub mod faultfs;
 pub mod fsx;
 pub mod json;
 pub mod pool;

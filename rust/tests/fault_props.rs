@@ -1,0 +1,472 @@
+//! Fault-model property tests for the `OWQ1` artifact layer, driven by
+//! the deterministic fault harness in `owf::util::faultfs`:
+//!
+//! * **exhaustive single-bit-flip sweep**: every bit of a packed
+//!   container is flipped in turn; each flip must either fail with a
+//!   typed [`ArtifactError`] naming the damaged tensor + section, or
+//!   leave every tensor's decode bit-identical — never a panic, never
+//!   silently wrong data (detection is guaranteed because each FNV-1a
+//!   step is a bijection of the running state, so any one-byte change
+//!   always changes the digest);
+//! * truncation at any point is rejected as torn (or, if only trailing
+//!   padding is cut, decodes stay bit-exact);
+//! * transient read faults retry on the injected clock with the exact
+//!   exponential backoff schedule, then succeed; exhaustion surfaces a
+//!   typed transient-I/O error; corruption never retries;
+//! * a decoder panic on damage that *evades* checksums (forged section
+//!   checksum) is contained at the artifact boundary as `Corrupt`;
+//! * the on-disk helpers (`write_torn_copy`, `flip_bit_in_file`) that
+//!   back `owf fault-inject` produce damage the reader detects.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use owf::artifact::retry::{RecordingClock, RetryPolicy};
+use owf::artifact::writer::{pack_store, AllocMode, PackOptions};
+use owf::artifact::{fnv1a64, u64_to_hex, Artifact, ArtifactError, Codec};
+use owf::tensorstore::{Store, Tensor};
+use owf::util::faultfs::{
+    flip_bit_in_file, write_torn_copy, ByteSource, FaultFs,
+};
+use owf::util::json::Json;
+use owf::util::rng::Rng;
+
+fn ms(n: u64) -> Duration {
+    Duration::from_millis(n)
+}
+
+/// Pack a small two-tensor container (with outliers, so all six section
+/// classes are non-empty for at least one tensor) and return its bytes.
+fn packed_bytes(codec: Codec, lanes: usize, tag: &str) -> Vec<u8> {
+    let mut rng = Rng::new(0xFA117);
+    let mut store = Store::new(Json::obj().push("kind", "fault-props"));
+    let mut w: Vec<f32> = rng.student_t_vec(5.0, 96);
+    w[7] = 40.0; // spikes → sparse overlay → outlier sections
+    w[61] = -35.0;
+    store.push(Tensor::from_f32("w", vec![96], &w));
+    let v: Vec<f32> = rng.student_t_vec(5.0, 64);
+    store.push(Tensor::from_f32("v", vec![64], &v));
+    let dir = std::env::temp_dir().join("owf_fault_props");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!(
+        "{tag}_{}_{lanes}_{}.owq",
+        codec.name(),
+        std::process::id()
+    ));
+    pack_store(
+        &store,
+        &std::collections::HashMap::new(),
+        &PackOptions {
+            spec: "cbrt-t5@4:block32-absmax:sparse0.02,compress"
+                .to_string(),
+            alloc: AllocMode::Flat,
+            codec,
+            lanes,
+            meta: Json::obj().push("source", "test"),
+        },
+        &path,
+    )
+    .unwrap();
+    let raw = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    raw
+}
+
+fn manifest_len(raw: &[u8]) -> usize {
+    u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize
+}
+
+fn clean_decodes(raw: &[u8]) -> Vec<(String, Vec<f32>)> {
+    let art = Artifact::from_bytes(raw.to_vec()).unwrap();
+    art.tensors
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (r.name.clone(), art.decode_tensor(i).unwrap()))
+        .collect()
+}
+
+/// Which (tensor, section) owns file byte `off`, if any (zero-length
+/// sections own no bytes; everything else in the payload is padding).
+fn owner_of(art: &Artifact, off: usize) -> Option<(String, String)> {
+    for rec in &art.tensors {
+        for (sname, _) in rec.sections() {
+            if let Some((s_off, s_len)) =
+                art.section_file_range(&rec.name, sname)
+            {
+                if s_len > 0 && off >= s_off && off < s_off + s_len {
+                    return Some((rec.name.clone(), sname.to_string()));
+                }
+            }
+        }
+    }
+    None
+}
+
+fn assert_bit_exact(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}");
+    }
+}
+
+/// The tentpole property: flip every single bit of the container; the
+/// reader must return a typed error naming the damage or stay bit-exact.
+/// Run exhaustively for interleaved Huffman (the on-disk default).
+#[test]
+fn every_single_bit_flip_is_detected_or_bit_exact() {
+    let raw = packed_bytes(Codec::Huffman, 2, "sweep");
+    let clean = Artifact::from_bytes(raw.clone()).unwrap();
+    let expected = clean_decodes(&raw);
+    let base = 8 + manifest_len(&raw) + 8;
+    for off in 0..raw.len() {
+        for bit in 0..8u8 {
+            let mut damaged = raw.clone();
+            damaged[off] ^= 1 << bit;
+            let opened = Artifact::from_bytes(damaged);
+            if off < 4 {
+                // magic: structurally rejected
+                let e = opened.err().expect("magic flip must fail open");
+                assert_eq!(e.kind_name(), "torn", "off {off} bit {bit}");
+                continue;
+            }
+            if off < 8 {
+                // manifest length: either out of range (torn) or a
+                // shifted checksum window (corrupt)
+                let e = opened.err().expect("mlen flip must fail open");
+                assert!(
+                    matches!(e.kind_name(), "torn" | "corrupt"),
+                    "off {off} bit {bit}: {e}"
+                );
+                continue;
+            }
+            if off < base {
+                // manifest body or its trailing checksum: the FNV-1a
+                // digest is guaranteed to change on any one-byte change
+                let e =
+                    opened.err().expect("manifest flip must fail open");
+                match &e {
+                    ArtifactError::Corrupt { tensor, section, .. } => {
+                        assert_eq!(tensor, "", "off {off} bit {bit}");
+                        assert_eq!(
+                            section, "manifest",
+                            "off {off} bit {bit}"
+                        );
+                    }
+                    other => panic!(
+                        "off {off} bit {bit}: expected manifest \
+                         corruption, got {other}"
+                    ),
+                }
+                continue;
+            }
+            // payload region: the container opens (bounds intact)...
+            let art = opened.unwrap_or_else(|e| {
+                panic!("off {off} bit {bit}: payload flip broke open: {e}")
+            });
+            match owner_of(&clean, off) {
+                Some((tname, sname)) => {
+                    // ...and exactly the owning tensor fails its decode,
+                    // naming the damaged section; the rest stay bit-exact
+                    for (i, (name, want)) in expected.iter().enumerate() {
+                        let got = art.decode_tensor(i);
+                        if *name == tname {
+                            match got.err().unwrap_or_else(|| {
+                                panic!(
+                                    "off {off} bit {bit}: flip in \
+                                     {tname}/{sname} decoded silently"
+                                )
+                            }) {
+                                ArtifactError::Corrupt {
+                                    tensor,
+                                    section,
+                                    ..
+                                } => {
+                                    assert_eq!(tensor, tname);
+                                    assert_eq!(
+                                        section, sname,
+                                        "off {off} bit {bit}"
+                                    );
+                                }
+                                other => panic!(
+                                    "off {off} bit {bit}: {other}"
+                                ),
+                            }
+                        } else {
+                            assert_bit_exact(
+                                &got.unwrap(),
+                                want,
+                                &format!(
+                                    "off {off} bit {bit}: tensor {name}"
+                                ),
+                            );
+                        }
+                    }
+                }
+                None => {
+                    // alignment padding: no observable effect at all
+                    for (i, (name, want)) in expected.iter().enumerate() {
+                        assert_bit_exact(
+                            &art.decode_tensor(i).unwrap(),
+                            want,
+                            &format!("off {off} bit {bit} pad: {name}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Seeded (non-exhaustive) flip sweeps for the other codecs share the
+/// same contract.
+#[test]
+fn seeded_flip_sweep_holds_for_rans_and_raw() {
+    for (codec, lanes) in [(Codec::Rans, 3), (Codec::Raw, 1)] {
+        let raw = packed_bytes(codec, lanes, "seeded");
+        let clean = Artifact::from_bytes(raw.clone()).unwrap();
+        let expected = clean_decodes(&raw);
+        let base = 8 + manifest_len(&raw) + 8;
+        let mut rng = Rng::new(0x5EED + lanes as u64);
+        for _ in 0..256 {
+            let off = base + rng.below(raw.len() - base);
+            let bit = rng.below(8) as u8;
+            let mut damaged = raw.clone();
+            damaged[off] ^= 1 << bit;
+            let art = Artifact::from_bytes(damaged).unwrap();
+            match owner_of(&clean, off) {
+                Some((tname, sname)) => {
+                    let i = clean.position(&tname).unwrap();
+                    match art.decode_tensor(i) {
+                        Err(ArtifactError::Corrupt {
+                            tensor,
+                            section,
+                            ..
+                        }) => {
+                            assert_eq!(tensor, tname);
+                            assert_eq!(section, sname);
+                        }
+                        other => panic!(
+                            "{} off {off} bit {bit}: {other:?}",
+                            codec.name()
+                        ),
+                    }
+                }
+                None => {
+                    for (i, (name, want)) in expected.iter().enumerate()
+                    {
+                        assert_bit_exact(
+                            &art.decode_tensor(i).unwrap(),
+                            want,
+                            name,
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn truncation_is_torn_or_padding_only() {
+    let raw = packed_bytes(Codec::Huffman, 2, "trunc");
+    let expected = clean_decodes(&raw);
+    for cut in 0..raw.len() {
+        match Artifact::from_bytes(raw[..cut].to_vec()) {
+            Err(e) => assert!(
+                matches!(e.kind_name(), "torn" | "corrupt"),
+                "cut {cut}: {e}"
+            ),
+            // only trailing padding was cut: everything still decodes
+            Ok(art) => {
+                for (i, (name, want)) in expected.iter().enumerate() {
+                    assert_bit_exact(
+                        &art.decode_tensor(i).unwrap(),
+                        want,
+                        &format!("cut {cut}: {name}"),
+                    );
+                }
+            }
+        }
+    }
+    // the FaultFs truncation view is exactly the prefix view
+    let f = FaultFs::new(raw.clone()).with_truncation(raw.len() / 2);
+    assert_eq!(f.image(), raw[..raw.len() / 2].to_vec());
+    assert!(Artifact::from_source(ByteSource::Fault(f)).is_err());
+}
+
+#[test]
+fn transient_reads_retry_with_exact_backoff_then_succeed() {
+    let raw = packed_bytes(Codec::Huffman, 2, "eintr");
+    let expected = clean_decodes(&raw);
+    let fs = FaultFs::new(raw).with_transient_reads(2);
+    let clock = Arc::new(RecordingClock::new());
+    let policy = RetryPolicy {
+        attempts: 4,
+        base: ms(10),
+        cap: ms(1000),
+    };
+    let art = Artifact::from_source_with(
+        ByteSource::Fault(fs),
+        policy,
+        clock.clone(),
+    )
+    .unwrap();
+    // both injected faults hit the very first (header) read
+    assert_eq!(art.io_retries(), 2);
+    assert_eq!(clock.slept(), vec![ms(10), ms(20)]);
+    for (i, (name, want)) in expected.iter().enumerate() {
+        assert_bit_exact(&art.decode_tensor(i).unwrap(), want, name);
+    }
+    assert_eq!(art.io_retries(), 2, "decodes saw no further faults");
+}
+
+#[test]
+fn transient_exhaustion_is_a_typed_io_error() {
+    let raw = packed_bytes(Codec::Huffman, 2, "exhaust");
+    let fs = FaultFs::new(raw).with_transient_reads(1_000);
+    let clock = Arc::new(RecordingClock::new());
+    let policy = RetryPolicy {
+        attempts: 3,
+        base: ms(1),
+        cap: ms(8),
+    };
+    let err = Artifact::from_source_with(
+        ByteSource::Fault(fs),
+        policy,
+        clock.clone(),
+    )
+    .unwrap_err();
+    assert_eq!(err.kind_name(), "io-transient", "{err}");
+    assert!(err.is_transient_io());
+    assert_eq!(clock.slept(), vec![ms(1), ms(2)]);
+}
+
+#[test]
+fn corruption_fails_immediately_without_sleeping() {
+    let raw = packed_bytes(Codec::Huffman, 2, "noretry");
+    let clean = Artifact::from_bytes(raw.clone()).unwrap();
+    let (p_off, p_len) =
+        clean.section_file_range("w", "payload").unwrap();
+    let fs = FaultFs::new(raw).with_flip(p_off + p_len / 2, 3);
+    let clock = Arc::new(RecordingClock::new());
+    let art = Artifact::from_source_with(
+        ByteSource::Fault(fs),
+        RetryPolicy::default(),
+        clock.clone(),
+    )
+    .unwrap();
+    let i = art.position("w").unwrap();
+    let err = art.decode_tensor(i).unwrap_err();
+    assert!(err.is_corrupt(), "{err}");
+    assert!(
+        clock.slept().is_empty(),
+        "corruption must never trigger a backoff sleep"
+    );
+    assert_eq!(art.io_retries(), 0);
+    // the clean tensor still serves
+    let j = art.position("v").unwrap();
+    assert!(art.decode_tensor(j).is_ok());
+}
+
+/// Forge the payload checksum so damage *evades* verification: the
+/// decoder then sees garbage and may panic — the artifact boundary must
+/// contain it as a typed `Corrupt`, never an abort.
+#[test]
+fn decoder_panic_on_checksum_evading_damage_is_contained() {
+    let raw = packed_bytes(Codec::Huffman, 2, "panic");
+    let clean = Artifact::from_bytes(raw.clone()).unwrap();
+    let mlen = manifest_len(&raw);
+    let rec = &clean.tensors[clean.position("w").unwrap()];
+    let (p_off, p_len) =
+        clean.section_file_range("w", "payload").unwrap();
+    assert!(p_len > 0);
+    let mut damaged = raw.clone();
+    // zero the whole entropy stream (invalid lane header, torn prefix)
+    for b in &mut damaged[p_off..p_off + p_len] {
+        *b = 0;
+    }
+    // ...then forge its section checksum in the manifest
+    let new_fnv = fnv1a64(&damaged[p_off..p_off + p_len]);
+    let manifest =
+        String::from_utf8(damaged[8..8 + mlen].to_vec()).unwrap();
+    let old_hex = u64_to_hex(rec.payload.fnv);
+    assert!(
+        manifest.contains(&old_hex),
+        "payload fnv hex not found in manifest"
+    );
+    let patched =
+        manifest.replacen(&old_hex, &u64_to_hex(new_fnv), 1);
+    assert_eq!(patched.len(), manifest.len());
+    damaged[8..8 + mlen].copy_from_slice(patched.as_bytes());
+    // ...and the manifest's own checksum
+    let want = fnv1a64(&damaged[8..8 + mlen]);
+    damaged[8 + mlen..8 + mlen + 8]
+        .copy_from_slice(&want.to_le_bytes());
+
+    let art = Artifact::from_bytes(damaged).expect("forged open");
+    let i = art.position("w").unwrap();
+    let err = art.decode_tensor(i).unwrap_err();
+    assert!(err.is_corrupt(), "contained as Corrupt, got: {err}");
+    // the sibling tensor is untouched
+    let j = art.position("v").unwrap();
+    assert!(art.decode_tensor(j).is_ok());
+}
+
+/// The on-disk helpers behind `owf fault-inject`: a torn partial write is
+/// rejected at open; a per-section bit flip is caught by `verify_section`
+/// naming exactly that section (the `owf fsck` verdict path).
+#[test]
+fn on_disk_damage_helpers_drive_fsck_style_verdicts() {
+    let raw = packed_bytes(Codec::Huffman, 2, "disk");
+    let clean = Artifact::from_bytes(raw.clone()).unwrap();
+    let dir = std::env::temp_dir().join("owf_fault_props");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let torn = dir.join(format!("torn_{}.owq", std::process::id()));
+    write_torn_copy(&torn, &raw, 0.6).unwrap();
+    let err = Artifact::open(&torn).unwrap_err();
+    assert!(
+        matches!(err.kind_name(), "torn" | "corrupt"),
+        "{err}"
+    );
+    std::fs::remove_file(&torn).unwrap();
+
+    for (ti, rec) in clean.tensors.iter().enumerate() {
+        for (sname, _) in rec.sections() {
+            let Some((off, len)) =
+                clean.section_file_range(&rec.name, sname)
+            else {
+                continue;
+            };
+            if len == 0 {
+                continue;
+            }
+            let path = dir.join(format!(
+                "flip_{ti}_{sname}_{}.owq",
+                std::process::id()
+            ));
+            std::fs::write(&path, &raw).unwrap();
+            flip_bit_in_file(&path, off + len / 2, 5).unwrap();
+            let art = Artifact::open(&path).unwrap();
+            assert!(art.verify_all().is_err());
+            match art.verify_section(ti, sname) {
+                Some(Err(ArtifactError::Corrupt {
+                    tensor,
+                    section,
+                    ..
+                })) => {
+                    assert_eq!(tensor, rec.name);
+                    assert_eq!(section, sname);
+                }
+                other => panic!("{}/{sname}: {other:?}", rec.name),
+            }
+            // every other tensor passes eager verification
+            for other in 0..clean.tensors.len() {
+                if other != ti {
+                    assert!(art.verify_tensor(other).is_ok());
+                }
+            }
+            std::fs::remove_file(&path).unwrap();
+        }
+    }
+}

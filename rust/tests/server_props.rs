@@ -1,0 +1,415 @@
+//! Concurrency properties of the fault-tolerant [`ArtifactServer`]:
+//!
+//! * **single-flight**: N threads cold-missing one tensor perform exactly
+//!   one decode (`misses == 1`, `decoded_bytes == 4·n`), and every waiter
+//!   shares the *same* `Arc` as the owner;
+//! * waiters attached to a failing decode inherit the owner's error
+//!   verbatim; the tensor is quarantined with its cause and subsequent
+//!   requests fail fast while clean (and cached) tensors keep serving;
+//! * the admission gate sheds load with a typed `Overloaded` while a
+//!   decode is parked in a retry backoff (pinned deterministically with
+//!   [`GateClock`] — a blocked retry holds its decode permit), and
+//!   same-tensor requests still coalesce instead of being shed;
+//! * stats invariants hold under a concurrent request storm:
+//!   `hits + misses == requests` fault-free, byte accounting exact
+//!   against [`ArtifactServer::cache_audit`] across racing insert/evict,
+//!   and `cap_bytes == 0` disables caching without breaking coalescing.
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use owf::artifact::retry::{GateClock, RetryPolicy};
+use owf::artifact::server::ArtifactServer;
+use owf::artifact::writer::{pack_store, AllocMode, PackOptions};
+use owf::artifact::{Artifact, ArtifactError, Codec};
+use owf::tensorstore::{Store, Tensor};
+use owf::util::faultfs::{ByteSource, FaultFs};
+use owf::util::json::Json;
+use owf::util::rng::Rng;
+
+/// Pack a three-tensor container and return its bytes.
+fn packed_bytes(tag: &str) -> Vec<u8> {
+    let mut rng = Rng::new(0x5E17E5);
+    let mut store = Store::new(Json::obj().push("kind", "server-props"));
+    for (name, n) in [("a", 3072usize), ("b", 4096), ("c", 2048)] {
+        let data = rng.student_t_vec(5.0, n);
+        store.push(Tensor::from_f32(name, vec![n], &data));
+    }
+    let dir = std::env::temp_dir().join("owf_server_props");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path =
+        dir.join(format!("{tag}_{}.owq", std::process::id()));
+    pack_store(
+        &store,
+        &std::collections::HashMap::new(),
+        &PackOptions {
+            spec: "cbrt-t5@4:block64-absmax:compress".to_string(),
+            alloc: AllocMode::Flat,
+            codec: Codec::Huffman,
+            lanes: 4,
+            meta: Json::obj().push("source", "test"),
+        },
+        &path,
+    )
+    .unwrap();
+    let raw = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    raw
+}
+
+fn clean_decodes(raw: &[u8]) -> Vec<(String, Vec<f32>)> {
+    let art = Artifact::from_bytes(raw.to_vec()).unwrap();
+    art.tensors
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (r.name.clone(), art.decode_tensor(i).unwrap()))
+        .collect()
+}
+
+fn assert_bit_exact(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}");
+    }
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    for _ in 0..5000 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!("timed out waiting for: {what}");
+}
+
+/// The headline regression: N threads cold-missing the same tensor must
+/// coalesce onto exactly one decode.
+#[test]
+fn n_concurrent_cold_misses_perform_exactly_one_decode() {
+    let raw = packed_bytes("coalesce");
+    let expected = clean_decodes(&raw);
+    let want_a = &expected[0].1;
+    let server = ArtifactServer::new(
+        Artifact::from_bytes(raw.clone()).unwrap(),
+        1 << 30,
+    );
+    let n = 8;
+    let barrier = Barrier::new(n);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let server = &server;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    barrier.wait();
+                    server.get("a").unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_bit_exact(&h.join().unwrap(), want_a, "a");
+        }
+    });
+    let s = server.stats();
+    assert_eq!(s.requests, n as u64);
+    assert_eq!(
+        s.misses, 1,
+        "N concurrent cold misses must decode exactly once"
+    );
+    assert_eq!(s.hits, (n - 1) as u64);
+    assert_eq!(
+        s.decoded_bytes,
+        4 * want_a.len() as u64,
+        "decoded_bytes proves a single decode"
+    );
+    assert!(s.coalesced <= (n - 1) as u64);
+    assert_eq!(s.hits + s.misses, s.requests);
+    assert_eq!(s.cached_tensors, 1);
+    // a later request is a plain cache hit
+    assert_bit_exact(&server.get("a").unwrap(), want_a, "warm");
+    assert_eq!(server.stats().hits, n as u64);
+}
+
+#[test]
+fn waiters_inherit_owner_error_and_tensor_quarantines() {
+    let raw = packed_bytes("quarantine");
+    let expected = clean_decodes(&raw);
+    let clean = Artifact::from_bytes(raw.clone()).unwrap();
+    let (p_off, p_len) =
+        clean.section_file_range("a", "payload").unwrap();
+    let mut damaged = raw.clone();
+    damaged[p_off + p_len / 2] ^= 0x10;
+    let server = ArtifactServer::new(
+        Artifact::from_bytes(damaged).unwrap(),
+        1 << 30,
+    );
+    // warm the clean tensor so graceful degradation is observable below
+    let want_b = &expected[1].1;
+    assert_bit_exact(&server.get("b").unwrap(), want_b, "b cold");
+
+    let n = 6;
+    let barrier = Barrier::new(n);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let server = &server;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    barrier.wait();
+                    server.get("a")
+                })
+            })
+            .collect();
+        for h in handles {
+            let err = h.join().unwrap().unwrap_err();
+            assert!(
+                matches!(
+                    err.kind_name(),
+                    "corrupt" | "quarantined"
+                ),
+                "{err}"
+            );
+        }
+    });
+    let s = server.stats();
+    assert_eq!(s.misses, 2, "one decode of b, one failed decode of a");
+    assert_eq!(s.decode_errors, 1);
+    assert_eq!(
+        s.coalesced_errors + s.quarantine_hits,
+        (n - 1) as u64,
+        "every other requester inherited or fast-failed"
+    );
+    assert_eq!(s.quarantined, 1);
+
+    // fast-fail path carries the original cause
+    match server.get("a").unwrap_err() {
+        ArtifactError::Quarantined { tensor, cause } => {
+            assert_eq!(tensor, "a");
+            assert!(cause.is_corrupt(), "{cause}");
+        }
+        other => panic!("expected quarantine, got {other}"),
+    }
+    assert_eq!(
+        server.stats().misses,
+        2,
+        "quarantined tensor must not be re-decoded"
+    );
+    // clean tensors — cached or cold — keep serving
+    assert_bit_exact(&server.get("b").unwrap(), want_b, "b warm");
+    assert_bit_exact(
+        &server.get("c").unwrap(),
+        &expected[2].1,
+        "c cold",
+    );
+
+    // ops path: lifting the quarantine re-attempts (and re-poisons)
+    let cause = server.clear_quarantine("a").expect("was quarantined");
+    assert!(cause.is_corrupt());
+    assert!(server.get("a").unwrap_err().is_corrupt());
+    let s = server.stats();
+    assert_eq!(s.misses, 4, "re-decode after clear (plus c)");
+    assert_eq!(s.quarantined, 1, "re-poisoned");
+}
+
+/// Deterministic admission-gate pinning: a decode parked in a retry
+/// backoff (via [`GateClock`]) holds its permit, so a different-tensor
+/// request is shed with `Overloaded` while a same-tensor request
+/// coalesces and shares the owner's buffer.
+#[test]
+fn admission_gate_sheds_while_same_tensor_requests_coalesce() {
+    let raw = packed_bytes("gate");
+    let expected = clean_decodes(&raw);
+    let clean = Artifact::from_bytes(raw.clone()).unwrap();
+    let (p_off, p_len) =
+        clean.section_file_range("a", "payload").unwrap();
+    // one transient fault aimed at a's payload: open-time reads are
+    // untouched, the first decode of a parks in a backoff sleep
+    let fs = FaultFs::new(raw.clone())
+        .with_transient_at(p_off + p_len / 2, 1);
+    let gate = Arc::new(GateClock::new());
+    let art = Artifact::from_source_with(
+        ByteSource::Fault(fs),
+        RetryPolicy::default(),
+        gate.clone(),
+    )
+    .unwrap();
+    let server = ArtifactServer::new(art, 1 << 30).with_max_decodes(1);
+
+    std::thread::scope(|scope| {
+        let owner = scope.spawn(|| server.get("a"));
+        wait_until("owner parked in backoff", || gate.waiting() == 1);
+        // the parked decode holds the only permit
+        match server.get("b").unwrap_err() {
+            ArtifactError::Overloaded { limit } => assert_eq!(limit, 1),
+            other => panic!("expected overload, got {other}"),
+        }
+        // ...but a request for the same tensor attaches, not sheds
+        let waiter = scope.spawn(|| server.get("a"));
+        wait_until("waiter attached", || server.stats().coalesced == 1);
+        assert_eq!(server.stats().overloads, 1);
+        gate.open();
+        let got_owner = owner.join().unwrap().unwrap();
+        let got_waiter = waiter.join().unwrap().unwrap();
+        assert!(
+            Arc::ptr_eq(&got_owner, &got_waiter),
+            "waiter must share the owner's buffer"
+        );
+        assert_bit_exact(&got_owner, &expected[0].1, "a");
+    });
+    let s = server.stats();
+    assert_eq!(s.misses, 1, "one decode despite retry + waiter");
+    assert_eq!(s.io_retries, 1, "the injected transient retried once");
+    assert_eq!(s.hits, 1, "the coalesced waiter");
+    assert_eq!(s.coalesced, 1);
+    assert_eq!(s.overloads, 1);
+    assert_eq!(s.decode_errors, 0, "transient faults never fail a decode");
+    // permit released: the shed tensor now decodes
+    assert_bit_exact(&server.get("b").unwrap(), &expected[1].1, "b");
+}
+
+#[test]
+fn stats_invariants_hold_under_a_concurrent_storm() {
+    let raw = packed_bytes("storm");
+    let expected = clean_decodes(&raw);
+    // cap holds roughly 1.5 tensors → constant racing insert/evict
+    let server = ArtifactServer::new(
+        Artifact::from_bytes(raw.clone()).unwrap(),
+        20_000,
+    );
+    let threads = 8;
+    let per_thread = 60;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let server = &server;
+            let expected = &expected;
+            scope.spawn(move || {
+                for i in 0..per_thread {
+                    let (name, want) = &expected[(t + i) % expected.len()];
+                    let got = server.get(name).unwrap();
+                    assert_bit_exact(&got, want, name);
+                }
+            });
+        }
+    });
+    // one bad name to exercise the not_found leg of the partition
+    assert!(matches!(
+        server.get("nope").unwrap_err(),
+        ArtifactError::NotFound { .. }
+    ));
+    let s = server.stats();
+    let total = (threads * per_thread) as u64 + 1;
+    assert_eq!(s.requests, total);
+    assert_eq!(
+        s.hits + s.misses + s.not_found,
+        total,
+        "fault-free partition"
+    );
+    assert_eq!(s.not_found, 1);
+    assert_eq!(
+        (s.decode_errors, s.coalesced_errors, s.quarantine_hits,
+         s.overloads, s.quarantined),
+        (0, 0, 0, 0, 0),
+        "no fault legs on a clean container"
+    );
+    // every successful decode was inserted; entries leave only by
+    // eviction — so the books must balance exactly
+    assert_eq!(
+        s.misses,
+        s.evictions + s.cached_tensors as u64,
+        "insert/evict accounting"
+    );
+    // incremental byte accounting matches a from-scratch recount
+    let (audit_tensors, audit_bytes) = server.cache_audit();
+    assert_eq!(audit_tensors, s.cached_tensors);
+    assert_eq!(audit_bytes, s.cached_bytes);
+    assert!(
+        s.cached_bytes <= 20_000 + 4 * 4096,
+        "resident bytes bounded by cap + newest tensor"
+    );
+    assert_eq!(s.decoded_bytes % 4, 0);
+    assert!(s.evictions > 0, "the cap must have forced evictions");
+}
+
+#[test]
+fn cap_zero_disables_caching_but_still_coalesces() {
+    let raw = packed_bytes("capzero");
+    let expected = clean_decodes(&raw);
+    let want_a = &expected[0].1;
+    let server = ArtifactServer::new(
+        Artifact::from_bytes(raw.clone()).unwrap(),
+        0,
+    );
+    let n = 8;
+    let barrier = Barrier::new(n);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let server = &server;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    barrier.wait();
+                    server.get("a").unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_bit_exact(&h.join().unwrap(), want_a, "a");
+        }
+    });
+    let s = server.stats();
+    assert_eq!(s.requests, n as u64);
+    assert_eq!(s.hits + s.misses, n as u64);
+    assert_eq!(
+        s.hits, s.coalesced,
+        "with no cache every hit is a coalesced share"
+    );
+    assert_eq!(s.cached_tensors, 0);
+    assert_eq!(s.cached_bytes, 0);
+    assert_eq!(
+        s.decoded_bytes,
+        s.misses * 4 * want_a.len() as u64,
+        "each miss decoded the full tensor"
+    );
+    // clear_cache on an empty cache is a harmless no-op
+    server.clear_cache();
+    assert_eq!(server.cache_audit(), (0, 0));
+}
+
+#[test]
+fn decode_into_respects_quarantine_and_accounting() {
+    let raw = packed_bytes("into");
+    let expected = clean_decodes(&raw);
+    let clean = Artifact::from_bytes(raw.clone()).unwrap();
+    let (p_off, p_len) =
+        clean.section_file_range("a", "payload").unwrap();
+    let mut damaged = raw.clone();
+    damaged[p_off + p_len / 2] ^= 0x04;
+    let server = ArtifactServer::new(
+        Artifact::from_bytes(damaged).unwrap(),
+        1 << 30,
+    );
+    let mut buf = vec![0f32; expected[0].1.len()];
+    assert!(server.decode_into("a", &mut buf).unwrap_err().is_corrupt());
+    match server.decode_into("a", &mut buf).unwrap_err() {
+        ArtifactError::Quarantined { tensor, cause } => {
+            assert_eq!(tensor, "a");
+            assert!(cause.is_corrupt());
+        }
+        other => panic!("expected quarantine, got {other}"),
+    }
+    let s = server.stats();
+    assert_eq!(s.requests, 2);
+    assert_eq!(s.misses, 1);
+    assert_eq!(s.decode_errors, 1);
+    assert_eq!(s.quarantine_hits, 1);
+    assert_eq!(s.quarantined, 1);
+    // the clean tensor decodes into a caller-owned buffer bit-exactly,
+    // bypassing the cache
+    let mut buf = vec![0f32; expected[1].1.len()];
+    server.decode_into("b", &mut buf).unwrap();
+    assert_bit_exact(&buf, &expected[1].1, "b");
+    let s = server.stats();
+    assert_eq!(s.decoded_bytes, 4 * buf.len() as u64);
+    assert_eq!(s.cached_tensors, 0, "decode_into never populates cache");
+}

@@ -4,9 +4,12 @@
 # decode_into-vs-decode_ref bit-exactness contract before any timing),
 # an `owf pack`/unpack bit-exactness gate at tiny n (packed OWQ1 decode
 # must be bit-identical to the in-memory pipeline, for both entropy
-# codecs), then an `owf sweep` smoke run over a 12-point grid with
-# --resume exercised twice (the second resume must re-run zero points and
-# leave the row count unchanged).
+# codecs), a fault-injection gate (a flipped bit in every OWQ1 section
+# class must drive `owf fsck` to a nonzero exit with a typed verdict, and
+# `owf serve-bench` must survive injected transient EIO + payload flips),
+# then an `owf sweep` smoke run over a 12-point grid with --resume
+# exercised twice (the second resume must re-run zero points and leave
+# the row count unchanged).
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -45,6 +48,50 @@ for codec in huffman rans; do
         exit 1
     }
 done
+
+echo "== owf fsck + fault-injection gate (tiny n) =="
+# a clean container must pass fsck (exit 0, 'clean' in the summary)
+CLEAN="$PACK_DIR/gate_huffman.owq"
+"$BIN" fsck "$CLEAN" | grep -q 'clean' || {
+    echo "check.sh: fsck called a clean container damaged" >&2
+    exit 1
+}
+# a single flipped bit in every section class must surface as typed
+# damage: fsck exits nonzero and the output names a corrupt/torn verdict
+FAULT_DIR="$(mktemp -d)"
+for section in codebook scales payload counts outlier_idx outlier_val \
+        manifest header; do
+    BAD="$FAULT_DIR/bad_$section.owq"
+    "$BIN" fault-inject "$CLEAN" --out "$BAD" --section "$section"
+    if FSCK_OUT=$("$BIN" fsck "$BAD" 2>&1); then
+        echo "check.sh: fsck missed a $section bit flip" >&2
+        exit 1
+    fi
+    echo "$FSCK_OUT" | grep -Eqi 'corrupt|torn|DAMAGED|unreadable' || {
+        echo "check.sh: fsck verdict for a $section flip is untyped:" >&2
+        echo "$FSCK_OUT" >&2
+        exit 1
+    }
+done
+# a torn rename (interrupted atomic write) must read as damage, not data
+"$BIN" fault-inject "$CLEAN" --out "$FAULT_DIR/torn.owq" \
+    --truncate-frac 0.5
+if "$BIN" fsck "$FAULT_DIR/torn.owq" > /dev/null 2>&1; then
+    echo "check.sh: fsck accepted a half-written container" >&2
+    exit 1
+fi
+
+echo "== serve-bench fault smoke (transient EIO + payload flips) =="
+# the server must degrade gracefully under injected faults: transient
+# reads retry, corrupt tensors quarantine, clean tensors keep serving,
+# and the resilience counters are reported
+SB_OUT=$("$BIN" serve-bench "$CLEAN" --threads 4 --requests 64 \
+    --fault-eio-rate 0.05 --fault-flips 2)
+echo "$SB_OUT"
+echo "$SB_OUT" | grep -q 'resilience:' || {
+    echo "check.sh: faulty serve-bench reported no resilience stats" >&2
+    exit 1
+}
 
 GRID='cbrt-t5@{3..6}:block{32,64,128}-absmax'   # 4 x 3 = 12 points
 OUT="$(mktemp -d)/smoke_sweep.jsonl"
