@@ -30,12 +30,37 @@
 //!
 //! | section       | contents                                  |
 //! |---------------|-------------------------------------------|
-//! | `codebook`    | sorted codepoints, f32 LE                 |
-//! | `scales`      | per-group scales, f32 LE                  |
+//! | `codebook`    | sorted codepoints, f32 LE (grid: dense-slot codepoint table, first-occurrence order) |
+//! | `scales`      | per-group scales, f32 LE (grid: empty)    |
 //! | `payload`     | indices: raw u16 LE, or a K-lane interleaved Huffman/rANS container |
 //! | `counts`      | index histogram, u64 LE (the entropy model the payload was coded under) |
-//! | `outlier_idx` | sorted outlier positions (layout space), u32 LE |
-//! | `outlier_val` | exact outlier values, f32 LE              |
+//! | `outlier_idx` | sorted outlier positions (layout space), u32 LE (grid: empty) |
+//! | `outlier_val` | exact outlier values, f32 LE (grid: empty) |
+//!
+//! # Container version 2 (OWQ2)
+//!
+//! Version 2 (same magic; the manifest `version` field is the rev) makes
+//! every sweep-grammar scheme servable.  Two optional per-tensor manifest
+//! fields carry the durable forms:
+//!
+//! * `rot_seed` (hex u64) — present iff the tensor was actually rotated
+//!   (`:rot` scheme *and* 2-D shape).  Rotations are deterministic, so
+//!   nothing else is persisted: the reader re-derives V/W through
+//!   [`crate::eval::pipeline::rotation_pair`] and applies
+//!   `rotate_2d_inverse` after the fused dequant.  A `:rot` scheme on a
+//!   non-2-D tensor is a documented identity — the field is absent and
+//!   both paths agree explicitly that no basis change was applied.
+//! * `grid` (`{delta, buckets}`) — for codebook-free `grid` schemes:
+//!   hex-exact δ plus the dense-slot → raw-bucket map.  The codebook
+//!   section holds the dense-slot codepoint table (`points[s] =
+//!   dequantise(buckets[s])`, cross-checked against δ at decode), the
+//!   payload section the entropy-coded dense stream, and decode is a
+//!   direct gather — never through `Codebook`, which would sort the
+//!   first-occurrence-ordered slots.
+//!
+//! Version-1 containers (which never packed rot/grid tensors) parse with
+//! both fields absent and decode unchanged; readers accept
+//! `MIN_VERSION..=VERSION`.
 //!
 //! # Fault model (see `EXPERIMENTS.md` §Fault-model)
 //!
@@ -80,7 +105,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context};
 
-use crate::coordinator::config::Scheme;
+use crate::coordinator::config::{Element, Scheme};
 use crate::quant::{Encoded, Quantiser};
 use crate::scaling::scale_groups;
 use crate::util::faultfs::ByteSource;
@@ -90,7 +115,11 @@ use crate::util::json::Json;
 pub type AResult<T> = std::result::Result<T, ArtifactError>;
 
 pub const MAGIC: &[u8; 4] = b"OWQ1";
-pub const VERSION: usize = 1;
+/// Current container rev written by the packer (see module docs: v2 adds
+/// the `rot_seed` / `grid` manifest records).
+pub const VERSION: usize = 2;
+/// Oldest container rev the reader still accepts.
+pub const MIN_VERSION: usize = 1;
 /// Section alignment within the payload region (matches `.owt`).
 pub const ALIGN: usize = 64;
 
@@ -174,6 +203,18 @@ pub struct Section {
     pub fnv: u64,
 }
 
+/// The durable form of one `grid`-scheme tensor (v2 manifests): the
+/// hex-exact resolution plus the dense-slot → raw-bucket map.  The
+/// codepoint table in the codebook section is redundant with these two
+/// (`points[s] = UniformGrid::new(delta).dequantise(buckets[s])`) and the
+/// reader cross-checks it bit-for-bit before gathering.
+#[derive(Clone, Debug)]
+pub struct GridRecord {
+    pub delta: f64,
+    /// Dense slot → raw grid bucket, first-occurrence order.
+    pub buckets: Vec<u16>,
+}
+
 /// Manifest record of one packed tensor.
 #[derive(Clone, Debug)]
 pub struct TensorRecord {
@@ -194,6 +235,13 @@ pub struct TensorRecord {
     pub bits: f64,
     /// Pipeline sq-err vs the source tensor, bit-exact.
     pub sq_err: f64,
+    /// Rotation seed — present iff the tensor was actually rotated
+    /// (`:rot` scheme and 2-D shape); absent on v1 manifests, which never
+    /// packed rotated tensors.
+    pub rot_seed: Option<u64>,
+    /// Grid durable form — present iff the scheme element is `grid`;
+    /// absent on v1 manifests.
+    pub grid: Option<GridRecord>,
     pub codebook: Section,
     pub scales: Section,
     pub payload: Section,
@@ -232,13 +280,18 @@ pub struct AllocRecord {
     pub bits: Vec<f64>,
 }
 
-/// A parsed `OWQ1` container: manifest + byte source, with lazy,
+/// A parsed OWQ container: manifest + byte source, with lazy,
 /// checksum-verified, panic-contained per-tensor decoding.
 pub struct Artifact {
     pub meta: Json,
+    /// Manifest container rev (`MIN_VERSION..=VERSION`).
+    pub version: usize,
     pub codec: Codec,
     pub lanes: usize,
     pub alloc: Option<AllocRecord>,
+    /// Store tensors the packer skipped (non-f32 or empty) — empty for
+    /// v1 manifests, which did not record them.
+    pub skipped: Vec<String>,
     pub tensors: Vec<TensorRecord>,
     index: HashMap<String, usize>,
     source: ByteSource,
@@ -379,8 +432,12 @@ impl Artifact {
             .map_err(|e| invalid(format!("manifest not utf-8: {e}")))?;
         let manifest = Json::parse(text)
             .map_err(|e| invalid(format!("manifest parse: {e}")))?;
-        if req_usize(&manifest, "version")? != VERSION {
-            return Err(invalid("unsupported OWQ version"));
+        let version = req_usize(&manifest, "version")?;
+        if !(MIN_VERSION..=VERSION).contains(&version) {
+            return Err(invalid(format!(
+                "unsupported OWQ version {version} \
+                 (supported {MIN_VERSION}..={VERSION})"
+            )));
         }
         let codec =
             Codec::parse(&req_str(&manifest, "codec")?).map_err(invalid)?;
@@ -389,6 +446,19 @@ impl Artifact {
             return Err(invalid(format!("lane count {lanes} out of range")));
         }
         let meta = manifest.get("meta").cloned().unwrap_or(Json::obj());
+        let skipped: Vec<String> = match manifest.get("skipped") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(s) => s
+                .as_arr()
+                .ok_or_else(|| invalid("skipped not an array"))?
+                .iter()
+                .map(|j| {
+                    j.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| invalid("bad skipped entry"))
+                })
+                .collect::<AResult<_>>()?,
+        };
         let payload_len = source.len().saturating_sub(base);
 
         let mut tensors: Vec<TensorRecord> = Vec::new();
@@ -411,6 +481,46 @@ impl Artifact {
                 .get("channel_axis")
                 .filter(|j| !j.is_null())
                 .and_then(|j| j.as_usize());
+            let rot_seed = match entry
+                .get("rot_seed")
+                .filter(|j| !j.is_null())
+            {
+                Some(j) => {
+                    let s = j.as_str().ok_or_else(|| {
+                        invalid(format!("{name}: rot_seed not a hex string"))
+                    })?;
+                    Some(u64_from_hex(s).map_err(invalid)?)
+                }
+                None => None,
+            };
+            let grid = match entry.get("grid").filter(|j| !j.is_null()) {
+                Some(gj) => {
+                    let buckets: Vec<u16> = req(gj, "buckets")?
+                        .as_arr()
+                        .ok_or_else(|| {
+                            invalid(format!(
+                                "{name}: grid buckets not an array"
+                            ))
+                        })?
+                        .iter()
+                        .map(|j| {
+                            j.as_usize()
+                                .filter(|&b| b <= u16::MAX as usize)
+                                .map(|b| b as u16)
+                                .ok_or_else(|| {
+                                    invalid(format!(
+                                        "{name}: grid bucket out of range"
+                                    ))
+                                })
+                        })
+                        .collect::<AResult<_>>()?;
+                    Some(GridRecord {
+                        delta: req_hex_f64(gj, "delta")?,
+                        buckets,
+                    })
+                }
+                None => None,
+            };
             let rec = TensorRecord {
                 spec: req_str(entry, "spec")?,
                 n: req_usize(entry, "n")?,
@@ -423,6 +533,8 @@ impl Artifact {
                     .ok_or_else(|| invalid("missing transposed flag"))?,
                 bits: req_hex_f64(entry, "bits")?,
                 sq_err: req_hex_f64(entry, "sq_err")?,
+                rot_seed,
+                grid,
                 codebook: section_from(entry, "codebook")?,
                 scales: section_from(entry, "scales")?,
                 payload: section_from(entry, "payload")?,
@@ -439,6 +551,12 @@ impl Artifact {
             if rec.transposed && rec.shape.len() != 2 {
                 return Err(invalid(format!(
                     "{name}: transposed layout requires a 2-D shape"
+                )));
+            }
+            if rec.rot_seed.is_some() && rec.shape.len() != 2 {
+                return Err(invalid(format!(
+                    "{name}: rotation record requires a 2-D shape \
+                     (other ranks are documented identities)"
                 )));
             }
             for (sname, s) in rec.sections() {
@@ -492,9 +610,11 @@ impl Artifact {
         }
         Ok(Artifact {
             meta,
+            version,
             codec,
             lanes,
             alloc,
+            skipped,
             tensors,
             index,
             source,
@@ -674,10 +794,12 @@ impl Artifact {
 
     /// Decode tensor `i` into a caller-owned buffer: checksum-verified
     /// section reads → entropy decode (table-driven interleaved Huffman /
-    /// K-state rANS / raw) → fused [`Quantiser::decode_into`] → outlier
-    /// scatter-back → layout restore.  Bit-identical to the in-memory
-    /// pipeline's reconstruction for the recorded spec (enforced by
-    /// `rust/tests/artifact_props.rs` and the `scripts/check.sh` gate).
+    /// K-state rANS / raw) → fused [`Quantiser::decode_into`] (or a direct
+    /// codepoint gather for `grid` tensors) → outlier scatter-back →
+    /// layout restore → inverse rotation when a `rot_seed` is recorded.
+    /// Bit-identical to the in-memory pipeline's reconstruction for the
+    /// recorded spec and seed (enforced by `rust/tests/artifact_props.rs`
+    /// and the `scripts/check.sh` gate).
     ///
     /// No panic escapes: the decode runs under `catch_unwind`, so damage
     /// that slipped past a checksum (or a decoder bug) surfaces as a typed
@@ -727,6 +849,28 @@ impl Artifact {
         };
         let scheme = Scheme::parse(&rec.spec)
             .map_err(|e| invalid(format!("{name}: stored spec: {e}")))?;
+        // spec/record consistency (writer invariants, so disagreement is
+        // a forged or buggy manifest — Invalid, not media damage, which
+        // the checksums already rule out)
+        let rotated = scheme.rotate && rec.shape.len() == 2;
+        if rotated && rec.rot_seed.is_none() {
+            return Err(invalid(format!(
+                "{name}: :rot scheme on a 2-D tensor without a rotation \
+                 record"
+            )));
+        }
+        if !rotated && rec.rot_seed.is_some() {
+            return Err(invalid(format!(
+                "{name}: rotation record on a tensor the scheme does not \
+                 rotate"
+            )));
+        }
+        let is_grid = scheme.element == Element::Grid;
+        if is_grid != rec.grid.is_some() {
+            return Err(invalid(format!(
+                "{name}: grid record and scheme element disagree"
+            )));
+        }
         let points = self.f32_section("codebook", name, &rec.codebook)?;
         if points.is_empty() {
             return Err(corrupt("codebook", "empty codebook".into()));
@@ -757,31 +901,6 @@ impl Artifact {
             ));
         }
 
-        let groups =
-            scale_groups(rec.n, scheme.granularity, rec.channel_len);
-        if scales.len() != groups.len() {
-            return Err(corrupt(
-                "scales",
-                format!("{} scales for {} groups", scales.len(), groups.len()),
-            ));
-        }
-        let codebook = crate::formats::Codebook::with_bits(
-            points,
-            rec.storage_bits,
-        );
-        let quantiser = Quantiser::new(
-            scheme.granularity,
-            scheme.statistic,
-            scheme.scale_format,
-            codebook,
-        )
-        .with_multiplier(rec.multiplier);
-        let enc = Encoded {
-            scales,
-            indices,
-            groups,
-        };
-
         let idx = self.u32_section("outlier_idx", name, &rec.outlier_idx)?;
         let val = self.f32_section("outlier_val", name, &rec.outlier_val)?;
         if idx.len() != val.len() {
@@ -797,26 +916,109 @@ impl Artifact {
             ));
         }
 
-        if rec.transposed {
-            // layout space is the transpose; decode + scatter there, then
-            // permute into the caller's row-major buffer (the exact
-            // restore_layout permutation — values bit-identical)
-            let mut buf = vec![0f32; rec.n];
-            quantiser.decode_into(&enc, &mut buf);
-            for (&i, &v) in idx.iter().zip(&val) {
-                buf[i as usize] = v;
+        if let Some(g) = &rec.grid {
+            // grid form: the codebook section is the dense-slot codepoint
+            // table and decode is a direct gather — NOT through
+            // `Codebook`, which sorts its points (dense slots are in
+            // first-occurrence order)
+            if rec.transposed {
+                return Err(invalid(format!(
+                    "{name}: grid tensors are tensor-granularity \
+                     (never transposed)"
+                )));
             }
-            let (rows, cols) = (rec.shape[0], rec.shape[1]);
-            for c in 0..cols {
-                for r in 0..rows {
-                    out[r * cols + c] = buf[c * rows + r];
+            if !scales.is_empty() || !idx.is_empty() || !val.is_empty() {
+                return Err(invalid(format!(
+                    "{name}: grid tensors carry no scales or outliers"
+                )));
+            }
+            if g.buckets.len() != points.len() {
+                return Err(invalid(format!(
+                    "{name}: {} grid buckets for {} codepoints",
+                    g.buckets.len(),
+                    points.len()
+                )));
+            }
+            // cross-check the persisted table against the hex-exact δ:
+            // every codepoint must be exactly dequantise(bucket), the
+            // invariant the gather's bit-identity rests on
+            let grid = crate::compress::grid::UniformGrid::new(g.delta);
+            for (slot, (&b, &p)) in
+                g.buckets.iter().zip(points.iter()).enumerate()
+            {
+                if grid.dequantise(b).to_bits() != p.to_bits() {
+                    return Err(invalid(format!(
+                        "{name}: slot {slot} codepoint disagrees with \
+                         the recorded δ"
+                    )));
                 }
             }
-        } else {
-            quantiser.decode_into(&enc, out);
-            for (&i, &v) in idx.iter().zip(&val) {
-                out[i as usize] = v;
+            for (o, &s) in out.iter_mut().zip(&indices) {
+                *o = points[s as usize];
             }
+        } else {
+            let groups =
+                scale_groups(rec.n, scheme.granularity, rec.channel_len);
+            if scales.len() != groups.len() {
+                return Err(corrupt(
+                    "scales",
+                    format!(
+                        "{} scales for {} groups",
+                        scales.len(),
+                        groups.len()
+                    ),
+                ));
+            }
+            let codebook = crate::formats::Codebook::with_bits(
+                points,
+                rec.storage_bits,
+            );
+            let quantiser = Quantiser::new(
+                scheme.granularity,
+                scheme.statistic,
+                scheme.scale_format,
+                codebook,
+            )
+            .with_multiplier(rec.multiplier);
+            let enc = Encoded {
+                scales,
+                indices,
+                groups,
+            };
+
+            if rec.transposed {
+                // layout space is the transpose; decode + scatter there,
+                // then permute into the caller's row-major buffer (the
+                // exact restore_layout permutation — values bit-identical)
+                let mut buf = vec![0f32; rec.n];
+                quantiser.decode_into(&enc, &mut buf);
+                for (&i, &v) in idx.iter().zip(&val) {
+                    buf[i as usize] = v;
+                }
+                let (rows, cols) = (rec.shape[0], rec.shape[1]);
+                for c in 0..cols {
+                    for r in 0..rows {
+                        out[r * cols + c] = buf[c * rows + r];
+                    }
+                }
+            } else {
+                quantiser.decode_into(&enc, out);
+                for (&i, &v) in idx.iter().zip(&val) {
+                    out[i as usize] = v;
+                }
+            }
+        }
+
+        // back into the original basis: V/W re-derived from the recorded
+        // seed through the one shared helper, inverse applied after the
+        // fused dequant — exactly where qdq_tensor applies it
+        if let Some(seed) = rec.rot_seed {
+            let (rows, cols) = (rec.shape[0], rec.shape[1]);
+            let (v, w) =
+                crate::eval::pipeline::rotation_pair(rows, cols, seed);
+            crate::quant::rotation::rotate_2d_inverse(
+                out, rows, cols, &v, &w,
+            );
         }
         Ok(())
     }
@@ -866,12 +1068,14 @@ impl Artifact {
                         ),
                     ));
                 }
-                let k = counts.len() as u16;
+                // compare in usize: a full 2^16-symbol alphabet would wrap
+                // a u16 bound to 0 and reject every valid index
+                let k = counts.len();
                 let indices: Vec<u16> = payload
                     .chunks_exact(2)
                     .map(|c| u16::from_le_bytes([c[0], c[1]]))
                     .collect();
-                if indices.iter().any(|&i| i >= k) {
+                if indices.iter().any(|&i| (i as usize) >= k) {
                     return Err(ArtifactError::corrupt(
                         name,
                         "payload",

@@ -2,7 +2,11 @@
 //! requests, an LRU decoded-tensor cache, single-flight decode
 //! coalescing, a corruption quarantine and a bounded admission gate — the
 //! piece `owf serve-bench` drives and `owf quantise --from` feeds into the
-//! KL evaluation harness.
+//! KL evaluation harness.  The server is scheme-agnostic: `:rot` and
+//! `grid` tensors (container v2) flow through the same
+//! [`Artifact::decode_tensor_into`] path — inverse rotation and the grid
+//! gather happen inside the artifact decode, so caching, coalescing and
+//! quarantine need no per-scheme handling.
 //!
 //! Concurrency model: the artifact itself is immutable, so decodes run
 //! in parallel outside the lock; one mutex guards the cache map, the

@@ -1,18 +1,25 @@
-//! The `OWQ1` pack path: Fisher/RMS bit allocation → the pipeline's fused
-//! encode ([`crate::eval::pipeline::encode_tensor`], bit-identical to the
+//! The OWQ pack path (container version 2, magic `OWQ1`): Fisher/RMS bit
+//! allocation → the pipeline's fused encode
+//! ([`crate::eval::pipeline::encode_tensor`], bit-identical to the
 //! in-memory qdq) → K-lane interleaved entropy coding → checksummed
 //! sections → crash-safe atomic write (temp file + rename, like
 //! [`crate::tensorstore::Store::save`]).
 //!
+//! Every scheme the sweep grammar can produce is packable: codebook
+//! families persist (codebook, scales, coded indices, histogram, outlier
+//! overlay); `grid` schemes persist the dense-slot codepoint table in the
+//! codebook section, the entropy-coded dense stream in the payload
+//! section and the hex-exact δ + slot→bucket map in the manifest; `:rot`
+//! schemes record the per-tensor rotation seed so the reader can re-derive
+//! V/W and invert after decode.
+//!
 //! Failures are typed [`ArtifactError`]s: configuration problems (bad
-//! spec, unpackable scheme) are `Invalid`, write failures are `Io` with
-//! transiency classified from the underlying `ErrorKind` (via
+//! spec, over-capacity rANS alphabet) are `Invalid`, write failures are
+//! `Io` with transiency classified from the underlying `ErrorKind` (via
 //! [`crate::util::fsx::atomic_write_io`], which preserves it).
 
 use std::collections::HashMap;
 use std::path::Path;
-
-use anyhow::{bail, Result};
 
 use super::{
     f64_to_hex, fnv1a64, u64_to_hex, AResult, ArtifactError, Codec, ALIGN,
@@ -21,10 +28,10 @@ use super::{
 use crate::alloc::{
     round_allocation, variable_allocation, TensorInfo,
 };
-use crate::compress::rans::rans_encode_interleaved;
+use crate::compress::rans::{rans_encode_interleaved, RANS_MAX_SYMBOLS};
 use crate::compress::{tables, MAX_LANES};
-use crate::coordinator::config::{Element, Scheme};
-use crate::eval::pipeline::encode_tensor;
+use crate::coordinator::config::Scheme;
+use crate::eval::pipeline::{encode_tensor, EncodedForm};
 use crate::tensorstore::{Dtype, Store};
 use crate::util::json::Json;
 
@@ -47,18 +54,21 @@ impl AllocMode {
         }
     }
 
-    pub fn parse(s: &str) -> Result<AllocMode> {
+    pub fn parse(s: &str) -> AResult<AllocMode> {
         match s {
             "flat" => Ok(AllocMode::Flat),
             "variable" => Ok(AllocMode::Variable),
-            other => bail!("unknown alloc mode {other:?} (flat|variable)"),
+            other => Err(ArtifactError::invalid(format!(
+                "unknown alloc mode {other:?} (flat|variable)"
+            ))),
         }
     }
 }
 
 /// Pack configuration.
 pub struct PackOptions {
-    /// Base scheme spec (`:rot` and `grid` are not packable).
+    /// Base scheme spec — any spec the sweep grammar accepts, including
+    /// `:rot` and `grid`.
     pub spec: String,
     pub alloc: AllocMode,
     pub codec: Codec,
@@ -87,6 +97,10 @@ pub struct PackSummary {
     pub packed_bits: f64,
     /// Summed pipeline sq-err across tensors.
     pub sq_err: f64,
+    /// Names of store tensors *not* packed (non-f32 or empty) — also
+    /// recorded in the manifest so a container serving fewer tensors than
+    /// its checkpoint is diagnosable; `owf pack` warns about them.
+    pub skipped: Vec<String>,
 }
 
 /// Append one section to the payload buffer (64-byte aligned) and return
@@ -148,26 +162,23 @@ pub fn pack_store(
     let base = Scheme::parse(&opts.spec).map_err(|e| {
         ArtifactError::invalid(format!("pack spec {:?}: {e}", opts.spec))
     })?;
-    if base.rotate {
-        return Err(ArtifactError::invalid(
-            "cannot pack :rot schemes (rotation has no durable form yet)",
-        ));
-    }
-    if base.element == Element::Grid {
-        return Err(ArtifactError::invalid(
-            "cannot pack grid schemes (no codebook indices to persist)",
-        ));
-    }
     if !(1..=MAX_LANES).contains(&opts.lanes) {
         return Err(ArtifactError::invalid(format!(
             "lane count {} outside 1..={MAX_LANES}",
             opts.lanes
         )));
     }
+    let mut skipped: Vec<String> = Vec::new();
     let tensors: Vec<&crate::tensorstore::Tensor> = store
         .tensors
         .iter()
-        .filter(|t| t.dtype == Dtype::F32 && t.numel() > 0)
+        .filter(|t| {
+            let packable = t.dtype == Dtype::F32 && t.numel() > 0;
+            if !packable {
+                skipped.push(t.name.clone());
+            }
+            packable
+        })
         .collect();
     if tensors.is_empty() {
         return Err(ArtifactError::invalid(
@@ -235,26 +246,68 @@ pub fn pack_store(
         let mut scheme = base.clone();
         scheme.bits = bits;
         let data = t.as_f32();
+        // rotation seed: derived from the tensor name, so it is stable
+        // across re-packs and needs no coordination with the source
+        // (recorded in the manifest iff the tensor was actually rotated)
+        let rot_seed = fnv1a64(t.name.as_bytes());
         let et = encode_tensor(
             &scheme,
             &data,
             &t.shape,
             t.channel_axis,
             &[],
+            rot_seed,
         )
         .map_err(|e| {
             ArtifactError::invalid(format!("encode {:?}: {e}", t.name))
         })?;
 
+        // alphabet capacity: rANS normalises every seen symbol into a
+        // 2^12-slot table and cannot represent more distinct symbols than
+        // slots (the coder would panic) — fail typed up front instead
+        let seen = et.counts.iter().filter(|&&c| c > 0).count();
+        if matches!(opts.codec, Codec::Rans) && seen > RANS_MAX_SYMBOLS {
+            return Err(ArtifactError::invalid(format!(
+                "tensor {:?}: {seen} distinct symbols exceed the rANS \
+                 normalisation capacity of {RANS_MAX_SYMBOLS} — pack \
+                 with --codec huffman or raw",
+                t.name
+            )));
+        }
+
+        let indices: &[u16] = match &et.form {
+            EncodedForm::Codebook { enc, .. } => &enc.indices,
+            EncodedForm::Grid { indices, .. } => indices,
+        };
         let coded: Vec<u8> = match opts.codec {
-            Codec::Raw => u16_bytes(&et.enc.indices),
+            Codec::Raw => u16_bytes(indices),
             Codec::Huffman => tables::huffman_for(&et.counts)
-                .encode_interleaved(&et.enc.indices, opts.lanes),
+                .encode_interleaved(indices, opts.lanes),
             Codec::Rans => rans_encode_interleaved(
                 &tables::rans_for(&et.counts),
-                &et.enc.indices,
+                indices,
                 opts.lanes,
             ),
+        };
+        // grid tensors re-use the codebook section for the dense-slot
+        // codepoint table and leave scales empty; the manifest carries
+        // the hex-exact δ + slot→bucket map the reader cross-checks the
+        // table against
+        let (points_bytes, scales_bytes) = match &et.form {
+            EncodedForm::Codebook { quantiser, enc } => (
+                f32_bytes(quantiser.codebook.points()),
+                f32_bytes(&enc.scales),
+            ),
+            EncodedForm::Grid { points, .. } => {
+                (f32_bytes(points), Vec::new())
+            }
+        };
+        let (multiplier, storage_bits) = match &et.form {
+            EncodedForm::Codebook { quantiser, .. } => (
+                quantiser.scale_multiplier,
+                quantiser.codebook.storage_bits(),
+            ),
+            EncodedForm::Grid { .. } => (scheme.multiplier, 0.0),
         };
 
         let mut entry = Json::obj()
@@ -265,58 +318,60 @@ pub fn pack_store(
             Some(ax) => entry.push("channel_axis", ax),
             None => entry.push("channel_axis", Json::Null),
         };
-        let entry = entry
+        let mut entry = entry
             .push("spec", scheme.name())
-            .push(
-                "multiplier",
-                f64_to_hex(et.quantiser.scale_multiplier),
-            )
-            .push(
-                "storage_bits",
-                f64_to_hex(et.quantiser.codebook.storage_bits()),
-            )
+            .push("multiplier", f64_to_hex(multiplier))
+            .push("storage_bits", f64_to_hex(storage_bits))
             .push("channel_len", et.channel_len)
             .push("transposed", et.transposed)
             .push("bits", f64_to_hex(et.bits))
-            .push("sq_err", f64_to_hex(et.sq_err))
-            .push(
-                "sections",
-                Json::Obj(vec![
-                    (
-                        "codebook".to_string(),
-                        push_section(
-                            &mut payload,
-                            &f32_bytes(et.quantiser.codebook.points()),
-                        ),
+            .push("sq_err", f64_to_hex(et.sq_err));
+        if let Some(seed) = et.rot_seed {
+            entry = entry.push("rot_seed", u64_to_hex(seed));
+        }
+        if let EncodedForm::Grid { delta, buckets, .. } = &et.form {
+            entry = entry.push(
+                "grid",
+                Json::obj()
+                    .push("delta", f64_to_hex(*delta))
+                    .push(
+                        "buckets",
+                        buckets
+                            .iter()
+                            .map(|&b| b as usize)
+                            .collect::<Vec<usize>>(),
                     ),
-                    (
-                        "scales".to_string(),
-                        push_section(&mut payload, &f32_bytes(&et.enc.scales)),
-                    ),
-                    (
-                        "payload".to_string(),
-                        push_section(&mut payload, &coded),
-                    ),
-                    (
-                        "counts".to_string(),
-                        push_section(&mut payload, &u64_bytes(&et.counts)),
-                    ),
-                    (
-                        "outlier_idx".to_string(),
-                        push_section(
-                            &mut payload,
-                            &u32_bytes(&et.outlier_idx),
-                        ),
-                    ),
-                    (
-                        "outlier_val".to_string(),
-                        push_section(
-                            &mut payload,
-                            &f32_bytes(&et.outlier_val),
-                        ),
-                    ),
-                ]),
             );
+        }
+        let entry = entry.push(
+            "sections",
+            Json::Obj(vec![
+                (
+                    "codebook".to_string(),
+                    push_section(&mut payload, &points_bytes),
+                ),
+                (
+                    "scales".to_string(),
+                    push_section(&mut payload, &scales_bytes),
+                ),
+                (
+                    "payload".to_string(),
+                    push_section(&mut payload, &coded),
+                ),
+                (
+                    "counts".to_string(),
+                    push_section(&mut payload, &u64_bytes(&et.counts)),
+                ),
+                (
+                    "outlier_idx".to_string(),
+                    push_section(&mut payload, &u32_bytes(&et.outlier_idx)),
+                ),
+                (
+                    "outlier_val".to_string(),
+                    push_section(&mut payload, &f32_bytes(&et.outlier_val)),
+                ),
+            ]),
+        );
         entries.push(entry);
         elements += t.numel();
         bits_weighted += et.bits * t.numel() as f64;
@@ -331,6 +386,7 @@ pub fn pack_store(
         .push("codec", opts.codec.name())
         .push("lanes", opts.lanes)
         .push("alloc", alloc_json)
+        .push("skipped", skipped.clone())
         .push("tensors", Json::Arr(entries))
         .to_string();
 
@@ -353,5 +409,6 @@ pub fn pack_store(
         mean_bits: bits_weighted / elements as f64,
         packed_bits: payload.len() as f64 * 8.0 / elements as f64,
         sq_err,
+        skipped,
     })
 }

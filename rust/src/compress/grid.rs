@@ -63,26 +63,29 @@ impl UniformGrid {
 
     /// Histogram over occupied buckets, re-indexed densely.
     /// Returns (dense counts, dense symbol per element).
-    /// Flat u16-indexed tables (not a HashMap) — this sits inside the δ
+    /// Flat-indexed tables (not a HashMap) — this sits inside the δ
     /// search loop of `grid_for_target_bits` (see EXPERIMENTS.md §Perf).
+    ///
+    /// The slot table is u32 with a `u32::MAX` sentinel: a u16 sentinel
+    /// would collide with dense slot 65535 at full occupancy (all 2^16
+    /// buckets seen), re-assigning that bucket a fresh — and silently
+    /// truncated — slot on every occurrence.  With `max_buckets = 2^16`
+    /// the largest possible dense slot is 65535, so every assigned slot
+    /// still fits the u16 symbols the entropy coders consume.
     pub fn dense_histogram(&self, indices: &[u16]) -> (Vec<u64>, Vec<u16>) {
-        let mut raw_counts = vec![0u64; self.max_buckets];
-        for &i in indices {
-            raw_counts[i as usize] += 1;
-        }
-        let mut slot_of = vec![u16::MAX; self.max_buckets];
+        let mut slot_of = vec![u32::MAX; self.max_buckets];
         let mut counts: Vec<u64> = Vec::new();
         // assign dense slots in first-occurrence order to stay
         // deterministic w.r.t. the previous implementation's semantics
         let mut dense = Vec::with_capacity(indices.len());
         for &i in indices {
             let slot = &mut slot_of[i as usize];
-            if *slot == u16::MAX {
-                *slot = counts.len() as u16;
+            if *slot == u32::MAX {
+                *slot = counts.len() as u32;
                 counts.push(0);
             }
             counts[*slot as usize] += 1;
-            dense.push(*slot);
+            dense.push(*slot as u16);
         }
         (counts, dense)
     }
@@ -375,6 +378,27 @@ mod tests {
             let windowed: Vec<u64> =
                 counts.iter().copied().filter(|&c| c > 0).collect();
             assert_eq!(nonzero, windowed);
+        }
+    }
+
+    #[test]
+    fn dense_histogram_full_occupancy_has_no_sentinel_collision() {
+        // regression: with all 2^16 buckets occupied, the old u16 slot
+        // table's `u16::MAX` sentinel collided with dense slot 65535, so
+        // that bucket was re-assigned a fresh (truncated) slot on every
+        // occurrence and the counts table grew without bound
+        let grid = UniformGrid::new(1.0);
+        let mut idx: Vec<u16> = (0..=u16::MAX).collect();
+        idx.extend(0..=u16::MAX); // second pass must *reuse* every slot
+        let (counts, dense) = grid.dense_histogram(&idx);
+        assert_eq!(counts.len(), 1 << 16);
+        assert!(counts.iter().all(|&c| c == 2));
+        let n = 1usize << 16;
+        for i in 0..n {
+            // first-occurrence order ⇒ slot i is bucket i here, and the
+            // second occurrence maps to the same slot
+            assert_eq!(dense[i] as usize, i);
+            assert_eq!(dense[n + i] as usize, i);
         }
     }
 

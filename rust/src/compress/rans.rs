@@ -18,6 +18,13 @@ const PROB_BITS: u32 = 12;
 const PROB_SCALE: u32 = 1 << PROB_BITS;
 const RANS_LOW: u32 = 1 << 23;
 
+/// The most *distinct seen* symbols a [`RansModel`] can represent: every
+/// seen symbol keeps freq ≥ 1 out of 2^12 total slots, so an alphabet
+/// with more seen symbols than slots cannot normalise (the builder
+/// asserts).  Callers with unbounded alphabets (e.g. the artifact
+/// writer's grid path) must check against this before choosing rANS.
+pub const RANS_MAX_SYMBOLS: usize = PROB_SCALE as usize;
+
 /// Frequency table quantised to 2^12, with cumulative offsets.
 #[derive(Clone, Debug)]
 pub struct RansModel {

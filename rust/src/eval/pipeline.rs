@@ -50,12 +50,15 @@ pub fn qdq_tensor(
     fisher: &[f32],
     seed: u64,
 ) -> Result<TensorQdq> {
-    // --- rotation: into the rotated basis (2-D only; fig. 29) -------------
+    // --- rotation: into the rotated basis (2-D only; fig. 29).  On any
+    // other rank a `:rot` spec is a *documented identity rotation* — no
+    // basis change, and the artifact writer records no rotation seed for
+    // the tensor, so the packed and in-memory paths agree by construction
+    // (see `EncodedTensor::rot_seed`).
     let mut work = data.to_vec();
     let rot = if scheme.rotate && shape.len() == 2 {
         let (rows, cols) = (shape[0], shape[1]);
-        let v = RandomRotation::new(rows, seed ^ 0xA11CE);
-        let w = RandomRotation::new(cols, seed ^ 0xB0B);
+        let (v, w) = rotation_pair(rows, cols, seed);
         rotate_2d(&mut work, rows, cols, &v, &w);
         Some((v, w))
     } else {
@@ -93,6 +96,23 @@ pub fn qdq_tensor(
         bits: result.bits,
         sq_err,
     })
+}
+
+/// The deterministic rotation pair for a 2-D tensor: `V` mixes rows, `W`
+/// mixes columns.  The seed-derivation constants live here and nowhere
+/// else — [`qdq_tensor`], [`encode_tensor`] and the artifact reader's
+/// inverse rotation all resolve (rows, cols, seed) through this one
+/// helper, so the packed and in-memory paths can never disagree about
+/// which basis a tensor was rotated into.
+pub fn rotation_pair(
+    rows: usize,
+    cols: usize,
+    seed: u64,
+) -> (RandomRotation, RandomRotation) {
+    (
+        RandomRotation::new(rows, seed ^ 0xA11CE),
+        RandomRotation::new(cols, seed ^ 0xB0B),
+    )
 }
 
 /// Transpose 2-D data when channel scaling wants column groups.
@@ -246,20 +266,47 @@ fn qdq_codebook(
     Ok(Reconstructed { recon, bits })
 }
 
+/// The durable payload form of one encoded tensor — what the artifact
+/// writer turns into sections.
+pub enum EncodedForm {
+    /// Codebook families: the configured quantiser (codebook + resolved
+    /// multiplier) plus the per-group encoding (scales + indices).
+    Codebook {
+        quantiser: Quantiser,
+        enc: crate::quant::Encoded,
+    },
+    /// Codebook-free uniform grid (§2.3): the dense-remapped symbol
+    /// stream plus the occupied-bucket table.  `points[s]` is always
+    /// exactly `UniformGrid::new(delta).dequantise(buckets[s])`, which is
+    /// what lets the artifact reader cross-check the persisted codepoint
+    /// table against the hex-exact δ before gathering.  (The reader must
+    /// *not* route these points through `Codebook`, which sorts — dense
+    /// slots are in first-occurrence order.)
+    Grid {
+        delta: f64,
+        /// Dense slot → raw grid bucket, first-occurrence order.
+        buckets: Vec<u16>,
+        /// Dense slot → f32 codepoint (`dequantise(buckets[s])`).
+        points: Vec<f32>,
+        /// Per-element dense slots — the entropy-coded payload stream.
+        indices: Vec<u16>,
+    },
+}
+
 /// Everything the quantisation pipeline produced for one tensor, in the
-/// durable form the `OWQ1` artifact writer persists: the configured
-/// quantiser (codebook + resolved multiplier), the encoding (scales +
-/// indices + groups), the index histogram (the entropy model the coded
-/// payload is built from), the sparse outlier overlay, the honest bits
+/// durable form the artifact writer persists: the payload [`EncodedForm`],
+/// the symbol histogram (the entropy model the coded payload is built
+/// from), the sparse outlier overlay, the rotation record, the honest bits
 /// accounting and the reconstruction — which is **bit-identical** to
-/// [`qdq_tensor`]'s for the same scheme (`decode(encode(x)) ≡ qdq(x)` by
-/// the fused-kernel contract, and both paths share [`build_quantiser`],
-/// the layout helpers and the same bits/sq-err expressions; enforced by
+/// [`qdq_tensor`]'s for the same scheme and seed (`decode(encode(x)) ≡
+/// qdq(x)` by the fused-kernel contract, and both paths share
+/// [`build_quantiser`], [`grid_for_scheme`], [`rotation_pair`], the layout
+/// helpers and the same bits/sq-err expressions; enforced by
 /// `rust/tests/artifact_props.rs`).
 pub struct EncodedTensor {
-    pub quantiser: Quantiser,
-    pub enc: crate::quant::Encoded,
-    /// Codebook-index histogram of the dense stream (outliers zeroed).
+    pub form: EncodedForm,
+    /// Symbol histogram of the dense stream (codebook indices with
+    /// outliers zeroed, or dense grid slots).
     pub counts: Vec<u64>,
     /// Sorted outlier positions in *layout* space, with their exact values.
     pub outlier_idx: Vec<u32>,
@@ -277,35 +324,90 @@ pub struct EncodedTensor {
     pub sq_err: f64,
     /// Reconstruction in the original row-major layout.
     pub recon: Vec<f32>,
+    /// `Some(seed)` iff the tensor was actually rotated (`:rot` *and*
+    /// 2-D).  A `:rot` spec on any other rank is a documented identity
+    /// rotation: recorded as `None` here (and absent from the manifest),
+    /// so the packed and in-memory paths agree explicitly — never
+    /// silently — that no basis change was applied.
+    pub rot_seed: Option<u64>,
 }
 
 /// Quantise one tensor under a scheme and keep the *encoded* form — the
 /// artifact-pack counterpart of [`qdq_tensor`] (which discards indices on
-/// its fast paths).  Rotation (`:rot`) and the codebook-free `grid` element
-/// are not packable and error out; everything else — all codebook families,
-/// `:compress`, `:sparse`, `:search`, channel layout — round-trips.
+/// its fast paths).  Every scheme the sweep grammar can produce
+/// round-trips: all codebook families, `:compress`, `:sparse`, `:search`,
+/// channel layout, `:rot` (the rotation seed is recorded; the reader
+/// re-derives V/W via [`rotation_pair`] and inverts after decode) and the
+/// codebook-free `grid` element (dense slot stream + bucket table).
 pub fn encode_tensor(
     scheme: &Scheme,
     data: &[f32],
     shape: &[usize],
     channel_axis: Option<usize>,
     fisher: &[f32],
+    seed: u64,
 ) -> Result<EncodedTensor> {
-    if scheme.rotate {
-        bail!("artifact packing does not support :rot schemes");
-    }
-    if scheme.element == Element::Grid {
-        bail!(
-            "artifact packing does not support the grid element \
-             (no codebook indices to persist)"
-        );
-    }
+    // rotation: the exact basis decision qdq_tensor makes (2-D only;
+    // identity otherwise, recorded as rot_seed = None)
+    let mut work = data.to_vec();
+    let rot = if scheme.rotate && shape.len() == 2 {
+        let (rows, cols) = (shape[0], shape[1]);
+        let (v, w) = rotation_pair(rows, cols, seed);
+        rotate_2d(&mut work, rows, cols, &v, &w);
+        Some((v, w))
+    } else {
+        None
+    };
+    let rot_seed = rot.as_ref().map(|_| seed);
+
     let (mut flat, channel_len, transposed) = prepare_layout(
-        data.to_vec(),
+        work,
         shape,
         channel_axis,
         scheme.granularity,
     );
+
+    if scheme.element == Element::Grid {
+        // grid path: δ and the honest bits figure come from the same
+        // resolution helper as qdq_tensor; sparse overlays are ignored
+        // exactly as the in-memory grid path ignores them
+        let (grid, bits) = grid_for_scheme(scheme, &flat)?;
+        let (raw_idx, _sq) = grid.encode(&flat);
+        let (counts, dense) = grid.dense_histogram(&raw_idx);
+        let mut buckets = vec![0u16; counts.len()];
+        for (&slot, &raw) in dense.iter().zip(&raw_idx) {
+            buckets[slot as usize] = raw;
+        }
+        let points: Vec<f32> =
+            buckets.iter().map(|&b| grid.dequantise(b)).collect();
+        // recon via the same parallel kernel as qdq_tensor; the reader's
+        // gather agrees bit-for-bit because
+        // points[dense[i]] = dequantise(raw_idx[i]) = qdq(flat[i])
+        let mut recon =
+            restore_layout(grid_qdq_all(&grid, &flat), shape, transposed);
+        if let Some((v, w)) = &rot {
+            rotate_2d_inverse(&mut recon, shape[0], shape[1], v, w);
+        }
+        let sq_err = crate::util::stats::sq_err(data, &recon);
+        return Ok(EncodedTensor {
+            form: EncodedForm::Grid {
+                delta: grid.delta,
+                buckets,
+                points,
+                indices: dense,
+            },
+            counts,
+            outlier_idx: Vec::new(),
+            outlier_val: Vec::new(),
+            bits,
+            channel_len,
+            transposed,
+            sq_err,
+            recon,
+            rot_seed,
+        });
+    }
+
     let quantiser = build_quantiser(scheme, &flat, channel_len, fisher)?;
 
     // sparse overlay: same selection as the in-memory dense+sparse path —
@@ -350,11 +452,13 @@ pub fn encode_tensor(
         bits = bits - quantiser.codebook.storage_bits() + h;
     }
 
-    let recon = restore_layout(flat, shape, transposed);
+    let mut recon = restore_layout(flat, shape, transposed);
+    if let Some((v, w)) = &rot {
+        rotate_2d_inverse(&mut recon, shape[0], shape[1], v, w);
+    }
     let sq_err = crate::util::stats::sq_err(data, &recon);
     Ok(EncodedTensor {
-        quantiser,
-        enc,
+        form: EncodedForm::Codebook { quantiser, enc },
         counts: stats.counts,
         outlier_idx,
         outlier_val,
@@ -363,19 +467,30 @@ pub fn encode_tensor(
         transposed,
         sq_err,
         recon,
+        rot_seed,
     })
 }
 
-/// Compressed uniform grid path (§2.3/§4): tensor-RMS scaling is *folded
-/// into the grid resolution* — one global relative resolution
-/// δ_t = c·RMS(θ_t) with c = 2^(h₀ − b), h₀ the differential entropy of a
-/// unit Normal (½·log2(2πe) ≈ 2.047).  Per-tensor *rates* then vary with
-/// tail weight (heavier tails → higher entropy → more bits), which is
-/// exactly the cross-tensor variable-length allocation the paper credits
-/// for the compressed format's win; the realised entropy is reported as
-/// the honest bits figure.  A per-tensor δ search to a *fixed* rate
+/// Resolve δ and the honest bits figure for a `grid` scheme over one
+/// laid-out tensor (§2.3/§4): tensor-RMS scaling is *folded into the grid
+/// resolution* — one global relative resolution δ_t = c·RMS(θ_t) with
+/// c = 2^(h₀ − b), h₀ the differential entropy of a unit Normal
+/// (½·log2(2πe) ≈ 2.047).  Per-tensor *rates* then vary with tail weight
+/// (heavier tails → higher entropy → more bits), which is exactly the
+/// cross-tensor variable-length allocation the paper credits for the
+/// compressed format's win; the realised entropy is reported as the
+/// honest bits figure.  A per-tensor δ search to a *fixed* rate
 /// (`:search` flag) is also available, and measurably worse at low b.
-fn qdq_grid(scheme: &Scheme, flat: &[f32]) -> Result<Reconstructed> {
+///
+/// The single resolution path shared by [`qdq_tensor`] and
+/// [`encode_tensor`]: the bits figure in particular must come from the
+/// *same* histogram walk on both paths (f64 entropy summation is
+/// order-sensitive, so recomputing it from, say, the dense-remapped
+/// histogram would not be bit-identical).
+fn grid_for_scheme(
+    scheme: &Scheme,
+    flat: &[f32],
+) -> Result<(crate::compress::grid::UniformGrid, f64)> {
     if scheme.granularity != Granularity::Tensor {
         bail!("grid schemes use tensor granularity (scale folds into δ)");
     }
@@ -383,19 +498,23 @@ fn qdq_grid(scheme: &Scheme, flat: &[f32]) -> Result<Reconstructed> {
         // explicit per-tensor rate search (fixed-rate-per-tensor ablation)
         let r = grid_for_target_bits(flat, scheme.bits);
         let grid = crate::compress::grid::UniformGrid::new(r.delta);
-        return Ok(Reconstructed {
-            recon: grid_qdq_all(&grid, flat),
-            bits: r.bits_per_element,
-        });
+        return Ok((grid, r.bits_per_element));
     }
     const H0: f64 = 2.047; // ½·log2(2πe)
     let rms = crate::util::stats::rms(flat).max(1e-30);
     let delta = rms * 2f64.powf(H0 - scheme.bits) * scheme.multiplier;
     let grid = crate::compress::grid::UniformGrid::new(delta);
     let (counts, _sq_err) = grid.count_histogram(flat);
+    Ok((grid, entropy_bits(&counts)))
+}
+
+/// Compressed uniform grid path: resolve δ via [`grid_for_scheme`], then
+/// reconstruct with the parallel elementwise kernel.
+fn qdq_grid(scheme: &Scheme, flat: &[f32]) -> Result<Reconstructed> {
+    let (grid, bits) = grid_for_scheme(scheme, flat)?;
     Ok(Reconstructed {
         recon: grid_qdq_all(&grid, flat),
-        bits: entropy_bits(&counts),
+        bits,
     })
 }
 
@@ -515,6 +634,34 @@ mod tests {
             r_rot < r_plain,
             "rotation should fix the outlier: {r_rot} vs {r_plain}"
         );
+    }
+
+    #[test]
+    fn rot_on_non_2d_is_an_explicit_recorded_identity() {
+        // `:rot` only has a basis change for rank-2 tensors; on any other
+        // rank both pipelines apply the documented identity and the
+        // encoded form records rot_seed = None, so a packed container can
+        // never disagree with the in-memory path about rotation
+        let mut rng = Rng::new(11);
+        let data = Dist::standard(Family::Normal, 0.0)
+            .sample_vec(&mut rng, 128);
+        let scheme = Scheme::parse("cbrt-normal@4:tensor-rms:rot").unwrap();
+        let et =
+            encode_tensor(&scheme, &data, &[128], None, &[], 7).unwrap();
+        assert!(et.rot_seed.is_none(), "1-D :rot must record identity");
+        let q = qdq_tensor(&scheme, &data, &[128], None, &[], 7).unwrap();
+        assert_eq!(et.recon, q.recon);
+        assert_eq!(et.bits.to_bits(), q.bits.to_bits());
+        assert_eq!(et.sq_err.to_bits(), q.sq_err.to_bits());
+
+        // rank-2 genuinely rotates and records the seed it used
+        let data2 = data_2d(16, 8, 12);
+        let et2 = encode_tensor(&scheme, &data2, &[16, 8], None, &[], 7)
+            .unwrap();
+        assert_eq!(et2.rot_seed, Some(7));
+        let q2 = qdq_tensor(&scheme, &data2, &[16, 8], None, &[], 7)
+            .unwrap();
+        assert_eq!(et2.recon, q2.recon);
     }
 
     #[test]

@@ -428,8 +428,17 @@ fn verify_artifact(art: &Artifact) -> Result<()> {
         }
         let data = t.as_f32();
         let scheme = Scheme::parse(&rec.spec)?;
-        let reference =
-            qdq_tensor(&scheme, &data, &t.shape, t.channel_axis, &[], 0)?;
+        // rotated tensors replay under the recorded per-tensor seed; the
+        // seed is irrelevant to every other scheme (identity rotation)
+        let seed = rec.rot_seed.unwrap_or(0);
+        let reference = qdq_tensor(
+            &scheme,
+            &data,
+            &t.shape,
+            t.channel_axis,
+            &[],
+            seed,
+        )?;
         let decoded = art.decode_tensor(i)?;
         for (j, (&a, &b)) in
             decoded.iter().zip(&reference.recon).enumerate()
@@ -554,6 +563,14 @@ fn cmd_pack(args: &Args) -> Result<()> {
     };
     let t0 = std::time::Instant::now();
     let summary = pack_store(&store, &fisher_mean, &opts, &out)?;
+    if !summary.skipped.is_empty() {
+        println!(
+            "[warning: skipped {} non-f32/empty tensor(s): {} — the \
+             container serves fewer tensors than its source]",
+            summary.skipped.len(),
+            summary.skipped.join(", "),
+        );
+    }
     println!(
         "pack: {} tensors, {} elements -> {:?} ({} bytes) in {:.2}s",
         summary.tensors,
@@ -581,8 +598,9 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         .context("usage: owf inspect <file.owq> [--verify]")?;
     let art = Artifact::open(path)?;
     println!(
-        "{path}: OWQ1, {} tensors, {} elements, {} payload bytes, \
+        "{path}: OWQ v{}, {} tensors, {} elements, {} payload bytes, \
          codec {} x{}",
+        art.version,
         art.tensors.len(),
         art.total_elements(),
         art.payload_bytes(),
@@ -595,16 +613,32 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             a.scheme, a.target, a.average
         );
     }
+    if !art.skipped.is_empty() {
+        println!(
+            "  skipped at pack time (non-f32/empty): {}",
+            art.skipped.join(", ")
+        );
+    }
     println!("  meta: {}", art.meta);
     for rec in &art.tensors {
         let packed =
             rec.payload.len as f64 * 8.0 / rec.n.max(1) as f64;
+        let mut marks = String::new();
+        if rec.transposed {
+            marks.push_str(" T");
+        }
+        if rec.rot_seed.is_some() {
+            marks.push_str(" R");
+        }
+        if let Some(g) = &rec.grid {
+            marks.push_str(&format!(" G{}", g.buckets.len()));
+        }
         println!(
             "  {:<24} {:?}{} {:<36} {:>9.3} b/elem (payload {:.3}) \
              sq-err {:.4e} outliers {}",
             rec.name,
             rec.shape,
-            if rec.transposed { " T" } else { "" },
+            marks,
             rec.spec,
             rec.bits,
             packed,
@@ -1040,7 +1074,7 @@ SWEEP OPTIONS:
   OWF_THREADS       worker count for CPU points       (default all cores)
 
 PACK OPTIONS (owf pack):
-  --spec <scheme>   base scheme (no :rot / grid)      (required)
+  --spec <scheme>   base scheme, any sweep-grammar spec (required)
   --out FILE        output container                  (default packed.owq)
   --size s|m|l      pack a checkpoint (needs `make artifacts`)
   --sim SHAPES      pack synthetic tensors instead, e.g. 96x64,4096

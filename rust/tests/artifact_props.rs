@@ -1,12 +1,21 @@
-//! Property tests for the `OWQ1` quantised-artifact store:
+//! Property tests for the `OWQ1`/`OWQ2` quantised-artifact store:
 //!
 //! * `encode_tensor` (the pack path) produces reconstructions, bits and
 //!   sq-err **bit-identical** to `qdq_tensor` (the in-memory pipeline)
-//!   across format families, granularities, sparse overlays and the
-//!   multiplier search;
+//!   across format families, granularities, sparse overlays, rotation,
+//!   grid schemes and the multiplier search;
 //! * pack → open → decode round-trips bit-exactly for every codec
 //!   (raw / interleaved Huffman / interleaved rANS) and lane count, and
 //!   the stored sq-err/bits fields match the pipeline's to the last bit;
+//! * `:rot` and `grid` specs — rejected by the v1 writer — pack into
+//!   OWQ2 containers whose decode matches the in-memory pipeline to the
+//!   last f64 bit (seed re-derivation, inverse rotation, dense-index
+//!   gather);
+//! * a byte-level version-1 manifest still opens and decodes (the v2
+//!   reader is backward compatible), and unknown future revs are
+//!   rejected;
+//! * non-packable tensors are recorded as skipped in the summary and
+//!   the manifest instead of vanishing silently;
 //! * the variable (eq. 5) allocation is recorded in the manifest and
 //!   applied per tensor;
 //! * truncated, torn and checksum-corrupted containers are rejected
@@ -18,8 +27,8 @@ use std::collections::HashMap;
 
 use owf::artifact::server::ArtifactServer;
 use owf::artifact::writer::{pack_store, AllocMode, PackOptions};
-use owf::artifact::{Artifact, Codec};
-use owf::coordinator::config::Scheme;
+use owf::artifact::{fnv1a64, Artifact, Codec};
+use owf::coordinator::config::{Element, Scheme};
 use owf::eval::pipeline::{encode_tensor, qdq_tensor};
 use owf::tensorstore::{Store, Tensor};
 use owf::util::json::Json;
@@ -73,6 +82,10 @@ const SCHEMES: &[&str] = &[
     "int@4:block64-signmax",
     "lloyd@4:tensor-rms",
     "cbrt-normal@4:tensor-rms:search",
+    "cbrt-normal@4:tensor-rms:rot",
+    "int@4:block64-absmax:compress,rot",
+    "grid@4:tensor-rms:compress",
+    "grid@3:tensor-rms:search",
 ];
 
 #[test]
@@ -98,6 +111,7 @@ fn encode_tensor_matches_qdq_tensor_bit_for_bit() {
                     &t.shape,
                     t.channel_axis,
                     &[],
+                    0,
                 )
                 .unwrap();
                 assert_f32_bits_eq(
@@ -351,25 +365,195 @@ fn truncated_torn_and_corrupted_containers_are_rejected() {
     assert!(Artifact::from_bytes(b"OWT1....rest".to_vec()).is_err());
 }
 
+/// The v1 writer rejected `:rot` and `grid` outright; the v2 container
+/// must pack both and decode them bit-identically to the in-memory
+/// pipeline, with the rotation seed re-derived from the manifest and
+/// grid indices gathered through the dense codepoint table.
 #[test]
-fn pack_rejects_rot_and_grid_schemes() {
+fn pack_roundtrips_rot_and_grid_schemes() {
     let mut g = Gen {
         rng: owf::util::rng::Rng::new(0xBAD),
         case: 0,
     };
     let store = test_store(&mut g);
-    let path = tmp_path("reject");
-    for spec in ["cbrt-normal@4:tensor-rms:rot", "grid@4:tensor-rms:compress"]
+    for (k, (spec, codec, lanes)) in [
+        ("cbrt-normal@4:tensor-rms:rot", Codec::Huffman, 4),
+        ("cbrt-t5@4:block64-absmax:sparse0.01,compress,rot", Codec::Rans, 2),
+        ("int@4:block64-signmax:rot", Codec::Raw, 1),
+        ("grid@4:tensor-rms:compress", Codec::Huffman, 4),
+        ("grid@4:tensor-rms:compress", Codec::Rans, 1),
+        ("grid@3:tensor-rms:search", Codec::Raw, 1),
+    ]
+    .into_iter()
+    .enumerate()
     {
-        let r = pack_store(
+        let path = tmp_path(&format!("rotgrid_{k}"));
+        let summary = pack_store(
             &store,
             &HashMap::new(),
-            &pack_opts(spec, Codec::Huffman, 4),
+            &pack_opts(spec, codec, lanes),
             &path,
-        );
-        assert!(r.is_err(), "{spec} must be rejected");
+        )
+        .unwrap_or_else(|e| panic!("{spec} must pack: {e}"));
+        assert_eq!(summary.tensors, store.tensors.len());
+        assert!(summary.skipped.is_empty());
+        let art = Artifact::open(&path).unwrap();
+        assert_eq!(art.version, owf::artifact::VERSION);
+        art.verify_all().unwrap();
+        for (i, rec) in art.tensors.iter().enumerate() {
+            let t = store.require(&rec.name).unwrap();
+            let scheme = Scheme::parse(&rec.spec).unwrap();
+            // the writer derives the seed from the tensor name; only
+            // tensors that were actually rotated (2-D under `:rot`)
+            // carry it — everything else is a recorded identity
+            if scheme.rotate && t.shape.len() == 2 {
+                assert_eq!(
+                    rec.rot_seed,
+                    Some(fnv1a64(rec.name.as_bytes())),
+                    "{spec} on {}: rot seed",
+                    rec.name
+                );
+            } else {
+                assert!(
+                    rec.rot_seed.is_none(),
+                    "{spec} on {}: spurious rot seed",
+                    rec.name
+                );
+            }
+            assert_eq!(
+                scheme.element == Element::Grid,
+                rec.grid.is_some(),
+                "{spec} on {}: grid record presence",
+                rec.name
+            );
+            let reference = qdq_tensor(
+                &scheme,
+                &t.as_f32(),
+                &t.shape,
+                t.channel_axis,
+                &[],
+                rec.rot_seed.unwrap_or(0),
+            )
+            .unwrap();
+            let decoded = art.decode_tensor(i).unwrap();
+            assert_f32_bits_eq(
+                &decoded,
+                &reference.recon,
+                &format!("{spec} {} x{lanes} on {}", codec.name(), rec.name),
+            );
+            assert_eq!(
+                rec.sq_err.to_bits(),
+                reference.sq_err.to_bits(),
+                "{spec} on {}: stored sq_err",
+                rec.name
+            );
+            assert_eq!(
+                rec.bits.to_bits(),
+                reference.bits.to_bits(),
+                "{spec} on {}: stored bits",
+                rec.name
+            );
+        }
+        std::fs::remove_file(&path).unwrap();
     }
-    assert!(!path.exists(), "rejected pack must not leave a file");
+}
+
+/// The v2 reader stays byte-level compatible with version-1 manifests
+/// (which never carried `rot_seed`/`grid`/`skipped`), and refuses revs
+/// it does not know how to read.
+#[test]
+fn version_1_containers_still_read_and_future_revs_are_rejected() {
+    let mut g = Gen {
+        rng: owf::util::rng::Rng::new(0x1111),
+        case: 0,
+    };
+    let store = test_store(&mut g);
+    let path = tmp_path("v1compat");
+    pack_store(
+        &store,
+        &HashMap::new(),
+        &pack_opts("cbrt-t5@4:block64-absmax:sparse0.01,compress", Codec::Huffman, 4),
+        &path,
+    )
+    .unwrap();
+    let raw = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    let expected: Vec<Vec<f32>> = {
+        let art = Artifact::from_bytes(raw.clone()).unwrap();
+        (0..art.tensors.len())
+            .map(|i| art.decode_tensor(i).unwrap())
+            .collect()
+    };
+
+    // patch the version field in place (same byte length) and restore
+    // the manifest checksum — a byte-faithful v1 container
+    let reversion = |to: &str| -> Vec<u8> {
+        let mlen =
+            u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize;
+        let manifest =
+            std::str::from_utf8(&raw[8..8 + mlen]).unwrap().to_string();
+        let patched = manifest.replace("\"version\":2", to);
+        assert_ne!(patched, manifest, "manifest must carry version 2");
+        assert_eq!(patched.len(), manifest.len());
+        let mut out = raw.clone();
+        out[8..8 + mlen].copy_from_slice(patched.as_bytes());
+        out[8 + mlen..8 + mlen + 8]
+            .copy_from_slice(&fnv1a64(patched.as_bytes()).to_le_bytes());
+        out
+    };
+
+    let art = Artifact::from_bytes(reversion("\"version\":1")).unwrap();
+    assert_eq!(art.version, 1);
+    assert!(art.skipped.is_empty());
+    for (i, want) in expected.iter().enumerate() {
+        assert_eq!(art.tensors[i].rot_seed, None);
+        assert!(art.tensors[i].grid.is_none());
+        assert_f32_bits_eq(
+            &art.decode_tensor(i).unwrap(),
+            want,
+            "v1 decode",
+        );
+    }
+
+    let future = Artifact::from_bytes(reversion("\"version\":3"));
+    assert!(future.is_err(), "future rev must be rejected");
+    let msg = format!("{:?}", future.err().unwrap());
+    assert!(
+        msg.contains("unsupported OWQ version"),
+        "wrong error: {msg}"
+    );
+}
+
+/// Tensors the packer cannot carry (non-f32, empty) are recorded by
+/// name in both the pack summary and the manifest, not silently
+/// dropped.
+#[test]
+fn skipped_tensors_are_recorded_in_summary_and_manifest() {
+    let mut g = Gen {
+        rng: owf::util::rng::Rng::new(0x55),
+        case: 0,
+    };
+    let mut store = test_store(&mut g);
+    store.push(Tensor::from_i32("steps", vec![3], &[1, 2, 3]));
+    store.push(Tensor::from_f32("hollow", vec![0], &[]));
+    let path = tmp_path("skipped");
+    let summary = pack_store(
+        &store,
+        &HashMap::new(),
+        &pack_opts("int@4:block64-absmax:compress", Codec::Huffman, 4),
+        &path,
+    )
+    .unwrap();
+    assert_eq!(summary.tensors, store.tensors.len() - 2);
+    assert_eq!(
+        summary.skipped,
+        vec!["steps".to_string(), "hollow".to_string()]
+    );
+    let art = Artifact::open(&path).unwrap();
+    assert_eq!(art.skipped, summary.skipped);
+    assert!(art.position("steps").is_none());
+    assert!(art.position("hollow").is_none());
+    std::fs::remove_file(&path).unwrap();
 }
 
 #[test]

@@ -1,5 +1,5 @@
-//! Fault-model property tests for the `OWQ1` artifact layer, driven by
-//! the deterministic fault harness in `owf::util::faultfs`:
+//! Fault-model property tests for the `OWQ1`/`OWQ2` artifact layer,
+//! driven by the deterministic fault harness in `owf::util::faultfs`:
 //!
 //! * **exhaustive single-bit-flip sweep**: every bit of a packed
 //!   container is flipped in turn; each flip must either fail with a
@@ -7,7 +7,11 @@
 //!   leave every tensor's decode bit-identical — never a panic, never
 //!   silently wrong data (detection is guaranteed because each FNV-1a
 //!   step is a bijection of the running state, so any one-byte change
-//!   always changes the digest);
+//!   always changes the digest); the same sweep runs over the OWQ2
+//!   forms: a `:rot` container (rotation seed in the manifest, inverse
+//!   rotation on decode) and a `grid` container (dense codepoint table
+//!   in `codebook`, dense u16 indices in `payload`, dense histogram in
+//!   `counts`);
 //! * truncation at any point is rejected as torn (or, if only trailing
 //!   padding is cut, decodes stay bit-exact);
 //! * transient read faults retry on the injected clock with the exact
@@ -72,6 +76,48 @@ fn packed_bytes(codec: Codec, lanes: usize, tag: &str) -> Vec<u8> {
     raw
 }
 
+/// Like [`packed_bytes`] but with a caller-chosen spec, a 2-D tensor
+/// ("m", 12×8, so `:rot` actually rotates) and the spiky 1-D "w" (so
+/// the recorded-identity rotation path is swept alongside).
+fn packed_bytes_spec(
+    spec: &str,
+    codec: Codec,
+    lanes: usize,
+    tag: &str,
+) -> Vec<u8> {
+    let mut rng = Rng::new(0xFA117);
+    let mut store = Store::new(Json::obj().push("kind", "fault-props"));
+    let m: Vec<f32> = rng.student_t_vec(5.0, 12 * 8);
+    store.push(Tensor::from_f32("m", vec![12, 8], &m));
+    let mut w: Vec<f32> = rng.student_t_vec(5.0, 96);
+    w[7] = 40.0;
+    w[61] = -35.0;
+    store.push(Tensor::from_f32("w", vec![96], &w));
+    let dir = std::env::temp_dir().join("owf_fault_props");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!(
+        "{tag}_{}_{lanes}_{}.owq",
+        codec.name(),
+        std::process::id()
+    ));
+    pack_store(
+        &store,
+        &std::collections::HashMap::new(),
+        &PackOptions {
+            spec: spec.to_string(),
+            alloc: AllocMode::Flat,
+            codec,
+            lanes,
+            meta: Json::obj().push("source", "test"),
+        },
+        &path,
+    )
+    .unwrap();
+    let raw = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    raw
+}
+
 fn manifest_len(raw: &[u8]) -> usize {
     u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize
 }
@@ -111,16 +157,13 @@ fn assert_bit_exact(a: &[f32], b: &[f32], what: &str) {
 
 /// The tentpole property: flip every single bit of the container; the
 /// reader must return a typed error naming the damage or stay bit-exact.
-/// Run exhaustively for interleaved Huffman (the on-disk default).
-#[test]
-fn every_single_bit_flip_is_detected_or_bit_exact() {
-    let raw = packed_bytes(Codec::Huffman, 2, "sweep");
-    let clean = Artifact::from_bytes(raw.clone()).unwrap();
-    let expected = clean_decodes(&raw);
-    let base = 8 + manifest_len(&raw) + 8;
+fn exhaustive_flip_sweep(raw: &[u8]) {
+    let clean = Artifact::from_bytes(raw.to_vec()).unwrap();
+    let expected = clean_decodes(raw);
+    let base = 8 + manifest_len(raw) + 8;
     for off in 0..raw.len() {
         for bit in 0..8u8 {
-            let mut damaged = raw.clone();
+            let mut damaged = raw.to_vec();
             damaged[off] ^= 1 << bit;
             let opened = Artifact::from_bytes(damaged);
             if off < 4 {
@@ -214,6 +257,32 @@ fn every_single_bit_flip_is_detected_or_bit_exact() {
                 }
             }
         }
+    }
+}
+
+/// Run exhaustively for interleaved Huffman (the on-disk default).
+#[test]
+fn every_single_bit_flip_is_detected_or_bit_exact() {
+    exhaustive_flip_sweep(&packed_bytes(Codec::Huffman, 2, "sweep"));
+}
+
+/// The OWQ2 durable forms obey the same fault contract: the rotation
+/// seed and grid δ/bucket records live under the manifest checksum, and
+/// the grid codepoint table / dense index stream / dense histogram live
+/// in checksummed sections — so every single-bit flip is detected or
+/// provably without effect.
+#[test]
+fn every_single_bit_flip_is_detected_or_bit_exact_for_rot_and_grid() {
+    for (spec, tag) in [
+        ("cbrt-t5@4:block32-absmax:sparse0.02,compress,rot", "rotsweep"),
+        ("grid@4:tensor-rms:compress", "gridsweep"),
+    ] {
+        exhaustive_flip_sweep(&packed_bytes_spec(
+            spec,
+            Codec::Huffman,
+            2,
+            tag,
+        ));
     }
 }
 

@@ -2,10 +2,12 @@
 # CI entry point: tier-1 build + tests, a bench smoke run at tiny n (which
 # gates the LUT-vs-reference quantisation equivalence contract AND the
 # decode_into-vs-decode_ref bit-exactness contract before any timing),
-# an `owf pack`/unpack bit-exactness gate at tiny n (packed OWQ1 decode
-# must be bit-identical to the in-memory pipeline, for both entropy
-# codecs), a fault-injection gate (a flipped bit in every OWQ1 section
-# class must drive `owf fsck` to a nonzero exit with a typed verdict, and
+# an `owf pack`/unpack bit-exactness gate at tiny n (packed decode must
+# be bit-identical to the in-memory pipeline, for both entropy codecs
+# and for every scheme family the sweep grammar produces — including
+# `:rot` and `grid`, the OWQ2 forms), a fault-injection gate (a flipped
+# bit in every section class must drive `owf fsck` to a nonzero exit
+# with a typed verdict — on base, rot and grid containers — and
 # `owf serve-bench` must survive injected transient EIO + payload flips),
 # then an `owf sweep` smoke run over a 12-point grid with --resume
 # exercised twice (the second resume must re-run zero points and leave
@@ -49,6 +51,24 @@ for codec in huffman rans; do
     }
 done
 
+echo "== owf pack gate: OWQ2 scheme families (:rot, grid) =="
+# the v1 writer rejected rotated and grid specs outright; the OWQ2
+# container must pack them and prove the decode bit-identical through
+# the same inspect --verify path (seed re-derivation + inverse rotation
+# for :rot, dense-index gather for grid)
+for codec in huffman rans; do
+    for family in rot grid; do
+        case "$family" in
+            rot)  SPEC='cbrt-t5@4:block64-absmax:sparse0.01,compress,rot' ;;
+            grid) SPEC='grid@4:tensor-rms:compress' ;;
+        esac
+        OWQ="$PACK_DIR/gate_${family}_$codec.owq"
+        "$BIN" pack --spec "$SPEC" --sim 96x64,4096 --seed 7 \
+            --codec "$codec" --lanes 4 --out "$OWQ"
+        "$BIN" inspect "$OWQ" --verify
+    done
+done
+
 echo "== owf fsck + fault-injection gate (tiny n) =="
 # a clean container must pass fsck (exit 0, 'clean' in the summary)
 CLEAN="$PACK_DIR/gate_huffman.owq"
@@ -80,6 +100,30 @@ if "$BIN" fsck "$FAULT_DIR/torn.owq" > /dev/null 2>&1; then
     echo "check.sh: fsck accepted a half-written container" >&2
     exit 1
 fi
+
+echo "== fault-injection gate over OWQ2 containers (:rot, grid) =="
+# the new durable forms carry the same per-section checksums: a flipped
+# bit in any populated section of a rot or grid container must surface
+for section in codebook scales payload counts outlier_idx outlier_val \
+        manifest header; do
+    BAD="$FAULT_DIR/rot_$section.owq"
+    "$BIN" fault-inject "$PACK_DIR/gate_rot_huffman.owq" --out "$BAD" \
+        --section "$section"
+    if "$BIN" fsck "$BAD" > /dev/null 2>&1; then
+        echo "check.sh: fsck missed a rot-container $section flip" >&2
+        exit 1
+    fi
+done
+# grid containers keep scales and outlier sections empty; flip the rest
+for section in codebook payload counts manifest header; do
+    BAD="$FAULT_DIR/grid_$section.owq"
+    "$BIN" fault-inject "$PACK_DIR/gate_grid_huffman.owq" --out "$BAD" \
+        --section "$section"
+    if "$BIN" fsck "$BAD" > /dev/null 2>&1; then
+        echo "check.sh: fsck missed a grid-container $section flip" >&2
+        exit 1
+    fi
+done
 
 echo "== serve-bench fault smoke (transient EIO + payload flips) =="
 # the server must degrade gracefully under injected faults: transient
