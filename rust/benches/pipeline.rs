@@ -192,6 +192,44 @@ fn bench_artifact(rows: &mut Vec<Row>) -> anyhow::Result<()> {
         0,
         "serving bench must stay fault-free"
     );
+    // the queued admission path: one decode permit, the other three
+    // lanes wait FIFO in the bounded queue (nobody coalesces — each
+    // round clears the cache and the lanes pile onto the same tensor,
+    // so three ride the single-flight slot and the row prices permit
+    // acquisition + deadline-bounded waiting on top of [get-coalesced].
+    let queued = owf::artifact::server::ArtifactServer::new(
+        Artifact::open(&path)?,
+        1 << 30,
+    )
+    .with_max_decodes(1)
+    .with_queue_depth(8);
+    bench_rec(
+        rows,
+        &format!("artifact {spec} [get-queued]"),
+        Some(n as f64),
+        || {
+            queued.clear_cache();
+            std::thread::scope(|scope| {
+                for _ in 0..4 {
+                    let queued = &queued;
+                    scope.spawn(move || {
+                        let t = queued.get("bench.w").unwrap();
+                        std::hint::black_box(t[n / 2]);
+                    });
+                }
+            });
+        },
+    );
+    let qs = queued.stats();
+    assert!(
+        qs.partition_closed(),
+        "queued serving bench must close its stats partition"
+    );
+    assert_eq!(
+        qs.queue_full + qs.deadline_exceeded_queued + qs.overloads,
+        0,
+        "depth-8 queue must absorb 4 lanes without shedding"
+    );
     let _ = std::fs::remove_file(&path);
     Ok(())
 }

@@ -35,8 +35,20 @@ pub enum ArtifactError {
     /// The named tensor does not exist in the artifact manifest.
     NotFound { tensor: String },
     /// The server's admission gate rejected the request: `limit` decodes
-    /// were already in flight.
+    /// were already in flight and no queueing was configured
+    /// (`queue_depth == 0`).
     Overloaded { limit: usize },
+    /// The decode wait queue was at capacity when the request arrived:
+    /// `depth` requests were already queued behind the busy permits.
+    QueueFull { depth: usize },
+    /// The request's deadline passed before it could be served — while
+    /// queued for a decode permit or while waiting on a coalesced decode.
+    /// `waited_ms` is how long the request actually waited.
+    DeadlineExceeded { tensor: String, waited_ms: u64 },
+    /// The tensor's circuit breaker is open: it repeatedly blew the slow-
+    /// decode budget, so new cold decodes are shed until a half-open
+    /// probe succeeds.  Cached copies keep serving.
+    BreakerOpen { tensor: String },
     /// The tensor was previously found corrupt and is poisoned; `cause`
     /// is the original failure. Requests fail fast without re-decoding.
     Quarantined {
@@ -101,6 +113,9 @@ impl ArtifactError {
             ArtifactError::Io { transient: false, .. } => "io",
             ArtifactError::NotFound { .. } => "not-found",
             ArtifactError::Overloaded { .. } => "overloaded",
+            ArtifactError::QueueFull { .. } => "queue-full",
+            ArtifactError::DeadlineExceeded { .. } => "deadline",
+            ArtifactError::BreakerOpen { .. } => "breaker-open",
             ArtifactError::Quarantined { .. } => "quarantined",
             ArtifactError::Invalid { .. } => "invalid",
         }
@@ -154,6 +169,28 @@ impl fmt::Display for ArtifactError {
                      in flight"
                 )
             }
+            ArtifactError::QueueFull { depth } => {
+                write!(
+                    f,
+                    "server overloaded: decode queue full ({depth} \
+                     requests already waiting)"
+                )
+            }
+            ArtifactError::DeadlineExceeded { tensor, waited_ms } => {
+                write!(
+                    f,
+                    "deadline exceeded for tensor {tensor:?} after \
+                     waiting {waited_ms}ms"
+                )
+            }
+            ArtifactError::BreakerOpen { tensor } => {
+                write!(
+                    f,
+                    "tensor {tensor:?} circuit breaker open (repeatedly \
+                     exceeded the slow-decode budget); cold decodes shed \
+                     until a probe succeeds"
+                )
+            }
             ArtifactError::Quarantined { tensor, cause } => {
                 write!(f, "tensor {tensor:?} quarantined: {cause}")
             }
@@ -201,6 +238,26 @@ mod tests {
         // container-level corruption omits the tensor
         let m = ArtifactError::corrupt("", "manifest", "bad fnv").to_string();
         assert!(m.contains("manifest"), "{m}");
+    }
+
+    #[test]
+    fn backpressure_variants_classify_and_display() {
+        let q = ArtifactError::QueueFull { depth: 8 };
+        assert_eq!(q.kind_name(), "queue-full");
+        assert!(!q.is_corrupt() && !q.is_transient_io());
+        assert!(q.to_string().contains('8'), "{q}");
+        let d = ArtifactError::DeadlineExceeded {
+            tensor: "w0".into(),
+            waited_ms: 125,
+        };
+        assert_eq!(d.kind_name(), "deadline");
+        assert!(!d.is_corrupt());
+        let msg = d.to_string();
+        assert!(msg.contains("w0") && msg.contains("125"), "{msg}");
+        let b = ArtifactError::BreakerOpen { tensor: "w1".into() };
+        assert_eq!(b.kind_name(), "breaker-open");
+        assert!(!b.is_corrupt());
+        assert!(b.to_string().contains("w1"), "{b}");
     }
 
     #[test]

@@ -90,12 +90,13 @@
 //! never silent wrong data.
 
 pub mod error;
+pub mod queue;
 pub mod retry;
 pub mod server;
 pub mod writer;
 
 pub use error::ArtifactError;
-pub use retry::{Clock, RetryPolicy, SystemClock};
+pub use retry::{Clock, Deadline, RetryPolicy, SystemClock};
 
 use std::borrow::Cow;
 use std::collections::HashMap;
@@ -666,6 +667,13 @@ impl Artifact {
     /// Transient reads retried so far (across all section fetches).
     pub fn io_retries(&self) -> u64 {
         self.io_retries.load(Ordering::Relaxed)
+    }
+
+    /// The injected time source.  The serving layer shares it for its
+    /// deadline and watchdog arithmetic, so tests drive retry backoffs,
+    /// deadlines and breaker cooldowns from one virtual timeline.
+    pub fn clock(&self) -> Arc<dyn Clock> {
+        self.clock.clone()
     }
 
     /// Fetch one section with bounded retry and its checksum verified.

@@ -1,0 +1,420 @@
+//! Deadline-aware bounded FIFO decode queue and the deadline-bounded
+//! wait primitives the serving layer is built from.
+//!
+//! [`DecodeQueue`] replaces the shed-only admission gate: up to `permits`
+//! decodes run concurrently, up to `depth` requests wait FIFO behind
+//! them, and everything past that — or past a request's [`Deadline`] —
+//! fails typed immediately.  [`Slot`] is the single-flight rendezvous:
+//! the decode owner fills it once, every coalesced waiter shares the
+//! outcome, and *no wait on it is unbounded* — waiters poll their
+//! deadline every [`POLL_QUANTUM`] so a stalled owner can only hold them
+//! until the deadline, and [`FillGuard`] guarantees that an owner which
+//! unwinds between registering and filling still wakes every waiter with
+//! a typed error instead of leaving them parked forever.
+//!
+//! Invariants (pinned by `rust/tests/queue_props.rs` under virtual
+//! clocks):
+//! * **FIFO**: permits are granted strictly in enqueue order — a later
+//!   arrival never overtakes an earlier one;
+//! * **typed rejection**: a full queue rejects with
+//!   [`AcquireError::QueueFull`] without blocking; an expired deadline
+//!   rejects with [`AcquireError::DeadlineExceeded`] within one poll
+//!   quantum of expiry;
+//! * **no permit leak**: an expired waiter removes its ticket and a
+//!   dropped [`Permit`] always releases — there is no path (including
+//!   panics) that loses a permit;
+//! * **no orphaned waiters**: a dropped unfilled [`FillGuard`] fills the
+//!   slot with the registered error and wakes everyone.
+//!
+//! Deadline checks read the injected [`Clock`], but the poll tick itself
+//! uses the real condvar timeout: under a virtual clock a waiter parks in
+//! ≤ one real quantum per check, so tests stay deterministic in *outcome*
+//! (expiry happens exactly when virtual time passes the deadline) while
+//! never sleeping unbounded.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::error::ArtifactError;
+use super::retry::{Clock, Deadline};
+
+/// How often a deadline-bounded wait re-checks its clock.  Every typed
+/// wait in the serving layer resolves within `deadline + POLL_QUANTUM`.
+pub const POLL_QUANTUM: Duration = Duration::from_millis(5);
+
+/// Typed admission failure from [`DecodeQueue::acquire`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AcquireError {
+    /// `depth` requests were already queued when this one arrived.
+    QueueFull { depth: usize },
+    /// The deadline passed before a permit freed; `waited` is the time
+    /// spent queued (zero if the request arrived already expired).
+    DeadlineExceeded { waited: Duration },
+}
+
+/// A granted decode permit.  Dropping it releases the permit and wakes
+/// the queue head — drop-based release means a panicking owner can never
+/// leak one.
+pub struct Permit<'a> {
+    queue: &'a DecodeQueue,
+    /// True when the request waited in the FIFO before being granted.
+    pub waited: bool,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.queue.release();
+    }
+}
+
+struct QueueState {
+    active: usize,
+    next_ticket: u64,
+    /// Tickets in arrival order; only the front may take a permit.
+    waiting: VecDeque<u64>,
+}
+
+/// Bounded FIFO admission: `permits` concurrent holders, `depth` queued
+/// waiters, deadline-bounded waiting.  `permits == 0` means unbounded
+/// (every acquire grants immediately); `depth == 0` degenerates to the
+/// old shed-only gate (an unavailable permit rejects at once).
+pub struct DecodeQueue {
+    permits: usize,
+    depth: usize,
+    clock: Arc<dyn Clock>,
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl DecodeQueue {
+    pub fn new(
+        permits: usize,
+        depth: usize,
+        clock: Arc<dyn Clock>,
+    ) -> DecodeQueue {
+        DecodeQueue {
+            permits,
+            depth,
+            clock,
+            state: Mutex::new(QueueState {
+                active: 0,
+                next_ticket: 0,
+                waiting: VecDeque::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn permits(&self) -> usize {
+        self.permits
+    }
+
+    /// Requests currently parked in the FIFO (test observability).
+    pub fn waiting(&self) -> usize {
+        self.state.lock().unwrap().waiting.len()
+    }
+
+    /// Permits currently held (test observability).
+    pub fn active(&self) -> usize {
+        self.state.lock().unwrap().active
+    }
+
+    /// Acquire a permit, waiting FIFO behind busy ones up to `deadline`.
+    ///
+    /// Grant rules: unbounded queues (`permits == 0`) grant immediately;
+    /// otherwise a request grants at once only when no one is queued
+    /// ahead of it and a permit is free.  A request that must wait
+    /// rejects typed if the FIFO already holds `depth` tickets or its
+    /// deadline has already passed, and while queued it re-checks the
+    /// deadline every [`POLL_QUANTUM`].
+    pub fn acquire(
+        &self,
+        deadline: Option<Deadline>,
+    ) -> Result<Permit<'_>, AcquireError> {
+        let mut st = self.state.lock().unwrap();
+        if self.permits == 0 {
+            st.active += 1;
+            return Ok(Permit {
+                queue: self,
+                waited: false,
+            });
+        }
+        if st.waiting.is_empty() && st.active < self.permits {
+            st.active += 1;
+            return Ok(Permit {
+                queue: self,
+                waited: false,
+            });
+        }
+        if st.waiting.len() >= self.depth {
+            return Err(AcquireError::QueueFull { depth: self.depth });
+        }
+        if let Some(d) = deadline {
+            if d.expired(&*self.clock) {
+                return Err(AcquireError::DeadlineExceeded {
+                    waited: Duration::ZERO,
+                });
+            }
+        }
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        st.waiting.push_back(ticket);
+        let start = self.clock.now();
+        loop {
+            if st.waiting.front() == Some(&ticket)
+                && st.active < self.permits
+            {
+                st.waiting.pop_front();
+                st.active += 1;
+                // the new head may also have a free permit already
+                self.cv.notify_all();
+                return Ok(Permit {
+                    queue: self,
+                    waited: true,
+                });
+            }
+            if let Some(d) = deadline {
+                if d.expired(&*self.clock) {
+                    // remove our ticket wherever it sits so the FIFO
+                    // never blocks on a ghost and the permit can't leak
+                    st.waiting.retain(|&t| t != ticket);
+                    self.cv.notify_all();
+                    return Err(AcquireError::DeadlineExceeded {
+                        waited: self
+                            .clock
+                            .now()
+                            .saturating_sub(start),
+                    });
+                }
+            }
+            let (g, _) =
+                self.cv.wait_timeout(st, POLL_QUANTUM).unwrap();
+            st = g;
+        }
+    }
+
+    fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.active = st.active.saturating_sub(1);
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// Outcome of a deadline-bounded wait on a [`Slot`].
+#[derive(Debug)]
+pub enum WaitOutcome<T> {
+    /// The owner filled the slot; the outcome is shared verbatim.
+    Filled(Result<T, ArtifactError>),
+    /// The deadline passed before the owner filled the slot.
+    DeadlineExceeded { waited: Duration },
+}
+
+/// Single-flight rendezvous: the owner fills once, waiters share the
+/// outcome.  All waits are deadline-bounded polls — there is no untimed
+/// condvar wait left in the serving layer.
+pub struct Slot<T: Clone> {
+    result: Mutex<Option<Result<T, ArtifactError>>>,
+    cv: Condvar,
+}
+
+impl<T: Clone> Default for Slot<T> {
+    fn default() -> Self {
+        Slot::new()
+    }
+}
+
+impl<T: Clone> Slot<T> {
+    pub fn new() -> Slot<T> {
+        Slot {
+            result: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Fill the slot and wake every waiter.  First fill wins: a second
+    /// fill (e.g. the owner's normal outcome racing its own drop guard)
+    /// is ignored, so waiters observe exactly one outcome.
+    pub fn fill(&self, outcome: Result<T, ArtifactError>) {
+        let mut r = self.result.lock().unwrap();
+        if r.is_none() {
+            *r = Some(outcome);
+        }
+        drop(r);
+        self.cv.notify_all();
+    }
+
+    pub fn is_filled(&self) -> bool {
+        self.result.lock().unwrap().is_some()
+    }
+
+    /// Wait for the owner's outcome, bounded by `deadline` on `clock`.
+    /// With no deadline the wait still polls (never untimed), relying on
+    /// the owner's [`FillGuard`] to guarantee an eventual fill.
+    pub fn wait_deadline(
+        &self,
+        clock: &dyn Clock,
+        deadline: Option<Deadline>,
+    ) -> WaitOutcome<T> {
+        let start = clock.now();
+        let mut r = self.result.lock().unwrap();
+        loop {
+            if let Some(outcome) = r.as_ref() {
+                return WaitOutcome::Filled(outcome.clone());
+            }
+            if let Some(d) = deadline {
+                if d.expired(clock) {
+                    return WaitOutcome::DeadlineExceeded {
+                        waited: clock.now().saturating_sub(start),
+                    };
+                }
+            }
+            let (g, _) =
+                self.cv.wait_timeout(r, POLL_QUANTUM).unwrap();
+            r = g;
+        }
+    }
+}
+
+/// Owner-side unwind protection: between registering a slot and filling
+/// it, any panic/unwind must still wake the waiters.  Create the guard
+/// right after registration; `fill` through it on the normal path.  If
+/// the guard drops unfilled (the owner unwound), it fills the slot with
+/// the registered fallback error so no waiter can hang on a dead owner.
+pub struct FillGuard<'a, T: Clone> {
+    slot: &'a Slot<T>,
+    fallback: Option<ArtifactError>,
+}
+
+impl<'a, T: Clone> FillGuard<'a, T> {
+    pub fn new(slot: &'a Slot<T>, fallback: ArtifactError) -> Self {
+        FillGuard {
+            slot,
+            fallback: Some(fallback),
+        }
+    }
+
+    /// Normal-path fill: disarms the guard.
+    pub fn fill(mut self, outcome: Result<T, ArtifactError>) {
+        self.fallback = None;
+        self.slot.fill(outcome);
+    }
+}
+
+impl<T: Clone> Drop for FillGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some(err) = self.fallback.take() {
+            self.slot.fill(Err(err));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::retry::RecordingClock;
+
+    fn clock() -> Arc<RecordingClock> {
+        Arc::new(RecordingClock::new())
+    }
+
+    #[test]
+    fn unbounded_queue_always_grants() {
+        let q = DecodeQueue::new(0, 0, clock());
+        let a = q.acquire(None).unwrap();
+        let b = q.acquire(None).unwrap();
+        assert!(!a.waited && !b.waited);
+        assert_eq!(q.active(), 2);
+        drop(a);
+        drop(b);
+        assert_eq!(q.active(), 0);
+    }
+
+    #[test]
+    fn depth_zero_rejects_like_the_old_gate() {
+        let q = DecodeQueue::new(1, 0, clock());
+        let held = q.acquire(None).unwrap();
+        assert_eq!(
+            q.acquire(None).unwrap_err(),
+            AcquireError::QueueFull { depth: 0 }
+        );
+        drop(held);
+        assert!(q.acquire(None).is_ok(), "released permit grants again");
+    }
+
+    #[test]
+    fn already_expired_deadline_rejects_before_enqueue() {
+        let c = clock();
+        let q = DecodeQueue::new(1, 4, c.clone());
+        let _held = q.acquire(None).unwrap();
+        let d = Deadline::after(&*c, Duration::ZERO);
+        match q.acquire(Some(d)).unwrap_err() {
+            AcquireError::DeadlineExceeded { waited } => {
+                assert_eq!(waited, Duration::ZERO)
+            }
+            other => panic!("expected deadline, got {other:?}"),
+        }
+        assert_eq!(q.waiting(), 0, "expired request never enqueued");
+    }
+
+    #[test]
+    fn permit_drop_releases_even_under_panic() {
+        let q = Arc::new(DecodeQueue::new(1, 0, clock()));
+        let q2 = q.clone();
+        let res =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                move || {
+                    let _p = q2.acquire(None).unwrap();
+                    panic!("owner dies holding the permit");
+                },
+            ));
+        assert!(res.is_err());
+        assert_eq!(q.active(), 0, "unwound owner released its permit");
+        assert!(q.acquire(None).is_ok());
+    }
+
+    #[test]
+    fn slot_fill_is_first_write_wins() {
+        let s: Slot<u32> = Slot::new();
+        s.fill(Ok(7));
+        s.fill(Ok(8));
+        let c = clock();
+        match s.wait_deadline(&*c, None) {
+            WaitOutcome::Filled(Ok(v)) => assert_eq!(v, 7),
+            other => panic!("expected first fill, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fill_guard_fallback_fires_only_when_unfilled() {
+        let s: Slot<u32> = Slot::new();
+        {
+            let g = FillGuard::new(
+                &s,
+                ArtifactError::corrupt("t", "decode", "unwound"),
+            );
+            g.fill(Ok(3));
+        }
+        assert!(matches!(
+            s.wait_deadline(&*clock(), None),
+            WaitOutcome::Filled(Ok(3))
+        ));
+        let s2: Slot<u32> = Slot::new();
+        {
+            let _g = FillGuard::new(
+                &s2,
+                ArtifactError::corrupt("t", "decode", "unwound"),
+            );
+            // dropped unfilled
+        }
+        match s2.wait_deadline(&*clock(), None) {
+            WaitOutcome::Filled(Err(e)) => assert!(e.is_corrupt()),
+            other => panic!("expected fallback error, got {other:?}"),
+        }
+    }
+}

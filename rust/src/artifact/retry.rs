@@ -1,4 +1,6 @@
-//! Bounded retry with exponential backoff for transient I/O.
+//! Bounded retry with exponential backoff for transient I/O, plus the
+//! deadline arithmetic the serving layer's queue and coalescing waits are
+//! bounded by.
 //!
 //! Only `ArtifactError::Io { transient: true }` is ever retried; corruption
 //! and torn containers fail immediately (re-reading flipped bits does not
@@ -9,10 +11,19 @@
 //! rendezvous point for deterministic concurrency tests (a blocked retry
 //! holds its decode permit, which lets tests pin `Overloaded` and
 //! coalesced-waiter interleavings exactly).
+//!
+//! The [`Clock`] also carries a monotonic [`Clock::now`] so deadlines are
+//! absolute instants on the *injected* timeline: production reads the
+//! process-monotonic clock, [`RecordingClock`] advances virtual time by
+//! every sleep it records (so a retry backoff deterministically "takes"
+//! its backoff duration — how `tests/queue_props.rs` manufactures slow
+//! decodes without wall-clock time), and [`GateClock`] advances only when
+//! the test calls [`GateClock::advance`] (so a test can expire a deadline
+//! while a decode owner is provably parked).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::error::ArtifactError;
 
@@ -20,6 +31,20 @@ use super::error::ArtifactError;
 /// deterministic clocks so no test depends on real sleeps.
 pub trait Clock: Send + Sync {
     fn sleep(&self, d: Duration);
+
+    /// Monotonic elapsed time on this clock's timeline.  Deadlines are
+    /// absolute `now()` values, so virtual clocks make deadline expiry
+    /// exactly reproducible.
+    fn now(&self) -> Duration;
+}
+
+/// One process-wide monotonic epoch so every [`SystemClock`] shares a
+/// timeline (a `Deadline` minted by one instance is meaningful to any
+/// other).
+fn process_epoch() -> Instant {
+    static EPOCH: Mutex<Option<Instant>> = Mutex::new(None);
+    let mut e = EPOCH.lock().unwrap();
+    *e.get_or_insert_with(Instant::now)
 }
 
 /// Real wall-clock sleeps for production use.
@@ -29,12 +54,24 @@ impl Clock for SystemClock {
     fn sleep(&self, d: Duration) {
         std::thread::sleep(d);
     }
+
+    fn now(&self) -> Duration {
+        process_epoch().elapsed()
+    }
 }
 
-/// Test clock: records every requested sleep, never actually sleeps.
+/// Test clock: records every requested sleep, never actually sleeps —
+/// but each sleep advances virtual time by the requested duration, so a
+/// code path that backs off `5ms` observably "took" 5ms of virtual time.
 #[derive(Default)]
 pub struct RecordingClock {
-    slept: Mutex<Vec<Duration>>,
+    state: Mutex<RecordingState>,
+}
+
+#[derive(Default)]
+struct RecordingState {
+    slept: Vec<Duration>,
+    now: Duration,
 }
 
 impl RecordingClock {
@@ -43,13 +80,25 @@ impl RecordingClock {
     }
 
     pub fn slept(&self) -> Vec<Duration> {
-        self.slept.lock().unwrap().clone()
+        self.state.lock().unwrap().slept.clone()
+    }
+
+    /// Advance virtual time without recording a sleep (test control for
+    /// breaker cooldowns and deadline expiry).
+    pub fn advance(&self, d: Duration) {
+        self.state.lock().unwrap().now += d;
     }
 }
 
 impl Clock for RecordingClock {
     fn sleep(&self, d: Duration) {
-        self.slept.lock().unwrap().push(d);
+        let mut st = self.state.lock().unwrap();
+        st.slept.push(d);
+        st.now += d;
+    }
+
+    fn now(&self) -> Duration {
+        self.state.lock().unwrap().now
     }
 }
 
@@ -65,6 +114,7 @@ struct GateState {
     open: bool,
     entered: u64,
     waiting: usize,
+    now: Duration,
 }
 
 impl Default for GateClock {
@@ -74,6 +124,7 @@ impl Default for GateClock {
                 open: false,
                 entered: 0,
                 waiting: 0,
+                now: Duration::ZERO,
             }),
             cv: Condvar::new(),
         }
@@ -100,6 +151,13 @@ impl GateClock {
         self.state.lock().unwrap().open = true;
         self.cv.notify_all();
     }
+
+    /// Advance virtual time.  Sleepers stay parked (the gate, not time,
+    /// releases them); deadline-bounded waits observe the new `now` on
+    /// their next poll tick.
+    pub fn advance(&self, d: Duration) {
+        self.state.lock().unwrap().now += d;
+    }
 }
 
 impl Clock for GateClock {
@@ -111,6 +169,43 @@ impl Clock for GateClock {
             st = self.cv.wait(st).unwrap();
         }
         st.waiting -= 1;
+    }
+
+    fn now(&self) -> Duration {
+        self.state.lock().unwrap().now
+    }
+}
+
+/// An absolute instant on a [`Clock`]'s timeline, after which a queued or
+/// coalescing request must resolve typed instead of waiting on.  A
+/// deadline bounds *waiting* — work already admitted runs to completion
+/// (a decode cannot be cancelled halfway through a tensor).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Deadline(Duration);
+
+impl Deadline {
+    /// Deadline at an absolute instant of the clock's timeline.
+    pub fn at(instant: Duration) -> Deadline {
+        Deadline(instant)
+    }
+
+    /// Deadline `timeout` from the clock's current `now`.
+    pub fn after(clock: &dyn Clock, timeout: Duration) -> Deadline {
+        Deadline(clock.now().saturating_add(timeout))
+    }
+
+    pub fn instant(&self) -> Duration {
+        self.0
+    }
+
+    /// True the moment `now` reaches the deadline (inclusive, so a test
+    /// advancing a virtual clock by exactly the timeout observes expiry).
+    pub fn expired(&self, clock: &dyn Clock) -> bool {
+        clock.now() >= self.0
+    }
+
+    pub fn remaining(&self, clock: &dyn Clock) -> Duration {
+        self.0.saturating_sub(clock.now())
     }
 }
 
@@ -260,6 +355,52 @@ mod tests {
         assert_eq!(calls, 1, "corruption must fail on the first attempt");
         assert_eq!(retries.load(Ordering::Relaxed), 0);
         assert!(clock.slept().is_empty(), "corruption must never sleep");
+    }
+
+    #[test]
+    fn recording_clock_advances_virtual_time_by_sleeps() {
+        let clock = RecordingClock::new();
+        assert_eq!(clock.now(), Duration::ZERO);
+        clock.sleep(Duration::from_millis(5));
+        clock.sleep(Duration::from_millis(10));
+        assert_eq!(clock.now(), Duration::from_millis(15));
+        clock.advance(Duration::from_millis(100));
+        assert_eq!(clock.now(), Duration::from_millis(115));
+        assert_eq!(clock.slept().len(), 2, "advance records no sleep");
+    }
+
+    #[test]
+    fn gate_clock_time_is_test_controlled() {
+        let clock = GateClock::new();
+        assert_eq!(clock.now(), Duration::ZERO);
+        clock.advance(Duration::from_millis(30));
+        assert_eq!(clock.now(), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn deadline_expiry_is_inclusive_and_exact() {
+        let clock = RecordingClock::new();
+        let d = Deadline::after(&clock, Duration::from_millis(50));
+        assert!(!d.expired(&clock));
+        assert_eq!(d.remaining(&clock), Duration::from_millis(50));
+        clock.advance(Duration::from_millis(49));
+        assert!(!d.expired(&clock));
+        clock.advance(Duration::from_millis(1));
+        assert!(d.expired(&clock), "expiry at exactly the instant");
+        assert_eq!(d.remaining(&clock), Duration::ZERO);
+        clock.advance(Duration::from_millis(1));
+        assert!(d.expired(&clock));
+    }
+
+    #[test]
+    fn system_clock_is_monotonic() {
+        let clock = SystemClock;
+        let a = clock.now();
+        let b = clock.now();
+        assert!(b >= a);
+        // a second instance shares the process epoch
+        let c = SystemClock.now();
+        assert!(c >= b);
     }
 
     #[test]

@@ -1,55 +1,100 @@
 //! Concurrent serving front-end over an [`Artifact`]: thread-safe decode
 //! requests, an LRU decoded-tensor cache, single-flight decode
-//! coalescing, a corruption quarantine and a bounded admission gate — the
-//! piece `owf serve-bench` drives and `owf quantise --from` feeds into the
-//! KL evaluation harness.  The server is scheme-agnostic: `:rot` and
-//! `grid` tensors (container v2) flow through the same
+//! coalescing, a corruption quarantine, a deadline-aware bounded decode
+//! queue and a slow-decode watchdog with per-tensor circuit breakers —
+//! the piece `owf serve-bench` drives and `owf quantise --from` feeds
+//! into the KL evaluation harness.  The server is scheme-agnostic: `:rot`
+//! and `grid` tensors (container v2) flow through the same
 //! [`Artifact::decode_tensor_into`] path — inverse rotation and the grid
 //! gather happen inside the artifact decode, so caching, coalescing and
 //! quarantine need no per-scheme handling.
 //!
 //! Concurrency model: the artifact itself is immutable, so decodes run
 //! in parallel outside the lock; one mutex guards the cache map, the
-//! in-flight table, the quarantine map and the decode-permit count, held
-//! only for map operations (never across a decode).
+//! in-flight table, the quarantine map and the breaker map, held only
+//! for map operations (never across a decode).  Decode permits live in a
+//! separate [`DecodeQueue`] with its own lock, so a request parked in
+//! the queue never blocks cache hits.
 //!
 //! **Single-flight**: concurrent cold misses on one tensor coalesce onto
 //! a single decode.  The first requester registers an in-flight slot and
-//! decodes; later requesters block on the slot's condvar and share the
-//! resulting `Arc` (or the owner's error, verbatim).  N threads missing
-//! on a cold tensor perform exactly one decode — enforced by
+//! decodes; later requesters wait on the slot and share the resulting
+//! `Arc` (or the owner's error, verbatim).  N threads missing on a cold
+//! tensor perform exactly one decode — enforced by
 //! `rust/tests/server_props.rs` via `misses`/`decoded_bytes`.
+//!
+//! **Deadlines — no unbounded wait**: requests may carry a [`Deadline`]
+//! (an absolute instant on the artifact's injected [`Clock`]).  Both the
+//! decode queue and the coalescing slot wait are deadline-bounded polls
+//! ([`queue::POLL_QUANTUM`]): a request whose deadline passes while
+//! queued resolves [`ArtifactError::DeadlineExceeded`] without leaking
+//! its queue ticket, and one whose deadline passes while waiting on a
+//! stalled owner resolves the same way within one quantum.  An owner
+//! that *unwinds* between registering its slot and filling it trips a
+//! drop guard that fills the slot with a typed `Corrupt`, so waiters
+//! without deadlines still never hang on a dead owner.
+//!
+//! **Queue + admission**: `with_max_decodes(n)` bounds concurrent
+//! decodes; `with_queue_depth(d)` lets up to `d` requests wait FIFO for
+//! a permit instead of being shed.  With `d == 0` (the default) the
+//! behaviour degenerates to the PR 6 gate: excess load is rejected with
+//! a typed [`ArtifactError::Overloaded`].  With `d > 0`, the `d+1`-th
+//! waiter is rejected with [`ArtifactError::QueueFull`].  Coalesced
+//! waiters hold no permit and occupy no queue slot.
+//!
+//! **Watchdog + circuit breaker**: with `with_slow_budget(b)`, a decode
+//! taking longer than `b` (on the injected clock — a retry backoff
+//! counts) increments `slow_decodes`, logs the tensor, and strikes it.
+//! `threshold` consecutive slow decodes open the tensor's breaker: new
+//! *cold* requests shed fast with [`ArtifactError::BreakerOpen`] while
+//! cached copies keep serving (the same graceful-degradation contract as
+//! quarantine).  After `cooldown`, exactly one request is admitted as a
+//! half-open probe: a fast probe closes the breaker, a slow one re-opens
+//! it.
 //!
 //! **Quarantine**: a decode that fails with [`ArtifactError::Corrupt`]
 //! poisons the tensor; subsequent requests fail fast with
 //! [`ArtifactError::Quarantined`] carrying the original cause, without
 //! re-decoding damaged bytes.  Clean tensors — including still-cached
-//! copies — keep serving (graceful degradation).  Transient I/O is the
-//! artifact layer's job: it retries with backoff and never quarantines.
+//! copies — keep serving.  Transient I/O is the artifact layer's job: it
+//! retries with backoff and never quarantines.
 //!
-//! **Admission gate**: with `with_max_decodes(n)`, at most `n` decodes
-//! run concurrently; requests that would exceed the bound are rejected
-//! with a typed [`ArtifactError::Overloaded`] instead of queueing without
-//! bound (coalesced waiters don't hold permits — they consume no decode
-//! resources).
-//!
-//! Cache invariants (also in `EXPERIMENTS.md` §Artifact / §Fault-model):
+//! Cache invariants (also in `EXPERIMENTS.md` §Artifact / §Serving):
 //! * resident bytes never exceed `cap_bytes` plus the most recently
 //!   inserted tensor (which is always kept, even alone over cap);
-//! * eviction is strict LRU by request stamp;
+//! * eviction is strict LRU by request stamp, and the stamp clock
+//!   advances **only** on a cache hit or insert — requests that
+//!   coalesce, shed or fail leave the clock untouched, so stamps stay
+//!   dense and auditable ([`ArtifactServer::cache_audit`] asserts
+//!   uniqueness and the clock bound);
 //! * `cap_bytes == 0` disables caching (every served buffer comes from a
-//!   decode, though concurrent requests still coalesce onto one);
-//! * on the fault-free path `hits + misses == requests`: coalesced
-//!   waiters count as hits (they got a shared buffer without decoding),
-//!   misses count decodes this server performed.  With faults the full
-//!   partition is `requests == hits + misses + coalesced_errors +
-//!   quarantine_hits + overloads + not_found` once all requests resolve.
+//!   decode, though concurrent requests still coalesce onto one).
+//!
+//! Stats partition (once every request has resolved):
+//!
+//! ```text
+//! requests == hits + misses
+//!           + coalesced_errors + quarantine_hits
+//!           + overloads + queue_full
+//!           + deadline_exceeded_queued + deadline_exceeded_waiting
+//!           + breaker_open + not_found
+//! ```
+//!
+//! On the fault-free unbounded path this collapses to the PR 5 identity
+//! `hits + misses == requests`.  `queued`, `slow_decodes` and
+//! `breaker_probes` are sub-counts of requests that went on to resolve
+//! through another leg, not partition legs themselves.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
+use super::queue::{AcquireError, DecodeQueue, Permit, Slot, WaitOutcome};
+use super::retry::{Clock, Deadline};
 use super::{AResult, Artifact, ArtifactError};
+
+type DecodeSlot = Slot<Arc<Vec<f32>>>;
 
 struct CacheEntry {
     data: Arc<Vec<f32>>,
@@ -63,41 +108,23 @@ struct Cache {
     bytes: usize,
 }
 
-/// One in-flight decode: waiters block on the condvar until the owner
-/// fills the result, then share it (data `Arc` or error, cloned verbatim).
-struct Slot {
-    result: Mutex<Option<AResult<Arc<Vec<f32>>>>>,
-    cv: Condvar,
-}
-
-impl Slot {
-    fn new() -> Slot {
-        Slot {
-            result: Mutex::new(None),
-            cv: Condvar::new(),
-        }
-    }
-
-    fn wait(&self) -> AResult<Arc<Vec<f32>>> {
-        let mut r = self.result.lock().unwrap();
-        while r.is_none() {
-            r = self.cv.wait(r).unwrap();
-        }
-        r.as_ref().unwrap().clone()
-    }
-
-    fn fill(&self, outcome: AResult<Arc<Vec<f32>>>) {
-        *self.result.lock().unwrap() = Some(outcome);
-        self.cv.notify_all();
-    }
+/// Per-tensor circuit-breaker state (driven by the slow-decode watchdog).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Breaker {
+    /// Serving normally; `strikes` consecutive slow decodes so far.
+    Closed { strikes: u32 },
+    /// Shedding new cold decodes since `since` (clock timeline).
+    Open { since: Duration },
+    /// One probe decode is in flight; its outcome closes or re-opens.
+    HalfOpen,
 }
 
 #[derive(Default)]
 struct ServerState {
     cache: Cache,
-    inflight: HashMap<String, Arc<Slot>>,
+    inflight: HashMap<String, Arc<DecodeSlot>>,
     quarantine: HashMap<String, ArtifactError>,
-    active_decodes: usize,
+    breakers: HashMap<String, Breaker>,
 }
 
 /// A point-in-time view of the server counters.
@@ -120,25 +147,70 @@ pub struct ServerStats {
     pub decode_errors: u64,
     /// Requests rejected fast because the tensor was quarantined.
     pub quarantine_hits: u64,
-    /// Requests rejected by the admission gate.
+    /// Requests shed because permits were busy and `queue_depth == 0`.
     pub overloads: u64,
+    /// Requests rejected because the wait queue was at capacity.
+    pub queue_full: u64,
+    /// Requests that waited in the decode queue before being granted.
+    pub queued: u64,
+    /// Requests whose deadline expired while queued for a permit.
+    pub deadline_exceeded_queued: u64,
+    /// Requests whose deadline expired waiting on a coalesced decode.
+    pub deadline_exceeded_waiting: u64,
+    /// Decodes that exceeded the slow budget (watchdog).
+    pub slow_decodes: u64,
+    /// Requests shed by an open circuit breaker.
+    pub breaker_open: u64,
+    /// Half-open probe decodes admitted.
+    pub breaker_probes: u64,
     /// Requests for names not in the manifest.
     pub not_found: u64,
     /// Transient I/O retries performed by the artifact layer.
     pub io_retries: u64,
     /// Tensors currently poisoned in the quarantine map.
     pub quarantined: usize,
+    /// Tensors whose breaker is currently open or half-open.
+    pub breakers_open: usize,
     pub cached_tensors: usize,
     pub cached_bytes: usize,
 }
 
+impl ServerStats {
+    /// The resolved-request partition: every request lands in exactly
+    /// one leg.  Holds once all requests have resolved.
+    pub fn partition_closed(&self) -> bool {
+        self.hits
+            + self.misses
+            + self.coalesced_errors
+            + self.quarantine_hits
+            + self.overloads
+            + self.queue_full
+            + self.deadline_exceeded_queued
+            + self.deadline_exceeded_waiting
+            + self.breaker_open
+            + self.not_found
+            == self.requests
+    }
+}
+
 /// Thread-safe serving reader: LRU cache + single-flight + quarantine +
-/// admission gate.
+/// deadline-aware decode queue + slow-decode watchdog.
 pub struct ArtifactServer {
     artifact: Artifact,
     cap_bytes: usize,
     /// Max concurrent decodes; 0 = unbounded.
     max_decodes: usize,
+    /// Requests allowed to wait for a permit; 0 = shed immediately.
+    queue_depth: usize,
+    /// Decodes slower than this strike their tensor; zero disables the
+    /// watchdog (and thus the breaker).
+    slow_budget: Duration,
+    /// Consecutive slow decodes that open a tensor's breaker.
+    breaker_threshold: u32,
+    /// Open duration before a half-open probe is admitted.
+    breaker_cooldown: Duration,
+    clock: Arc<dyn Clock>,
+    queue: DecodeQueue,
     state: Mutex<ServerState>,
     requests: AtomicU64,
     hits: AtomicU64,
@@ -150,15 +222,130 @@ pub struct ArtifactServer {
     decode_errors: AtomicU64,
     quarantine_hits: AtomicU64,
     overloads: AtomicU64,
+    queue_full: AtomicU64,
+    queued: AtomicU64,
+    deadline_exceeded_queued: AtomicU64,
+    deadline_exceeded_waiting: AtomicU64,
+    slow_decodes: AtomicU64,
+    breaker_open: AtomicU64,
+    breaker_probes: AtomicU64,
     not_found: AtomicU64,
+}
+
+/// Drop guard held by a decode owner from slot registration to outcome
+/// publication.  If the owner unwinds in between, `Drop` removes the
+/// inflight entry, fails a half-open probe back to `Open`, and fills the
+/// slot with a typed `Corrupt` so every waiter wakes instead of hanging
+/// on a dead owner.
+struct OwnerGuard<'a> {
+    server: &'a ArtifactServer,
+    name: String,
+    slot: Arc<DecodeSlot>,
+    is_probe: bool,
+    armed: bool,
+}
+
+impl<'a> OwnerGuard<'a> {
+    fn new(
+        server: &'a ArtifactServer,
+        name: &str,
+        slot: Arc<DecodeSlot>,
+        is_probe: bool,
+    ) -> Self {
+        OwnerGuard {
+            server,
+            name: name.to_string(),
+            slot,
+            is_probe,
+            armed: true,
+        }
+    }
+
+    /// Normal completion: publish to cache/quarantine, feed the
+    /// watchdog, then wake every waiter with the outcome.
+    fn finish(
+        mut self,
+        outcome: &AResult<Arc<Vec<f32>>>,
+        elapsed: Duration,
+    ) {
+        self.armed = false;
+        let mut st = self.server.state.lock().unwrap();
+        st.inflight.remove(&self.name);
+        match outcome {
+            Ok(data) => {
+                if self.server.cap_bytes > 0 {
+                    self.server.cache_insert(
+                        &mut st.cache,
+                        &self.name,
+                        data.clone(),
+                    );
+                }
+            }
+            Err(e) => {
+                if e.is_corrupt() {
+                    st.quarantine
+                        .insert(self.name.clone(), e.clone());
+                }
+            }
+        }
+        self.server
+            .watchdog_note(&mut st, &self.name, elapsed, self.is_probe);
+        drop(st);
+        self.slot.fill(outcome.clone());
+    }
+}
+
+impl Drop for OwnerGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let mut st = match self.server.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        st.inflight.remove(&self.name);
+        if self.is_probe {
+            st.breakers.insert(
+                self.name.clone(),
+                Breaker::Open {
+                    since: self.server.clock.now(),
+                },
+            );
+        }
+        drop(st);
+        self.slot.fill(Err(ArtifactError::corrupt(
+            &self.name,
+            "decode",
+            "decode owner panicked before publishing an outcome",
+        )));
+    }
+}
+
+/// What the breaker says about admitting a new cold decode.
+enum BreakerVerdict {
+    /// Proceed; not a probe.
+    Admit,
+    /// Proceed as the single half-open probe (only returned when the
+    /// caller holds a permit and may commit).
+    Probe,
+    /// Shed with `BreakerOpen`.
+    Shed,
 }
 
 impl ArtifactServer {
     pub fn new(artifact: Artifact, cap_bytes: usize) -> ArtifactServer {
+        let clock = artifact.clock();
         ArtifactServer {
+            queue: DecodeQueue::new(0, 0, clock.clone()),
             artifact,
             cap_bytes,
             max_decodes: 0,
+            queue_depth: 0,
+            slow_budget: Duration::ZERO,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
+            clock,
             state: Mutex::new(ServerState::default()),
             requests: AtomicU64::new(0),
             hits: AtomicU64::new(0),
@@ -170,36 +357,114 @@ impl ArtifactServer {
             decode_errors: AtomicU64::new(0),
             quarantine_hits: AtomicU64::new(0),
             overloads: AtomicU64::new(0),
+            queue_full: AtomicU64::new(0),
+            queued: AtomicU64::new(0),
+            deadline_exceeded_queued: AtomicU64::new(0),
+            deadline_exceeded_waiting: AtomicU64::new(0),
+            slow_decodes: AtomicU64::new(0),
+            breaker_open: AtomicU64::new(0),
+            breaker_probes: AtomicU64::new(0),
             not_found: AtomicU64::new(0),
         }
     }
 
-    /// Bound concurrent decodes: the `n+1`-th simultaneous cold decode is
-    /// rejected with a typed [`ArtifactError::Overloaded`].  `0` (the
-    /// default) leaves admission unbounded.
+    /// Bound concurrent decodes.  With `queue_depth == 0` the
+    /// `n+1`-th simultaneous cold decode is rejected with a typed
+    /// [`ArtifactError::Overloaded`]; with a queue, it waits FIFO.
+    /// `0` (the default) leaves admission unbounded.
     pub fn with_max_decodes(mut self, n: usize) -> ArtifactServer {
         self.max_decodes = n;
+        self.rebuild_queue();
         self
+    }
+
+    /// Let up to `depth` requests wait FIFO for a decode permit instead
+    /// of being shed; the `depth+1`-th is rejected with a typed
+    /// [`ArtifactError::QueueFull`].  `0` (the default) sheds
+    /// immediately (the PR 6 gate behaviour).
+    pub fn with_queue_depth(mut self, depth: usize) -> ArtifactServer {
+        self.queue_depth = depth;
+        self.rebuild_queue();
+        self
+    }
+
+    /// Arm the slow-decode watchdog: decodes slower than `budget` (on
+    /// the injected clock) count as strikes toward the tensor's circuit
+    /// breaker.  `Duration::ZERO` (the default) disables both.
+    pub fn with_slow_budget(mut self, budget: Duration) -> ArtifactServer {
+        self.slow_budget = budget;
+        self
+    }
+
+    /// Breaker tuning: `threshold` consecutive slow decodes open a
+    /// tensor's breaker; after `cooldown` one probe is admitted.
+    pub fn with_breaker(
+        mut self,
+        threshold: u32,
+        cooldown: Duration,
+    ) -> ArtifactServer {
+        self.breaker_threshold = threshold.max(1);
+        self.breaker_cooldown = cooldown;
+        self
+    }
+
+    fn rebuild_queue(&mut self) {
+        self.queue = DecodeQueue::new(
+            self.max_decodes,
+            self.queue_depth,
+            self.clock.clone(),
+        );
     }
 
     pub fn artifact(&self) -> &Artifact {
         &self.artifact
     }
 
+    /// The server's time source (the artifact's injected clock) — mint
+    /// [`Deadline`]s against this.
+    pub fn clock(&self) -> Arc<dyn Clock> {
+        self.clock.clone()
+    }
+
+    /// The admission queue (test observability: a test can wait until a
+    /// request is provably parked in the FIFO before advancing a
+    /// virtual clock).
+    pub fn decode_queue(&self) -> &DecodeQueue {
+        &self.queue
+    }
+
+    /// Serve one tensor with no deadline (waits are still bounded by the
+    /// owner's drop guard — see [`ArtifactServer::get_deadline`]).
+    pub fn get(&self, name: &str) -> AResult<Arc<Vec<f32>>> {
+        self.get_deadline(name, None)
+    }
+
     /// Serve one tensor.  Quarantined names fail fast with the recorded
     /// cause; a cache hit returns the shared buffer; a miss either
     /// attaches to an in-flight decode of the same tensor (sharing its
-    /// outcome) or — admission gate permitting — decodes outside the
-    /// lock, fills the cache and wakes every waiter.
-    pub fn get(&self, name: &str) -> AResult<Arc<Vec<f32>>> {
+    /// outcome, bounded by `deadline`) or acquires a decode permit —
+    /// waiting FIFO up to `deadline` if permits are busy — and decodes
+    /// outside the lock, fills the cache and wakes every waiter.
+    pub fn get_deadline(
+        &self,
+        name: &str,
+        deadline: Option<Deadline>,
+    ) -> AResult<Arc<Vec<f32>>> {
         self.requests.fetch_add(1, Ordering::Relaxed);
+        let t_start = self.clock.now();
         let Some(i) = self.artifact.position(name) else {
             self.not_found.fetch_add(1, Ordering::Relaxed);
             return Err(ArtifactError::NotFound {
                 tensor: name.to_string(),
             });
         };
-        let slot = {
+        // Admission loop: runs at most twice — once without a permit
+        // (terminal paths: quarantine/hit/coalesce/shed, or fall through
+        // to acquire one) and once holding it (the permit-held pass
+        // re-checks everything, since the world may have changed while
+        // we queued, then registers the in-flight slot).
+        let mut permit: Option<Permit<'_>> = None;
+        let (slot, is_probe) = loop {
             let mut st = self.state.lock().unwrap();
             if let Some(cause) = st.quarantine.get(name) {
                 self.quarantine_hits.fetch_add(1, Ordering::Relaxed);
@@ -208,14 +473,16 @@ impl ArtifactServer {
                     cause: Box::new(cause.clone()),
                 });
             }
-            if self.cap_bytes > 0 {
+            if self.cap_bytes > 0 && st.cache.entries.contains_key(name)
+            {
+                // the stamp clock moves only on hit/insert so LRU
+                // stamps stay dense (see cache_audit)
                 st.cache.clock += 1;
                 let now = st.cache.clock;
-                if let Some(e) = st.cache.entries.get_mut(name) {
-                    e.last_used = now;
-                    self.hits.fetch_add(1, Ordering::Relaxed);
-                    return Ok(e.data.clone());
-                }
+                let e = st.cache.entries.get_mut(name).unwrap();
+                e.last_used = now;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(e.data.clone());
             }
             if let Some(existing) = st.inflight.get(name) {
                 // coalesce: counted at attach (before the wait) so tests
@@ -223,34 +490,43 @@ impl ArtifactServer {
                 self.coalesced.fetch_add(1, Ordering::Relaxed);
                 let slot = existing.clone();
                 drop(st);
-                return match slot.wait() {
-                    Ok(data) => {
-                        self.hits.fetch_add(1, Ordering::Relaxed);
-                        Ok(data)
-                    }
-                    Err(e) => {
-                        self.coalesced_errors
-                            .fetch_add(1, Ordering::Relaxed);
-                        Err(e)
-                    }
-                };
+                // never wait on another owner while holding a permit
+                drop(permit);
+                return self.share(&slot, name, deadline, t_start);
             }
-            if self.max_decodes > 0
-                && st.active_decodes >= self.max_decodes
-            {
-                self.overloads.fetch_add(1, Ordering::Relaxed);
-                return Err(ArtifactError::Overloaded {
-                    limit: self.max_decodes,
-                });
+            match self.breaker_gate(&mut st, name, permit.is_some()) {
+                BreakerVerdict::Shed => {
+                    self.breaker_open.fetch_add(1, Ordering::Relaxed);
+                    return Err(ArtifactError::BreakerOpen {
+                        tensor: name.to_string(),
+                    });
+                }
+                BreakerVerdict::Probe => {
+                    let slot = Arc::new(DecodeSlot::new());
+                    st.inflight.insert(name.to_string(), slot.clone());
+                    break (slot, true);
+                }
+                BreakerVerdict::Admit => {
+                    if permit.is_some() {
+                        let slot = Arc::new(DecodeSlot::new());
+                        st.inflight
+                            .insert(name.to_string(), slot.clone());
+                        break (slot, false);
+                    }
+                }
             }
-            st.active_decodes += 1;
-            let slot = Arc::new(Slot::new());
-            st.inflight.insert(name.to_string(), slot.clone());
-            slot
+            drop(st);
+            permit = Some(self.acquire_permit(name, deadline, t_start)?);
         };
 
-        // own decode, outside the lock
+        // own decode, outside every lock; `permit` (if bounded) is held
+        // for the duration and released by Drop even on unwind
         self.misses.fetch_add(1, Ordering::Relaxed);
+        if is_probe {
+            self.breaker_probes.fetch_add(1, Ordering::Relaxed);
+        }
+        let guard = OwnerGuard::new(self, name, slot, is_probe);
+        let t_decode = self.clock.now();
         let outcome = match self.artifact.decode_tensor(i) {
             Ok(data) => {
                 let data = Arc::new(data);
@@ -263,26 +539,182 @@ impl ArtifactServer {
                 Err(e)
             }
         };
-        {
-            let mut st = self.state.lock().unwrap();
-            st.active_decodes -= 1;
-            st.inflight.remove(name);
-            match &outcome {
-                Ok(data) => {
-                    if self.cap_bytes > 0 {
-                        self.cache_insert(&mut st.cache, name, data.clone());
-                    }
+        let elapsed = self.clock.now().saturating_sub(t_decode);
+        guard.finish(&outcome, elapsed);
+        drop(permit);
+        outcome
+    }
+
+    /// Wait (deadline-bounded) on another owner's slot and account the
+    /// outcome.
+    fn share(
+        &self,
+        slot: &DecodeSlot,
+        name: &str,
+        deadline: Option<Deadline>,
+        t_start: Duration,
+    ) -> AResult<Arc<Vec<f32>>> {
+        match slot.wait_deadline(&*self.clock, deadline) {
+            WaitOutcome::Filled(Ok(data)) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Ok(data)
+            }
+            WaitOutcome::Filled(Err(e)) => {
+                self.coalesced_errors.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+            WaitOutcome::DeadlineExceeded { .. } => {
+                self.deadline_exceeded_waiting
+                    .fetch_add(1, Ordering::Relaxed);
+                Err(ArtifactError::DeadlineExceeded {
+                    tensor: name.to_string(),
+                    waited_ms: self
+                        .clock
+                        .now()
+                        .saturating_sub(t_start)
+                        .as_millis() as u64,
+                })
+            }
+        }
+    }
+
+    /// Acquire a decode permit through the queue, mapping the typed
+    /// rejections onto server errors and counters.
+    fn acquire_permit(
+        &self,
+        name: &str,
+        deadline: Option<Deadline>,
+        t_start: Duration,
+    ) -> AResult<Permit<'_>> {
+        match self.queue.acquire(deadline) {
+            Ok(p) => {
+                if p.waited {
+                    self.queued.fetch_add(1, Ordering::Relaxed);
                 }
-                Err(e) => {
-                    if e.is_corrupt() {
-                        st.quarantine
-                            .insert(name.to_string(), e.clone());
-                    }
+                Ok(p)
+            }
+            Err(AcquireError::QueueFull { depth }) => {
+                if self.queue_depth == 0 {
+                    // no queueing configured: the legacy shed gate
+                    self.overloads.fetch_add(1, Ordering::Relaxed);
+                    Err(ArtifactError::Overloaded {
+                        limit: self.max_decodes,
+                    })
+                } else {
+                    self.queue_full.fetch_add(1, Ordering::Relaxed);
+                    Err(ArtifactError::QueueFull { depth })
+                }
+            }
+            Err(AcquireError::DeadlineExceeded { .. }) => {
+                self.deadline_exceeded_queued
+                    .fetch_add(1, Ordering::Relaxed);
+                Err(ArtifactError::DeadlineExceeded {
+                    tensor: name.to_string(),
+                    waited_ms: self
+                        .clock
+                        .now()
+                        .saturating_sub(t_start)
+                        .as_millis() as u64,
+                })
+            }
+        }
+    }
+
+    /// Should a new cold decode of `name` proceed?  `commit` is true
+    /// when the caller holds a permit and may take the half-open probe
+    /// slot; without it an open-but-cooled breaker reports `Admit` and
+    /// the transition happens on the permit-held pass.
+    fn breaker_gate(
+        &self,
+        st: &mut ServerState,
+        name: &str,
+        commit: bool,
+    ) -> BreakerVerdict {
+        if self.slow_budget.is_zero() {
+            return BreakerVerdict::Admit;
+        }
+        match st.breakers.get(name).copied() {
+            None | Some(Breaker::Closed { .. }) => BreakerVerdict::Admit,
+            Some(Breaker::HalfOpen) => BreakerVerdict::Shed,
+            Some(Breaker::Open { since }) => {
+                let cooled = self
+                    .clock
+                    .now()
+                    .saturating_sub(since)
+                    >= self.breaker_cooldown;
+                if !cooled {
+                    BreakerVerdict::Shed
+                } else if commit {
+                    st.breakers
+                        .insert(name.to_string(), Breaker::HalfOpen);
+                    BreakerVerdict::Probe
+                } else {
+                    BreakerVerdict::Admit
                 }
             }
         }
-        slot.fill(outcome.clone());
-        outcome
+    }
+
+    /// Watchdog bookkeeping after an own decode: strike or reset the
+    /// tensor's breaker, resolve a half-open probe.
+    fn watchdog_note(
+        &self,
+        st: &mut ServerState,
+        name: &str,
+        elapsed: Duration,
+        is_probe: bool,
+    ) {
+        if self.slow_budget.is_zero() {
+            return;
+        }
+        let slow = elapsed > self.slow_budget;
+        if slow {
+            self.slow_decodes.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "[artifact-server] slow decode: {name:?} took {}ms \
+                 (budget {}ms)",
+                elapsed.as_millis(),
+                self.slow_budget.as_millis(),
+            );
+        }
+        let cur = st
+            .breakers
+            .get(name)
+            .copied()
+            .unwrap_or(Breaker::Closed { strikes: 0 });
+        let next = match cur {
+            Breaker::Closed { strikes } => {
+                if !slow {
+                    Breaker::Closed { strikes: 0 }
+                } else if strikes + 1 >= self.breaker_threshold {
+                    eprintln!(
+                        "[artifact-server] circuit breaker OPEN for \
+                         {name:?} after {} consecutive slow decodes",
+                        strikes + 1,
+                    );
+                    Breaker::Open {
+                        since: self.clock.now(),
+                    }
+                } else {
+                    Breaker::Closed {
+                        strikes: strikes + 1,
+                    }
+                }
+            }
+            Breaker::HalfOpen if is_probe => {
+                if slow {
+                    Breaker::Open {
+                        since: self.clock.now(),
+                    }
+                } else {
+                    Breaker::Closed { strikes: 0 }
+                }
+            }
+            // a non-probe decode finishing while the breaker moved
+            // under it (e.g. admitted before the trip): leave the state
+            other => other,
+        };
+        st.breakers.insert(name.to_string(), next);
     }
 
     /// Insert under the state lock, then strict-LRU evict down to cap.
@@ -322,18 +754,32 @@ impl ArtifactServer {
 
     /// Cache-bypassing decode into a caller-owned buffer (the zero-copy
     /// serving path).  Counted as a request + miss; respects the
-    /// quarantine and the admission gate, and quarantines on corruption,
-    /// exactly like [`ArtifactServer::get`] — but never coalesces (the
-    /// caller owns the output buffer, so there is nothing to share).
+    /// quarantine, the queue/deadline admission and the circuit breaker,
+    /// and quarantines on corruption, exactly like
+    /// [`ArtifactServer::get`] — but never coalesces (the caller owns
+    /// the output buffer, so there is nothing to share).
     pub fn decode_into(&self, name: &str, out: &mut [f32]) -> AResult<()> {
+        self.decode_into_deadline(name, out, None)
+    }
+
+    /// [`ArtifactServer::decode_into`] with a deadline bounding any time
+    /// spent queued for a decode permit.
+    pub fn decode_into_deadline(
+        &self,
+        name: &str,
+        out: &mut [f32],
+        deadline: Option<Deadline>,
+    ) -> AResult<()> {
         self.requests.fetch_add(1, Ordering::Relaxed);
+        let t_start = self.clock.now();
         let Some(i) = self.artifact.position(name) else {
             self.not_found.fetch_add(1, Ordering::Relaxed);
             return Err(ArtifactError::NotFound {
                 tensor: name.to_string(),
             });
         };
-        {
+        let mut permit: Option<Permit<'_>> = None;
+        let is_probe = loop {
             let mut st = self.state.lock().unwrap();
             if let Some(cause) = st.quarantine.get(name) {
                 self.quarantine_hits.fetch_add(1, Ordering::Relaxed);
@@ -342,20 +788,31 @@ impl ArtifactServer {
                     cause: Box::new(cause.clone()),
                 });
             }
-            if self.max_decodes > 0
-                && st.active_decodes >= self.max_decodes
-            {
-                self.overloads.fetch_add(1, Ordering::Relaxed);
-                return Err(ArtifactError::Overloaded {
-                    limit: self.max_decodes,
-                });
+            match self.breaker_gate(&mut st, name, permit.is_some()) {
+                BreakerVerdict::Shed => {
+                    self.breaker_open.fetch_add(1, Ordering::Relaxed);
+                    return Err(ArtifactError::BreakerOpen {
+                        tensor: name.to_string(),
+                    });
+                }
+                BreakerVerdict::Probe => break true,
+                BreakerVerdict::Admit => {
+                    if permit.is_some() {
+                        break false;
+                    }
+                }
             }
-            st.active_decodes += 1;
-        }
+            drop(st);
+            permit = Some(self.acquire_permit(name, deadline, t_start)?);
+        };
         self.misses.fetch_add(1, Ordering::Relaxed);
+        if is_probe {
+            self.breaker_probes.fetch_add(1, Ordering::Relaxed);
+        }
+        let t_decode = self.clock.now();
         let result = self.artifact.decode_tensor_into(i, out);
+        let elapsed = self.clock.now().saturating_sub(t_decode);
         let mut st = self.state.lock().unwrap();
-        st.active_decodes -= 1;
         match &result {
             Ok(()) => {
                 self.decoded_bytes
@@ -368,16 +825,28 @@ impl ArtifactServer {
                 }
             }
         }
+        self.watchdog_note(&mut st, name, elapsed, is_probe);
+        drop(st);
+        drop(permit);
         result
     }
 
     /// Decode every tensor into a name → values map — the adapter that
     /// lets the LLM evaluation harness ([`crate::eval::llm::Env::evaluate`])
     /// score a packed artifact exactly like an in-memory quantisation.
+    /// Routes through [`ArtifactServer::get`], so quarantine, the
+    /// breaker, the admission queue and the stats counters all apply —
+    /// a quarantined tensor fails the whole map typed instead of
+    /// re-decoding damaged bytes.
     pub fn params(&self) -> AResult<HashMap<String, Vec<f32>>> {
         let mut out = HashMap::new();
-        for (i, rec) in self.artifact.tensors.iter().enumerate() {
-            out.insert(rec.name.clone(), self.artifact.decode_tensor(i)?);
+        for rec in &self.artifact.tensors {
+            let data = self.get(&rec.name)?;
+            // sole owner when the cache is disabled; otherwise copy out
+            // of the shared entry
+            let values = Arc::try_unwrap(data)
+                .unwrap_or_else(|shared| (*shared).clone());
+            out.insert(rec.name.clone(), values);
         }
         Ok(out)
     }
@@ -397,11 +866,45 @@ impl ArtifactServer {
         self.state.lock().unwrap().quarantine.remove(name)
     }
 
+    /// Reset a tensor's circuit breaker to closed (ops override, the
+    /// breaker analogue of [`ArtifactServer::clear_quarantine`]).
+    /// Returns true if a breaker state existed.
+    pub fn clear_breaker(&self, name: &str) -> bool {
+        self.state
+            .lock()
+            .unwrap()
+            .breakers
+            .remove(name)
+            .is_some()
+    }
+
     /// Recompute cache occupancy from the entries themselves — test
     /// support for proving the incremental `cached_bytes` accounting
-    /// exact under racing insert/evict.
+    /// exact under racing insert/evict.  Also asserts the LRU stamp
+    /// invariants: stamps are unique (strict LRU is well-defined) and
+    /// never exceed the stamp clock.
     pub fn cache_audit(&self) -> (usize, usize) {
         let st = self.state.lock().unwrap();
+        let mut stamps: Vec<u64> = st
+            .cache
+            .entries
+            .values()
+            .map(|e| e.last_used)
+            .collect();
+        stamps.sort_unstable();
+        for w in stamps.windows(2) {
+            assert!(
+                w[0] < w[1],
+                "cache stamps must be unique for strict LRU"
+            );
+        }
+        if let Some(&newest) = stamps.last() {
+            assert!(
+                newest <= st.cache.clock,
+                "cache stamp {newest} beyond clock {}",
+                st.cache.clock
+            );
+        }
         let bytes: usize = st
             .cache
             .entries
@@ -411,13 +914,29 @@ impl ArtifactServer {
         (st.cache.entries.len(), bytes)
     }
 
+    /// Current LRU stamp clock (test support: the clock must advance
+    /// only on cache hits and inserts, never on coalesced/shed/failed
+    /// requests).
+    pub fn cache_clock(&self) -> u64 {
+        self.state.lock().unwrap().cache.clock
+    }
+
     pub fn stats(&self) -> ServerStats {
-        let (cached_tensors, cached_bytes, quarantined) = {
+        let (cached_tensors, cached_bytes, quarantined, breakers_open) = {
             let st = self.state.lock().unwrap();
             (
                 st.cache.entries.len(),
                 st.cache.bytes,
                 st.quarantine.len(),
+                st.breakers
+                    .values()
+                    .filter(|b| {
+                        matches!(
+                            b,
+                            Breaker::Open { .. } | Breaker::HalfOpen
+                        )
+                    })
+                    .count(),
             )
         };
         ServerStats {
@@ -431,9 +950,21 @@ impl ArtifactServer {
             decode_errors: self.decode_errors.load(Ordering::Relaxed),
             quarantine_hits: self.quarantine_hits.load(Ordering::Relaxed),
             overloads: self.overloads.load(Ordering::Relaxed),
+            queue_full: self.queue_full.load(Ordering::Relaxed),
+            queued: self.queued.load(Ordering::Relaxed),
+            deadline_exceeded_queued: self
+                .deadline_exceeded_queued
+                .load(Ordering::Relaxed),
+            deadline_exceeded_waiting: self
+                .deadline_exceeded_waiting
+                .load(Ordering::Relaxed),
+            slow_decodes: self.slow_decodes.load(Ordering::Relaxed),
+            breaker_open: self.breaker_open.load(Ordering::Relaxed),
+            breaker_probes: self.breaker_probes.load(Ordering::Relaxed),
             not_found: self.not_found.load(Ordering::Relaxed),
             io_retries: self.artifact.io_retries(),
             quarantined,
+            breakers_open,
             cached_tensors,
             cached_bytes,
         }

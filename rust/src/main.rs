@@ -19,7 +19,10 @@
 //! owf serve-bench <file.owq>        concurrent decode benchmark with
 //!                                   cache-hit stats; optional fault
 //!                                   injection (--fault-eio-rate,
-//!                                   --fault-flips, --max-decodes)
+//!                                   --fault-flips), bounded admission
+//!                                   (--max-decodes, --queue-depth,
+//!                                   --deadline-ms) and an open-loop
+//!                                   Zipf saturation sweep (--rates)
 //! owf fsck <file.owq>               eagerly verify every checksum and
 //!                                   decode every tensor; per-tensor
 //!                                   verdict table, nonzero exit on damage
@@ -35,7 +38,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use owf::artifact::writer::{pack_store, AllocMode, PackOptions};
-use owf::artifact::{Artifact, Codec};
+use owf::artifact::{Artifact, ArtifactError, Codec, Deadline};
 use owf::artifact::server::ArtifactServer;
 use owf::coordinator::config::Scheme;
 use owf::coordinator::{run_sweep, Report, ResultSink, SweepData, SweepOpts};
@@ -50,7 +53,7 @@ use owf::util::faultfs::{
     flip_bit_in_file, write_torn_copy, ByteSource, FaultFs,
 };
 use owf::util::json::Json;
-use owf::util::rng::Rng;
+use owf::util::rng::{Rng, Zipf};
 
 struct Args {
     positional: Vec<String>,
@@ -818,10 +821,32 @@ fn cmd_fault_inject(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Nearest-rank percentile of an already-sorted latency sample.
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * p).round() as usize;
+    sorted_ms[idx]
+}
+
+/// Per-step tallies from one open-loop load step.
+#[derive(Default)]
+struct StepTally {
+    ok: u64,
+    deadline: u64,
+    shed: u64,
+    breaker: u64,
+    other_err: u64,
+    latencies_ms: Vec<f64>,
+}
+
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     let path = args.positional.get(1).context(
         "usage: owf serve-bench <file.owq> [--threads N] [--requests N] \
-         [--cache-mb M] [--max-decodes N] [--fault-eio-rate R] \
+         [--cache-mb M] [--max-decodes N] [--queue-depth N] \
+         [--deadline-ms MS] [--slow-budget-ms MS] [--rates R1,R2,..] \
+         [--zipf S] [--seed N] [--json FILE] [--fault-eio-rate R] \
          [--fault-eio-seed S] [--fault-flips N] [--fault-seed S] \
          [--verify]",
     )?;
@@ -855,6 +880,57 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         .transpose()
         .context("--max-decodes")?
         .unwrap_or(0);
+    let queue_depth: usize = args
+        .flags
+        .get("queue-depth")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--queue-depth")?
+        .unwrap_or(0);
+    let deadline_ms: u64 = args
+        .flags
+        .get("deadline-ms")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--deadline-ms")?
+        .unwrap_or(0);
+    let slow_budget_ms: u64 = args
+        .flags
+        .get("slow-budget-ms")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--slow-budget-ms")?
+        .unwrap_or(0);
+    let zipf_s: f64 = args
+        .flags
+        .get("zipf")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--zipf")?
+        .unwrap_or(1.0);
+    let load_seed: u64 = args
+        .flags
+        .get("seed")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--seed")?
+        .unwrap_or(1234);
+    let rates: Option<Vec<f64>> = args
+        .flags
+        .get("rates")
+        .map(|v| {
+            v.split(',')
+                .map(|r| r.trim().parse::<f64>())
+                .collect::<Result<Vec<f64>, _>>()
+        })
+        .transpose()
+        .context("--rates")?;
+    if let Some(rs) = &rates {
+        if rs.is_empty() || rs.iter().any(|&r| r <= 0.0) {
+            bail!("--rates needs a comma list of positive req/s values");
+        }
+    }
+    let json_out = args.flags.get("json").cloned();
     let eio_rate: f64 = args
         .flags
         .get("fault-eio-rate")
@@ -920,59 +996,211 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     if names.is_empty() {
         bail!("{path}: artifact holds no tensors");
     }
-    let server = ArtifactServer::new(art, cache_mb * (1 << 20))
-        .with_max_decodes(max_decodes);
-    let per_thread = requests.div_ceil(threads);
-    let t0 = std::time::Instant::now();
-    let mut served: Vec<(u64, u64)> = Vec::new();
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for t in 0..threads {
-            let server = &server;
-            let names = &names;
-            handles.push(scope.spawn(move || -> (u64, u64) {
-                let mut elems = 0u64;
-                let mut errors = 0u64;
-                for i in 0..per_thread {
-                    let name = &names[(t + i) % names.len()];
-                    // fault drills keep serving through failures: count
-                    // them, never abort the thread
-                    match server.get(name) {
-                        Ok(data) => {
-                            elems += data.len() as u64;
-                            std::hint::black_box(data.first().copied());
-                        }
-                        Err(_) => errors += 1,
-                    }
-                }
-                (elems, errors)
-            }));
-        }
-        for h in handles {
-            served.push(h.join().expect("serve thread panicked"));
-        }
-    });
-    let elapsed = t0.elapsed().as_secs_f64();
-    let mut total_elems = 0u64;
-    let mut total_errors = 0u64;
-    for (elems, errors) in served {
-        total_elems += elems;
-        total_errors += errors;
+    let mut server = ArtifactServer::new(art, cache_mb * (1 << 20))
+        .with_max_decodes(max_decodes)
+        .with_queue_depth(queue_depth);
+    if slow_budget_ms > 0 {
+        server = server
+            .with_slow_budget(std::time::Duration::from_millis(slow_budget_ms));
     }
+    let server = server;
+    // mint a fresh per-request deadline on the server's clock
+    let deadline = |server: &ArtifactServer| -> Option<Deadline> {
+        (deadline_ms > 0).then(|| {
+            Deadline::after(
+                &*server.clock(),
+                std::time::Duration::from_millis(deadline_ms),
+            )
+        })
+    };
+
+    let mut bench_rows: Vec<Json> = Vec::new();
+    let mut total_errors = 0u64;
+    if let Some(rates) = &rates {
+        // open-loop saturation sweep: arrivals at a fixed rate across
+        // `threads` lanes, tensor popularity Zipf(s), latency measured
+        // from each request's *scheduled* arrival so lane backlog counts
+        // against the server, not the load generator
+        let zipf = Zipf::new(names.len(), zipf_s);
+        println!(
+            "serve-bench: open-loop sweep over {} tensors, zipf s={zipf_s}, \
+             {requests} requests/step, {threads} lanes, deadline \
+             {deadline_ms}ms",
+            names.len()
+        );
+        for (step, &rate) in rates.iter().enumerate() {
+            let mut rng = Rng::new(load_seed.wrapping_add(step as u64));
+            let work: Vec<(std::time::Duration, usize)> = (0..requests)
+                .map(|i| {
+                    let arrival = std::time::Duration::from_secs_f64(
+                        i as f64 / rate,
+                    );
+                    (arrival, zipf.sample(&mut rng))
+                })
+                .collect();
+            let t0 = std::time::Instant::now();
+            let mut tallies: Vec<StepTally> = Vec::new();
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for t in 0..threads {
+                    let server = &server;
+                    let names = &names;
+                    let work = &work;
+                    let deadline = &deadline;
+                    handles.push(scope.spawn(move || -> StepTally {
+                        let mut tally = StepTally::default();
+                        for (arrival, name_ix) in
+                            work.iter().skip(t).step_by(threads)
+                        {
+                            let now = t0.elapsed();
+                            if now < *arrival {
+                                std::thread::sleep(*arrival - now);
+                            }
+                            let res = server.get_deadline(
+                                &names[*name_ix],
+                                deadline(server),
+                            );
+                            let lat = t0
+                                .elapsed()
+                                .saturating_sub(*arrival)
+                                .as_secs_f64()
+                                * 1e3;
+                            match res {
+                                Ok(data) => {
+                                    tally.ok += 1;
+                                    tally.latencies_ms.push(lat);
+                                    std::hint::black_box(
+                                        data.first().copied(),
+                                    );
+                                }
+                                Err(
+                                    ArtifactError::DeadlineExceeded {
+                                        ..
+                                    },
+                                ) => tally.deadline += 1,
+                                Err(
+                                    ArtifactError::Overloaded { .. }
+                                    | ArtifactError::QueueFull { .. },
+                                ) => tally.shed += 1,
+                                Err(ArtifactError::BreakerOpen {
+                                    ..
+                                }) => tally.breaker += 1,
+                                Err(_) => tally.other_err += 1,
+                            }
+                        }
+                        tally
+                    }));
+                }
+                for h in handles {
+                    tallies
+                        .push(h.join().expect("serve lane panicked"));
+                }
+            });
+            let elapsed = t0.elapsed().as_secs_f64();
+            let mut step_tally = StepTally::default();
+            for t in tallies {
+                step_tally.ok += t.ok;
+                step_tally.deadline += t.deadline;
+                step_tally.shed += t.shed;
+                step_tally.breaker += t.breaker;
+                step_tally.other_err += t.other_err;
+                step_tally.latencies_ms.extend(t.latencies_ms);
+            }
+            step_tally
+                .latencies_ms
+                .sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let lat = &step_tally.latencies_ms;
+            let goodput = step_tally.ok as f64 / elapsed;
+            total_errors += step_tally.deadline
+                + step_tally.shed
+                + step_tally.breaker
+                + step_tally.other_err;
+            println!(
+                "  rate {rate:7.1} req/s: goodput {goodput:7.1} req/s, \
+                 p50 {:6.2}ms p99 {:6.2}ms p999 {:6.2}ms; \
+                 {} ok, {} deadline, {} shed, {} breaker, {} errors",
+                percentile(lat, 0.50),
+                percentile(lat, 0.99),
+                percentile(lat, 0.999),
+                step_tally.ok,
+                step_tally.deadline,
+                step_tally.shed,
+                step_tally.breaker,
+                step_tally.other_err,
+            );
+            bench_rows.push(
+                Json::obj()
+                    .push("rate_rps", rate)
+                    .push("requests", requests)
+                    .push("ok", step_tally.ok as usize)
+                    .push("deadline_exceeded", step_tally.deadline as usize)
+                    .push("shed", step_tally.shed as usize)
+                    .push("breaker_open", step_tally.breaker as usize)
+                    .push("errors", step_tally.other_err as usize)
+                    .push("goodput_rps", goodput)
+                    .push("p50_ms", percentile(lat, 0.50))
+                    .push("p99_ms", percentile(lat, 0.99))
+                    .push("p999_ms", percentile(lat, 0.999)),
+            );
+        }
+    } else {
+        // closed loop: each thread issues its share back-to-back
+        let per_thread = requests.div_ceil(threads);
+        let t0 = std::time::Instant::now();
+        let mut served: Vec<(u64, u64)> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for t in 0..threads {
+                let server = &server;
+                let names = &names;
+                let deadline = &deadline;
+                handles.push(scope.spawn(move || -> (u64, u64) {
+                    let mut elems = 0u64;
+                    let mut errors = 0u64;
+                    for i in 0..per_thread {
+                        let name = &names[(t + i) % names.len()];
+                        // fault drills keep serving through failures:
+                        // count them, never abort the thread
+                        match server.get_deadline(name, deadline(server))
+                        {
+                            Ok(data) => {
+                                elems += data.len() as u64;
+                                std::hint::black_box(
+                                    data.first().copied(),
+                                );
+                            }
+                            Err(_) => errors += 1,
+                        }
+                    }
+                    (elems, errors)
+                }));
+            }
+            for h in handles {
+                served.push(h.join().expect("serve thread panicked"));
+            }
+        });
+        let elapsed = t0.elapsed().as_secs_f64();
+        let mut total_elems = 0u64;
+        for (elems, errors) in served {
+            total_elems += elems;
+            total_errors += errors;
+        }
+        let total_requests = per_thread * threads;
+        println!(
+            "serve-bench: {threads} threads x {total_requests} requests \
+             over {} tensors in {elapsed:.3}s",
+            names.len()
+        );
+        println!(
+            "  served {:.1} MB ({:.1} Melem) — {:.0} req/s, {:.1} Melem/s",
+            total_elems as f64 * 4.0 / 1e6,
+            total_elems as f64 / 1e6,
+            total_requests as f64 / elapsed,
+            total_elems as f64 / elapsed / 1e6,
+        );
+    }
+
     let s = server.stats();
-    let total_requests = per_thread * threads;
-    println!(
-        "serve-bench: {threads} threads x {total_requests} requests \
-         over {} tensors in {elapsed:.3}s",
-        names.len()
-    );
-    println!(
-        "  served {:.1} MB ({:.1} Melem) — {:.0} req/s, {:.1} Melem/s",
-        total_elems as f64 * 4.0 / 1e6,
-        total_elems as f64 / 1e6,
-        total_requests as f64 / elapsed,
-        total_elems as f64 / elapsed / 1e6,
-    );
     println!(
         "  cache: {} hits / {} misses ({:.1}% hit rate), {} evictions, \
          {} resident ({:.1} MB), cap {cache_mb} MB; decoded {:.1} MB",
@@ -997,7 +1225,59 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         s.quarantine_hits,
         s.quarantined,
     );
-    if total_errors > 0 && !faulty && max_decodes == 0 {
+    println!(
+        "  backpressure: {} queued, {} queue-full, {} deadline \
+         (queued {} / waiting {}), {} slow decodes, {} breaker sheds, \
+         {} probes, {} breakers open",
+        s.queued,
+        s.queue_full,
+        s.deadline_exceeded_queued + s.deadline_exceeded_waiting,
+        s.deadline_exceeded_queued,
+        s.deadline_exceeded_waiting,
+        s.slow_decodes,
+        s.breaker_open,
+        s.breaker_probes,
+        s.breakers_open,
+    );
+    if s.partition_closed() {
+        println!("  partition: closed ({} requests)", s.requests);
+    } else {
+        bail!(
+            "serve-bench: stats partition NOT closed: requests {} vs \
+             hits {} + misses {} + coalesced_errors {} + quarantine \
+             {} + overloads {} + queue_full {} + deadline {}+{} + \
+             breaker {} + not_found {}",
+            s.requests,
+            s.hits,
+            s.misses,
+            s.coalesced_errors,
+            s.quarantine_hits,
+            s.overloads,
+            s.queue_full,
+            s.deadline_exceeded_queued,
+            s.deadline_exceeded_waiting,
+            s.breaker_open,
+            s.not_found,
+        );
+    }
+    if let Some(out) = json_out {
+        let doc = Json::obj()
+            .push("bench", "serving")
+            .push("zipf_s", zipf_s)
+            .push("threads", threads)
+            .push("max_decodes", max_decodes)
+            .push("queue_depth", queue_depth)
+            .push("deadline_ms", deadline_ms as usize)
+            .push("rows", Json::Arr(bench_rows));
+        std::fs::write(&out, format!("{doc}\n"))
+            .with_context(|| format!("write {out}"))?;
+        println!("  wrote {out}");
+    }
+    if total_errors > 0
+        && !faulty
+        && max_decodes == 0
+        && deadline_ms == 0
+    {
         bail!(
             "serve-bench: {total_errors} requests failed on a clean \
              container with no admission gate"
@@ -1086,9 +1366,19 @@ PACK OPTIONS (owf pack):
 
 SERVE-BENCH OPTIONS:
   --threads N       concurrent reader threads          (default 4)
-  --requests N      total decode requests              (default 256)
+  --requests N      decode requests (per sweep step)   (default 256)
   --cache-mb M      decoded-tensor LRU cache capacity  (default 64)
-  --max-decodes N   admission gate: max concurrent decodes (0 = unbounded)
+  --max-decodes N   max concurrent decodes             (0 = unbounded)
+  --queue-depth N   requests that may wait FIFO for a decode permit
+                    (0 = shed immediately when permits are busy)
+  --deadline-ms MS  per-request deadline; expiry while queued or while
+                    waiting on a coalesced decode fails typed (0 = none)
+  --slow-budget-ms MS  arm the slow-decode watchdog + circuit breaker
+  --rates R1,R2,..  open-loop saturation sweep: fixed arrival rates in
+                    req/s; reports p50/p99/p999 + goodput per step
+  --zipf S          tensor-popularity Zipf exponent     (default 1.0)
+  --seed N          load-generator RNG seed             (default 1234)
+  --json FILE       write the sweep as a BENCH_serving.json trajectory
   --fault-eio-rate R  inject transient EIO on reads with probability R
   --fault-eio-seed S  seed for the EIO roll               (default 7)
   --fault-flips N   flip N random payload bits (exercises quarantine)

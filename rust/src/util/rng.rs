@@ -167,6 +167,63 @@ impl Rng {
     }
 }
 
+/// Zipf-distributed index sampler over `{0, .., n-1}` with exponent `s`:
+/// P(k) ∝ 1/(k+1)^s.  `s == 0` is uniform; `s ≈ 1` is the classic
+/// heavy-head popularity law serving benchmarks model tensor access
+/// with.  The CDF is precomputed once (O(n)) so sampling is a binary
+/// search (O(log n)) — cheap enough for open-loop load generation.
+pub struct Zipf {
+    /// Cumulative probabilities; `cdf[n-1] == 1.0`.
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Zipf {
+        assert!(n > 0, "Zipf needs a non-empty support");
+        let mut cdf = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for k in 0..n {
+            total += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(total);
+        }
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Exact probability of index `k` (test/reporting support).
+    pub fn pmf(&self, k: usize) -> f64 {
+        let prev = if k == 0 { 0.0 } else { self.cdf[k - 1] };
+        self.cdf[k] - prev
+    }
+
+    /// Draw one index using `rng`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        // first index whose cumulative probability exceeds u
+        let mut lo = 0;
+        let mut hi = self.cdf.len() - 1;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.cdf[mid] > u {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -271,5 +328,47 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
         assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_pmf_matches_samples() {
+        let z = Zipf::new(8, 1.0);
+        // CDF is normalised and the pmf sums to one
+        let total: f64 = (0..8).map(|k| z.pmf(k)).sum();
+        assert!((total - 1.0).abs() < 1e-12, "pmf sums to {total}");
+        // rank 0 vs rank 1 probability ratio is 2^s = 2
+        assert!((z.pmf(0) / z.pmf(1) - 2.0).abs() < 1e-9);
+        let mut r = Rng::new(9);
+        let mut counts = [0usize; 8];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[z.sample(&mut r)] += 1;
+        }
+        for k in 0..8 {
+            let emp = counts[k] as f64 / n as f64;
+            assert!(
+                (emp - z.pmf(k)).abs() < 0.01,
+                "rank {k}: empirical {emp} vs pmf {}",
+                z.pmf(k)
+            );
+        }
+    }
+
+    #[test]
+    fn zipf_zero_exponent_is_uniform() {
+        let z = Zipf::new(5, 0.0);
+        for k in 0..5 {
+            assert!((z.pmf(k) - 0.2).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zipf_sampling_is_deterministic_per_seed() {
+        let z = Zipf::new(16, 1.2);
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let xs: Vec<usize> = (0..64).map(|_| z.sample(&mut a)).collect();
+        let ys: Vec<usize> = (0..64).map(|_| z.sample(&mut b)).collect();
+        assert_eq!(xs, ys);
     }
 }

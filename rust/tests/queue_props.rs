@@ -1,0 +1,444 @@
+//! Properties of the deadline-aware bounded decode queue and the
+//! deadline-bounded waits the serving layer is built from — all pinned
+//! deterministically under virtual clocks:
+//!
+//! * **FIFO**: permits are granted strictly in enqueue order;
+//! * **typed rejection**: a full queue rejects immediately with
+//!   `QueueFull`, an expired deadline with `DeadlineExceeded` — at the
+//!   queue level and through [`ArtifactServer`] with exact `waited_ms`;
+//! * **no permit leak**: a waiter whose deadline expires removes its
+//!   ticket, and the permit it never got grants again afterwards;
+//! * **no orphaned waiters**: an owner that panics between registering
+//!   its single-flight slot and filling it wakes every waiter with a
+//!   typed error (the [`FillGuard`]/`OwnerGuard` drop path);
+//! * **watchdog + breaker**: repeated slow decodes (manufactured from
+//!   retry backoffs on a [`RecordingClock`], whose `sleep` advances
+//!   virtual time) open a per-tensor circuit breaker; cold requests
+//!   shed typed while cached copies keep serving; after the cooldown a
+//!   half-open probe closes (fast) or re-opens (slow) the breaker.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use owf::artifact::queue::{
+    AcquireError, DecodeQueue, FillGuard, Slot, WaitOutcome,
+};
+use owf::artifact::retry::{GateClock, RecordingClock, RetryPolicy};
+use owf::artifact::server::ArtifactServer;
+use owf::artifact::writer::{pack_store, AllocMode, PackOptions};
+use owf::artifact::{Artifact, ArtifactError, Clock, Codec, Deadline};
+use owf::tensorstore::{Store, Tensor};
+use owf::util::faultfs::{ByteSource, FaultFs};
+use owf::util::json::Json;
+use owf::util::rng::Rng;
+
+/// Pack a three-tensor container and return its bytes.
+fn packed_bytes(tag: &str) -> Vec<u8> {
+    let mut rng = Rng::new(0xDECAF);
+    let mut store = Store::new(Json::obj().push("kind", "queue-props"));
+    for (name, n) in [("a", 3072usize), ("b", 4096), ("c", 2048)] {
+        let data = rng.student_t_vec(5.0, n);
+        store.push(Tensor::from_f32(name, vec![n], &data));
+    }
+    let dir = std::env::temp_dir().join("owf_queue_props");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{tag}_{}.owq", std::process::id()));
+    pack_store(
+        &store,
+        &std::collections::HashMap::new(),
+        &PackOptions {
+            spec: "cbrt-t5@4:block64-absmax:compress".to_string(),
+            alloc: AllocMode::Flat,
+            codec: Codec::Huffman,
+            lanes: 4,
+            meta: Json::obj().push("source", "test"),
+        },
+        &path,
+    )
+    .unwrap();
+    let raw = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    raw
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    for _ in 0..5000 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!("timed out waiting for: {what}");
+}
+
+/// A server over a faulted container: `budget` transient read faults
+/// aimed at tensor `a`'s payload, so decodes of `a` park in retry
+/// backoffs (GateClock) or consume virtual backoff time (RecordingClock).
+fn faulted_server(
+    raw: &[u8],
+    budget: u64,
+    clock: Arc<dyn Clock>,
+    cap_bytes: usize,
+) -> ArtifactServer {
+    let clean = Artifact::from_bytes(raw.to_vec()).unwrap();
+    let (p_off, p_len) =
+        clean.section_file_range("a", "payload").unwrap();
+    let fs = FaultFs::new(raw.to_vec())
+        .with_transient_at(p_off + p_len / 2, budget);
+    let art = Artifact::from_source_with(
+        ByteSource::Fault(fs),
+        RetryPolicy::default(),
+        clock,
+    )
+    .unwrap();
+    ArtifactServer::new(art, cap_bytes)
+}
+
+// ---------------------------------------------------------------- queue
+
+#[test]
+fn permits_grant_in_strict_fifo_order() {
+    let q = Arc::new(DecodeQueue::new(
+        1,
+        8,
+        Arc::new(RecordingClock::new()),
+    ));
+    let holder = q.acquire(None).unwrap();
+    let order = Arc::new(Mutex::new(Vec::new()));
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let q = q.clone();
+            let order = order.clone();
+            handles.push(scope.spawn(move || {
+                let p = q.acquire(None).unwrap();
+                assert!(p.waited, "late arrival must have waited");
+                order.lock().unwrap().push(i);
+                drop(p);
+            }));
+            // enqueue one at a time so arrival order is pinned
+            wait_until("waiter enqueued", || {
+                q.waiting() == i + 1
+            });
+        }
+        drop(holder);
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    assert_eq!(
+        *order.lock().unwrap(),
+        vec![0, 1, 2, 3],
+        "grants must follow enqueue order"
+    );
+    assert_eq!(q.waiting(), 0);
+    assert_eq!(q.active(), 0);
+}
+
+#[test]
+fn full_queue_rejects_typed_without_blocking() {
+    let q = Arc::new(DecodeQueue::new(
+        1,
+        2,
+        Arc::new(RecordingClock::new()),
+    ));
+    let holder = q.acquire(None).unwrap();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let q = q.clone();
+            handles.push(
+                scope.spawn(move || drop(q.acquire(None).unwrap())),
+            );
+        }
+        wait_until("two waiters parked", || q.waiting() == 2);
+        // the third would-be waiter is rejected immediately, typed
+        assert_eq!(
+            q.acquire(None).unwrap_err(),
+            AcquireError::QueueFull { depth: 2 }
+        );
+        drop(holder);
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+#[test]
+fn expired_waiter_removes_its_ticket_and_leaks_no_permit() {
+    let clock = Arc::new(RecordingClock::new());
+    let q = Arc::new(DecodeQueue::new(1, 4, clock.clone()));
+    let holder = q.acquire(None).unwrap();
+    let deadline = Deadline::at(Duration::from_millis(10));
+    std::thread::scope(|scope| {
+        let waiter = {
+            let q = q.clone();
+            scope.spawn(move || q.acquire(Some(deadline)).unwrap_err())
+        };
+        wait_until("waiter parked in FIFO", || q.waiting() == 1);
+        clock.advance(Duration::from_millis(15));
+        match waiter.join().unwrap() {
+            AcquireError::DeadlineExceeded { waited } => {
+                assert_eq!(
+                    waited,
+                    Duration::from_millis(15),
+                    "waited exactly the virtual time that passed"
+                );
+            }
+            other => panic!("expected deadline, got {other:?}"),
+        }
+    });
+    assert_eq!(q.waiting(), 0, "expired ticket removed from the FIFO");
+    drop(holder);
+    // the permit the expired waiter never got is still grantable
+    let p = q.acquire(None).unwrap();
+    assert!(!p.waited);
+    assert_eq!(q.active(), 1);
+}
+
+#[test]
+fn panicked_owner_wakes_every_waiter_typed() {
+    let slot: Arc<Slot<u32>> = Arc::new(Slot::new());
+    let clock = RecordingClock::new();
+    std::thread::scope(|scope| {
+        let waiters: Vec<_> = (0..3)
+            .map(|_| {
+                let slot = slot.clone();
+                scope.spawn(move || {
+                    let c = RecordingClock::new();
+                    slot.wait_deadline(&c, None)
+                })
+            })
+            .collect();
+        let owner = {
+            let slot = slot.clone();
+            scope.spawn(move || {
+                let _guard = FillGuard::new(
+                    &slot,
+                    ArtifactError::corrupt(
+                        "t", "decode", "owner unwound",
+                    ),
+                );
+                panic!("owner dies before filling");
+            })
+        };
+        assert!(owner.join().is_err());
+        for w in waiters {
+            match w.join().unwrap() {
+                WaitOutcome::Filled(Err(e)) => {
+                    assert!(e.is_corrupt(), "{e}")
+                }
+                other => {
+                    panic!("expected typed wake-up, got {other:?}")
+                }
+            }
+        }
+    });
+    assert!(matches!(
+        slot.wait_deadline(&clock, None),
+        WaitOutcome::Filled(Err(_))
+    ));
+}
+
+// ----------------------------------------------- server: queue/deadline
+
+#[test]
+fn server_deadline_expires_in_queue_with_exact_wait() {
+    let raw = packed_bytes("dlq");
+    let gate = Arc::new(GateClock::new());
+    let server = faulted_server(&raw, 1, gate.clone(), 1 << 30)
+        .with_max_decodes(1)
+        .with_queue_depth(4);
+    std::thread::scope(|scope| {
+        let owner = scope.spawn(|| server.get("a"));
+        wait_until("owner parked in backoff", || gate.waiting() == 1);
+        // owner holds the only permit; this request must queue, then
+        // expire exactly when virtual time reaches its deadline
+        let waiter = scope.spawn(|| {
+            server.get_deadline(
+                "b",
+                Some(Deadline::at(Duration::from_millis(30))),
+            )
+        });
+        wait_until("waiter parked in FIFO", || {
+            server.decode_queue().waiting() == 1
+        });
+        gate.advance(Duration::from_millis(30));
+        match waiter.join().unwrap().unwrap_err() {
+            ArtifactError::DeadlineExceeded { tensor, waited_ms } => {
+                assert_eq!(tensor, "b");
+                assert_eq!(
+                    waited_ms, 30,
+                    "waited exactly the advanced virtual time"
+                );
+            }
+            other => panic!("expected deadline, got {other}"),
+        }
+        assert_eq!(
+            server.decode_queue().waiting(),
+            0,
+            "expired ticket left the FIFO"
+        );
+        gate.open();
+        assert!(owner.join().unwrap().is_ok());
+    });
+    // the permit was never leaked: a fresh request decodes
+    assert!(server.get("b").is_ok());
+    let s = server.stats();
+    assert_eq!(s.deadline_exceeded_queued, 1);
+    assert_eq!(s.deadline_exceeded_waiting, 0);
+    assert_eq!(s.misses, 2, "owner's a + the fresh b");
+    assert!(s.partition_closed(), "{s:?}");
+}
+
+#[test]
+fn server_deadline_expires_waiting_on_coalesced_decode() {
+    let raw = packed_bytes("dlw");
+    let gate = Arc::new(GateClock::new());
+    let server = faulted_server(&raw, 1, gate.clone(), 1 << 30)
+        .with_max_decodes(1)
+        .with_queue_depth(4);
+    std::thread::scope(|scope| {
+        let owner = scope.spawn(|| server.get("a"));
+        wait_until("owner parked in backoff", || gate.waiting() == 1);
+        // same tensor: attaches to the owner's slot, no queue ticket
+        let waiter = scope.spawn(|| {
+            server.get_deadline(
+                "a",
+                Some(Deadline::at(Duration::from_millis(20))),
+            )
+        });
+        wait_until("waiter attached", || server.stats().coalesced == 1);
+        assert_eq!(server.decode_queue().waiting(), 0);
+        gate.advance(Duration::from_millis(20));
+        match waiter.join().unwrap().unwrap_err() {
+            ArtifactError::DeadlineExceeded { tensor, waited_ms } => {
+                assert_eq!(tensor, "a");
+                assert_eq!(waited_ms, 20);
+            }
+            other => panic!("expected deadline, got {other}"),
+        }
+        // the owner is untouched by its waiter's deadline
+        gate.open();
+        assert!(owner.join().unwrap().is_ok());
+    });
+    let s = server.stats();
+    assert_eq!(s.deadline_exceeded_waiting, 1);
+    assert_eq!(s.deadline_exceeded_queued, 0);
+    assert_eq!(s.coalesced, 1);
+    assert_eq!(s.misses, 1, "one decode despite the expired waiter");
+    assert!(s.partition_closed(), "{s:?}");
+}
+
+#[test]
+fn server_queue_admits_fifo_and_overflow_rejects_typed() {
+    let raw = packed_bytes("sq");
+    let gate = Arc::new(GateClock::new());
+    let server = faulted_server(&raw, 1, gate.clone(), 1 << 30)
+        .with_max_decodes(1)
+        .with_queue_depth(1);
+    std::thread::scope(|scope| {
+        let owner = scope.spawn(|| server.get("a"));
+        wait_until("owner parked in backoff", || gate.waiting() == 1);
+        let queued = scope.spawn(|| server.get("b"));
+        wait_until("first waiter queued", || {
+            server.decode_queue().waiting() == 1
+        });
+        // depth 1 is occupied: the next cold request rejects typed
+        match server.get("c").unwrap_err() {
+            ArtifactError::QueueFull { depth } => assert_eq!(depth, 1),
+            other => panic!("expected queue-full, got {other}"),
+        }
+        gate.open();
+        assert!(owner.join().unwrap().is_ok());
+        assert!(queued.join().unwrap().is_ok());
+    });
+    let s = server.stats();
+    assert_eq!(s.queue_full, 1);
+    assert_eq!(s.queued, 1, "the queued request was granted after all");
+    assert_eq!(s.overloads, 0, "queueing replaces the legacy shed gate");
+    assert_eq!(s.misses, 2);
+    assert!(s.partition_closed(), "{s:?}");
+}
+
+// -------------------------------------------- server: watchdog/breaker
+
+#[test]
+fn breaker_opens_after_repeated_slow_decodes_and_probe_recovers() {
+    let raw = packed_bytes("brk");
+    let clock = Arc::new(RecordingClock::new());
+    // six transient faults on a's payload: each of the first three
+    // decodes retries twice (5 + 10 ms virtual backoff), putting three
+    // consecutive decodes over the 1 ms budget
+    let server = faulted_server(&raw, 6, clock.clone(), 0)
+        .with_slow_budget(Duration::from_millis(1))
+        .with_breaker(3, Duration::from_millis(250));
+    for strike in 1..=3u64 {
+        assert!(server.get("a").is_ok(), "slow but successful");
+        assert_eq!(server.stats().slow_decodes, strike);
+    }
+    // third strike opened the breaker: cold requests shed typed
+    match server.get("a").unwrap_err() {
+        ArtifactError::BreakerOpen { tensor } => assert_eq!(tensor, "a"),
+        other => panic!("expected breaker, got {other}"),
+    }
+    let s = server.stats();
+    assert_eq!(s.breaker_open, 1);
+    assert_eq!(s.breakers_open, 1);
+    assert_eq!(s.io_retries, 6, "two injected retries per slow decode");
+    // other tensors are untouched by a's breaker
+    assert!(server.get("b").is_ok());
+    // after the cooldown one probe is admitted; transients are spent,
+    // so it is fast and closes the breaker
+    clock.advance(Duration::from_millis(250));
+    assert!(server.get("a").is_ok(), "half-open probe");
+    let s = server.stats();
+    assert_eq!(s.breaker_probes, 1);
+    assert_eq!(s.breakers_open, 0, "fast probe closed the breaker");
+    assert_eq!(s.slow_decodes, 3, "probe was not slow");
+    assert!(server.get("a").is_ok(), "closed: serving normally again");
+    assert!(server.stats().partition_closed());
+}
+
+#[test]
+fn open_breaker_serves_cached_copies_and_slow_probe_reopens() {
+    let raw = packed_bytes("brk2");
+    let clock = Arc::new(RecordingClock::new());
+    // budget 6: strike 1 (get, cached), strike 2 (decode_into) open the
+    // breaker at threshold 2; the remaining 2 faults make the first
+    // half-open probe slow again, re-opening it
+    let server = faulted_server(&raw, 6, clock.clone(), 1 << 30)
+        .with_slow_budget(Duration::from_millis(1))
+        .with_breaker(2, Duration::from_millis(100));
+    let n = server.get("a").unwrap().len();
+    let mut buf = vec![0f32; n];
+    server.decode_into("a", &mut buf).unwrap();
+    assert_eq!(server.stats().slow_decodes, 2);
+    assert_eq!(server.stats().breakers_open, 1, "threshold 2 tripped");
+    // graceful degradation: the cached copy keeps serving while the
+    // breaker sheds cold decodes — the same contract as quarantine
+    assert!(server.get("a").is_ok(), "cache hit bypasses the breaker");
+    assert!(matches!(
+        server.decode_into("a", &mut buf).unwrap_err(),
+        ArtifactError::BreakerOpen { .. }
+    ));
+    clock.advance(Duration::from_millis(100));
+    // slow probe (2 faults left → 5 + 10 ms virtual) re-opens
+    server.decode_into("a", &mut buf).unwrap();
+    let s = server.stats();
+    assert_eq!(s.breaker_probes, 1);
+    assert_eq!(s.slow_decodes, 3);
+    assert_eq!(s.breakers_open, 1, "slow probe re-opened the breaker");
+    assert!(matches!(
+        server.decode_into("a", &mut buf).unwrap_err(),
+        ArtifactError::BreakerOpen { .. }
+    ));
+    // second cooldown: faults exhausted, the probe is fast and closes
+    clock.advance(Duration::from_millis(100));
+    server.decode_into("a", &mut buf).unwrap();
+    let s = server.stats();
+    assert_eq!(s.breaker_probes, 2);
+    assert_eq!(s.breakers_open, 0);
+    assert_eq!(s.breaker_open, 2, "two typed sheds along the way");
+    assert!(s.partition_closed(), "{s:?}");
+}

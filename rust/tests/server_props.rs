@@ -13,7 +13,12 @@
 //! * stats invariants hold under a concurrent request storm:
 //!   `hits + misses == requests` fault-free, byte accounting exact
 //!   against [`ArtifactServer::cache_audit`] across racing insert/evict,
-//!   and `cap_bytes == 0` disables caching without breaking coalescing.
+//!   and `cap_bytes == 0` disables caching without breaking coalescing;
+//! * `params()` routes through the serving path (a quarantined tensor
+//!   fails the bulk decode typed), the LRU stamp clock advances only on
+//!   cache hits/inserts, and `decode_into` rides the same queue/deadline
+//!   admission as `get` (see `tests/queue_props.rs` for the queue,
+//!   deadline and circuit-breaker state-machine properties).
 
 use std::sync::{Arc, Barrier};
 use std::time::Duration;
@@ -21,7 +26,7 @@ use std::time::Duration;
 use owf::artifact::retry::{GateClock, RetryPolicy};
 use owf::artifact::server::ArtifactServer;
 use owf::artifact::writer::{pack_store, AllocMode, PackOptions};
-use owf::artifact::{Artifact, ArtifactError, Codec};
+use owf::artifact::{Artifact, ArtifactError, Codec, Deadline};
 use owf::tensorstore::{Store, Tensor};
 use owf::util::faultfs::{ByteSource, FaultFs};
 use owf::util::json::Json;
@@ -412,4 +417,153 @@ fn decode_into_respects_quarantine_and_accounting() {
     let s = server.stats();
     assert_eq!(s.decoded_bytes, 4 * buf.len() as u64);
     assert_eq!(s.cached_tensors, 0, "decode_into never populates cache");
+}
+
+/// PR 8 satellite: `params()` routes every tensor through the serving
+/// path, so the quarantine (and the stats) apply to bulk decodes too.
+#[test]
+fn params_routes_through_serving_path_and_respects_quarantine() {
+    let raw = packed_bytes("params");
+    let expected = clean_decodes(&raw);
+    let server = ArtifactServer::new(
+        Artifact::from_bytes(raw.clone()).unwrap(),
+        1 << 30,
+    );
+    let params = server.params().unwrap();
+    assert_eq!(params.len(), expected.len());
+    for (name, want) in &expected {
+        assert_bit_exact(&params[name], want, name);
+    }
+    let s = server.stats();
+    assert_eq!(s.requests, 3, "params counts like any other caller");
+    assert_eq!(s.misses, 3);
+    // a second bulk decode is served from the cache
+    server.params().unwrap();
+    let s = server.stats();
+    assert_eq!(s.requests, 6);
+    assert_eq!(s.hits, 3);
+
+    // a quarantined tensor fails the whole map typed, without ever
+    // re-decoding the damaged bytes
+    let clean = Artifact::from_bytes(raw.clone()).unwrap();
+    let (p_off, p_len) =
+        clean.section_file_range("a", "payload").unwrap();
+    let mut damaged = raw.clone();
+    damaged[p_off + p_len / 2] ^= 0x20;
+    let server = ArtifactServer::new(
+        Artifact::from_bytes(damaged).unwrap(),
+        1 << 30,
+    );
+    assert!(server.get("a").unwrap_err().is_corrupt());
+    match server.params().unwrap_err() {
+        ArtifactError::Quarantined { tensor, cause } => {
+            assert_eq!(tensor, "a");
+            assert!(cause.is_corrupt());
+        }
+        other => panic!("expected quarantined params, got {other}"),
+    }
+    let s = server.stats();
+    assert_eq!(s.quarantine_hits, 1);
+    assert_eq!(s.misses, 1, "params never re-decoded the poisoned bytes");
+}
+
+/// PR 8 satellite: the LRU stamp clock moves only on a cache hit or
+/// insert — failed or cache-bypassing requests leave it untouched (the
+/// old gate bumped it on every request whenever caching was enabled).
+#[test]
+fn cache_clock_advances_only_on_hit_or_insert() {
+    let raw = packed_bytes("stamp");
+    let expected = clean_decodes(&raw);
+    let server = ArtifactServer::new(
+        Artifact::from_bytes(raw.clone()).unwrap(),
+        1 << 30,
+    );
+    assert_eq!(server.cache_clock(), 0);
+    server.get("a").unwrap(); // cold miss → insert
+    assert_eq!(server.cache_clock(), 1);
+    server.get("a").unwrap(); // hit
+    assert_eq!(server.cache_clock(), 2);
+    assert!(server.get("nope").is_err());
+    assert_eq!(
+        server.cache_clock(),
+        2,
+        "a failed lookup must not advance the stamp clock"
+    );
+    let mut buf = vec![0f32; expected[1].1.len()];
+    server.decode_into("b", &mut buf).unwrap();
+    assert_eq!(
+        server.cache_clock(),
+        2,
+        "decode_into bypasses the cache and its clock"
+    );
+    server.get("b").unwrap();
+    assert_eq!(server.cache_clock(), 3);
+    // audit asserts stamp uniqueness and the clock bound internally
+    let (tensors, _) = server.cache_audit();
+    assert_eq!(tensors, 2);
+}
+
+/// PR 8 satellite: `decode_into` rides the same queue/deadline admission
+/// as `get` — it queues for a permit, overflows typed, and expires with
+/// an exact `waited_ms` under a virtual clock.
+#[test]
+fn decode_into_queues_and_expires_like_get() {
+    let raw = packed_bytes("diq");
+    let expected = clean_decodes(&raw);
+    let clean = Artifact::from_bytes(raw.clone()).unwrap();
+    let (p_off, p_len) =
+        clean.section_file_range("a", "payload").unwrap();
+    let fs = FaultFs::new(raw.clone())
+        .with_transient_at(p_off + p_len / 2, 1);
+    let gate = Arc::new(GateClock::new());
+    let art = Artifact::from_source_with(
+        ByteSource::Fault(fs),
+        RetryPolicy::default(),
+        gate.clone(),
+    )
+    .unwrap();
+    let server = ArtifactServer::new(art, 1 << 30)
+        .with_max_decodes(1)
+        .with_queue_depth(1);
+    std::thread::scope(|scope| {
+        let owner = scope.spawn(|| server.get("a"));
+        wait_until("owner parked in backoff", || gate.waiting() == 1);
+        // decode_into queues for the busy permit like get...
+        let waiter = scope.spawn(|| {
+            let mut buf = vec![0f32; expected[1].1.len()];
+            server.decode_into_deadline(
+                "b",
+                &mut buf,
+                Some(Deadline::at(Duration::from_millis(40))),
+            )
+        });
+        wait_until("decode_into parked in FIFO", || {
+            server.decode_queue().waiting() == 1
+        });
+        // ...and overflows typed past the configured depth
+        let mut buf = vec![0f32; expected[2].1.len()];
+        match server.decode_into("c", &mut buf).unwrap_err() {
+            ArtifactError::QueueFull { depth } => assert_eq!(depth, 1),
+            other => panic!("expected queue-full, got {other}"),
+        }
+        gate.advance(Duration::from_millis(40));
+        match waiter.join().unwrap().unwrap_err() {
+            ArtifactError::DeadlineExceeded { tensor, waited_ms } => {
+                assert_eq!(tensor, "b");
+                assert_eq!(waited_ms, 40);
+            }
+            other => panic!("expected deadline, got {other}"),
+        }
+        gate.open();
+        assert!(owner.join().unwrap().is_ok());
+    });
+    // the permit was never leaked: a cold decode_into succeeds
+    let mut buf = vec![0f32; expected[1].1.len()];
+    server.decode_into("b", &mut buf).unwrap();
+    assert_bit_exact(&buf, &expected[1].1, "b");
+    let s = server.stats();
+    assert_eq!(s.queue_full, 1);
+    assert_eq!(s.deadline_exceeded_queued, 1);
+    assert_eq!(s.misses, 2, "owner's a + the final b");
+    assert!(s.partition_closed(), "{s:?}");
 }

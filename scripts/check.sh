@@ -9,6 +9,9 @@
 # bit in every section class must drive `owf fsck` to a nonzero exit
 # with a typed verdict — on base, rot and grid containers — and
 # `owf serve-bench` must survive injected transient EIO + payload flips),
+# an overload gate (a one-permit, depth-2, 50ms-deadline serve-bench under
+# transient faults must terminate inside a wall-clock timeout with a
+# closed stats partition — the no-unbounded-wait backstop),
 # then an `owf sweep` smoke run over a 12-point grid with --resume
 # exercised twice (the second resume must re-run zero points and leave
 # the row count unchanged).
@@ -134,6 +137,28 @@ SB_OUT=$("$BIN" serve-bench "$CLEAN" --threads 4 --requests 64 \
 echo "$SB_OUT"
 echo "$SB_OUT" | grep -q 'resilience:' || {
     echo "check.sh: faulty serve-bench reported no resilience stats" >&2
+    exit 1
+}
+
+echo "== serve-bench overload gate (1 permit, depth 2, 50ms deadline) =="
+# saturate a tiny admission pipe under injected transient faults: every
+# request must resolve typed (served, shed, queue-full or deadline) —
+# the run terminates, the stats partition closes, and the exit is 0.
+# The wall-clock timeout is the no-unbounded-wait backstop: if any wait
+# in the serving layer were untimed, a stalled permit would hang the
+# loadgen past it.
+OVERLOAD_CMD=("$BIN" serve-bench "$CLEAN" --threads 8 --requests 128 \
+    --max-decodes 1 --queue-depth 2 --deadline-ms 50 \
+    --fault-eio-rate 0.05)
+if command -v timeout > /dev/null 2>&1; then
+    OV_OUT=$(timeout -k 10 120 "${OVERLOAD_CMD[@]}")
+else
+    echo "check.sh: WARNING: no 'timeout' binary; overload gate runs unwrapped" >&2
+    OV_OUT=$("${OVERLOAD_CMD[@]}")
+fi
+echo "$OV_OUT"
+echo "$OV_OUT" | grep -q 'partition: closed' || {
+    echo "check.sh: overloaded serve-bench left its stats partition open" >&2
     exit 1
 }
 
