@@ -12,8 +12,8 @@ use bench_util::{bench_rec, write_bench_json, Row};
 
 use owf::compress::huffman::HuffmanCode;
 use owf::compress::rans::{
-    rans_decode, rans_decode_interleaved, rans_encode,
-    rans_encode_interleaved, RansModel,
+    rans_decode, rans_decode_interleaved, rans_decode_interleaved_with,
+    rans_encode, rans_encode_interleaved, RansModel,
 };
 use owf::dist::{Dist, Family};
 use owf::formats::cbrt::{cbrt_rms, CBRT_ALPHA};
@@ -101,6 +101,46 @@ fn main() {
                 );
             },
         );
+    }
+
+    // --- explicit SIMD decode rounds vs the pinned scalar oracle ----------
+    // K = the active ISA's vector width (what `owf pack` now defaults to);
+    // bit-exact parity gate before any timing (EXPERIMENTS.md §SIMD).  On a
+    // host with neither AVX2 nor NEON both rows time the scalar loop.
+    {
+        use owf::util::simd::{self, Isa};
+        let active = simd::active();
+        let k = simd::preferred_lanes();
+        println!("simd rans decode (active ISA: {}, K={k}):", active.name());
+        let container = rans_encode_interleaved(&model, &symbols, k);
+        let fast =
+            rans_decode_interleaved_with(&model, &container, symbols.len(), active);
+        let oracle = rans_decode_interleaved_with(
+            &model,
+            &container,
+            symbols.len(),
+            Isa::Scalar,
+        );
+        assert_eq!(fast, oracle, "rans x{k}: {} != scalar", active.name());
+        assert_eq!(fast, symbols, "rans x{k} simd roundtrip");
+        for (tag, isa) in [("simd", active), ("scalar", Isa::Scalar)] {
+            bench_rec(
+                &mut rows,
+                &format!("rans decode x{k} [{tag}]"),
+                Some(n as f64),
+                || {
+                    std::hint::black_box(
+                        rans_decode_interleaved_with(
+                            &model,
+                            &container,
+                            symbols.len(),
+                            isa,
+                        )
+                        .len(),
+                    );
+                },
+            );
+        }
     }
 
     write_bench_json("compression", Some(n), &rows);

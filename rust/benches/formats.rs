@@ -77,6 +77,67 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // --- explicit SIMD kernels vs the pinned scalar oracles ----------------
+    // parity gate first (bit compare, adversarial probes included), then
+    // the `[simd]` vs `[scalar]` trajectory rows (EXPERIMENTS.md §SIMD).
+    // On a host with neither AVX2 nor NEON the active ISA *is* scalar and
+    // the [simd] rows time the fallback — the gate still passes.
+    {
+        use owf::util::simd::{self, Isa};
+        let active = simd::active();
+        println!("simd kernels (active ISA: {}), {n} elements:", active.name());
+        let scheme = Scheme::parse("cbrt-t5@4:block128-absmax")?;
+        let cb = scheme.build_codebook(128, Some(&data), &[])?;
+        let (lo, inv_step, top) =
+            cb.lut_params().expect("cbrt-t5@4 builds a LUT");
+        let mut probes = data.clone();
+        probes.extend(cb.adversarial_probes());
+        let mut want = vec![0u32; probes.len()];
+        simd::lut_slots(Isa::Scalar, &probes, lo, inv_step, top, &mut want);
+        let mut slots = vec![0u32; probes.len()];
+        simd::lut_slots(active, &probes, lo, inv_step, top, &mut slots);
+        assert_eq!(slots, want, "lut_slots: {} != scalar", active.name());
+        for (tag, isa) in [("simd", active), ("scalar", Isa::Scalar)] {
+            bench_rec(
+                &mut rows,
+                &format!("kernel lut-slots [{tag}]"),
+                Some(probes.len() as f64),
+                || {
+                    simd::lut_slots(
+                        isa, &probes, lo, inv_step, top, &mut slots,
+                    );
+                    std::hint::black_box(slots[0]);
+                },
+            );
+        }
+        // the scaled-codepoint gather (decode_block's inner loop)
+        let mut indices: Vec<u16> = Vec::new();
+        cb.quantise_slice(&data, &mut indices);
+        let table: Vec<f32> =
+            (0..cb.len()).map(|i| cb.dequantise(i as u16) * 0.8).collect();
+        let mut got = vec![0f32; indices.len()];
+        let mut reference = vec![0f32; indices.len()];
+        simd::gather_u16_f32(Isa::Scalar, &table, &indices, &mut reference);
+        simd::gather_u16_f32(active, &table, &indices, &mut got);
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            reference.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "gather: {} != scalar",
+            active.name()
+        );
+        for (tag, isa) in [("simd", active), ("scalar", Isa::Scalar)] {
+            bench_rec(
+                &mut rows,
+                &format!("kernel gather [{tag}]"),
+                Some(indices.len() as f64),
+                || {
+                    simd::gather_u16_f32(isa, &table, &indices, &mut got);
+                    std::hint::black_box(got[0]);
+                },
+            );
+        }
+    }
+
     // --- decode kernel: fused parallel decode_into vs scalar oracle --------
     println!("decode kernel (decode_into vs decode_ref), {n} elements:");
     let mut dec_out = vec![0f32; n];

@@ -94,6 +94,28 @@ fn bench_decode(rows: &mut Vec<Row>) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn bench_fnv(rows: &mut Vec<Row>) {
+    // the container checksum kernel: word-at-a-time loads vs the pinned
+    // byte-serial oracle, parity-gated before timing — every OWQ1 section
+    // checksum flows through this hash, so the two paths must agree
+    // bit-for-bit on the bench buffer before either row is priced.
+    use owf::util::simd::{fnv1a64_ref, fnv1a64_words};
+    let n = bench_n();
+    let mut rng = Rng::new(41);
+    let buf: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+    assert_eq!(
+        fnv1a64_words(&buf),
+        fnv1a64_ref(&buf),
+        "fnv1a64 word/byte paths diverge"
+    );
+    bench_rec(rows, "fnv1a64 [simd]", Some(n as f64), || {
+        std::hint::black_box(fnv1a64_words(&buf));
+    });
+    bench_rec(rows, "fnv1a64 [scalar]", Some(n as f64), || {
+        std::hint::black_box(fnv1a64_ref(&buf));
+    });
+}
+
 fn bench_artifact(rows: &mut Vec<Row>) -> anyhow::Result<()> {
     // the OWQ1 round trip at checkpoint-tensor scale: [pack] = fused
     // encode + Fisher-free flat alloc + interleaved Huffman coding +
@@ -238,6 +260,7 @@ fn main() -> anyhow::Result<()> {
     let mut rows: Vec<Row> = Vec::new();
     bench_sweep(&mut rows);
     bench_decode(&mut rows)?;
+    bench_fnv(&mut rows);
     bench_artifact(&mut rows)?;
     let opts = RunOpts {
         eval_seqs: 16,

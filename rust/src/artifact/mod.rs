@@ -65,7 +65,9 @@
 //! # Fault model (see `EXPERIMENTS.md` §Fault-model)
 //!
 //! Every failure is a typed [`ArtifactError`], not a string.  Container
-//! bytes come through a [`ByteSource`] so the same reader serves pristine
+//! bytes come through a [`ByteSource`] so the same reader serves the
+//! production pread path ([`Artifact::open`] — positioned per-section
+//! reads at the recorded offsets, never a whole-file image), pristine
 //! memory and the fault-injecting [`crate::util::faultfs::FaultFs`];
 //! transient read errors retry with bounded exponential backoff through an
 //! injectable [`retry::Clock`] — corruption never retries.
@@ -130,13 +132,12 @@ pub const ALIGN: usize = 64;
 /// `h = (h ^ b) * prime` is a bijection of `h` (odd multiplier mod 2^64),
 /// so two inputs differing in exactly one byte can never collide — the
 /// single-bit-flip detection guarantee the fault suite leans on.
+/// Dispatches on the active ISA: a forced-scalar pin runs the byte-serial
+/// oracle, everything else the word-at-a-time loads — bit-identical by
+/// construction ([`crate::util::simd`] module docs; the forced-ISA tests
+/// prove it per length), so checksums never depend on the path taken.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
+    crate::util::simd::fnv1a64_with(crate::util::simd::active(), bytes)
 }
 
 /// Exact f64 interchange: 16 hex digits of the IEEE bit pattern.  Used for
@@ -369,11 +370,17 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
 }
 
 impl Artifact {
+    /// Open a container file for pread-style serving: the header and
+    /// manifest are read eagerly, then every per-tensor section is read
+    /// at its recorded offset on demand (`ByteSource::File` issues
+    /// positioned reads on a shared descriptor — no whole-file image is
+    /// ever materialised, so a large store costs open-time metadata I/O
+    /// only and concurrent decoders never contend on a buffer).
     pub fn open(path: impl AsRef<Path>) -> AResult<Artifact> {
         let path = path.as_ref();
-        let raw = std::fs::read(path)
+        let source = ByteSource::open_file(path)
             .map_err(|e| ArtifactError::io(&e, format!("open {path:?}")))?;
-        Artifact::from_bytes(raw)
+        Artifact::from_source(source)
     }
 
     /// Parse a container from raw in-memory bytes (zero-copy reads).

@@ -158,16 +158,10 @@ pub fn rans_encode_interleaved(
     out
 }
 
-/// Decode `count` symbols from a [`rans_encode_interleaved`] container,
-/// running the K states round-robin over the shared stream.  Decoding a
-/// prefix (`count` below what was encoded) yields exactly the first
-/// `count` symbols.  Panics on a container too short to hold the header
-/// and the K flushed states.
-pub fn rans_decode_interleaved(
-    model: &RansModel,
-    data: &[u8],
-    count: usize,
-) -> Vec<u16> {
+/// Parse the `[K: u8][4 flushed state bytes]×K` container head; returns
+/// `(lanes, initial states, stream cursor)`.  Panics on a container too
+/// short to hold the header and the K flushed states.
+fn parse_lane_header(data: &[u8]) -> (usize, Vec<u32>, usize) {
     assert!(!data.is_empty(), "interleaved container: missing header");
     let lanes = data[0] as usize;
     assert!(lanes >= 1, "interleaved container: zero lanes");
@@ -185,8 +179,50 @@ pub fn rans_decode_interleaved(
             pos += 1;
         }
     }
+    (lanes, states, pos)
+}
+
+/// Decode `count` symbols from a [`rans_encode_interleaved`] container,
+/// running the K states round-robin over the shared stream.  Decoding a
+/// prefix (`count` below what was encoded) yields exactly the first
+/// `count` symbols.  Panics on a container too short to hold the header
+/// and the K flushed states.  Dispatches on the active ISA — see
+/// [`rans_decode_interleaved_with`] for the contract.
+pub fn rans_decode_interleaved(
+    model: &RansModel,
+    data: &[u8],
+    count: usize,
+) -> Vec<u16> {
+    rans_decode_interleaved_with(
+        model,
+        data,
+        count,
+        crate::util::simd::active(),
+    )
+}
+
+/// [`rans_decode_interleaved`] with an explicit ISA, for the forced-ISA
+/// parity tests and benches.  `Isa::Scalar` runs the original per-symbol
+/// loop verbatim (the oracle); AVX2 with K=8 (or NEON with K=4) runs
+/// whole rounds with vectorised slot extraction, symbol/frequency
+/// gathers and state updates.  Renormalisation stays a per-lane byte
+/// feed in lane order — the K lanes share ONE stream whose byte order is
+/// the encoder's reversed writes, so consumption is inherently
+/// sequential — which is exactly why every path is bit- and
+/// position-identical by construction.  Any (ISA, K) pair without a
+/// vector kernel decodes on the scalar path.
+pub fn rans_decode_interleaved_with(
+    model: &RansModel,
+    data: &[u8],
+    count: usize,
+    isa: crate::util::simd::Isa,
+) -> Vec<u16> {
+    let (lanes, mut states, mut pos) = parse_lane_header(data);
     let mut out = Vec::with_capacity(count);
-    for i in 0..count {
+    let start = decode_rounds_simd(
+        model, &mut states, data, &mut pos, &mut out, count, isa,
+    );
+    for i in start..count {
         let state = &mut states[i % lanes];
         let slot = *state & (PROB_SCALE - 1);
         let s = model.slot_to_symbol[slot as usize];
@@ -200,6 +236,167 @@ pub fn rans_decode_interleaved(
         }
     }
     out
+}
+
+/// Run as many whole K-symbol rounds as the ISA's vector width allows;
+/// returns how many symbols were emitted (0 when no vector kernel
+/// matches, leaving everything to the scalar loop).  The state update
+/// `f·(state >> 12) + slot − cum` uses wrapping vector arithmetic, which
+/// is exact: for ANY u32 state and any normalised model, `f ≤ 2^12`,
+/// `state >> 12 ≤ 2^20 − 1` and `slot − cum ≤ f − 1`, so the result is
+/// at most `2^12·(2^20−1) + 2^12 − 1 = 2^32 − 1` — overflow is
+/// impossible, corrupt input included (the checked decoder's
+/// `checked_mul` guard is provably unreachable for the same reason).
+#[allow(unused_variables, unused_imports)]
+fn decode_rounds_simd(
+    model: &RansModel,
+    states: &mut [u32],
+    data: &[u8],
+    pos: &mut usize,
+    out: &mut Vec<u16>,
+    count: usize,
+    isa: crate::util::simd::Isa,
+) -> usize {
+    use crate::util::simd::Isa;
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 if states.len() == 8 && count >= 8 => {
+            let rounds = count / 8;
+            // u32 copy of the slot→symbol table: AVX2 gathers 32-bit
+            // elements only (16 KiB, amortised over ≥ 8·rounds symbols)
+            let sym32: Vec<u32> =
+                model.slot_to_symbol.iter().map(|&s| s as u32).collect();
+            let mut st = [0u32; 8];
+            st.copy_from_slice(states);
+            // SAFETY: Isa::Avx2 only resolves on hosts whose CPUID
+            // reports AVX2 (util::simd::active/supported).
+            unsafe {
+                avx2_decode_rounds(
+                    model, &sym32, &mut st, data, pos, out, rounds,
+                );
+            }
+            states.copy_from_slice(&st);
+            rounds * 8
+        }
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon if states.len() == 4 && count >= 4 => {
+            let rounds = count / 4;
+            let mut st = [0u32; 4];
+            st.copy_from_slice(states);
+            // SAFETY: NEON is baseline on every aarch64 target.
+            unsafe {
+                neon_decode_rounds(model, &mut st, data, pos, out, rounds);
+            }
+            states.copy_from_slice(&st);
+            rounds * 4
+        }
+        _ => 0,
+    }
+}
+
+/// One AVX2 vector of 8 interleaved states: per round, slot extraction
+/// (AND), symbol/freq/cum table gathers and the state update run as
+/// 8-lane vector ops; the renormalisation byte feed then runs lane
+/// 0..7 in order from the shared stream (see
+/// [`rans_decode_interleaved_with`] — sequential by format design).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn avx2_decode_rounds(
+    model: &RansModel,
+    sym32: &[u32],
+    states: &mut [u32; 8],
+    data: &[u8],
+    pos: &mut usize,
+    out: &mut Vec<u16>,
+    rounds: usize,
+) {
+    use core::arch::x86_64::*;
+    let mask = _mm256_set1_epi32((PROB_SCALE - 1) as i32);
+    let mut st = _mm256_loadu_si256(states.as_ptr() as *const __m256i);
+    let mut stbuf = [0u32; 8];
+    let mut symbuf = [0u32; 8];
+    for _ in 0..rounds {
+        let slots = _mm256_and_si256(st, mask);
+        // slots < 2^12 = sym32.len(); gathered symbols index freq/cum
+        // in range by model construction (cum has freq.len()+1 entries)
+        let syms = _mm256_i32gather_epi32::<4>(
+            sym32.as_ptr() as *const i32,
+            slots,
+        );
+        let freqs = _mm256_i32gather_epi32::<4>(
+            model.freq.as_ptr() as *const i32,
+            syms,
+        );
+        let cums = _mm256_i32gather_epi32::<4>(
+            model.cum.as_ptr() as *const i32,
+            syms,
+        );
+        // state' = f·(state >> PROB_BITS) + slot − cum; wrapping vector
+        // ops are exact — overflow is impossible (see decode_rounds_simd)
+        let upd = _mm256_add_epi32(
+            _mm256_mullo_epi32(freqs, _mm256_srli_epi32::<12>(st)),
+            _mm256_sub_epi32(slots, cums),
+        );
+        _mm256_storeu_si256(symbuf.as_mut_ptr() as *mut __m256i, syms);
+        for &s in &symbuf {
+            out.push(s as u16);
+        }
+        _mm256_storeu_si256(stbuf.as_mut_ptr() as *mut __m256i, upd);
+        for s in stbuf.iter_mut() {
+            while *s < RANS_LOW && *pos < data.len() {
+                *s = (*s << 8) | data[*pos] as u32;
+                *pos += 1;
+            }
+        }
+        st = _mm256_loadu_si256(stbuf.as_ptr() as *const __m256i);
+    }
+    _mm256_storeu_si256(states.as_mut_ptr() as *mut __m256i, st);
+}
+
+/// One NEON vector of 4 interleaved states: slot extraction and the
+/// state update are 4-lane vector ops; NEON has no hardware gather, so
+/// the table lookups stay scalar, and renormalisation feeds lanes
+/// 0..3 in order like the oracle.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn neon_decode_rounds(
+    model: &RansModel,
+    states: &mut [u32; 4],
+    data: &[u8],
+    pos: &mut usize,
+    out: &mut Vec<u16>,
+    rounds: usize,
+) {
+    use core::arch::aarch64::*;
+    let mask = vdupq_n_u32(PROB_SCALE - 1);
+    let mut st = vld1q_u32(states.as_ptr());
+    let mut slotbuf = [0u32; 4];
+    let mut fbuf = [0u32; 4];
+    let mut cbuf = [0u32; 4];
+    let mut stbuf = [0u32; 4];
+    for _ in 0..rounds {
+        let slots = vandq_u32(st, mask);
+        vst1q_u32(slotbuf.as_mut_ptr(), slots);
+        for k in 0..4 {
+            let s = model.slot_to_symbol[slotbuf[k] as usize];
+            out.push(s);
+            fbuf[k] = model.freq[s as usize];
+            cbuf[k] = model.cum[s as usize];
+        }
+        let upd = vaddq_u32(
+            vmulq_u32(vld1q_u32(fbuf.as_ptr()), vshrq_n_u32::<12>(st)),
+            vsubq_u32(slots, vld1q_u32(cbuf.as_ptr())),
+        );
+        vst1q_u32(stbuf.as_mut_ptr(), upd);
+        for s in stbuf.iter_mut() {
+            while *s < RANS_LOW && *pos < data.len() {
+                *s = (*s << 8) | data[*pos] as u32;
+                *pos += 1;
+            }
+        }
+        st = vld1q_u32(stbuf.as_ptr());
+    }
+    vst1q_u32(states.as_mut_ptr(), st);
 }
 
 /// Decode exactly `count` symbols and verify stream integrity end to end:
@@ -216,25 +413,33 @@ pub fn rans_decode_interleaved_checked(
     data: &[u8],
     count: usize,
 ) -> Result<Vec<u16>, String> {
-    assert!(!data.is_empty(), "interleaved container: missing header");
-    let lanes = data[0] as usize;
-    assert!(lanes >= 1, "interleaved container: zero lanes");
-    assert!(
-        data.len() >= 1 + 4 * lanes,
-        "interleaved container: torn state flush ({} of {} bytes)",
-        data.len(),
-        1 + 4 * lanes
-    );
-    let mut pos = 1usize;
-    let mut states = vec![0u32; lanes];
-    for st in states.iter_mut() {
-        for _ in 0..4 {
-            *st = (*st << 8) | data[pos] as u32;
-            pos += 1;
-        }
-    }
+    rans_decode_interleaved_checked_with(
+        model,
+        data,
+        count,
+        crate::util::simd::active(),
+    )
+}
+
+/// [`rans_decode_interleaved_checked`] with an explicit ISA (forced-ISA
+/// parity tests).  The vector fast path is safe here too: its wrapping
+/// state update cannot overflow for any input (see
+/// [`decode_rounds_simd`]), so the scalar loop's `checked_mul` guard —
+/// kept verbatim below as the oracle — can never observe a failure the
+/// vector path would miss, and the final-state/full-consumption checks
+/// run identically on both.
+pub fn rans_decode_interleaved_checked_with(
+    model: &RansModel,
+    data: &[u8],
+    count: usize,
+    isa: crate::util::simd::Isa,
+) -> Result<Vec<u16>, String> {
+    let (lanes, mut states, mut pos) = parse_lane_header(data);
     let mut out = Vec::with_capacity(count);
-    for i in 0..count {
+    let start = decode_rounds_simd(
+        model, &mut states, data, &mut pos, &mut out, count, isa,
+    );
+    for i in start..count {
         let state = &mut states[i % lanes];
         let slot = *state & (PROB_SCALE - 1);
         let s = model.slot_to_symbol[slot as usize];

@@ -649,15 +649,17 @@ pub fn fig24_compressors(opts: &RunOpts) -> Result<Report> {
             rans_decode(&model, &renc, symbols.len())[..100],
             symbols[..100]
         );
-        // and that the 4-lane interleaved serving decoders agree with the
-        // single-lane oracles on a probe slice of the same stream
+        // and that the K-lane interleaved serving decoders agree with
+        // the single-lane oracles on a probe slice of the same stream —
+        // K picked from the active ISA's vector width, as at pack time
+        let lanes = crate::util::simd::preferred_lanes();
         let probe = symbols.len().min(10_000);
-        let ri = rans_encode_interleaved(&model, &symbols[..probe], 4);
+        let ri = rans_encode_interleaved(&model, &symbols[..probe], lanes);
         assert_eq!(
             rans_decode_interleaved(&model, &ri, probe),
             symbols[..probe]
         );
-        let hi = huff.encode_interleaved(&symbols[..probe], 4);
+        let hi = huff.encode_interleaved(&symbols[..probe], lanes);
         assert_eq!(huff.decode_interleaved(&hi, probe), symbols[..probe]);
         let r_rate = renc.len() as f64 * 8.0 / symbols.len() as f64;
         // information content under the smoothed sample model

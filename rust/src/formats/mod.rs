@@ -176,10 +176,12 @@ impl Lut {
     const TILE: usize = 32;
 
     /// Batched [`Lut::lookup`] over one tile: bucket slots for all lanes
-    /// are computed as `u32`s in a pure-arithmetic pass (vectorises) before
-    /// the table gathers run.  Bit-identical to the scalar lookup: the
-    /// saturating `f32 → u32` cast matches `f32 → usize` for every input
-    /// once both are clamped to the (≤ 2^16-entry) table.
+    /// are computed as `u32`s in a pure-arithmetic pass before the table
+    /// gathers run.  The slot pass dispatches to an explicit AVX2/NEON
+    /// kernel ([`crate::util::simd::lut_slots`]); the scalar oracle lives
+    /// there verbatim and every path is bit-identical to the scalar
+    /// lookup: the saturating `f32 → u32` cast matches `f32 → usize` for
+    /// every input once both are clamped to the (≤ 2^16-entry) table.
     #[inline]
     fn lookup_tile(
         &self,
@@ -188,9 +190,14 @@ impl Lut {
     ) {
         let top = (self.base.len() - 1) as u32;
         let mut slots = [0u32; Self::TILE];
-        for (slot, &y) in slots.iter_mut().zip(ys.iter()) {
-            *slot = (((y - self.lo) * self.inv_step) as u32).min(top);
-        }
+        crate::util::simd::lut_slots(
+            crate::util::simd::active(),
+            ys,
+            self.lo,
+            self.inv_step,
+            top,
+            &mut slots,
+        );
         for ((o, &t), &y) in out.iter_mut().zip(slots.iter()).zip(ys.iter())
         {
             // SAFETY: t <= top < base.len(); base[t] <= mids.len(), and
@@ -486,7 +493,11 @@ impl Codebook {
     /// Bit-exact with the scalar `dequantise(idx) * s` — the same f32
     /// multiply, hoisted.  Blocks shorter than the codebook skip the table
     /// (building it would dominate) and multiply per element instead.
-    /// Panics on an out-of-range index (corrupt [`crate::quant::Encoded`]).
+    /// The table gather dispatches to an explicit AVX2/NEON kernel
+    /// ([`crate::util::simd::gather_u16_f32`]; scalar oracle kept there
+    /// verbatim) and every path panics on an out-of-range index (corrupt
+    /// [`crate::quant::Encoded`]) — indices are validated before any
+    /// hardware gather runs.
     pub fn decode_block(
         &self,
         indices: &[u16],
@@ -499,14 +510,28 @@ impl Codebook {
         if indices.len() >= pts.len() {
             scaled.clear();
             scaled.extend(pts.iter().map(|&p| p * s));
-            for (slot, &i) in out.iter_mut().zip(indices.iter()) {
-                *slot = scaled[i as usize];
-            }
+            crate::util::simd::gather_u16_f32(
+                crate::util::simd::active(),
+                scaled,
+                indices,
+                out,
+            );
         } else {
             for (slot, &i) in out.iter_mut().zip(indices.iter()) {
                 *slot = pts[i as usize] * s;
             }
         }
+    }
+
+    /// LUT kernel parameters `(lo, inv_step, top)` when the fast path is
+    /// built — exposed so the forced-ISA parity tests and benches can
+    /// drive [`crate::util::simd::lut_slots`] with this codebook's exact
+    /// arithmetic.  `None` on reference-path codebooks.
+    #[doc(hidden)]
+    pub fn lut_params(&self) -> Option<(f32, f32, u32)> {
+        self.lut
+            .as_ref()
+            .map(|l| (l.lo, l.inv_step, (l.base.len() - 1) as u32))
     }
 
     /// Largest |codepoint| (the representable range).

@@ -123,6 +123,7 @@ fn main() -> Result<()> {
         "fsck" => cmd_fsck(&args),
         "fault-inject" => cmd_fault_inject(&args),
         "fisher" => cmd_fisher(&args),
+        "isa" => cmd_isa(),
         "schemes" => {
             println!("{SCHEME_HELP}");
             Ok(())
@@ -496,13 +497,17 @@ fn cmd_pack(args: &Args) -> Result<()> {
         .map(|s| Codec::parse(s))
         .transpose()?
         .unwrap_or(Codec::Huffman);
+    // default K follows the active ISA's vector width (8 on AVX2, else
+    // 4) — the lane count rides in the container header, so any choice
+    // decodes anywhere; matching the width lets the SIMD rANS rounds
+    // engage on the packing host's own decode path
     let lanes: usize = args
         .flags
         .get("lanes")
         .map(|v| v.parse())
         .transpose()
         .context("--lanes")?
-        .unwrap_or(4);
+        .unwrap_or_else(owf::util::simd::preferred_lanes);
     let alloc = args
         .flags
         .get("alloc")
@@ -1319,6 +1324,18 @@ fn cmd_fisher(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_isa() -> Result<()> {
+    use owf::util::simd;
+    println!("detected: {}", simd::detected().name());
+    println!(
+        "active:   {} (OWF_ISA={})",
+        simd::active().name(),
+        std::env::var("OWF_ISA").unwrap_or_else(|_| "unset".to_string()),
+    );
+    println!("lanes:    {}", simd::preferred_lanes());
+    Ok(())
+}
+
 const HELP: &str = "owf — Optimal Weight Formats (paper reproduction)
 
 USAGE:
@@ -1334,6 +1351,8 @@ USAGE:
                                         table, nonzero exit on damage
   owf fault-inject <in> --out <out>     write a damaged container copy
   owf fisher [--size m] [--batches N]   estimate the Fisher diagonal
+  owf isa                               show detected/active SIMD path
+                                        (pin with OWF_ISA=scalar|avx2|neon)
   owf schemes                           scheme + grid grammar reference
 
 OPTIONS:
@@ -1362,7 +1381,8 @@ PACK OPTIONS (owf pack):
   --dist D          sim distribution: t<nu>|normal|laplace (default t5)
   --alloc MODE      flat | variable (eq.-5 Fisher/RMS) (default flat)
   --codec C         huffman | rans | raw               (default huffman)
-  --lanes K         interleaved entropy-coder lanes    (default 4)
+  --lanes K         interleaved entropy-coder lanes    (default: the
+                    active ISA's vector width — 8 on AVX2, else 4)
 
 SERVE-BENCH OPTIONS:
   --threads N       concurrent reader threads          (default 4)

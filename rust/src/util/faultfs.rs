@@ -1,10 +1,12 @@
 //! Deterministic fault injection for artifact byte access.
 //!
 //! [`ByteSource`] abstracts "where container bytes come from" so the
-//! artifact reader runs identically over a pristine in-memory image
-//! (`Mem`, the production path after `fs::read` — zero-copy reads) and a
-//! fault-injecting wrapper (`Fault`).  [`FaultFs`] injects the fault
-//! classes the serving layer must survive:
+//! artifact reader runs identically over a pread-backed file (`File`,
+//! the production path: positioned per-section reads at the recorded
+//! offsets on one shared descriptor — no whole-file image), a pristine
+//! in-memory image (`Mem` — zero-copy reads) and a fault-injecting
+//! wrapper (`Fault`).  [`FaultFs`] injects the fault classes the
+//! serving layer must survive:
 //!
 //! * **single-bit flips** at chosen byte/bit offsets (silent media or DMA
 //!   corruption — the checksum layer must catch every one);
@@ -26,18 +28,28 @@ use std::sync::Mutex;
 
 use crate::util::rng::Rng;
 
-/// Byte provider for artifact readers: pristine memory or faulty memory.
+/// Byte provider for artifact readers: a pread-backed file, pristine
+/// memory, or faulty memory.
 pub enum ByteSource {
-    /// Production path: the whole container image in memory. Reads borrow.
+    /// Production path: positioned reads against an open descriptor.
+    File(FileSource),
+    /// Whole container image in memory. Reads borrow.
     Mem(Vec<u8>),
     /// Test/chaos path: reads copy, with faults injected per the plan.
     Fault(FaultFs),
 }
 
 impl ByteSource {
+    /// Open `path` for positioned per-section reads (the `Artifact::open`
+    /// production path).
+    pub fn open_file(path: impl AsRef<Path>) -> io::Result<ByteSource> {
+        Ok(ByteSource::File(FileSource::open(path)?))
+    }
+
     /// Visible length of the container (truncation shrinks it).
     pub fn len(&self) -> usize {
         match self {
+            ByteSource::File(f) => f.len(),
             ByteSource::Mem(b) => b.len(),
             ByteSource::Fault(f) => f.len(),
         }
@@ -52,6 +64,7 @@ impl ByteSource {
     /// injected transient faults surface as `Interrupted`.
     pub fn read_at(&self, off: usize, len: usize) -> io::Result<Cow<'_, [u8]>> {
         match self {
+            ByteSource::File(f) => f.read_at(off, len).map(Cow::Owned),
             ByteSource::Mem(b) => {
                 let end = off.checked_add(len).filter(|&e| e <= b.len());
                 match end {
@@ -68,6 +81,69 @@ impl ByteSource {
             }
             ByteSource::Fault(f) => f.read_at(off, len).map(Cow::Owned),
         }
+    }
+}
+
+/// Pread-backed container access: one shared descriptor, positioned
+/// reads, length snapshotted at open.  Reads past the snapshot fail
+/// `UnexpectedEof` *before* touching the file (the same permanent shape
+/// error `Mem` reports), and a file truncated underneath us surfaces the
+/// kernel's short read as `UnexpectedEof` too — torn, not transient.  On
+/// unix this is `pread(2)` (thread-safe on the shared fd — concurrent
+/// decoders never contend on a cursor); elsewhere each read seeks a
+/// cloned descriptor so the shared one stays position-free.
+pub struct FileSource {
+    file: std::fs::File,
+    len: usize,
+}
+
+impl FileSource {
+    pub fn open(path: impl AsRef<Path>) -> io::Result<FileSource> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        let len = usize::try_from(len).map_err(|_| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("container larger than the address space: {len}"),
+            )
+        })?;
+        Ok(FileSource { file, len })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn read_at(&self, off: usize, len: usize) -> io::Result<Vec<u8>> {
+        off.checked_add(len).filter(|&e| e <= self.len).ok_or_else(
+            || {
+                io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!(
+                        "read {len} bytes at {off} beyond container end {}",
+                        self.len
+                    ),
+                )
+            },
+        )?;
+        let mut buf = vec![0u8; len];
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.read_exact_at(&mut buf, off as u64)?;
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let mut f = self.file.try_clone()?;
+            f.seek(SeekFrom::Start(off as u64))?;
+            f.read_exact(&mut buf)?;
+        }
+        Ok(buf)
     }
 }
 
@@ -340,6 +416,44 @@ mod tests {
         assert_ne!(run(41), run(42), "different seeds, different plans");
         let fired = run(41).iter().filter(|&&e| e).count();
         assert!(fired > 8 && fired < 56, "rate wildly off: {fired}/64");
+    }
+
+    #[test]
+    fn file_source_preads_match_mem() {
+        let dir = std::env::temp_dir().join("owf_faultfs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path =
+            dir.join(format!("pread_{}.bin", std::process::id()));
+        let bytes: Vec<u8> = (0..=255u8).collect();
+        std::fs::write(&path, &bytes).unwrap();
+        let file = ByteSource::open_file(&path).unwrap();
+        let mem = ByteSource::Mem(bytes);
+        assert_eq!(file.len(), mem.len());
+        for (off, len) in [(0, 256), (0, 0), (17, 99), (255, 1), (256, 0)]
+        {
+            assert_eq!(
+                &*file.read_at(off, len).unwrap(),
+                &*mem.read_at(off, len).unwrap(),
+                "window ({off}, {len})"
+            );
+        }
+        // out-of-range windows are the same permanent shape error
+        for (off, len) in [(250, 10), (256, 1), (usize::MAX, 2)] {
+            assert_eq!(
+                file.read_at(off, len).unwrap_err().kind(),
+                io::ErrorKind::UnexpectedEof,
+                "window ({off}, {len})"
+            );
+        }
+        // truncation underneath the open descriptor reads as torn, not
+        // stale data: the snapshot length still admits the window but
+        // the kernel's short read must surface as UnexpectedEof
+        std::fs::write(&path, [1u8, 2, 3]).unwrap();
+        assert_eq!(
+            file.read_at(0, 256).unwrap_err().kind(),
+            io::ErrorKind::UnexpectedEof
+        );
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

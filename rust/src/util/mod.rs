@@ -8,5 +8,6 @@ pub mod fsx;
 pub mod json;
 pub mod pool;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod testing;

@@ -1,0 +1,559 @@
+//! Runtime ISA dispatch for the explicit SIMD hot-loop kernels.
+//!
+//! The decode/encode hot loops (`Lut::lookup_tile`'s bucket-slot pass,
+//! `Codebook::decode_block`'s scaled-codepoint gather, the K-lane rANS
+//! round update, FNV checksumming) were written auto-vectorisable, but
+//! nothing ever verified they vectorise.  This module makes the vector
+//! paths *explicit*: AVX2 / NEON kernels behind one startup-time feature
+//! probe, with every scalar kernel kept verbatim as the property-tested
+//! oracle (the `decode_ref` / `quantise_ref` pattern).
+//!
+//! # Dispatch rules
+//!
+//! * [`detected`] probes the host once: AVX2 on `x86_64` (via
+//!   `is_x86_feature_detected!`), NEON on `aarch64` (baseline — every
+//!   aarch64 target has it), scalar everywhere else.  A host with
+//!   neither AVX2 nor NEON *selects* the scalar fallback; that is a
+//!   supported configuration, not an error.
+//! * [`active`] resolves the ISA every production call site uses, once,
+//!   honouring the forced override `OWF_ISA=scalar|avx2|neon`.  Forcing
+//!   an ISA the host cannot run panics at first use (a mis-pinned CI job
+//!   must fail loudly, not silently time the wrong kernel); forcing
+//!   `scalar` always works.  Tests and `scripts/check.sh` pin the paths
+//!   with this knob and diff the outputs.
+//! * Each kernel also takes an explicit [`Isa`] so the forced-ISA parity
+//!   tests (`rust/tests/simd_props.rs`) can run both paths in one
+//!   process without env games.  Passing an ISA the current *binary*
+//!   has no code for (e.g. `Neon` on x86_64) falls back to scalar —
+//!   only [`active`]/[`supported`] guard against an ISA the *host*
+//!   cannot execute.
+//!
+//! # Kernel invariants (bit-exactness contracts)
+//!
+//! Every SIMD kernel is bit-identical to its scalar oracle on **all**
+//! inputs, including the adversarial set (NaN, ±inf, subnormals, exact
+//! midpoints):
+//!
+//! * `lut_slots`: the scalar saturating `f32 → u32` cast maps NaN and
+//!   negatives to 0 and +inf/overflow to `u32::MAX`, then clamps to
+//!   `top`.  AVX2 has no saturating convert, so the kernel clamps in the
+//!   *float* domain first — `min(max(z, 0.0), top as f32)` — which is
+//!   exact because `top < 2^16 < 2^24` is representable, `maxps`
+//!   returns its second operand on NaN (so NaN → 0.0 like the cast),
+//!   and truncation of a clamped value agrees with clamping the
+//!   truncation.  NEON's `FCVTZU` saturates exactly like the Rust cast,
+//!   so it needs no float-domain clamp.
+//! * `gather_u16_f32`: loads are value-exact by definition; the scalar
+//!   oracle's *panic on an out-of-range index* (corrupt `Encoded`) is
+//!   preserved by validating each vector of indices against the table
+//!   length before any unchecked gather.
+//! * `fnv1a64_with`: FNV-1a's `h = (h ^ b) * p` chain is inherently
+//!   serial (multiplication does not distribute over XOR), so the fast
+//!   path keeps the chain and widens the *loads*: one `u64` load per 8
+//!   bytes, unrolled byte extraction from the register.  Bit-identical
+//!   by construction; `rust/tests/simd_props.rs` proves it for every
+//!   length 0..=64 plus the known test vectors, because every container
+//!   checksum depends on it.
+//! * The rANS round kernels live in `compress::rans` (they need model
+//!   internals); same contract, same oracle pattern.
+//!
+//! # Per-target lane count
+//!
+//! [`preferred_lanes`] picks the interleave K for *encode time* from the
+//! active ISA width (8 on AVX2 — one 256-bit vector of 32-bit states —
+//! else 4).  The lane count is recorded in the container header, so
+//! artifacts encoded with any K decode unchanged everywhere; K only has
+//! to match the decoder's vector width for the SIMD rANS path to engage.
+
+use std::sync::OnceLock;
+
+/// An instruction-set path a kernel can run on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// The portable oracle path — always available, always correct.
+    Scalar,
+    /// x86_64 AVX2 (256-bit; 8 × f32/u32 per vector).
+    Avx2,
+    /// aarch64 NEON (128-bit; 4 × f32/u32 per vector).
+    Neon,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    pub fn is_scalar(self) -> bool {
+        self == Isa::Scalar
+    }
+
+    /// Parse an `OWF_ISA` value. Case-insensitive; `None` on anything
+    /// outside `scalar|avx2|neon`.
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// Best ISA the running host supports (no env override applied).
+pub fn detected() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return Isa::Neon;
+    }
+    #[allow(unreachable_code)]
+    Isa::Scalar
+}
+
+/// Can the running host execute `isa`?  Scalar always; AVX2/NEON only
+/// with the matching architecture *and* (for AVX2) the CPUID bit.
+pub fn supported(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        Isa::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                std::arch::is_x86_feature_detected!("avx2")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                false
+            }
+        }
+        Isa::Neon => cfg!(target_arch = "aarch64"),
+    }
+}
+
+/// Resolve a forced override against what the host supports — the pure
+/// core of [`active`], split out so the full decision matrix is unit
+/// testable without touching process env.
+pub fn resolve(forced: Option<&str>, detected: Isa) -> Result<Isa, String> {
+    let raw = match forced {
+        None => return Ok(detected),
+        Some(raw) => raw,
+    };
+    let isa = Isa::parse(raw).ok_or_else(|| {
+        format!("OWF_ISA={raw:?}: unknown ISA (expected scalar|avx2|neon)")
+    })?;
+    if supported(isa) {
+        Ok(isa)
+    } else {
+        Err(format!(
+            "OWF_ISA={} forced but this host cannot run it (detected: {})",
+            isa.name(),
+            detected.name()
+        ))
+    }
+}
+
+/// The ISA every production call site dispatches on, resolved once per
+/// process: `OWF_ISA` override if set (panics if the host cannot run
+/// it), else [`detected`].
+pub fn active() -> Isa {
+    static ACTIVE: OnceLock<Isa> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let forced = std::env::var("OWF_ISA").ok();
+        match resolve(forced.as_deref(), detected()) {
+            Ok(isa) => isa,
+            Err(e) => panic!("{e}"),
+        }
+    })
+}
+
+/// Interleave lane count matched to an ISA's 32-bit-element vector
+/// width: 8 states fill one AVX2 vector; 4 fill a NEON vector.  Scalar
+/// keeps 4 — the superscalar ILP the K-lane design was built for.
+pub fn lanes_for(isa: Isa) -> usize {
+    match isa {
+        Isa::Avx2 => 8,
+        Isa::Neon | Isa::Scalar => 4,
+    }
+}
+
+/// Encode-time K for this process (`lanes_for(active())`) — the `owf
+/// pack` default.  Any K decodes anywhere (it is in the container
+/// header); matching the target's vector width just lets the SIMD rANS
+/// decode rounds engage.
+pub fn preferred_lanes() -> usize {
+    lanes_for(active())
+}
+
+// --------------------------------------------------------------------------
+// LUT bucket-slot kernel (`Lut::lookup_tile`'s arithmetic pass)
+// --------------------------------------------------------------------------
+
+/// Bucket slots for a batch of queries:
+/// `out[i] = (((ys[i] - lo) * inv_step) as u32).min(top)` — the
+/// pure-arithmetic pass of `Lut::lookup_tile`, bit-exact across ISAs
+/// (see the module invariants).  `top` must be < 2^16 (the LUT bucket
+/// budget); lengths must match.
+pub fn lut_slots(
+    isa: Isa,
+    ys: &[f32],
+    lo: f32,
+    inv_step: f32,
+    top: u32,
+    out: &mut [u32],
+) {
+    debug_assert_eq!(ys.len(), out.len());
+    debug_assert!(top < 1 << 16);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only ever resolved via active()/supported()
+        // on hosts whose CPUID reports it (module docs).
+        Isa::Avx2 => unsafe { lut_slots_avx2(ys, lo, inv_step, top, out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { lut_slots_neon(ys, lo, inv_step, top, out) },
+        _ => lut_slots_scalar(ys, lo, inv_step, top, out),
+    }
+}
+
+/// The scalar oracle — kept verbatim from the pre-SIMD `lookup_tile`.
+fn lut_slots_scalar(
+    ys: &[f32],
+    lo: f32,
+    inv_step: f32,
+    top: u32,
+    out: &mut [u32],
+) {
+    for (slot, &y) in out.iter_mut().zip(ys.iter()) {
+        *slot = (((y - lo) * inv_step) as u32).min(top);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn lut_slots_avx2(
+    ys: &[f32],
+    lo: f32,
+    inv_step: f32,
+    top: u32,
+    out: &mut [u32],
+) {
+    use core::arch::x86_64::*;
+    let n = ys.len().min(out.len());
+    let vlo = _mm256_set1_ps(lo);
+    let vinv = _mm256_set1_ps(inv_step);
+    let vzero = _mm256_setzero_ps();
+    let vtop = _mm256_set1_ps(top as f32);
+    let mut i = 0;
+    while i + 8 <= n {
+        let y = _mm256_loadu_ps(ys.as_ptr().add(i));
+        // same two IEEE ops as the scalar path (Rust never contracts
+        // into FMA), so identical rounding
+        let z = _mm256_mul_ps(_mm256_sub_ps(y, vlo), vinv);
+        // float-domain clamp replaces the saturating cast: maxps
+        // returns its second operand on NaN (NaN → 0.0, like `as u32`),
+        // negatives → 0, +inf/overflow → top (exact in f32: top < 2^24)
+        let z = _mm256_min_ps(_mm256_max_ps(z, vzero), vtop);
+        let t = _mm256_cvttps_epi32(z);
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, t);
+        i += 8;
+    }
+    lut_slots_scalar(&ys[i..n], lo, inv_step, top, &mut out[i..n]);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn lut_slots_neon(
+    ys: &[f32],
+    lo: f32,
+    inv_step: f32,
+    top: u32,
+    out: &mut [u32],
+) {
+    use core::arch::aarch64::*;
+    let n = ys.len().min(out.len());
+    let vlo = vdupq_n_f32(lo);
+    let vinv = vdupq_n_f32(inv_step);
+    let vtop = vdupq_n_u32(top);
+    let mut i = 0;
+    while i + 4 <= n {
+        let y = vld1q_f32(ys.as_ptr().add(i));
+        let z = vmulq_f32(vsubq_f32(y, vlo), vinv);
+        // FCVTZU saturates exactly like Rust's `as u32` (NaN → 0,
+        // negative → 0, overflow → u32::MAX), so clamp after converting
+        let t = vminq_u32(vcvtq_u32_f32(z), vtop);
+        vst1q_u32(out.as_mut_ptr().add(i), t);
+        i += 4;
+    }
+    lut_slots_scalar(&ys[i..n], lo, inv_step, top, &mut out[i..n]);
+}
+
+// --------------------------------------------------------------------------
+// Scaled-codepoint gather (`Codebook::decode_block`'s inner loop)
+// --------------------------------------------------------------------------
+
+/// `out[i] = table[indices[i]]` — the scaled-codepoint gather of
+/// `Codebook::decode_block`.  Panics on an out-of-range index exactly
+/// like the scalar oracle (a corrupt `Encoded` must never become an
+/// unchecked out-of-bounds gather); each vector of indices is validated
+/// against `table.len()` before its gather.  `table.len()` must be
+/// ≤ 2^16 (u16 index space).
+pub fn gather_u16_f32(
+    isa: Isa,
+    table: &[f32],
+    indices: &[u16],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(indices.len(), out.len());
+    debug_assert!(table.len() <= 1 << 16);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 only resolves on hosts that report it.
+        Isa::Avx2 => unsafe { gather_u16_f32_avx2(table, indices, out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { gather_u16_f32_neon(table, indices, out) },
+        _ => gather_u16_f32_scalar(table, indices, out),
+    }
+}
+
+/// The scalar oracle — the bounds-checked indexed loop, verbatim.
+fn gather_u16_f32_scalar(table: &[f32], indices: &[u16], out: &mut [f32]) {
+    for (slot, &i) in out.iter_mut().zip(indices.iter()) {
+        *slot = table[i as usize];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gather_u16_f32_avx2(
+    table: &[f32],
+    indices: &[u16],
+    out: &mut [f32],
+) {
+    use core::arch::x86_64::*;
+    let n = out.len().min(indices.len());
+    // signed compare is safe: zero-extended u16 and table.len() ≤ 2^16
+    // are both non-negative in i32
+    let limit = _mm256_set1_epi32(table.len() as i32 - 1);
+    let mut i = 0;
+    while i + 8 <= n {
+        let idx16 =
+            _mm_loadu_si128(indices.as_ptr().add(i) as *const __m128i);
+        let idx = _mm256_cvtepu16_epi32(idx16);
+        let oob = _mm256_cmpgt_epi32(idx, limit);
+        if _mm256_movemask_epi8(oob) != 0 {
+            // corrupt index: re-run the oracle for its exact panic
+            gather_u16_f32_scalar(table, &indices[i..n], &mut out[i..n]);
+            unreachable!("scalar gather must panic on out-of-range index");
+        }
+        let v = _mm256_i32gather_ps::<4>(table.as_ptr(), idx);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), v);
+        i += 8;
+    }
+    gather_u16_f32_scalar(table, &indices[i..n], &mut out[i..n]);
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn gather_u16_f32_neon(
+    table: &[f32],
+    indices: &[u16],
+    out: &mut [f32],
+) {
+    use core::arch::aarch64::*;
+    let n = out.len().min(indices.len());
+    let mut i = 0;
+    while i + 8 <= n {
+        let idx = vld1q_u16(indices.as_ptr().add(i));
+        if (vmaxvq_u16(idx) as usize) >= table.len() {
+            gather_u16_f32_scalar(table, &indices[i..n], &mut out[i..n]);
+            unreachable!("scalar gather must panic on out-of-range index");
+        }
+        // NEON has no hardware gather; the win is one vector bounds
+        // check hoisted over 8 unchecked loads
+        for k in 0..8 {
+            *out.get_unchecked_mut(i + k) = *table
+                .get_unchecked(*indices.get_unchecked(i + k) as usize);
+        }
+        i += 8;
+    }
+    gather_u16_f32_scalar(table, &indices[i..n], &mut out[i..n]);
+}
+
+// --------------------------------------------------------------------------
+// FNV-1a 64 (the container checksum)
+// --------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// FNV-1a 64 with ISA dispatch: the byte-serial oracle under a forced
+/// scalar pin, the word-at-a-time loads otherwise.  Both are
+/// bit-identical (the hash chain itself is untouched — see the module
+/// invariants), so container checksums never depend on the path taken.
+pub fn fnv1a64_with(isa: Isa, bytes: &[u8]) -> u64 {
+    if isa.is_scalar() {
+        fnv1a64_ref(bytes)
+    } else {
+        fnv1a64_words(bytes)
+    }
+}
+
+/// The byte-serial oracle — the original definition, verbatim.  Each
+/// step `h = (h ^ b) * prime` is a bijection of `h` (odd multiplier mod
+/// 2^64): the single-byte-flip detection guarantee the fault suite
+/// leans on.
+pub fn fnv1a64_ref(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Word-at-a-time FNV-1a 64: one `u64` load per 8 bytes, bytes then
+/// extracted from the register in stream order (little-endian load puts
+/// the first byte in the low lane).  The multiply chain stays serial —
+/// it must, for bit-identity — so the speedup is purely fewer memory
+/// operations and a fully unrolled inner step.
+pub fn fnv1a64_words(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    let mut chunks = bytes.chunks_exact(8);
+    for chunk in &mut chunks {
+        let mut w = u64::from_le_bytes(chunk.try_into().unwrap());
+        for _ in 0..8 {
+            h = (h ^ (w & 0xFF)).wrapping_mul(FNV_PRIME);
+            w >>= 8;
+        }
+    }
+    for &b in chunks.remainder() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn isas() -> Vec<Isa> {
+        let mut v = vec![Isa::Scalar];
+        if detected() != Isa::Scalar {
+            v.push(detected());
+        }
+        v
+    }
+
+    #[test]
+    fn detected_is_supported_and_resolves() {
+        let d = detected();
+        assert!(supported(d));
+        assert!(supported(Isa::Scalar), "scalar is always supported");
+        assert_eq!(resolve(None, d), Ok(d));
+        assert_eq!(resolve(Some("scalar"), d), Ok(Isa::Scalar));
+        assert_eq!(resolve(Some("SCALAR"), d), Ok(Isa::Scalar));
+        // forcing the detected ISA by name is always accepted
+        assert_eq!(resolve(Some(d.name()), d), Ok(d));
+        // unknown names error with the knob named
+        let err = resolve(Some("sse9"), d).unwrap_err();
+        assert!(err.contains("OWF_ISA"), "{err}");
+        // forcing an ISA the host cannot run errors (never silently
+        // falls back — a mis-pinned CI job must fail loudly)
+        for isa in [Isa::Avx2, Isa::Neon] {
+            if !supported(isa) {
+                assert!(resolve(Some(isa.name()), d).is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn lane_counts_match_vector_widths() {
+        assert_eq!(lanes_for(Isa::Scalar), 4);
+        assert_eq!(lanes_for(Isa::Neon), 4);
+        assert_eq!(lanes_for(Isa::Avx2), 8);
+        assert_eq!(preferred_lanes(), lanes_for(active()));
+    }
+
+    #[test]
+    fn lut_slots_parity_on_adversarial_inputs() {
+        let mut rng = Rng::new(11);
+        let mut ys: Vec<f32> = (0..333)
+            .map(|_| (rng.f64() * 8.0 - 4.0) as f32)
+            .collect();
+        ys.extend([
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            1e-42,
+            -1e-42,
+            0.0,
+            -0.0,
+            f32::MAX,
+            f32::MIN,
+        ]);
+        let (lo, inv_step, top) = (-3.25f32, 37.5f32, 1023u32);
+        let mut want = vec![0u32; ys.len()];
+        lut_slots(Isa::Scalar, &ys, lo, inv_step, top, &mut want);
+        for isa in isas() {
+            let mut got = vec![0u32; ys.len()];
+            lut_slots(isa, &ys, lo, inv_step, top, &mut got);
+            assert_eq!(got, want, "lut_slots diverges on {}", isa.name());
+        }
+    }
+
+    #[test]
+    fn gather_parity_and_oob_panic() {
+        let mut rng = Rng::new(5);
+        let table: Vec<f32> = (0..100)
+            .map(|i| if i == 7 { f32::NAN } else { i as f32 * 0.5 })
+            .collect();
+        let indices: Vec<u16> =
+            (0..517).map(|_| rng.below(100) as u16).collect();
+        let mut want = vec![0f32; indices.len()];
+        gather_u16_f32_scalar(&table, &indices, &mut want);
+        for isa in isas() {
+            let mut got = vec![0f32; indices.len()];
+            gather_u16_f32(isa, &table, &indices, &mut got);
+            // bit compare: NaN lanes must survive the gather too
+            let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+            let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(gb, wb, "gather diverges on {}", isa.name());
+            // out-of-range index panics on every path (corrupt Encoded)
+            let mut bad = indices.clone();
+            bad[200] = 100;
+            let r = std::panic::catch_unwind(|| {
+                let mut out = vec![0f32; bad.len()];
+                gather_u16_f32(isa, &table, &bad, &mut out);
+            });
+            assert!(r.is_err(), "{}: OOB index must panic", isa.name());
+        }
+    }
+
+    #[test]
+    fn fnv_known_vectors_and_all_lengths() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+            assert_eq!(fnv1a64_with(isa, b""), 0xcbf29ce484222325);
+            assert_eq!(fnv1a64_with(isa, b"a"), 0xaf63dc4c8601ec8c);
+        }
+        let mut rng = Rng::new(3);
+        let buf: Vec<u8> =
+            (0..64).map(|_| rng.below(256) as u8).collect();
+        for len in 0..=64 {
+            let want = fnv1a64_ref(&buf[..len]);
+            assert_eq!(fnv1a64_words(&buf[..len]), want, "len {len}");
+            for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+                assert_eq!(fnv1a64_with(isa, &buf[..len]), want);
+            }
+        }
+    }
+}

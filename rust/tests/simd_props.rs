@@ -1,0 +1,300 @@
+//! Forced-ISA parity matrix for the explicit SIMD kernels
+//! (`util::simd`): every vector path must be *bit-exact* against the
+//! scalar oracle it shadows — on adversarial floats (NaN, ±inf,
+//! subnormals, exact midpoints), on every interleave K ∈ {1,2,4,8}, and
+//! on every input length for the checksum hash.  The kernels take the
+//! ISA as an explicit argument, so a single test process exercises the
+//! scalar oracle *and* each path the host can run; `OWF_ISA` is the
+//! production override, `resolve` its unit-testable core.
+
+use owf::compress::rans::{
+    rans_decode_interleaved_checked_with, rans_decode_interleaved_with,
+    rans_encode_interleaved, RansModel,
+};
+use owf::coordinator::config::Scheme;
+use owf::dist::{Dist, Family};
+use owf::util::simd::{
+    self, detected, fnv1a64_ref, fnv1a64_with, fnv1a64_words, lanes_for,
+    resolve, supported, Isa,
+};
+use owf::util::testing::{check, Gen};
+
+const ALL_ISAS: [Isa; 3] = [Isa::Scalar, Isa::Avx2, Isa::Neon];
+
+/// The ISAs this host can actually execute (always includes Scalar).
+fn runnable() -> Vec<Isa> {
+    ALL_ISAS.iter().copied().filter(|&i| supported(i)).collect()
+}
+
+#[test]
+fn resolve_covers_the_full_override_matrix() {
+    let det = detected();
+    // no override → detected, whatever it is
+    assert_eq!(resolve(None, det), Ok(det));
+    // scalar is always forceable, with any casing/padding
+    for raw in ["scalar", "SCALAR", " Scalar "] {
+        assert_eq!(resolve(Some(raw), det), Ok(Isa::Scalar));
+    }
+    // forcing a runnable vector ISA selects it; forcing an unrunnable
+    // one is a hard error (silently falling back would time the wrong
+    // kernel and void every [simd] bench row)
+    for isa in [Isa::Avx2, Isa::Neon] {
+        let r = resolve(Some(isa.name()), det);
+        if supported(isa) {
+            assert_eq!(r, Ok(isa));
+        } else {
+            let e = r.expect_err("unrunnable ISA must not resolve");
+            assert!(e.contains(isa.name()), "error names the ISA: {e}");
+        }
+    }
+    // garbage is a hard error too, naming the knob
+    let e = resolve(Some("avx512"), det).expect_err("unknown ISA");
+    assert!(e.contains("OWF_ISA"), "error names the env knob: {e}");
+    // the host always supports its own detection, and lane counts match
+    // the vector widths the kernels were written for
+    assert!(supported(det));
+    assert_eq!(lanes_for(Isa::Avx2), 8);
+    assert_eq!(lanes_for(Isa::Neon), 4);
+    assert_eq!(lanes_for(Isa::Scalar), 4);
+}
+
+#[test]
+fn lut_slots_is_bit_exact_on_adversarial_probes() {
+    // real LUT geometries from built codebooks, probed with the shared
+    // adversarial set (±inf, NaN, subnormals, exact midpoints, ULP
+    // neighbours) plus heavy random tails — slot indices must agree
+    // exactly, since one slot off is one quantised index off
+    let mut rng = owf::util::rng::Rng::new(11);
+    let data =
+        Dist::standard(Family::StudentT, 5.0).sample_vec(&mut rng, 1 << 12);
+    for spec in [
+        "cbrt-t5@4:block128-absmax",
+        "nf@4:block128-absmax",
+        "int@8:block128-absmax",
+    ] {
+        let scheme = Scheme::parse(spec).unwrap();
+        let cb = scheme.build_codebook(128, Some(&data), &[]).unwrap();
+        let (lo, inv_step, top) =
+            cb.lut_params().unwrap_or_else(|| panic!("{spec}: no LUT"));
+        let mut probes = data.clone();
+        probes.extend(cb.adversarial_probes());
+        // odd lengths exercise every remainder path (8-wide AVX2 body +
+        // tail, 4-wide NEON body + tail)
+        for len in [0, 1, 3, 7, 8, 9, 15, 16, 17, probes.len()] {
+            let ys = &probes[..len.min(probes.len())];
+            let mut want = vec![u32::MAX; ys.len()];
+            simd::lut_slots(Isa::Scalar, ys, lo, inv_step, top, &mut want);
+            for isa in runnable() {
+                let mut got = vec![u32::MAX; ys.len()];
+                simd::lut_slots(isa, ys, lo, inv_step, top, &mut got);
+                assert_eq!(
+                    got,
+                    want,
+                    "{spec}: lut_slots {} != scalar at len {}",
+                    isa.name(),
+                    ys.len()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gather_is_bit_exact_including_nan_table_entries() {
+    check("simd-gather-parity", 40, |g: &mut Gen| {
+        let table_len = 1 + g.rng.below(300);
+        // tables with NaN/±inf/subnormal payloads: parity is compared on
+        // *bits*, so a gather that canonicalised a NaN would fail
+        let table: Vec<f32> = (0..table_len)
+            .map(|_| match g.rng.below(8) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3 => f32::MIN_POSITIVE / 2.0,
+                _ => (g.rng.f64() * 2.0 - 1.0) as f32,
+            })
+            .collect();
+        let n = g.rng.below(100);
+        let indices: Vec<u16> =
+            (0..n).map(|_| g.rng.below(table_len) as u16).collect();
+        let mut want = vec![0f32; n];
+        simd::gather_u16_f32(Isa::Scalar, &table, &indices, &mut want);
+        for isa in runnable() {
+            let mut got = vec![0f32; n];
+            simd::gather_u16_f32(isa, &table, &indices, &mut got);
+            let (gb, wb): (Vec<u32>, Vec<u32>) = (
+                got.iter().map(|x| x.to_bits()).collect(),
+                want.iter().map(|x| x.to_bits()).collect(),
+            );
+            assert_eq!(gb, wb, "gather {} != scalar", isa.name());
+        }
+    });
+}
+
+#[test]
+fn gather_panics_identically_on_out_of_bounds_indices() {
+    // the scalar oracle panics on an OOB index (its bounds-checked
+    // indexing); the vector paths pre-validate and re-run the scalar
+    // loop to surface the *same* panic rather than a hardware gather
+    // from hyperspace — so both must panic, on the same input
+    let table = vec![1.0f32; 16];
+    let indices: Vec<u16> = vec![0, 3, 15, 16, 2, 1, 0, 4, 9]; // 16 is OOB
+    for isa in runnable() {
+        let r = std::panic::catch_unwind(|| {
+            let mut out = vec![0f32; indices.len()];
+            simd::gather_u16_f32(isa, &table, &indices, &mut out);
+        });
+        assert!(r.is_err(), "gather {} must panic on OOB", isa.name());
+    }
+}
+
+#[test]
+fn rans_interleaved_parity_across_isa_and_lane_counts() {
+    check("simd-rans-parity", 25, |g: &mut Gen| {
+        let n_symbols = 2 + g.rng.below(60);
+        let mut counts: Vec<u64> = (0..n_symbols)
+            .map(|_| match g.rng.below(4) {
+                0 => 0,
+                1 => 1,
+                2 => g.rng.below(50) as u64 + 1,
+                _ => g.rng.below(100_000) as u64 + 1,
+            })
+            .collect();
+        if counts.iter().all(|&c| c == 0) {
+            counts[0] = 1;
+        }
+        let model = RansModel::from_counts(&counts);
+        let weights: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+        let len = g.rng.below(3000);
+        let symbols: Vec<u16> = (0..len)
+            .map(|_| g.rng.categorical(&weights) as u16)
+            .collect();
+        for k in [1usize, 2, 4, 8] {
+            let container = rans_encode_interleaved(&model, &symbols, k);
+            let oracle = rans_decode_interleaved_with(
+                &model,
+                &container,
+                symbols.len(),
+                Isa::Scalar,
+            );
+            assert_eq!(oracle, symbols, "scalar x{k} roundtrip");
+            for isa in runnable() {
+                // full decode, plus a prefix (the SIMD rounds hand off
+                // mid-stream to the scalar loop at the remainder)
+                for count in [symbols.len(), symbols.len() / 2] {
+                    let fast = rans_decode_interleaved_with(
+                        &model, &container, count, isa,
+                    );
+                    assert_eq!(
+                        fast,
+                        &symbols[..count],
+                        "rans x{k} {} != stream at count {count}",
+                        isa.name()
+                    );
+                }
+                // the checked (serving) variant shares the SIMD rounds;
+                // its verdict and output must match the scalar oracle
+                let checked = rans_decode_interleaved_checked_with(
+                    &model,
+                    &container,
+                    symbols.len(),
+                    isa,
+                );
+                assert_eq!(
+                    checked.as_deref(),
+                    Ok(&symbols[..]),
+                    "checked rans x{k} {} diverged",
+                    isa.name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn fnv_known_vectors_and_every_length_up_to_64() {
+    // published FNV-1a 64-bit test vectors pin the constants
+    for isa in ALL_ISAS {
+        assert_eq!(fnv1a64_with(isa, b""), 0xcbf29ce484222325, "{isa:?}");
+        assert_eq!(fnv1a64_with(isa, b"a"), 0xaf63dc4c8601ec8c, "{isa:?}");
+        assert_eq!(
+            fnv1a64_with(isa, b"foobar"),
+            0x85944171f73967e8,
+            "{isa:?}"
+        );
+    }
+    // every length 0..=64 covers all word/remainder splits of the
+    // 8-byte-block path; the hash chain is serial, so any word-load slip
+    // shows up as a different digest
+    let buf: Vec<u8> = (0..64u8).map(|i| i.wrapping_mul(37) ^ 0xA5).collect();
+    for len in 0..=64 {
+        let want = fnv1a64_ref(&buf[..len]);
+        assert_eq!(fnv1a64_words(&buf[..len]), want, "words @ len {len}");
+        for isa in ALL_ISAS {
+            assert_eq!(
+                fnv1a64_with(isa, &buf[..len]),
+                want,
+                "{isa:?} @ len {len}"
+            );
+        }
+    }
+    // misaligned starts: word-at-a-time must not assume 8-byte alignment
+    for off in 0..8 {
+        assert_eq!(
+            fnv1a64_words(&buf[off..]),
+            fnv1a64_ref(&buf[off..]),
+            "offset {off}"
+        );
+    }
+}
+
+#[test]
+fn packed_artifact_decodes_identically_via_pread_and_memory() {
+    // end-to-end over the seek/pread reader (satellite: the serving
+    // reader now preads sections at recorded offsets instead of slicing
+    // a whole-file buffer): pack once, open the same container both
+    // ways, require bit-identical tensors — and the FNV checksums the
+    // reader verifies flow through the dispatched hash, so this also
+    // pins the word-at-a-time path against real container bytes
+    use owf::artifact::writer::{pack_store, AllocMode, PackOptions};
+    use owf::artifact::{Artifact, Codec};
+    use owf::tensorstore::{Store, Tensor};
+    use owf::util::json::Json;
+    use std::collections::HashMap;
+
+    let n = 8 * 1024;
+    let mut rng = owf::util::rng::Rng::new(29);
+    let data =
+        Dist::standard(Family::StudentT, 5.0).sample_vec(&mut rng, n);
+    let mut store = Store::new(Json::obj().push("kind", "simd-props"));
+    let mut t = Tensor::from_f32("probe.w", vec![n / 1024, 1024], &data);
+    t.channel_axis = Some(1);
+    store.push(t);
+    let opts = PackOptions {
+        spec: "cbrt-t5@4:block64-absmax:compress".to_string(),
+        alloc: AllocMode::Flat,
+        codec: Codec::Rans,
+        lanes: simd::preferred_lanes(),
+        meta: Json::obj(),
+    };
+    let path = std::env::temp_dir().join(format!(
+        "owf_simd_props_{}.owq",
+        std::process::id()
+    ));
+    let empty: HashMap<String, f64> = HashMap::new();
+    pack_store(&store, &empty, &opts, &path).unwrap();
+
+    let via_pread = Artifact::open(&path).unwrap();
+    let via_mem =
+        Artifact::from_bytes(std::fs::read(&path).unwrap()).unwrap();
+    assert_eq!(via_pread.tensors.len(), via_mem.tensors.len());
+    let (a, b) = (
+        via_pread.decode_tensor(0).unwrap(),
+        via_mem.decode_tensor(0).unwrap(),
+    );
+    assert!(
+        a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "pread and in-memory decodes diverge"
+    );
+    let _ = std::fs::remove_file(&path);
+}
