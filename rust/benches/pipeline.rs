@@ -3,8 +3,10 @@
 //! number EXPERIMENTS.md §Perf tracks for the whole stack — plus the
 //! `owf sweep` engine over a simulated grid, the serving-scale tensor
 //! decode rows (`[dec]` vs `[dec-ref]`) and the OWQ1 artifact round trip
-//! (`[pack]` / `[unpack]`) plus the contended serving path through the
-//! single-flight server (`[get-coalesced]`; all pure CPU, always run).
+//! (`[pack]` / `[unpack]`), the OWQ3 mixed-tensor decode (`[frac]`,
+//! parity-gated against the in-memory mixed pipeline) plus the
+//! contended serving path through the single-flight server
+//! (`[get-coalesced]`; all pure CPU, always run).
 //!
 //! The checkpoint benches require `make artifacts`; they exit quietly
 //! otherwise.  Set `OWF_BENCH_JSON=<path>` (as `scripts/bench.sh` does)
@@ -138,6 +140,7 @@ fn bench_artifact(rows: &mut Vec<Row>) -> anyhow::Result<()> {
         alloc: AllocMode::Flat,
         codec: Codec::Huffman,
         lanes: 4,
+        target_bits: None,
         meta: Json::obj().push("source", "bench"),
     };
     let path = std::env::temp_dir().join(format!(
@@ -256,12 +259,88 @@ fn bench_artifact(rows: &mut Vec<Row>) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn bench_fractional(rows: &mut Vec<Row>) -> anyhow::Result<()> {
+    // the OWQ3 mixed-decode path at serving scale: pack one tensor at a
+    // non-lattice 3.3-bit budget (fractional water-filling mixes two
+    // int schemes at block granularity), gate the packed decode
+    // bit-exact against the in-memory mixed pipeline, then price the
+    // partition-reassembling decode as the `[frac]` row.
+    let n = bench_n();
+    let (rows_n, cols) = (n / 1024, 1024);
+    let mut rng = Rng::new(29);
+    let data =
+        Dist::standard(Family::StudentT, 5.0).sample_vec(&mut rng, n);
+    let mut store = Store::new(Json::obj().push("kind", "bench-source"));
+    let mut t = Tensor::from_f32("bench.w", vec![rows_n, cols], &data);
+    t.channel_axis = Some(1);
+    store.push(t);
+    let opts = PackOptions {
+        spec: "int@4:block64-absmax".to_string(),
+        alloc: AllocMode::Fractional,
+        codec: Codec::Huffman,
+        lanes: 4,
+        target_bits: Some(3.3),
+        meta: Json::obj().push("source", "bench"),
+    };
+    let path = std::env::temp_dir().join(format!(
+        "owf_bench_frac_{}.owq",
+        std::process::id()
+    ));
+    let empty: HashMap<String, f64> = HashMap::new();
+    pack_store(&store, &empty, &opts, &path)?;
+    let art = Artifact::open(&path)?;
+    let rec = &art.tensors[0];
+    let mix = rec
+        .mix
+        .as_ref()
+        .expect("a 3.3-bit fractional pack must mix its one tensor");
+    let specs: Vec<Scheme> = mix
+        .specs
+        .iter()
+        .map(|s| Scheme::parse(s))
+        .collect::<anyhow::Result<_>>()?;
+    let assign = art
+        .block_assignment(0)?
+        .expect("mixed tensor without block_schemes");
+    let reference = owf::eval::pipeline::qdq_tensor_mixed(
+        &specs,
+        &assign,
+        &data,
+        &[rows_n, cols],
+        Some(1),
+        &[],
+        rec.rot_seed.unwrap_or(0),
+    )?;
+    let decoded = art.decode_tensor(0)?;
+    assert!(
+        decoded
+            .iter()
+            .zip(&reference.recon)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "packed mixed decode is not bit-identical to the in-memory \
+         mixed pipeline"
+    );
+    let mut out = vec![0f32; n];
+    bench_rec(
+        rows,
+        "artifact int@3.3(frac):block64-absmax [frac]",
+        Some(n as f64),
+        || {
+            art.decode_tensor_into(0, &mut out).unwrap();
+            std::hint::black_box(out[n / 2]);
+        },
+    );
+    let _ = std::fs::remove_file(&path);
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let mut rows: Vec<Row> = Vec::new();
     bench_sweep(&mut rows);
     bench_decode(&mut rows)?;
     bench_fnv(&mut rows);
     bench_artifact(&mut rows)?;
+    bench_fractional(&mut rows)?;
     let opts = RunOpts {
         eval_seqs: 16,
         ..Default::default()

@@ -1,0 +1,634 @@
+//! Fractional-bit allocation by scheme mixing (Q-Palette, PAPERS.md
+//! arxiv 2509.20214).
+//!
+//! The eq.-5 allocator in [`super`] picks one integer-family scheme per
+//! tensor, so reachable model budgets sit on the scheme lattice.  This
+//! module reaches the continuum: for each tensor it *measures* the
+//! (effective-bits, sq-err) operating point of every candidate scheme on
+//! the tensor's own data (StatQAT's point — measured, not assumed), takes
+//! the lower convex hull of those points, and water-fills the
+//! Fisher-weighted budget over the hull segments.  The output is a
+//! per-tensor [`MixChoice`]: at most two hull-adjacent schemes whose
+//! element-weighted average hits any target in the hull's bits range.
+//! A mix is realised *within* the tensor by assigning whole scale blocks
+//! to one scheme or the other — deterministically, seeded by the tensor
+//! name — so re-packing the same store is byte-identical.
+//!
+//! Optimality: the budget problem is a linear program over per-tensor
+//! hull mixtures.  Hull segments are convex (strictly decreasing
+//! error-per-bit gain within a tensor), so taking segments globally in
+//! decreasing `f̄_t·Δerr / (N_t·Δbits)` order and splitting only the
+//! marginal segment *is* the LP optimum — in particular it is never worse
+//! than the best single-scheme allocation at the same budget (asserted in
+//! the tests below, on measured points).
+
+use anyhow::{bail, Result};
+
+use crate::compress::entropy_bits;
+use crate::coordinator::config::{Element, Scheme};
+use crate::eval::pipeline::{build_quantiser, prepare_layout, rotation_pair};
+use crate::quant::rotation::rotate_2d;
+use crate::scaling::Granularity;
+
+/// The candidate lattice: integer bit widths the mixer interpolates
+/// between.  These bounds are what "formats exist for 2..=8 bits" means
+/// concretely — [`super::MIN_BITS`]/[`super::MAX_BITS`] are derived from
+/// them, and [`super::bits_bounds`] derives the clamp range for any other
+/// candidate set.
+pub const CANDIDATE_MIN_BITS: u32 = 2;
+pub const CANDIDATE_MAX_BITS: u32 = 8;
+
+/// The candidate schemes for a base spec: the base with its bit width
+/// swept over the integer lattice, everything else (granularity,
+/// statistic, flags) unchanged.  Order matters: point index `i` in a
+/// measured curve is candidate index `i`.
+pub fn candidate_schemes(base: &Scheme) -> Vec<Scheme> {
+    (CANDIDATE_MIN_BITS..=CANDIDATE_MAX_BITS)
+        .map(|k| {
+            let mut s = base.clone();
+            s.bits = k as f64;
+            s
+        })
+        .collect()
+}
+
+/// Check a base scheme is mixable and return its block length.
+///
+/// Mixing assigns whole scale blocks to schemes, so the base must use
+/// block granularity; sparse overlays select outliers over the whole
+/// tensor (the partitions would disagree about which elements are gone),
+/// and grid schemes have no per-block boundary in their entropy-coded
+/// stream — both are rejected typed.  `:compress`, `:rot` and `:search`
+/// are all fine.
+pub fn validate_base(base: &Scheme) -> Result<usize> {
+    let block = match base.granularity {
+        Granularity::Block(b) => b,
+        g => bail!(
+            "fractional allocation mixes schemes per scale block; \
+             {g:?} granularity has no block boundary to assign on"
+        ),
+    };
+    if base.element == Element::Grid {
+        bail!(
+            "fractional allocation needs codebook schemes \
+             (grid rates are entropy-determined, not mixable per block)"
+        );
+    }
+    if base.sparse > 0.0 {
+        bail!(
+            "fractional allocation does not support :sparse \
+             (outlier selection is whole-tensor; block partitions \
+             would disagree)"
+        );
+    }
+    Ok(block)
+}
+
+/// One measured operating point: a concrete candidate spec, its honest
+/// effective bits per element (entropy rate when `:compress`) and the
+/// squared error it achieves on the tensor's data.
+#[derive(Clone, Debug)]
+pub struct SchemePoint {
+    pub spec: String,
+    pub bits: f64,
+    pub sq_err: f64,
+}
+
+/// Measure the candidate lattice on one tensor: rotate/lay out once (the
+/// exact basis decision `encode_tensor` makes for the same seed), then
+/// run each candidate through [`build_quantiser`] + `encode_with_stats`
+/// and record the same bits expression the writer persists.  The sq-err
+/// is measured in the laid-out (rotated) basis; rotations are orthogonal,
+/// so ranking and water-filling over these points matches the
+/// original-basis objective.
+pub fn measure_points(
+    base: &Scheme,
+    data: &[f32],
+    shape: &[usize],
+    channel_axis: Option<usize>,
+    fisher: &[f32],
+    seed: u64,
+) -> Result<Vec<SchemePoint>> {
+    validate_base(base)?;
+    let mut work = data.to_vec();
+    if base.rotate && shape.len() == 2 {
+        let (rows, cols) = (shape[0], shape[1]);
+        let (v, w) = rotation_pair(rows, cols, seed);
+        rotate_2d(&mut work, rows, cols, &v, &w);
+    }
+    let (flat, channel_len, _transposed) =
+        prepare_layout(work, shape, channel_axis, base.granularity);
+    let n = flat.len();
+    let mut points = Vec::with_capacity(
+        (CANDIDATE_MAX_BITS - CANDIDATE_MIN_BITS + 1) as usize,
+    );
+    for scheme in candidate_schemes(base) {
+        let quantiser = build_quantiser(&scheme, &flat, channel_len, fisher)?;
+        let (_enc, stats) = quantiser.encode_with_stats(&flat, channel_len);
+        let mut bits = quantiser.bits_per_element(n, channel_len);
+        if scheme.compress {
+            bits = bits - quantiser.codebook.storage_bits()
+                + entropy_bits(&stats.counts);
+        }
+        points.push(SchemePoint {
+            spec: scheme.name(),
+            bits,
+            sq_err: stats.sq_err,
+        });
+    }
+    Ok(points)
+}
+
+/// Indices into a point set forming its lower convex hull, bits strictly
+/// increasing and sq-err strictly decreasing left to right.
+///
+/// Degeneracies: equal-bits points keep only the lowest-error one;
+/// collinear middles are dropped (a mix of the endpoints realises them
+/// anyway); a trailing stretch where more bits don't reduce error is
+/// pruned, so spending past the elbow is never chosen.  A single point —
+/// or a set where one point dominates all others — yields a singleton
+/// hull, which water-filling handles as a pure (unmixable) tensor.
+pub fn lower_hull(points: &[SchemePoint]) -> Vec<usize> {
+    assert!(!points.is_empty());
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    order.sort_by(|&a, &b| {
+        points[a]
+            .bits
+            .partial_cmp(&points[b].bits)
+            .unwrap()
+            .then(points[a].sq_err.partial_cmp(&points[b].sq_err).unwrap())
+            .then(a.cmp(&b))
+    });
+    order.dedup_by(|cur, prev| points[*cur].bits == points[*prev].bits);
+
+    // monotone chain: keep a middle point only if it sits strictly below
+    // the chord of its neighbours
+    let mut hull: Vec<usize> = Vec::new();
+    for &i in &order {
+        while hull.len() >= 2 {
+            let a = &points[hull[hull.len() - 2]];
+            let b = &points[hull[hull.len() - 1]];
+            let c = &points[i];
+            let cross = (b.bits - a.bits) * (c.sq_err - a.sq_err)
+                - (b.sq_err - a.sq_err) * (c.bits - a.bits);
+            if cross <= 0.0 {
+                hull.pop();
+            } else {
+                break;
+            }
+        }
+        hull.push(i);
+    }
+    // prune the flat/rising tail: more bits must mean strictly less error
+    while hull.len() >= 2 {
+        let last = &points[hull[hull.len() - 1]];
+        let prev = &points[hull[hull.len() - 2]];
+        if last.sq_err >= prev.sq_err {
+            hull.pop();
+        } else {
+            break;
+        }
+    }
+    hull
+}
+
+/// One tensor's measured rate–distortion curve plus its hull.
+#[derive(Clone, Debug)]
+pub struct TensorCurve {
+    pub name: String,
+    pub numel: usize,
+    /// Fisher-diagonal mean f̄_t — the weight on this tensor's sq-err in
+    /// the model-level objective (1.0 when no estimate exists, matching
+    /// the eq.-5 allocator's degradation).
+    pub fisher: f64,
+    pub points: Vec<SchemePoint>,
+    /// Indices into `points`: the lower convex hull (see [`lower_hull`]).
+    pub hull: Vec<usize>,
+}
+
+impl TensorCurve {
+    pub fn new(
+        name: impl Into<String>,
+        numel: usize,
+        fisher: f64,
+        points: Vec<SchemePoint>,
+    ) -> TensorCurve {
+        let hull = lower_hull(&points);
+        TensorCurve {
+            name: name.into(),
+            numel,
+            fisher,
+            points,
+            hull,
+        }
+    }
+}
+
+/// What one tensor gets: a pure scheme (`lo == hi`) or a two-scheme mix.
+/// `lo`/`hi` index the curve's `points` (equivalently the candidate set),
+/// with `hi` the higher-bits endpoint of one hull segment.
+#[derive(Clone, Copy, Debug)]
+pub struct MixChoice {
+    pub lo: usize,
+    pub hi: usize,
+    /// Fraction of elements under `hi`, in [0, 1); 0 ⇒ pure `lo`.
+    pub hi_weight: f64,
+    /// Realised effective bits: hull-interpolated between the endpoints.
+    pub bits: f64,
+    /// Realised sq-err: the same interpolation (mixing is linear in both).
+    pub sq_err: f64,
+}
+
+impl MixChoice {
+    pub fn is_pure(&self) -> bool {
+        self.lo == self.hi || self.hi_weight <= 0.0
+    }
+}
+
+/// A model-level fractional allocation.
+#[derive(Clone, Debug)]
+pub struct FracAllocation {
+    /// Per tensor, same order as the input curves.
+    pub choices: Vec<MixChoice>,
+    /// Element-weighted average of the realised per-tensor rates.
+    pub average: f64,
+    /// `average − target`: 0.0 inside the reachable range, nonzero when
+    /// the budget fell below/above the hull span and was clamped — the
+    /// caller-visible record that the target was not representable.
+    pub residual: f64,
+}
+
+/// Solve the Fisher-weighted budget problem over measured hulls.
+///
+/// Start every tensor at its cheapest hull vertex, then spend the
+/// remaining budget on hull segments in decreasing weighted-gain ratio
+/// `f̄_t·(e_lo − e_hi) / (N_t·(b_hi − b_lo))`, splitting only the
+/// marginal segment — so at most one tensor ends up genuinely mixed and
+/// every other sits on a hull vertex (the LP-vertex structure of the
+/// relaxation).  Budgets outside the reachable range clamp to the nearest
+/// end with the shortfall recorded in [`FracAllocation::residual`].
+pub fn waterfill(curves: &[TensorCurve], target_bits: f64) -> FracAllocation {
+    assert!(!curves.is_empty());
+    let total: f64 = curves.iter().map(|c| c.numel as f64).sum();
+    let budget = target_bits * total;
+
+    let mut choices: Vec<MixChoice> = curves
+        .iter()
+        .map(|c| {
+            let p = &c.points[c.hull[0]];
+            MixChoice {
+                lo: c.hull[0],
+                hi: c.hull[0],
+                hi_weight: 0.0,
+                bits: p.bits,
+                sq_err: p.sq_err,
+            }
+        })
+        .collect();
+    let mut used: f64 = curves
+        .iter()
+        .zip(&choices)
+        .map(|(c, ch)| ch.bits * c.numel as f64)
+        .sum();
+
+    struct Seg {
+        ratio: f64,
+        t: usize,
+        v: usize,
+    }
+    let mut segs: Vec<Seg> = Vec::new();
+    for (t, c) in curves.iter().enumerate() {
+        for v in 0..c.hull.len().saturating_sub(1) {
+            let a = &c.points[c.hull[v]];
+            let b = &c.points[c.hull[v + 1]];
+            let cost = (b.bits - a.bits) * c.numel as f64;
+            let gain = c.fisher.max(1e-30) * (a.sq_err - b.sq_err);
+            segs.push(Seg {
+                ratio: gain / cost,
+                t,
+                v,
+            });
+        }
+    }
+    // descending ratio; hull convexity keeps each tensor's own segments
+    // already descending, and the (t, v) tie-break pins exact ties so the
+    // allocation — and therefore the pack — is deterministic
+    segs.sort_by(|x, y| {
+        y.ratio
+            .partial_cmp(&x.ratio)
+            .unwrap()
+            .then(x.t.cmp(&y.t))
+            .then(x.v.cmp(&y.v))
+    });
+
+    for s in &segs {
+        let c = &curves[s.t];
+        let a = &c.points[c.hull[s.v]];
+        let b = &c.points[c.hull[s.v + 1]];
+        let cost = (b.bits - a.bits) * c.numel as f64;
+        if used + cost <= budget + 1e-9 {
+            choices[s.t] = MixChoice {
+                lo: c.hull[s.v + 1],
+                hi: c.hull[s.v + 1],
+                hi_weight: 0.0,
+                bits: b.bits,
+                sq_err: b.sq_err,
+            };
+            used += cost;
+        } else {
+            let w = ((budget - used) / cost).clamp(0.0, 1.0);
+            if w > 0.0 {
+                choices[s.t] = MixChoice {
+                    lo: c.hull[s.v],
+                    hi: c.hull[s.v + 1],
+                    hi_weight: w,
+                    bits: a.bits + w * (b.bits - a.bits),
+                    sq_err: a.sq_err + w * (b.sq_err - a.sq_err),
+                };
+            }
+            break; // budget exhausted; every later segment has lower ratio
+        }
+    }
+
+    let average = curves
+        .iter()
+        .zip(&choices)
+        .map(|(c, ch)| ch.bits * c.numel as f64)
+        .sum::<f64>()
+        / total;
+    FracAllocation {
+        choices,
+        average,
+        residual: average - target_bits,
+    }
+}
+
+/// The model-level weighted error an allocation predicts (for comparing
+/// allocations on the same curves — the hull-optimality assertions).
+pub fn weighted_err(curves: &[TensorCurve], alloc: &FracAllocation) -> f64 {
+    curves
+        .iter()
+        .zip(&alloc.choices)
+        .map(|(c, ch)| c.fisher.max(1e-30) * ch.sq_err)
+        .sum()
+}
+
+/// Deterministic block→scheme assignment for a two-scheme mix: 1 marks a
+/// `hi` block.  Blocks are visited in an order keyed by
+/// `fnv1a64(seed ‖ block_index)` — a fixed function of the tensor-name
+/// seed, so re-packing reproduces the assignment byte-for-byte — and a
+/// block joins the `hi` partition while doing so keeps the realised
+/// element count closest to `hi_elems` (take iff at least half the block
+/// still fits).  The realised count therefore lands within half a block
+/// of the target.
+pub fn assign_blocks(
+    seed: u64,
+    block_lens: &[usize],
+    hi_elems: usize,
+) -> Vec<u8> {
+    let key = |i: usize| -> u64 {
+        let mut bytes = [0u8; 16];
+        bytes[..8].copy_from_slice(&seed.to_le_bytes());
+        bytes[8..].copy_from_slice(&(i as u64).to_le_bytes());
+        crate::artifact::fnv1a64(&bytes)
+    };
+    let mut order: Vec<usize> = (0..block_lens.len()).collect();
+    order.sort_by_key(|&i| (key(i), i));
+    let mut assign = vec![0u8; block_lens.len()];
+    let mut assigned = 0usize;
+    for &i in &order {
+        let remaining = hi_elems.saturating_sub(assigned);
+        if remaining == 0 {
+            break;
+        }
+        if 2 * remaining >= block_lens[i] {
+            assign[i] = 1;
+            assigned += block_lens[i];
+        }
+    }
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn pt(bits: f64, sq_err: f64) -> SchemePoint {
+        SchemePoint {
+            spec: format!("int@{bits}"),
+            bits,
+            sq_err,
+        }
+    }
+
+    fn base() -> Scheme {
+        Scheme::parse("int@4:block64-absmax").unwrap()
+    }
+
+    #[test]
+    fn hull_of_single_point_is_that_point() {
+        assert_eq!(lower_hull(&[pt(4.0, 1.0)]), vec![0]);
+    }
+
+    #[test]
+    fn hull_drops_collinear_middles_dominated_points_and_flat_tails() {
+        // (2,8)–(3,6)–(4,4) are collinear: the middle is realisable as a
+        // mix of the endpoints and must not be a hull vertex
+        let pts = vec![
+            pt(2.0, 8.0),
+            pt(3.0, 6.0),
+            pt(4.0, 4.0),
+            pt(3.5, 7.0), // above the chord: dominated
+            pt(5.0, 4.0), // more bits, no less error: pruned tail
+            pt(3.0, 9.0), // equal-bits duplicate, worse: dropped
+        ];
+        let hull = lower_hull(&pts);
+        assert_eq!(hull, vec![0, 2], "{hull:?}");
+        let b: Vec<f64> = hull.iter().map(|&i| pts[i].bits).collect();
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+        let e: Vec<f64> = hull.iter().map(|&i| pts[i].sq_err).collect();
+        assert!(e.windows(2).all(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn waterfill_hits_budget_exactly_inside_hull() {
+        let curves = vec![
+            TensorCurve::new(
+                "a",
+                1000,
+                2.0,
+                vec![pt(2.0, 16.0), pt(4.0, 4.0), pt(8.0, 0.5)],
+            ),
+            TensorCurve::new(
+                "b",
+                3000,
+                1.0,
+                vec![pt(2.0, 9.0), pt(3.0, 5.0), pt(6.0, 1.0)],
+            ),
+        ];
+        for target in [2.5, 3.3, 4.7, 6.1] {
+            let a = waterfill(&curves, target);
+            assert!(
+                (a.average - target).abs() < 1e-9,
+                "target {target}: avg {}",
+                a.average
+            );
+            assert!(a.residual.abs() < 1e-9);
+            // LP-vertex structure: at most one tensor is genuinely mixed
+            assert!(
+                a.choices.iter().filter(|c| !c.is_pure()).count() <= 1,
+                "target {target}: {:?}",
+                a.choices
+            );
+        }
+    }
+
+    #[test]
+    fn waterfill_clamps_out_of_range_budgets_with_recorded_residual() {
+        let curves = vec![TensorCurve::new(
+            "a",
+            1000,
+            1.0,
+            vec![pt(2.5, 4.0), pt(6.5, 1.0)],
+        )];
+        let lo = waterfill(&curves, 1.0);
+        assert_eq!(lo.average, 2.5);
+        assert!((lo.residual - 1.5).abs() < 1e-12, "{}", lo.residual);
+        assert!(lo.choices[0].is_pure());
+        let hi = waterfill(&curves, 20.0);
+        assert_eq!(hi.average, 6.5);
+        assert!((hi.residual + 13.5).abs() < 1e-12, "{}", hi.residual);
+        assert!(hi.choices[0].is_pure());
+    }
+
+    #[test]
+    fn waterfill_on_a_singleton_hull_is_pure_with_residual() {
+        // one candidate (or one dominating point): nothing to mix
+        let curves =
+            vec![TensorCurve::new("z", 256, 1.0, vec![pt(4.25, 0.0)])];
+        let a = waterfill(&curves, 3.3);
+        assert!(a.choices[0].is_pure());
+        assert_eq!(a.average, 4.25);
+        assert!((a.residual - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn candidate_set_spans_the_documented_lattice() {
+        let cands = candidate_schemes(&base());
+        assert_eq!(cands.len(), 7);
+        assert_eq!(cands[0].bits, 2.0);
+        assert_eq!(cands.last().unwrap().bits, 8.0);
+        for c in &cands {
+            assert_eq!(c.granularity, base().granularity);
+        }
+    }
+
+    #[test]
+    fn validate_base_rejects_unmixable_schemes() {
+        assert!(validate_base(&base()).is_ok());
+        let tensor =
+            Scheme::parse("int@4:tensor-rms").unwrap();
+        assert!(validate_base(&tensor).is_err());
+        let sparse =
+            Scheme::parse("int@4:block64-absmax:sparse0.01").unwrap();
+        assert!(validate_base(&sparse).is_err());
+        let grid = Scheme::parse("grid@4:tensor-rms").unwrap();
+        assert!(validate_base(&grid).is_err());
+    }
+
+    #[test]
+    fn measured_points_are_deterministic_and_bits_monotone() {
+        let mut rng = Rng::new(7);
+        let data: Vec<f32> = rng.student_t_vec(5.0, 4096);
+        let p1 =
+            measure_points(&base(), &data, &[4096], None, &[], 99).unwrap();
+        let p2 =
+            measure_points(&base(), &data, &[4096], None, &[], 99).unwrap();
+        assert_eq!(p1.len(), 7);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.bits.to_bits(), b.bits.to_bits());
+            assert_eq!(a.sq_err.to_bits(), b.sq_err.to_bits());
+        }
+        // plain (non-compress) int schemes: effective bits are k + scale
+        // overhead, strictly increasing in k
+        for w in p1.windows(2) {
+            assert!(w[0].bits < w[1].bits);
+        }
+    }
+
+    #[test]
+    fn waterfill_beats_best_single_scheme_on_measured_points() {
+        // the acceptance-criterion optimality check, on real measured
+        // curves: at every budget, the water-filled mix must predict a
+        // weighted error no worse than any single candidate scheme whose
+        // flat allocation fits the same budget
+        let mut rng = Rng::new(21);
+        let a: Vec<f32> = rng.student_t_vec(5.0, 4096);
+        let b: Vec<f32> =
+            rng.student_t_vec(5.0, 4096).iter().map(|x| x * 0.05).collect();
+        let curves = vec![
+            TensorCurve::new(
+                "a",
+                4096,
+                4.0,
+                measure_points(&base(), &a, &[4096], None, &[], 1).unwrap(),
+            ),
+            TensorCurve::new(
+                "b",
+                4096,
+                1.0,
+                measure_points(&base(), &b, &[4096], None, &[], 2).unwrap(),
+            ),
+        ];
+        for target in [2.5, 3.3, 4.7, 6.1] {
+            let alloc = waterfill(&curves, target);
+            assert!(alloc.residual.abs() < 1e-9, "target {target}");
+            let wf = weighted_err(&curves, &alloc);
+            for k in 0..curves[0].points.len() {
+                let flat_bits: f64 = curves
+                    .iter()
+                    .map(|c| c.points[k].bits * c.numel as f64)
+                    .sum::<f64>()
+                    / curves.iter().map(|c| c.numel as f64).sum::<f64>();
+                if flat_bits > target + 1e-9 {
+                    continue; // this single scheme busts the budget
+                }
+                let flat: f64 = curves
+                    .iter()
+                    .map(|c| c.fisher * c.points[k].sq_err)
+                    .sum();
+                assert!(
+                    wf <= flat * (1.0 + 1e-9) + 1e-12,
+                    "target {target}: mix {wf} vs flat[{k}] {flat}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_assignment_is_deterministic_and_hits_the_target_count() {
+        let mut lens = vec![64usize; 63];
+        lens.push(32); // tail block
+        let total: usize = lens.iter().sum();
+        for hi in [0, 500, 1500, total] {
+            let a1 = assign_blocks(0xABCD, &lens, hi);
+            let a2 = assign_blocks(0xABCD, &lens, hi);
+            assert_eq!(a1, a2);
+            let got: usize = a1
+                .iter()
+                .zip(&lens)
+                .filter(|(&m, _)| m == 1)
+                .map(|(_, &l)| l)
+                .sum();
+            assert!(
+                got.abs_diff(hi) <= 32,
+                "hi {hi}: realised {got}"
+            );
+        }
+        // a different seed shuffles the assignment (overwhelmingly)
+        let a = assign_blocks(1, &lens, 1500);
+        let b = assign_blocks(2, &lens, 1500);
+        assert_ne!(a, b);
+    }
+}

@@ -38,16 +38,51 @@ pub enum AllocScheme {
     Heuristic,
 }
 
-/// Bounds applied to per-tensor bit widths (formats exist for 2..=8 bits;
-/// fractional values are meaningful for √[3]p/grid formats, rounded for
-/// integer-LUT formats by the caller).
-pub const MIN_BITS: f64 = 1.0;
-pub const MAX_BITS: f64 = 16.0;
+/// Default bounds applied to per-tensor bit widths — the candidate
+/// lattice the repo can actually realise ([`frac::CANDIDATE_MIN_BITS`]
+/// ..= [`frac::CANDIDATE_MAX_BITS`], i.e. formats exist for 2..=8 bits;
+/// fractional values are meaningful for √[3]p/grid formats and realised
+/// for integer-LUT formats by block-level scheme mixing in [`frac`]).
+/// Callers with a different candidate set derive their own clamp range
+/// with [`bits_bounds`] and pass it to [`variable_allocation_bounded`]
+/// instead of re-clamping ad hoc.
+pub const MIN_BITS: f64 = frac::CANDIDATE_MIN_BITS as f64;
+pub const MAX_BITS: f64 = frac::CANDIDATE_MAX_BITS as f64;
 
-/// Compute the eq.-(5) allocation for an average budget of `target_bits`.
+pub mod frac;
+
+/// The clamp range implied by a concrete candidate scheme set: the min
+/// and max `bits` over the schemes the caller can realise.  This is the
+/// one place the allocator learns which bit widths exist — the constants
+/// above are just this function evaluated on the default integer lattice.
+pub fn bits_bounds(
+    candidates: &[crate::coordinator::config::Scheme],
+) -> (f64, f64) {
+    assert!(!candidates.is_empty(), "no candidate schemes to bound by");
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for s in candidates {
+        lo = lo.min(s.bits);
+        hi = hi.max(s.bits);
+    }
+    (lo, hi)
+}
+
+/// Compute the eq.-(5) allocation for an average budget of `target_bits`,
+/// clamped to the default candidate lattice.
 pub fn variable_allocation(
     tensors: &[TensorInfo],
     target_bits: f64,
+) -> Allocation {
+    variable_allocation_bounded(tensors, target_bits, (MIN_BITS, MAX_BITS))
+}
+
+/// Compute the eq.-(5) allocation with an explicit clamp range (from
+/// [`bits_bounds`] over the caller's candidate schemes).
+pub fn variable_allocation_bounded(
+    tensors: &[TensorInfo],
+    target_bits: f64,
+    (min_bits, max_bits): (f64, f64),
 ) -> Allocation {
     assert!(!tensors.is_empty());
     // offsets o_t = log2 rms + 0.5 log2 fisher (guard degenerate stats)
@@ -65,7 +100,7 @@ pub fn variable_allocation(
             .iter()
             .zip(&offsets)
             .map(|(t, o)| {
-                (b0 + o).clamp(MIN_BITS, MAX_BITS) * t.numel as f64
+                (b0 + o).clamp(min_bits, max_bits) * t.numel as f64
             })
             .sum::<f64>()
             / total
@@ -83,7 +118,7 @@ pub fn variable_allocation(
     let b0 = 0.5 * (lo + hi);
     let bits: Vec<f64> = offsets
         .iter()
-        .map(|o| (b0 + o).clamp(MIN_BITS, MAX_BITS))
+        .map(|o| (b0 + o).clamp(min_bits, max_bits))
         .collect();
     let average = avg(b0);
     Allocation { bits, average }
@@ -240,7 +275,8 @@ mod tests {
             mk("a", 1000, 0.1, 4e-4),
             mk("b", 1000, 0.1, 1e-4),
         ];
-        let a = variable_allocation(&tensors, 8.0);
+        // target 5.0 keeps both tensors inside the [2, 8] clamp range
+        let a = variable_allocation(&tensors, 5.0);
         assert!(
             (a.bits[0] - a.bits[1] - 1.0).abs() < 1e-9,
             "{:?}",
@@ -267,9 +303,36 @@ mod tests {
             mk("a", 100, 1e-9, 1e-12), // will clamp to MIN_BITS
             mk("b", 100, 1.0, 1.0),
         ];
-        let a = variable_allocation(&tensors, 6.0);
-        assert!((a.average - 6.0).abs() < 1e-6, "avg {}", a.average);
+        // 4.0 is feasible with a pinned at 2: b gets 6 (inside [2, 8])
+        let a = variable_allocation(&tensors, 4.0);
+        assert!((a.average - 4.0).abs() < 1e-6, "avg {}", a.average);
         assert_eq!(a.bits[0], MIN_BITS);
+    }
+
+    #[test]
+    fn clamp_bounds_follow_the_candidate_lattice() {
+        use crate::coordinator::config::Scheme;
+        // the doc'd 2..=8 range IS the integer candidate lattice — the
+        // constants must stay derived, not drift independently
+        assert_eq!(MIN_BITS, frac::CANDIDATE_MIN_BITS as f64);
+        assert_eq!(MAX_BITS, frac::CANDIDATE_MAX_BITS as f64);
+        assert_eq!((MIN_BITS, MAX_BITS), (2.0, 8.0));
+        let base = Scheme::parse("int@4:block64-absmax").unwrap();
+        let cands = frac::candidate_schemes(&base);
+        assert_eq!(bits_bounds(&cands), (MIN_BITS, MAX_BITS));
+        // and an allocation clamped by the derived range never leaves it,
+        // even when the stats would push a tensor far outside
+        let tensors = vec![
+            mk("tiny", 100, 1e-9, 1e-12),
+            mk("huge", 100, 10.0, 1.0),
+        ];
+        let a =
+            variable_allocation_bounded(&tensors, 5.0, bits_bounds(&cands));
+        assert!(
+            a.bits.iter().all(|&b| (MIN_BITS..=MAX_BITS).contains(&b)),
+            "{:?}",
+            a.bits
+        );
     }
 
     #[test]

@@ -62,6 +62,42 @@
 //! both fields absent and decode unchanged; readers accept
 //! `MIN_VERSION..=VERSION`.
 //!
+//! # Container version 3 (OWQ3)
+//!
+//! Version 3 (same byte layout again; manifest-only rev, per the OWQ2
+//! pattern) carries the fractional-bit allocator's output
+//! ([`crate::alloc::frac`]): a tensor may be a block-level *mix* of two
+//! (in general, up to [`MAX_MIX_PARTS`]) codebook schemes whose
+//! element-weighted rate hits a budget between the integer lattice
+//! points.  Two optional per-tensor fields appear together or not at
+//! all:
+//!
+//! * `mix` (manifest object, [`MixRecord`]) — the scheme-id table: one
+//!   full spec string per part plus hex-exact per-part multipliers and
+//!   codebook storage bits, and the per-part lengths that split the
+//!   shared sections (`points_len`, `payload_len`, `part_elems`).
+//! * `block_schemes` (payload section, u8 per scale block) — the
+//!   per-block scheme-id stream, through the same checksummed-section
+//!   machinery as every other section (64-byte aligned, FNV-1a
+//!   verified, so a single flipped id bit is always detected).
+//!
+//! A mixed tensor's six regular sections hold the per-part
+//! concatenations in part order: codebook = concatenated codepoint
+//! tables, scales = concatenated per-group scales (group structure
+//! re-derived from the id stream), payload = concatenated entropy
+//! streams (each part coded with its own table), counts = concatenated
+//! histograms; outlier sections are empty (mixing rejects `:sparse`).
+//! Decode gathers each part's blocks, runs the same fused kernels a
+//! pure tensor uses, and scatters back — bit-identical to
+//! [`crate::eval::pipeline::encode_tensor_mixed`]'s reconstruction.
+//! The top-level `multiplier`/`storage_bits` of a mixed record are NaN
+//! (unused; the real values are per part), and its `spec` records the
+//! base scheme with the realised fractional bit width, so v2-era
+//! tooling that only reads specs still reports honest rates.
+//!
+//! Version 1/2 containers parse with both fields absent; readers accept
+//! `MIN_VERSION..=VERSION` (1..=3).
+//!
 //! # Fault model (see `EXPERIMENTS.md` §Fault-model)
 //!
 //! Every failure is a typed [`ArtifactError`], not a string.  Container
@@ -119,10 +155,16 @@ pub type AResult<T> = std::result::Result<T, ArtifactError>;
 
 pub const MAGIC: &[u8; 4] = b"OWQ1";
 /// Current container rev written by the packer (see module docs: v2 adds
-/// the `rot_seed` / `grid` manifest records).
-pub const VERSION: usize = 2;
+/// the `rot_seed` / `grid` manifest records, v3 the `mix` /
+/// `block_schemes` fractional-allocation records).
+pub const VERSION: usize = 3;
 /// Oldest container rev the reader still accepts.
 pub const MIN_VERSION: usize = 1;
+/// Most schemes one mixed tensor may combine.  The water-filling
+/// allocator emits at most two, but the container format (u8 scheme ids,
+/// per-part length vectors) is validated against this bound so the
+/// grammar has room without another rev.
+pub const MAX_MIX_PARTS: usize = 8;
 /// Section alignment within the payload region (matches `.owt`).
 pub const ALIGN: usize = 64;
 
@@ -217,6 +259,30 @@ pub struct GridRecord {
     pub buckets: Vec<u16>,
 }
 
+/// The per-part metadata of a mixed (fractional-allocation) tensor — v3
+/// manifests.  The per-block scheme-id stream itself lives in the
+/// checksummed `block_schemes` section; everything here is cross-checked
+/// against that stream at decode (part element counts, section splits),
+/// so a manifest/stream disagreement surfaces typed instead of decoding
+/// garbage.
+#[derive(Clone, Debug)]
+pub struct MixRecord {
+    /// Scheme-id table: part id → full spec string (parses through
+    /// [`Scheme::parse`]; all parts share the base granularity and
+    /// flags, only the bit width differs).
+    pub specs: Vec<String>,
+    /// Resolved per-part scale multipliers (hex-exact).
+    pub multipliers: Vec<f64>,
+    /// Per-part codebook storage bits (hex-exact).
+    pub storage_bits: Vec<f64>,
+    /// Codepoints per part in the concatenated codebook/counts sections.
+    pub points_len: Vec<usize>,
+    /// Coded bytes per part in the concatenated payload section.
+    pub payload_len: Vec<usize>,
+    /// Elements per part — redundant with the id stream, cross-checked.
+    pub part_elems: Vec<usize>,
+}
+
 /// Manifest record of one packed tensor.
 #[derive(Clone, Debug)]
 pub struct TensorRecord {
@@ -244,12 +310,19 @@ pub struct TensorRecord {
     /// Grid durable form — present iff the scheme element is `grid`;
     /// absent on v1 manifests.
     pub grid: Option<GridRecord>,
+    /// Fractional-mix durable form — present iff the tensor is a
+    /// block-level scheme mix (v3 manifests); always paired with a
+    /// `block_schemes` section.
+    pub mix: Option<MixRecord>,
     pub codebook: Section,
     pub scales: Section,
     pub payload: Section,
     pub counts: Section,
     pub outlier_idx: Section,
     pub outlier_val: Section,
+    /// Per-block scheme-id stream (u8 per scale block) — present iff
+    /// `mix` is.
+    pub block_schemes: Option<Section>,
 }
 
 impl TensorRecord {
@@ -257,17 +330,22 @@ impl TensorRecord {
         self.n
     }
 
-    /// The six named sections, in container order (fsck, fault injection
-    /// and the flip-sweep tests walk these to map offsets to owners).
-    pub fn sections(&self) -> [(&'static str, &Section); 6] {
-        [
+    /// The named sections, in container order (fsck, fault injection
+    /// and the flip-sweep tests walk these to map offsets to owners):
+    /// the six every tensor has, plus `block_schemes` on mixed tensors.
+    pub fn sections(&self) -> Vec<(&'static str, &Section)> {
+        let mut v = vec![
             ("codebook", &self.codebook),
             ("scales", &self.scales),
             ("payload", &self.payload),
             ("counts", &self.counts),
             ("outlier_idx", &self.outlier_idx),
             ("outlier_val", &self.outlier_val),
-        ]
+        ];
+        if let Some(s) = &self.block_schemes {
+            v.push(("block_schemes", s));
+        }
+        v
     }
 }
 
@@ -306,6 +384,18 @@ pub struct Artifact {
 
 fn invalid(e: impl std::fmt::Display) -> ArtifactError {
     ArtifactError::invalid(e)
+}
+
+/// Back into the original basis: V/W re-derived from the recorded seed
+/// through the one shared helper, inverse applied after the fused
+/// dequant — exactly where `qdq_tensor` applies it.  Shared by the plain
+/// and mixed decode paths (a no-op without a rotation record).
+fn apply_inverse_rotation(rec: &TensorRecord, out: &mut [f32]) {
+    if let Some(seed) = rec.rot_seed {
+        let (rows, cols) = (rec.shape[0], rec.shape[1]);
+        let (v, w) = crate::eval::pipeline::rotation_pair(rows, cols, seed);
+        crate::quant::rotation::rotate_2d_inverse(out, rows, cols, &v, &w);
+    }
 }
 
 fn req(j: &Json, key: &str) -> AResult<Json> {
@@ -529,6 +619,76 @@ impl Artifact {
                 }
                 None => None,
             };
+            let mix = match entry.get("mix").filter(|j| !j.is_null()) {
+                Some(mj) => {
+                    let strings = |key: &str| -> AResult<Vec<String>> {
+                        req(mj, key)?
+                            .as_arr()
+                            .ok_or_else(|| {
+                                invalid(format!(
+                                    "{name}: mix {key} not an array"
+                                ))
+                            })?
+                            .iter()
+                            .map(|j| {
+                                j.as_str().map(str::to_string).ok_or_else(
+                                    || {
+                                        invalid(format!(
+                                            "{name}: bad mix {key} entry"
+                                        ))
+                                    },
+                                )
+                            })
+                            .collect()
+                    };
+                    let hexes = |key: &str| -> AResult<Vec<f64>> {
+                        strings(key)?
+                            .iter()
+                            .map(|s| {
+                                f64_from_hex(s).map_err(|e| {
+                                    invalid(format!(
+                                        "{name}: mix {key}: {e}"
+                                    ))
+                                })
+                            })
+                            .collect()
+                    };
+                    let usizes = |key: &str| -> AResult<Vec<usize>> {
+                        req(mj, key)?
+                            .as_arr()
+                            .ok_or_else(|| {
+                                invalid(format!(
+                                    "{name}: mix {key} not an array"
+                                ))
+                            })?
+                            .iter()
+                            .map(|j| {
+                                j.as_usize().ok_or_else(|| {
+                                    invalid(format!(
+                                        "{name}: bad mix {key} entry"
+                                    ))
+                                })
+                            })
+                            .collect()
+                    };
+                    Some(MixRecord {
+                        specs: strings("specs")?,
+                        multipliers: hexes("multipliers")?,
+                        storage_bits: hexes("storage_bits")?,
+                        points_len: usizes("points_len")?,
+                        payload_len: usizes("payload_len")?,
+                        part_elems: usizes("part_elems")?,
+                    })
+                }
+                None => None,
+            };
+            let block_schemes = match entry
+                .get("sections")
+                .and_then(|s| s.get("block_schemes"))
+            {
+                Some(_) => Some(section_from(entry, "block_schemes")?),
+                None => None,
+            };
             let rec = TensorRecord {
                 spec: req_str(entry, "spec")?,
                 n: req_usize(entry, "n")?,
@@ -543,18 +703,67 @@ impl Artifact {
                 sq_err: req_hex_f64(entry, "sq_err")?,
                 rot_seed,
                 grid,
+                mix,
                 codebook: section_from(entry, "codebook")?,
                 scales: section_from(entry, "scales")?,
                 payload: section_from(entry, "payload")?,
                 counts: section_from(entry, "counts")?,
                 outlier_idx: section_from(entry, "outlier_idx")?,
                 outlier_val: section_from(entry, "outlier_val")?,
+                block_schemes,
                 name: name.clone(),
                 shape,
                 channel_axis,
             };
             if rec.shape.iter().product::<usize>() != rec.n {
                 return Err(invalid(format!("{name}: shape/numel mismatch")));
+            }
+            if rec.mix.is_some() != rec.block_schemes.is_some() {
+                return Err(invalid(format!(
+                    "{name}: mix record and block_schemes section must \
+                     appear together"
+                )));
+            }
+            if let Some(m) = &rec.mix {
+                let parts = m.specs.len();
+                if !(2..=MAX_MIX_PARTS).contains(&parts) {
+                    return Err(invalid(format!(
+                        "{name}: mix with {parts} parts \
+                         (2..={MAX_MIX_PARTS} supported)"
+                    )));
+                }
+                if [
+                    m.multipliers.len(),
+                    m.storage_bits.len(),
+                    m.points_len.len(),
+                    m.payload_len.len(),
+                    m.part_elems.len(),
+                ]
+                .iter()
+                .any(|&l| l != parts)
+                {
+                    return Err(invalid(format!(
+                        "{name}: ragged mix record"
+                    )));
+                }
+                if m.part_elems.iter().sum::<usize>() != rec.n {
+                    return Err(invalid(format!(
+                        "{name}: mix part elements cover {} of {} elements",
+                        m.part_elems.iter().sum::<usize>(),
+                        rec.n
+                    )));
+                }
+                if rec.transposed {
+                    return Err(invalid(format!(
+                        "{name}: mixed tensors are block-granularity \
+                         (never transposed)"
+                    )));
+                }
+                if rec.grid.is_some() {
+                    return Err(invalid(format!(
+                        "{name}: grid and mix records are exclusive"
+                    )));
+                }
             }
             if rec.transposed && rec.shape.len() != 2 {
                 return Err(invalid(format!(
@@ -886,6 +1095,13 @@ impl Artifact {
                 "{name}: grid record and scheme element disagree"
             )));
         }
+        if rec.mix.is_some() {
+            // fractional mix (v3): per-part decode + scatter, then the
+            // same shared inverse-rotation tail as every other form
+            self.decode_mixed(rec, &scheme, out)?;
+            apply_inverse_rotation(rec, out);
+            return Ok(());
+        }
         let points = self.f32_section("codebook", name, &rec.codebook)?;
         if points.is_empty() {
             return Err(corrupt("codebook", "empty codebook".into()));
@@ -1024,18 +1240,262 @@ impl Artifact {
             }
         }
 
-        // back into the original basis: V/W re-derived from the recorded
-        // seed through the one shared helper, inverse applied after the
-        // fused dequant — exactly where qdq_tensor applies it
-        if let Some(seed) = rec.rot_seed {
-            let (rows, cols) = (rec.shape[0], rec.shape[1]);
-            let (v, w) =
-                crate::eval::pipeline::rotation_pair(rows, cols, seed);
-            crate::quant::rotation::rotate_2d_inverse(
-                out, rows, cols, &v, &w,
+        apply_inverse_rotation(rec, out);
+        Ok(())
+    }
+
+    /// Decode a mixed (fractional-allocation) tensor into layout space:
+    /// read and validate the per-block scheme-id stream, split the
+    /// concatenated sections by the manifest's per-part lengths
+    /// (cross-checked against the id stream), run each part through the
+    /// same entropy decode + fused [`Quantiser::decode_into`] a pure
+    /// tensor uses, and scatter the part reconstructions back onto their
+    /// blocks.  Every length or id inconsistency surfaces as a typed
+    /// error naming the narrowest responsible section.
+    fn decode_mixed(
+        &self,
+        rec: &TensorRecord,
+        scheme: &Scheme,
+        out: &mut [f32],
+    ) -> AResult<()> {
+        let name = &rec.name;
+        let corrupt = |section: &str, detail: String| {
+            ArtifactError::corrupt(name, section, detail)
+        };
+        let mix = rec.mix.as_ref().expect("decode_mixed without mix");
+        let bs = rec
+            .block_schemes
+            .as_ref()
+            .expect("mix/block_schemes pairing validated at open");
+
+        // the scheme-id table: every part must share the base layout
+        let mut parts: Vec<Scheme> = Vec::with_capacity(mix.specs.len());
+        for spec in &mix.specs {
+            let s = Scheme::parse(spec).map_err(|e| {
+                invalid(format!("{name}: mix spec {spec:?}: {e}"))
+            })?;
+            if s.granularity != scheme.granularity {
+                return Err(invalid(format!(
+                    "{name}: mix part {spec:?} granularity disagrees \
+                     with the tensor spec"
+                )));
+            }
+            if s.element == Element::Grid {
+                return Err(invalid(format!(
+                    "{name}: grid schemes cannot be mixed"
+                )));
+            }
+            if s.sparse > 0.0 || s.rotate != scheme.rotate {
+                return Err(invalid(format!(
+                    "{name}: mix part {spec:?} flags disagree with the \
+                     tensor spec"
+                )));
+            }
+            parts.push(s);
+        }
+        if !matches!(
+            scheme.granularity,
+            crate::scaling::Granularity::Block(_)
+        ) {
+            return Err(invalid(format!(
+                "{name}: mixed tensors require block granularity"
+            )));
+        }
+
+        let blocks =
+            scale_groups(rec.n, scheme.granularity, rec.channel_len);
+        let assign = self.section("block_schemes", name, bs)?;
+        if assign.len() != blocks.len() {
+            return Err(corrupt(
+                "block_schemes",
+                format!(
+                    "{} scheme ids for {} blocks",
+                    assign.len(),
+                    blocks.len()
+                ),
+            ));
+        }
+        if let Some(&id) =
+            assign.iter().find(|&&id| (id as usize) >= parts.len())
+        {
+            return Err(corrupt(
+                "block_schemes",
+                format!(
+                    "scheme id {id} out of range ({} parts)",
+                    parts.len()
+                ),
+            ));
+        }
+
+        // per-part element counts and group structure from the id stream,
+        // cross-checked against the manifest record
+        let k = parts.len();
+        let mut elems = vec![0usize; k];
+        let mut group_lens: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (&id, &(_, len)) in assign.iter().zip(&blocks) {
+            elems[id as usize] += len;
+            group_lens[id as usize].push(len);
+        }
+        for (p, &e) in elems.iter().enumerate() {
+            if e != mix.part_elems[p] {
+                return Err(corrupt(
+                    "block_schemes",
+                    format!(
+                        "part {p} owns {e} elements, manifest says {}",
+                        mix.part_elems[p]
+                    ),
+                ));
+            }
+            if e == 0 {
+                return Err(invalid(format!(
+                    "{name}: mix part {p} is assigned no blocks"
+                )));
+            }
+        }
+
+        // split the concatenated sections by the recorded part lengths
+        let points_all =
+            self.f32_section("codebook", name, &rec.codebook)?;
+        if points_all.len() != mix.points_len.iter().sum::<usize>() {
+            return Err(corrupt(
+                "codebook",
+                format!(
+                    "{} codepoints for recorded part lengths {:?}",
+                    points_all.len(),
+                    mix.points_len
+                ),
+            ));
+        }
+        let counts_all = self.u64_section("counts", name, &rec.counts)?;
+        if counts_all.len() != points_all.len() {
+            return Err(corrupt(
+                "counts",
+                format!(
+                    "histogram covers {} of {} codepoints",
+                    counts_all.len(),
+                    points_all.len()
+                ),
+            ));
+        }
+        let scales_all = self.f32_section("scales", name, &rec.scales)?;
+        let n_groups_total: usize =
+            group_lens.iter().map(Vec::len).sum();
+        if scales_all.len() != n_groups_total {
+            return Err(corrupt(
+                "scales",
+                format!(
+                    "{} scales for {} groups",
+                    scales_all.len(),
+                    n_groups_total
+                ),
+            ));
+        }
+        let payload_all = self.section("payload", name, &rec.payload)?;
+        if payload_all.len() != mix.payload_len.iter().sum::<usize>() {
+            return Err(corrupt(
+                "payload",
+                format!(
+                    "{} payload bytes for recorded part lengths {:?}",
+                    payload_all.len(),
+                    mix.payload_len
+                ),
+            ));
+        }
+        if rec.outlier_idx.len != 0 || rec.outlier_val.len != 0 {
+            return Err(invalid(format!(
+                "{name}: mixed tensors carry no outliers"
+            )));
+        }
+
+        let (mut p_off, mut c_off, mut s_off, mut pay_off) = (0, 0, 0, 0);
+        for p in 0..k {
+            let np = mix.points_len[p];
+            let points = points_all[p_off..p_off + np].to_vec();
+            if points.is_empty() {
+                return Err(corrupt(
+                    "codebook",
+                    format!("part {p}: empty codebook"),
+                ));
+            }
+            let counts = &counts_all[c_off..c_off + np];
+            if counts.iter().sum::<u64>() as usize != elems[p] {
+                return Err(corrupt(
+                    "counts",
+                    format!(
+                        "part {p}: histogram does not cover its elements"
+                    ),
+                ));
+            }
+            let n_groups = group_lens[p].len();
+            let scales = scales_all[s_off..s_off + n_groups].to_vec();
+            let payload =
+                &payload_all[pay_off..pay_off + mix.payload_len[p]];
+            let indices =
+                self.decode_indices_bytes(name, counts, payload, elems[p])?;
+            if indices.len() != elems[p] {
+                return Err(corrupt(
+                    "payload",
+                    format!(
+                        "part {p}: decoded {} of {} indices",
+                        indices.len(),
+                        elems[p]
+                    ),
+                ));
+            }
+            // groups over the gathered stream: block order is preserved,
+            // so group g starts where group g−1 ended
+            let mut groups = Vec::with_capacity(n_groups);
+            let mut start = 0usize;
+            for &l in &group_lens[p] {
+                groups.push((start, l));
+                start += l;
+            }
+            let codebook = crate::formats::Codebook::with_bits(
+                points,
+                mix.storage_bits[p],
             );
+            let quantiser = Quantiser::new(
+                parts[p].granularity,
+                parts[p].statistic,
+                parts[p].scale_format,
+                codebook,
+            )
+            .with_multiplier(mix.multipliers[p]);
+            let enc = Encoded {
+                scales,
+                indices,
+                groups,
+            };
+            let mut buf = vec![0f32; elems[p]];
+            quantiser.decode_into(&enc, &mut buf);
+            let mut cursor = 0usize;
+            for (&id, &(bstart, blen)) in assign.iter().zip(&blocks) {
+                if id as usize == p {
+                    out[bstart..bstart + blen]
+                        .copy_from_slice(&buf[cursor..cursor + blen]);
+                    cursor += blen;
+                }
+            }
+            p_off += np;
+            c_off += np;
+            s_off += n_groups;
+            pay_off += mix.payload_len[p];
         }
         Ok(())
+    }
+
+    /// The checksum-verified per-block scheme-id stream of a mixed tensor
+    /// (`None` for plain tensors).  `owf inspect --verify` and the bench
+    /// parity gates use this to rebuild the in-memory mixed pipeline for
+    /// the bit-identity comparison.
+    pub fn block_assignment(&self, i: usize) -> AResult<Option<Vec<u8>>> {
+        let rec = &self.tensors[i];
+        match &rec.block_schemes {
+            Some(s) => Ok(Some(
+                self.section("block_schemes", &rec.name, s)?.into_owned(),
+            )),
+            None => Ok(None),
+        }
     }
 
     /// Entropy-decode the index payload under the stored histogram model.
@@ -1046,11 +1506,23 @@ impl Artifact {
         rec: &TensorRecord,
         counts: &[u64],
     ) -> AResult<Vec<u16>> {
-        let name = &rec.name;
-        let payload = self.section("payload", name, &rec.payload)?;
+        let payload = self.section("payload", &rec.name, &rec.payload)?;
+        self.decode_indices_bytes(&rec.name, counts, &payload, rec.n)
+    }
+
+    /// [`Self::decode_indices`] over an explicit byte slice and element
+    /// count — the mixed decode path calls this once per part with its
+    /// slice of the concatenated payload section.
+    fn decode_indices_bytes(
+        &self,
+        name: &str,
+        counts: &[u64],
+        payload: &[u8],
+        n: usize,
+    ) -> AResult<Vec<u16>> {
         let decoded = std::panic::catch_unwind(
             std::panic::AssertUnwindSafe(|| {
-                self.decode_indices_inner(rec, counts, &payload)
+                self.decode_indices_inner(name, counts, payload, n)
             }),
         );
         match decoded {
@@ -1065,21 +1537,21 @@ impl Artifact {
 
     fn decode_indices_inner(
         &self,
-        rec: &TensorRecord,
+        name: &str,
         counts: &[u64],
         payload: &[u8],
+        n: usize,
     ) -> AResult<Vec<u16>> {
-        let name = &rec.name;
         match self.codec {
             Codec::Raw => {
-                if payload.len() != 2 * rec.n {
+                if payload.len() != 2 * n {
                     return Err(ArtifactError::corrupt(
                         name,
                         "payload",
                         format!(
                             "raw payload holds {} of {} bytes",
                             payload.len(),
-                            2 * rec.n
+                            2 * n
                         ),
                     ));
                 }
@@ -1109,7 +1581,7 @@ impl Artifact {
                 }
                 let code = crate::compress::tables::huffman_for(counts);
                 code.decoder()
-                    .decode_interleaved_checked(payload, rec.n)
+                    .decode_interleaved_checked(payload, n)
                     .map_err(|e| {
                         ArtifactError::corrupt(name, "payload", e)
                     })
@@ -1124,7 +1596,7 @@ impl Artifact {
                 }
                 let model = crate::compress::tables::rans_for(counts);
                 crate::compress::rans::rans_decode_interleaved_checked(
-                    &model, payload, rec.n,
+                    &model, payload, n,
                 )
                 .map_err(|e| ArtifactError::corrupt(name, "payload", e))
             }

@@ -1,9 +1,17 @@
-//! The OWQ pack path (container version 2, magic `OWQ1`): Fisher/RMS bit
+//! The OWQ pack path (container version 3, magic `OWQ1`): Fisher/RMS bit
 //! allocation → the pipeline's fused encode
 //! ([`crate::eval::pipeline::encode_tensor`], bit-identical to the
 //! in-memory qdq) → K-lane interleaved entropy coding → checksummed
 //! sections → crash-safe atomic write (temp file + rename, like
 //! [`crate::tensorstore::Store::save`]).
+//!
+//! [`AllocMode::Fractional`] reaches budgets *between* the integer
+//! lattice points: it measures each tensor's (bits, sq-err) candidate
+//! curve ([`crate::alloc::frac::measure_points`]), water-fills the
+//! Fisher-weighted budget over the lower convex hulls, and packs any
+//! genuinely mixed tensor as a v3 `mix` entry — per-part concatenated
+//! sections plus a `block_schemes` id stream (one byte per scale block,
+//! deterministic in the tensor name, so re-packs are byte-identical).
 //!
 //! Every scheme the sweep grammar can produce is packable: codebook
 //! families persist (codebook, scales, coded indices, histogram, outlier
@@ -26,12 +34,14 @@ use super::{
     MAGIC, VERSION,
 };
 use crate::alloc::{
-    round_allocation, variable_allocation, TensorInfo,
+    frac, round_allocation, variable_allocation, TensorInfo,
 };
 use crate::compress::rans::{rans_encode_interleaved, RANS_MAX_SYMBOLS};
 use crate::compress::{tables, MAX_LANES};
 use crate::coordinator::config::Scheme;
-use crate::eval::pipeline::{encode_tensor, EncodedForm};
+use crate::eval::pipeline::{
+    encode_tensor, encode_tensor_mixed, EncodedForm,
+};
 use crate::tensorstore::{Dtype, Store};
 use crate::util::json::Json;
 
@@ -44,6 +54,12 @@ pub enum AllocMode {
     /// width as the model-level average, rounded to integers by the
     /// largest-remainder rule ([`crate::alloc::round_allocation`]).
     Variable,
+    /// Fractional-bit allocation: water-filling over each tensor's
+    /// measured (bits, sq-err) convex hull, realised by mixing at most
+    /// two candidate schemes per tensor at scale-block granularity
+    /// ([`crate::alloc::frac`]).  Hits any average in the candidate
+    /// range, not just the integer lattice.
+    Fractional,
 }
 
 impl AllocMode {
@@ -51,6 +67,7 @@ impl AllocMode {
         match self {
             AllocMode::Flat => "flat",
             AllocMode::Variable => "variable",
+            AllocMode::Fractional => "fractional",
         }
     }
 
@@ -58,8 +75,9 @@ impl AllocMode {
         match s {
             "flat" => Ok(AllocMode::Flat),
             "variable" => Ok(AllocMode::Variable),
+            "fractional" => Ok(AllocMode::Fractional),
             other => Err(ArtifactError::invalid(format!(
-                "unknown alloc mode {other:?} (flat|variable)"
+                "unknown alloc mode {other:?} (flat|variable|fractional)"
             ))),
         }
     }
@@ -75,6 +93,11 @@ pub struct PackOptions {
     /// Interleaved lanes for the entropy-coded payload (ignored by
     /// [`Codec::Raw`]).
     pub lanes: usize,
+    /// Target average bits/param for [`AllocMode::Fractional`] —
+    /// may be fractional (`--bits 3.3`).  `None` falls back to the
+    /// spec's own bit width.  Ignored by the other modes, which target
+    /// the spec's width by construction.
+    pub target_bits: Option<f64>,
     /// Free-form source description stored in the manifest (`owf pack`
     /// records enough here — sim seed/shapes/dist or checkpoint size —
     /// for `owf inspect --verify` to regenerate the input and prove the
@@ -148,6 +171,15 @@ fn u64_bytes(xs: &[u64]) -> Vec<u8> {
     out
 }
 
+/// What the allocator decided for one tensor: a single scheme (the
+/// Flat/Variable modes, and Fractional picks that land on a hull
+/// vertex or whose realised block assignment degenerates to one side),
+/// or a genuine two-scheme mix with its per-block id stream.
+enum Plan {
+    Single(Scheme),
+    Mixed { schemes: Vec<Scheme>, assign: Vec<u8> },
+}
+
 /// Quantise every f32 tensor of `store` under `opts` and write the `OWQ1`
 /// container to `path` atomically.  `fisher_mean` feeds the variable
 /// allocator (missing tensors default to 1.0 — a *constant* Fisher shifts
@@ -186,8 +218,17 @@ pub fn pack_store(
         ));
     }
 
-    // --- per-tensor bit widths ------------------------------------------------
-    let (alloc_json, bits_per_tensor): (Json, Vec<f64>) = match opts.alloc {
+    // --- per-tensor plans -----------------------------------------------------
+    let single_plans = |bits: &[f64]| -> Vec<Plan> {
+        bits.iter()
+            .map(|&b| {
+                let mut s = base.clone();
+                s.bits = b;
+                Plan::Single(s)
+            })
+            .collect()
+    };
+    let (alloc_json, plans): (Json, Vec<Plan>) = match opts.alloc {
         AllocMode::Flat => {
             let bits = vec![base.bits; tensors.len()];
             let j = Json::obj()
@@ -202,7 +243,7 @@ pub fn pack_store(
                             .collect(),
                     ),
                 );
-            (j, bits)
+            (j, single_plans(&bits))
         }
         AllocMode::Variable => {
             let infos: Vec<TensorInfo> = tensors
@@ -232,7 +273,95 @@ pub fn pack_store(
                             .collect(),
                     ),
                 );
-            (j, rounded.bits)
+            (j, single_plans(&rounded.bits))
+        }
+        AllocMode::Fractional => {
+            frac::validate_base(&base).map_err(|e| {
+                ArtifactError::invalid(format!(
+                    "fractional alloc over {:?}: {e}",
+                    opts.spec
+                ))
+            })?;
+            let target = opts.target_bits.unwrap_or(base.bits);
+            let candidates = frac::candidate_schemes(&base);
+            let mut curves: Vec<frac::TensorCurve> =
+                Vec::with_capacity(tensors.len());
+            for t in &tensors {
+                let points = frac::measure_points(
+                    &base,
+                    &t.as_f32(),
+                    &t.shape,
+                    t.channel_axis,
+                    &[],
+                    fnv1a64(t.name.as_bytes()),
+                )
+                .map_err(|e| {
+                    ArtifactError::invalid(format!(
+                        "measure {:?}: {e}",
+                        t.name
+                    ))
+                })?;
+                curves.push(frac::TensorCurve::new(
+                    t.name.clone(),
+                    t.numel(),
+                    *fisher_mean.get(&t.name).unwrap_or(&1.0),
+                    points,
+                ));
+            }
+            let alloc = frac::waterfill(&curves, target);
+            let mut plans = Vec::with_capacity(tensors.len());
+            for (t, choice) in tensors.iter().zip(&alloc.choices) {
+                let plan = if choice.is_pure() {
+                    Plan::Single(candidates[choice.lo].clone())
+                } else {
+                    let lens: Vec<usize> = crate::scaling::scale_groups(
+                        t.numel(),
+                        base.granularity,
+                        0,
+                    )
+                    .iter()
+                    .map(|&(_, len)| len)
+                    .collect();
+                    let hi_elems = (choice.hi_weight * t.numel() as f64)
+                        .round() as usize;
+                    let assign = frac::assign_blocks(
+                        fnv1a64(t.name.as_bytes()),
+                        &lens,
+                        hi_elems,
+                    );
+                    // rounding can realise the whole tensor on one side
+                    // — that's a pure tensor, not a degenerate mix
+                    if assign.iter().all(|&a| a == 0) {
+                        Plan::Single(candidates[choice.lo].clone())
+                    } else if assign.iter().all(|&a| a == 1) {
+                        Plan::Single(candidates[choice.hi].clone())
+                    } else {
+                        Plan::Mixed {
+                            schemes: vec![
+                                candidates[choice.lo].clone(),
+                                candidates[choice.hi].clone(),
+                            ],
+                            assign,
+                        }
+                    }
+                };
+                plans.push(plan);
+            }
+            let j = Json::obj()
+                .push("scheme", "fractional")
+                .push("target", f64_to_hex(target))
+                .push("average", f64_to_hex(alloc.average))
+                .push(
+                    "bits",
+                    Json::Arr(
+                        alloc
+                            .choices
+                            .iter()
+                            .map(|c| Json::Str(f64_to_hex(c.bits)))
+                            .collect(),
+                    ),
+                );
+            (j, plans)
         }
     };
 
@@ -242,73 +371,12 @@ pub fn pack_store(
     let mut elements = 0usize;
     let mut bits_weighted = 0f64;
     let mut sq_err = 0f64;
-    for (t, &bits) in tensors.iter().zip(&bits_per_tensor) {
-        let mut scheme = base.clone();
-        scheme.bits = bits;
+    for (t, plan) in tensors.iter().zip(&plans) {
         let data = t.as_f32();
         // rotation seed: derived from the tensor name, so it is stable
         // across re-packs and needs no coordination with the source
         // (recorded in the manifest iff the tensor was actually rotated)
         let rot_seed = fnv1a64(t.name.as_bytes());
-        let et = encode_tensor(
-            &scheme,
-            &data,
-            &t.shape,
-            t.channel_axis,
-            &[],
-            rot_seed,
-        )
-        .map_err(|e| {
-            ArtifactError::invalid(format!("encode {:?}: {e}", t.name))
-        })?;
-
-        // alphabet capacity: rANS normalises every seen symbol into a
-        // 2^12-slot table and cannot represent more distinct symbols than
-        // slots (the coder would panic) — fail typed up front instead
-        let seen = et.counts.iter().filter(|&&c| c > 0).count();
-        if matches!(opts.codec, Codec::Rans) && seen > RANS_MAX_SYMBOLS {
-            return Err(ArtifactError::invalid(format!(
-                "tensor {:?}: {seen} distinct symbols exceed the rANS \
-                 normalisation capacity of {RANS_MAX_SYMBOLS} — pack \
-                 with --codec huffman or raw",
-                t.name
-            )));
-        }
-
-        let indices: &[u16] = match &et.form {
-            EncodedForm::Codebook { enc, .. } => &enc.indices,
-            EncodedForm::Grid { indices, .. } => indices,
-        };
-        let coded: Vec<u8> = match opts.codec {
-            Codec::Raw => u16_bytes(indices),
-            Codec::Huffman => tables::huffman_for(&et.counts)
-                .encode_interleaved(indices, opts.lanes),
-            Codec::Rans => rans_encode_interleaved(
-                &tables::rans_for(&et.counts),
-                indices,
-                opts.lanes,
-            ),
-        };
-        // grid tensors re-use the codebook section for the dense-slot
-        // codepoint table and leave scales empty; the manifest carries
-        // the hex-exact δ + slot→bucket map the reader cross-checks the
-        // table against
-        let (points_bytes, scales_bytes) = match &et.form {
-            EncodedForm::Codebook { quantiser, enc } => (
-                f32_bytes(quantiser.codebook.points()),
-                f32_bytes(&enc.scales),
-            ),
-            EncodedForm::Grid { points, .. } => {
-                (f32_bytes(points), Vec::new())
-            }
-        };
-        let (multiplier, storage_bits) = match &et.form {
-            EncodedForm::Codebook { quantiser, .. } => (
-                quantiser.scale_multiplier,
-                quantiser.codebook.storage_bits(),
-            ),
-            EncodedForm::Grid { .. } => (scheme.multiplier, 0.0),
-        };
 
         let mut entry = Json::obj()
             .push("name", t.name.as_str())
@@ -318,64 +386,310 @@ pub fn pack_store(
             Some(ax) => entry.push("channel_axis", ax),
             None => entry.push("channel_axis", Json::Null),
         };
-        let mut entry = entry
-            .push("spec", scheme.name())
-            .push("multiplier", f64_to_hex(multiplier))
-            .push("storage_bits", f64_to_hex(storage_bits))
-            .push("channel_len", et.channel_len)
-            .push("transposed", et.transposed)
-            .push("bits", f64_to_hex(et.bits))
-            .push("sq_err", f64_to_hex(et.sq_err));
-        if let Some(seed) = et.rot_seed {
-            entry = entry.push("rot_seed", u64_to_hex(seed));
-        }
-        if let EncodedForm::Grid { delta, buckets, .. } = &et.form {
-            entry = entry.push(
-                "grid",
-                Json::obj()
-                    .push("delta", f64_to_hex(*delta))
-                    .push(
-                        "buckets",
-                        buckets
-                            .iter()
-                            .map(|&b| b as usize)
-                            .collect::<Vec<usize>>(),
+
+        let (entry, t_bits, t_err) = match plan {
+            Plan::Single(scheme) => {
+                let et = encode_tensor(
+                    scheme,
+                    &data,
+                    &t.shape,
+                    t.channel_axis,
+                    &[],
+                    rot_seed,
+                )
+                .map_err(|e| {
+                    ArtifactError::invalid(format!(
+                        "encode {:?}: {e}",
+                        t.name
+                    ))
+                })?;
+
+                // alphabet capacity: rANS normalises every seen symbol
+                // into a 2^12-slot table and cannot represent more
+                // distinct symbols than slots (the coder would panic) —
+                // fail typed up front instead
+                let seen =
+                    et.counts.iter().filter(|&&c| c > 0).count();
+                if matches!(opts.codec, Codec::Rans)
+                    && seen > RANS_MAX_SYMBOLS
+                {
+                    return Err(ArtifactError::invalid(format!(
+                        "tensor {:?}: {seen} distinct symbols exceed \
+                         the rANS normalisation capacity of \
+                         {RANS_MAX_SYMBOLS} — pack with --codec \
+                         huffman or raw",
+                        t.name
+                    )));
+                }
+
+                let indices: &[u16] = match &et.form {
+                    EncodedForm::Codebook { enc, .. } => &enc.indices,
+                    EncodedForm::Grid { indices, .. } => indices,
+                    EncodedForm::Mixed { .. } => unreachable!(
+                        "encode_tensor never returns Mixed"
                     ),
-            );
-        }
-        let entry = entry.push(
-            "sections",
-            Json::Obj(vec![
-                (
-                    "codebook".to_string(),
-                    push_section(&mut payload, &points_bytes),
-                ),
-                (
-                    "scales".to_string(),
-                    push_section(&mut payload, &scales_bytes),
-                ),
-                (
-                    "payload".to_string(),
-                    push_section(&mut payload, &coded),
-                ),
-                (
-                    "counts".to_string(),
-                    push_section(&mut payload, &u64_bytes(&et.counts)),
-                ),
-                (
-                    "outlier_idx".to_string(),
-                    push_section(&mut payload, &u32_bytes(&et.outlier_idx)),
-                ),
-                (
-                    "outlier_val".to_string(),
-                    push_section(&mut payload, &f32_bytes(&et.outlier_val)),
-                ),
-            ]),
-        );
+                };
+                let coded: Vec<u8> = match opts.codec {
+                    Codec::Raw => u16_bytes(indices),
+                    Codec::Huffman => tables::huffman_for(&et.counts)
+                        .encode_interleaved(indices, opts.lanes),
+                    Codec::Rans => rans_encode_interleaved(
+                        &tables::rans_for(&et.counts),
+                        indices,
+                        opts.lanes,
+                    ),
+                };
+                // grid tensors re-use the codebook section for the
+                // dense-slot codepoint table and leave scales empty;
+                // the manifest carries the hex-exact δ + slot→bucket
+                // map the reader cross-checks the table against
+                let (points_bytes, scales_bytes) = match &et.form {
+                    EncodedForm::Codebook { quantiser, enc } => (
+                        f32_bytes(quantiser.codebook.points()),
+                        f32_bytes(&enc.scales),
+                    ),
+                    EncodedForm::Grid { points, .. } => {
+                        (f32_bytes(points), Vec::new())
+                    }
+                    EncodedForm::Mixed { .. } => unreachable!(),
+                };
+                let (multiplier, storage_bits) = match &et.form {
+                    EncodedForm::Codebook { quantiser, .. } => (
+                        quantiser.scale_multiplier,
+                        quantiser.codebook.storage_bits(),
+                    ),
+                    EncodedForm::Grid { .. } => (scheme.multiplier, 0.0),
+                    EncodedForm::Mixed { .. } => unreachable!(),
+                };
+
+                let mut entry = entry
+                    .push("spec", scheme.name())
+                    .push("multiplier", f64_to_hex(multiplier))
+                    .push("storage_bits", f64_to_hex(storage_bits))
+                    .push("channel_len", et.channel_len)
+                    .push("transposed", et.transposed)
+                    .push("bits", f64_to_hex(et.bits))
+                    .push("sq_err", f64_to_hex(et.sq_err));
+                if let Some(seed) = et.rot_seed {
+                    entry = entry.push("rot_seed", u64_to_hex(seed));
+                }
+                if let EncodedForm::Grid { delta, buckets, .. } =
+                    &et.form
+                {
+                    entry = entry.push(
+                        "grid",
+                        Json::obj()
+                            .push("delta", f64_to_hex(*delta))
+                            .push(
+                                "buckets",
+                                buckets
+                                    .iter()
+                                    .map(|&b| b as usize)
+                                    .collect::<Vec<usize>>(),
+                            ),
+                    );
+                }
+                let entry = entry.push(
+                    "sections",
+                    Json::Obj(vec![
+                        (
+                            "codebook".to_string(),
+                            push_section(&mut payload, &points_bytes),
+                        ),
+                        (
+                            "scales".to_string(),
+                            push_section(&mut payload, &scales_bytes),
+                        ),
+                        (
+                            "payload".to_string(),
+                            push_section(&mut payload, &coded),
+                        ),
+                        (
+                            "counts".to_string(),
+                            push_section(
+                                &mut payload,
+                                &u64_bytes(&et.counts),
+                            ),
+                        ),
+                        (
+                            "outlier_idx".to_string(),
+                            push_section(
+                                &mut payload,
+                                &u32_bytes(&et.outlier_idx),
+                            ),
+                        ),
+                        (
+                            "outlier_val".to_string(),
+                            push_section(
+                                &mut payload,
+                                &f32_bytes(&et.outlier_val),
+                            ),
+                        ),
+                    ]),
+                );
+                (entry, et.bits, et.sq_err)
+            }
+            Plan::Mixed { schemes, assign } => {
+                let et = encode_tensor_mixed(
+                    schemes,
+                    assign,
+                    &data,
+                    &t.shape,
+                    t.channel_axis,
+                    &[],
+                    rot_seed,
+                )
+                .map_err(|e| {
+                    ArtifactError::invalid(format!(
+                        "encode mixed {:?}: {e}",
+                        t.name
+                    ))
+                })?;
+                let parts = match &et.form {
+                    EncodedForm::Mixed { parts, .. } => parts,
+                    _ => unreachable!(
+                        "encode_tensor_mixed always returns Mixed"
+                    ),
+                };
+
+                // per-part concatenated sections: each partition is a
+                // self-contained codebook stream with its own entropy
+                // model, so the capacity guard is per part too
+                let mut points_bytes: Vec<u8> = Vec::new();
+                let mut scales_bytes: Vec<u8> = Vec::new();
+                let mut coded: Vec<u8> = Vec::new();
+                let mut counts_all: Vec<u64> = Vec::new();
+                let mut specs: Vec<Json> = Vec::new();
+                let mut multipliers: Vec<Json> = Vec::new();
+                let mut storage_bits: Vec<Json> = Vec::new();
+                let mut points_len: Vec<usize> = Vec::new();
+                let mut payload_len: Vec<usize> = Vec::new();
+                let mut part_elems: Vec<usize> = Vec::new();
+                for part in parts {
+                    let seen =
+                        part.counts.iter().filter(|&&c| c > 0).count();
+                    if matches!(opts.codec, Codec::Rans)
+                        && seen > RANS_MAX_SYMBOLS
+                    {
+                        return Err(ArtifactError::invalid(format!(
+                            "tensor {:?} part {}: {seen} distinct \
+                             symbols exceed the rANS normalisation \
+                             capacity of {RANS_MAX_SYMBOLS} — pack \
+                             with --codec huffman or raw",
+                            t.name,
+                            part.scheme.name()
+                        )));
+                    }
+                    let part_coded: Vec<u8> = match opts.codec {
+                        Codec::Raw => u16_bytes(&part.enc.indices),
+                        Codec::Huffman => {
+                            tables::huffman_for(&part.counts)
+                                .encode_interleaved(
+                                    &part.enc.indices,
+                                    opts.lanes,
+                                )
+                        }
+                        Codec::Rans => rans_encode_interleaved(
+                            &tables::rans_for(&part.counts),
+                            &part.enc.indices,
+                            opts.lanes,
+                        ),
+                    };
+                    specs.push(Json::Str(part.scheme.name()));
+                    multipliers.push(Json::Str(f64_to_hex(
+                        part.quantiser.scale_multiplier,
+                    )));
+                    storage_bits.push(Json::Str(f64_to_hex(
+                        part.quantiser.codebook.storage_bits(),
+                    )));
+                    points_len
+                        .push(part.quantiser.codebook.points().len());
+                    payload_len.push(part_coded.len());
+                    part_elems.push(part.n);
+                    points_bytes.extend_from_slice(&f32_bytes(
+                        part.quantiser.codebook.points(),
+                    ));
+                    scales_bytes
+                        .extend_from_slice(&f32_bytes(&part.enc.scales));
+                    coded.extend_from_slice(&part_coded);
+                    counts_all.extend_from_slice(&part.counts);
+                }
+
+                // the top-level spec records the realised fractional
+                // rate; multiplier/storage_bits live per part in `mix`,
+                // so the top-level slots are explicit NaNs
+                let mut spec = base.clone();
+                spec.bits = et.bits;
+                let mut entry = entry
+                    .push("spec", spec.name())
+                    .push("multiplier", f64_to_hex(f64::NAN))
+                    .push("storage_bits", f64_to_hex(f64::NAN))
+                    .push("channel_len", et.channel_len)
+                    .push("transposed", et.transposed)
+                    .push("bits", f64_to_hex(et.bits))
+                    .push("sq_err", f64_to_hex(et.sq_err))
+                    .push(
+                        "mix",
+                        Json::obj()
+                            .push("specs", Json::Arr(specs))
+                            .push(
+                                "multipliers",
+                                Json::Arr(multipliers),
+                            )
+                            .push(
+                                "storage_bits",
+                                Json::Arr(storage_bits),
+                            )
+                            .push("points_len", points_len)
+                            .push("payload_len", payload_len)
+                            .push("part_elems", part_elems),
+                    );
+                if let Some(seed) = et.rot_seed {
+                    entry = entry.push("rot_seed", u64_to_hex(seed));
+                }
+                let entry = entry.push(
+                    "sections",
+                    Json::Obj(vec![
+                        (
+                            "codebook".to_string(),
+                            push_section(&mut payload, &points_bytes),
+                        ),
+                        (
+                            "scales".to_string(),
+                            push_section(&mut payload, &scales_bytes),
+                        ),
+                        (
+                            "payload".to_string(),
+                            push_section(&mut payload, &coded),
+                        ),
+                        (
+                            "counts".to_string(),
+                            push_section(
+                                &mut payload,
+                                &u64_bytes(&counts_all),
+                            ),
+                        ),
+                        (
+                            "outlier_idx".to_string(),
+                            push_section(&mut payload, &[]),
+                        ),
+                        (
+                            "outlier_val".to_string(),
+                            push_section(&mut payload, &[]),
+                        ),
+                        (
+                            "block_schemes".to_string(),
+                            push_section(&mut payload, assign),
+                        ),
+                    ]),
+                );
+                (entry, et.bits, et.sq_err)
+            }
+        };
         entries.push(entry);
         elements += t.numel();
-        bits_weighted += et.bits * t.numel() as f64;
-        sq_err += et.sq_err;
+        bits_weighted += t_bits * t.numel() as f64;
+        sq_err += t_err;
     }
 
     let manifest = Json::obj()

@@ -441,6 +441,27 @@ pub const MAX_RANGE_SPAN: usize = 4096;
 ///
 /// Every expanded spec must parse as a [`Scheme`] (errors name the
 /// offending spec); duplicates are dropped, first occurrence wins.
+/// A grid point is either a scheme spec or a fractional-allocator point
+/// `frac@<bits>:<granularity>-<statistic>[:<flags>]`, which bypasses the
+/// scheme grammar — its budget may be fractional and its tail is
+/// validated against the allocator's own base-scheme rules.
+fn validate_grid_point(s: &str) -> Result<()> {
+    if let Some(rest) = s.strip_prefix("frac@") {
+        let Some((bits, tail)) = rest.split_once(':') else {
+            bail!(
+                "frac point needs \
+                 frac@<bits>:<granularity>-<statistic>[:<flags>]"
+            );
+        };
+        bits.parse::<f64>()
+            .map_err(|e| anyhow::anyhow!("frac budget {bits:?}: {e}"))?;
+        let base = Scheme::parse(&format!("int@4:{tail}"))?;
+        crate::alloc::frac::validate_base(&base)?;
+        return Ok(());
+    }
+    Scheme::parse(s).map(|_| ())
+}
+
 pub fn expand_grid(grid: &str) -> Result<Vec<String>> {
     let mut out: Vec<String> = Vec::new();
     let mut seen = std::collections::HashSet::new();
@@ -452,7 +473,7 @@ pub fn expand_grid(grid: &str) -> Result<Vec<String>> {
         while let Some(s) = stack.pop() {
             match brace_group(&s)? {
                 None => {
-                    Scheme::parse(&s).with_context(|| {
+                    validate_grid_point(&s).with_context(|| {
                         format!("grid point {s:?} (from {template:?})")
                     })?;
                     if seen.insert(s.clone()) {

@@ -291,6 +291,32 @@ pub enum EncodedForm {
         /// Per-element dense slots — the entropy-coded payload stream.
         indices: Vec<u16>,
     },
+    /// Fractional-allocation mix (OWQ3): the tensor's scale blocks are
+    /// partitioned across ≥2 codebook schemes; each partition's blocks
+    /// are gathered into a contiguous stream (ascending block order, so
+    /// the short tail block stays last and re-blocking the stream under
+    /// the shared block length reproduces the original boundaries) and
+    /// run through the same fused encode/decode kernels as a plain
+    /// tensor.  `assign` is the per-block scheme-id stream the writer
+    /// persists as the `block_schemes` section.
+    Mixed {
+        parts: Vec<MixedPart>,
+        /// Per layout-space block: index into `parts`.
+        assign: Vec<u8>,
+    },
+}
+
+/// One partition of a mixed tensor: its scheme, the configured quantiser
+/// (codebook + resolved multiplier, built over the partition's own
+/// gathered data), the per-group encoding of that gathered stream, the
+/// symbol histogram its entropy tables are built from, and the element
+/// count.
+pub struct MixedPart {
+    pub scheme: Scheme,
+    pub quantiser: Quantiser,
+    pub enc: crate::quant::Encoded,
+    pub counts: Vec<u64>,
+    pub n: usize,
 }
 
 /// Everything the quantisation pipeline produced for one tensor, in the
@@ -468,6 +494,197 @@ pub fn encode_tensor(
         sq_err,
         recon,
         rot_seed,
+    })
+}
+
+/// Encode one tensor as a block-level mix of schemes — the fractional
+/// allocator's realisation path ([`crate::alloc::frac`]).  `assign[b]`
+/// names the scheme (index into `schemes`) owning scale block `b` of the
+/// laid-out tensor.  Each partition gathers its blocks into a contiguous
+/// stream and routes it through [`build_quantiser`] +
+/// `encode_with_stats` + `decode_into` — exactly the plain codebook
+/// path, per partition — then scatters the decode back, so the
+/// reconstruction of every block is bit-identical to what a pure tensor
+/// of just those blocks would produce under that scheme.
+///
+/// Bits accounting is honest for the container this becomes: the
+/// element-weighted mean of the per-partition rates (entropy rate when
+/// `:compress`) plus ⌈log2 k⌉ bits per block for the persisted scheme-id
+/// stream.
+///
+/// Constraints (typed errors): ≥2 schemes, all sharing the base's block
+/// granularity and rotation flag, no `:sparse`, no grid element, every
+/// scheme owning at least one block.  Mixed tensors never transpose
+/// (block granularity skips the channel layout), so `channel_len` is 0.
+pub fn encode_tensor_mixed(
+    schemes: &[Scheme],
+    assign: &[u8],
+    data: &[f32],
+    shape: &[usize],
+    channel_axis: Option<usize>,
+    fisher: &[f32],
+    seed: u64,
+) -> Result<EncodedTensor> {
+    if schemes.len() < 2 {
+        bail!(
+            "a mix needs at least two schemes \
+             (pure tensors go through encode_tensor)"
+        );
+    }
+    let granularity = schemes[0].granularity;
+    if !matches!(granularity, Granularity::Block(_)) {
+        bail!("mixed tensors require block granularity, got {granularity:?}");
+    }
+    for s in schemes {
+        if s.granularity != granularity {
+            bail!("mix parts must share the block granularity");
+        }
+        if s.rotate != schemes[0].rotate {
+            bail!("mix parts must agree on rotation");
+        }
+        if s.element == Element::Grid {
+            bail!("grid schemes cannot be mixed (no block boundary)");
+        }
+        if s.sparse > 0.0 {
+            bail!("mixed tensors do not support :sparse");
+        }
+    }
+
+    // rotation + layout: the exact decisions encode_tensor makes
+    let mut work = data.to_vec();
+    let rot = if schemes[0].rotate && shape.len() == 2 {
+        let (rows, cols) = (shape[0], shape[1]);
+        let (v, w) = rotation_pair(rows, cols, seed);
+        rotate_2d(&mut work, rows, cols, &v, &w);
+        Some((v, w))
+    } else {
+        None
+    };
+    let rot_seed = rot.as_ref().map(|_| seed);
+    let (mut flat, channel_len, transposed) =
+        prepare_layout(work, shape, channel_axis, granularity);
+    debug_assert!(!transposed && channel_len == 0);
+
+    let blocks =
+        crate::scaling::scale_groups(flat.len(), granularity, channel_len);
+    if assign.len() != blocks.len() {
+        bail!(
+            "{} scheme ids for {} blocks",
+            assign.len(),
+            blocks.len()
+        );
+    }
+    if let Some(&id) =
+        assign.iter().find(|&&id| (id as usize) >= schemes.len())
+    {
+        bail!("scheme id {id} out of range ({} schemes)", schemes.len());
+    }
+
+    let mut parts: Vec<MixedPart> = Vec::with_capacity(schemes.len());
+    let mut total_bits = 0f64;
+    for (p, scheme) in schemes.iter().enumerate() {
+        let mut part_data: Vec<f32> = Vec::new();
+        let mut part_fisher: Vec<f32> = Vec::new();
+        for (&id, &(start, len)) in assign.iter().zip(&blocks) {
+            if id as usize == p {
+                part_data.extend_from_slice(&flat[start..start + len]);
+                if !fisher.is_empty() {
+                    part_fisher
+                        .extend_from_slice(&fisher[start..start + len]);
+                }
+            }
+        }
+        if part_data.is_empty() {
+            bail!(
+                "scheme {p} ({}) is assigned no blocks",
+                scheme.name()
+            );
+        }
+        let quantiser = build_quantiser(scheme, &part_data, 0, &part_fisher)?;
+        let (enc, stats) = quantiser.encode_with_stats(&part_data, 0);
+        let pn = part_data.len();
+        // same term order as the plain paths, per partition
+        let mut part_bits = quantiser.bits_per_element(pn, 0);
+        if scheme.compress {
+            part_bits = part_bits - quantiser.codebook.storage_bits()
+                + entropy_bits(&stats.counts);
+        }
+        total_bits += part_bits * pn as f64;
+        quantiser.decode_into(&enc, &mut part_data);
+        let mut cursor = 0usize;
+        for (&id, &(start, len)) in assign.iter().zip(&blocks) {
+            if id as usize == p {
+                flat[start..start + len]
+                    .copy_from_slice(&part_data[cursor..cursor + len]);
+                cursor += len;
+            }
+        }
+        parts.push(MixedPart {
+            scheme: scheme.clone(),
+            quantiser,
+            enc,
+            counts: stats.counts,
+            n: pn,
+        });
+    }
+
+    // honest accounting includes the per-block scheme-id stream the
+    // container stores: ⌈log2 k⌉ bits per block (at least 1)
+    let id_bits = (schemes.len() as f64).log2().ceil().max(1.0);
+    let bits = (total_bits + id_bits * blocks.len() as f64)
+        / flat.len() as f64;
+
+    let mut recon = restore_layout(flat, shape, transposed);
+    if let Some((v, w)) = &rot {
+        rotate_2d_inverse(&mut recon, shape[0], shape[1], v, w);
+    }
+    let sq_err = crate::util::stats::sq_err(data, &recon);
+    Ok(EncodedTensor {
+        form: EncodedForm::Mixed {
+            parts,
+            assign: assign.to_vec(),
+        },
+        counts: Vec::new(),
+        outlier_idx: Vec::new(),
+        outlier_val: Vec::new(),
+        bits,
+        channel_len,
+        transposed,
+        sq_err,
+        recon,
+        rot_seed,
+    })
+}
+
+/// The in-memory reference for a mixed tensor — what `owf inspect
+/// --verify` and the artifact property tests compare packed decodes
+/// against.  A thin wrapper over [`encode_tensor_mixed`]: the mixed
+/// pipeline has exactly one encode path (per-partition fused kernels), so
+/// the reference IS that path's reconstruction and accounting, the same
+/// relationship `qdq_codebook`'s compress arm already has with
+/// `encode_with_stats`.
+pub fn qdq_tensor_mixed(
+    schemes: &[Scheme],
+    assign: &[u8],
+    data: &[f32],
+    shape: &[usize],
+    channel_axis: Option<usize>,
+    fisher: &[f32],
+    seed: u64,
+) -> Result<TensorQdq> {
+    let et = encode_tensor_mixed(
+        schemes,
+        assign,
+        data,
+        shape,
+        channel_axis,
+        fisher,
+        seed,
+    )?;
+    Ok(TensorQdq {
+        recon: et.recon,
+        bits: et.bits,
+        sq_err: et.sq_err,
     })
 }
 
@@ -698,5 +915,146 @@ mod tests {
         let cbrt = run("cbrt-normal@4:tensor-rms", &data, &[64, 64]);
         // data is Student-t; fitted Lloyd must beat the mismatched Normal
         assert!(lloyd.sq_err < cbrt.sq_err);
+    }
+
+    #[test]
+    fn mixed_degenerate_same_scheme_matches_pure_plus_id_overhead() {
+        // both partitions run the identical scheme with a *fixed*
+        // multiplier: per-block encodes depend only on the block's own
+        // data (int codebook is data-independent, absmax scale is
+        // per-block), so the mixed reconstruction must be bit-identical
+        // to the pure tensor and the bits must differ by exactly the
+        // per-block scheme-id overhead (1 bit per 64-element block)
+        let data = data_2d(64, 96, 12);
+        let shape = [64usize, 96];
+        let s = Scheme::parse("int@4:block64-absmax:mult1").unwrap();
+        let schemes = vec![s.clone(), s.clone()];
+        let n_blocks = data.len().div_ceil(64);
+        let assign: Vec<u8> =
+            (0..n_blocks).map(|b| (b % 2) as u8).collect();
+        let mixed = qdq_tensor_mixed(
+            &schemes, &assign, &data, &shape, Some(1), &[], 7,
+        )
+        .unwrap();
+        let pure = run("int@4:block64-absmax:mult1", &data, &shape);
+        assert_eq!(mixed.recon, pure.recon);
+        assert!(
+            (mixed.bits - pure.bits - 1.0 / 64.0).abs() < 1e-12,
+            "mixed {} vs pure {}",
+            mixed.bits,
+            pure.bits
+        );
+    }
+
+    #[test]
+    fn mixed_blocks_match_their_pure_scheme_blockwise() {
+        // each block of a 3/5-bit mix must reproduce, bit for bit, the
+        // same block of the corresponding *pure* encode — partitioning
+        // must not leak information across schemes
+        let data = data_2d(64, 96, 13);
+        let shape = [64usize, 96];
+        let lo = Scheme::parse("int@3:block64-absmax:mult1").unwrap();
+        let hi = Scheme::parse("int@5:block64-absmax:mult1").unwrap();
+        let n = data.len();
+        let n_blocks = n.div_ceil(64);
+        let assign: Vec<u8> =
+            (0..n_blocks).map(|b| (b % 3 == 0) as u8).collect();
+        let mixed = qdq_tensor_mixed(
+            &[lo.clone(), hi.clone()],
+            &assign,
+            &data,
+            &shape,
+            Some(1),
+            &[],
+            7,
+        )
+        .unwrap();
+        let pure_lo = run("int@3:block64-absmax:mult1", &data, &shape);
+        let pure_hi = run("int@5:block64-absmax:mult1", &data, &shape);
+        for (b, &id) in assign.iter().enumerate() {
+            let start = b * 64;
+            let end = (start + 64).min(n);
+            let want = if id == 1 { &pure_hi } else { &pure_lo };
+            for i in start..end {
+                assert_eq!(
+                    mixed.recon[i].to_bits(),
+                    want.recon[i].to_bits(),
+                    "block {b} element {i}"
+                );
+            }
+        }
+        // bits: element-weighted mean of the part rates + 1 id bit/block
+        let hi_elems: usize = assign
+            .iter()
+            .map(|&id| if id == 1 { 64 } else { 0 })
+            .sum();
+        let expect = (3.25 * (n - hi_elems) as f64
+            + 5.25 * hi_elems as f64
+            + n_blocks as f64)
+            / n as f64;
+        assert!(
+            (mixed.bits - expect).abs() < 1e-12,
+            "{} vs {expect}",
+            mixed.bits
+        );
+    }
+
+    #[test]
+    fn mixed_rejects_malformed_mixes_typed() {
+        let data = data_2d(8, 64, 14);
+        let shape = [8usize, 64];
+        let s = Scheme::parse("int@4:block64-absmax").unwrap();
+        let two = vec![s.clone(), s.clone()];
+        let blocks = data.len().div_ceil(64);
+        let half: Vec<u8> =
+            (0..blocks).map(|b| (b % 2) as u8).collect();
+        // fewer ids than blocks
+        assert!(encode_tensor_mixed(
+            &two, &half[..blocks - 1], &data, &shape, Some(1), &[], 7
+        )
+        .is_err());
+        // id out of range
+        let mut bad = half.clone();
+        bad[0] = 2;
+        assert!(encode_tensor_mixed(
+            &two, &bad, &data, &shape, Some(1), &[], 7
+        )
+        .is_err());
+        // a scheme with no blocks
+        let none = vec![0u8; blocks];
+        assert!(encode_tensor_mixed(
+            &two, &none, &data, &shape, Some(1), &[], 7
+        )
+        .is_err());
+        // single scheme
+        assert!(encode_tensor_mixed(
+            &two[..1], &half, &data, &shape, Some(1), &[], 7
+        )
+        .is_err());
+        // non-block granularity
+        let t = Scheme::parse("int@4:tensor-absmax").unwrap();
+        assert!(encode_tensor_mixed(
+            &[t.clone(), t],
+            &half,
+            &data,
+            &shape,
+            Some(1),
+            &[],
+            7
+        )
+        .is_err());
+        // sparse overlay
+        let sp =
+            Scheme::parse("int@4:block64-absmax:sparse0.01").unwrap();
+        assert!(encode_tensor_mixed(
+            &[sp.clone(), sp],
+            &half,
+            &data,
+            &shape,
+            Some(1),
+            &[],
+            7
+        )
+        .is_err());
     }
 }

@@ -2,7 +2,7 @@
 //! Laplace / Student-t, evaluated as R (RMS error / data RMS), usually
 //! reported as R·2^b so error/bits trade-off lines flatten.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::compress::grid::grid_for_target_bits;
 use crate::compress::rans::{
@@ -13,7 +13,8 @@ use crate::compress::{entropy_bits, information_content, smoothed_probs};
 use crate::coordinator::config::{Element, Scheme};
 use crate::coordinator::{fmt, Report};
 use crate::dist::{Dist, Family, Truncated};
-use crate::eval::pipeline::qdq_tensor;
+use crate::alloc::frac;
+use crate::eval::pipeline::{qdq_tensor, qdq_tensor_mixed};
 use crate::eval::RunOpts;
 use crate::formats::cbrt::{cbrt_absmax, cbrt_rms, CBRT_ALPHA};
 use crate::formats::lloyd::{LloydInit, LloydMax};
@@ -70,12 +71,105 @@ pub fn sweep_point(
     samples: usize,
     seed: u64,
 ) -> Result<SimPoint> {
+    // `frac@<bits>:...` is the fractional allocator's sweep point, not
+    // a fixed format — intercept before the scheme grammar sees it
+    if let Some(rest) = spec.strip_prefix("frac@") {
+        return frac_sweep_point(rest, samples, seed);
+    }
     let scheme = Scheme::parse(spec)?;
     let d = sweep_dist(&scheme);
     let mut rng =
         Rng::new(0x5EED ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
     let data = d.sample_vec(&mut rng, samples.max(MIN_SWEEP_SAMPLES));
     let out = qdq_tensor(&scheme, &data, &[data.len()], None, &[], seed)?;
+    let r = relative_rms_error(&data, &out.recon);
+    Ok(SimPoint {
+        bits: out.bits,
+        r,
+        r2b: r * 2f64.powf(out.bits),
+    })
+}
+
+/// One fractional-allocator sweep point: `frac@<bits>:<granularity>-
+/// <statistic>[:<flags>]`.  Measures the int@2..8 candidate curve for
+/// the tail spec on the sampled data, water-fills the (possibly
+/// fractional) budget over its lower convex hull and realises the
+/// chosen block-level mix through the mixed pipeline — so the
+/// allocator's rate–distortion curve sweeps directly against the
+/// fixed-format curves on identical data.
+fn frac_sweep_point(
+    rest: &str,
+    samples: usize,
+    seed: u64,
+) -> Result<SimPoint> {
+    let Some((bits_str, tail)) = rest.split_once(':') else {
+        bail!(
+            "frac spec needs \
+             frac@<bits>:<granularity>-<statistic>[:<flags>], \
+             got frac@{rest:?}"
+        );
+    };
+    let target: f64 = bits_str
+        .parse()
+        .map_err(|e| anyhow::anyhow!("frac budget {bits_str:?}: {e}"))?;
+    // the candidate family is the int lattice over the tail's layout;
+    // the @4 here is a placeholder the candidates overwrite
+    let base = Scheme::parse(&format!("int@4:{tail}"))?;
+    frac::validate_base(&base)?;
+
+    let d = sweep_dist(&base);
+    let mut rng =
+        Rng::new(0x5EED ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+    let data = d.sample_vec(&mut rng, samples.max(MIN_SWEEP_SAMPLES));
+    let shape = [data.len()];
+
+    let points = frac::measure_points(&base, &data, &shape, None, &[], seed)?;
+    let curves = vec![frac::TensorCurve::new(
+        "sweep",
+        data.len(),
+        1.0,
+        points,
+    )];
+    let alloc = frac::waterfill(&curves, target);
+    let choice = &alloc.choices[0];
+    let candidates = frac::candidate_schemes(&base);
+
+    let pure = |idx: usize| {
+        qdq_tensor(&candidates[idx], &data, &shape, None, &[], seed)
+    };
+    let out = if choice.is_pure() {
+        pure(choice.lo)?
+    } else {
+        let lens: Vec<usize> = crate::scaling::scale_groups(
+            data.len(),
+            base.granularity,
+            0,
+        )
+        .iter()
+        .map(|&(_, len)| len)
+        .collect();
+        let hi_elems =
+            (choice.hi_weight * data.len() as f64).round() as usize;
+        let assign = frac::assign_blocks(seed, &lens, hi_elems);
+        if assign.iter().all(|&a| a == 0) {
+            pure(choice.lo)?
+        } else if assign.iter().all(|&a| a == 1) {
+            pure(choice.hi)?
+        } else {
+            qdq_tensor_mixed(
+                &[
+                    candidates[choice.lo].clone(),
+                    candidates[choice.hi].clone(),
+                ],
+                &assign,
+                &data,
+                &shape,
+                None,
+                &[],
+                seed,
+            )?
+        }
+    };
     let r = relative_rms_error(&data, &out.recon);
     Ok(SimPoint {
         bits: out.bits,

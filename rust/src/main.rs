@@ -12,7 +12,10 @@
 //! owf quantise --spec <scheme> [--size m]   one direct-cast point
 //! owf quantise --from <file.owq>    evaluate a packed artifact's KL
 //! owf pack --spec <scheme> --out F  quantise + entropy-code to an OWQ1
-//!                                   container (checkpoint or --sim data)
+//!                                   container (checkpoint or --sim data);
+//!                                   --alloc fractional --bits B mixes
+//!                                   schemes per block to hit fractional
+//!                                   budgets
 //! owf inspect <file.owq> [--verify] print a container's manifest; verify
 //!                                   checksums + bit-exactness vs the
 //!                                   in-memory pipeline
@@ -43,7 +46,7 @@ use owf::artifact::server::ArtifactServer;
 use owf::coordinator::config::Scheme;
 use owf::coordinator::{run_sweep, Report, ResultSink, SweepData, SweepOpts};
 use owf::dist::{Dist, Family};
-use owf::eval::pipeline::qdq_tensor;
+use owf::eval::pipeline::{qdq_tensor, qdq_tensor_mixed};
 use owf::eval::{self, RunOpts};
 use owf::fisher::FisherEstimate;
 use owf::runtime::model::{Checkpoint, TokenSplit};
@@ -435,14 +438,40 @@ fn verify_artifact(art: &Artifact) -> Result<()> {
         // rotated tensors replay under the recorded per-tensor seed; the
         // seed is irrelevant to every other scheme (identity rotation)
         let seed = rec.rot_seed.unwrap_or(0);
-        let reference = qdq_tensor(
-            &scheme,
-            &data,
-            &t.shape,
-            t.channel_axis,
-            &[],
-            seed,
-        )?;
+        // mixed (v3) tensors replay through the mixed pipeline under the
+        // recorded part specs + block assignment — same bit-exactness bar
+        let reference = if let Some(mix) = &rec.mix {
+            let specs = mix
+                .specs
+                .iter()
+                .map(|s| Scheme::parse(s))
+                .collect::<Result<Vec<_>>>()?;
+            let assign =
+                art.block_assignment(i)?.with_context(|| {
+                    format!(
+                        "{}: mixed tensor without block_schemes",
+                        rec.name
+                    )
+                })?;
+            qdq_tensor_mixed(
+                &specs,
+                &assign,
+                &data,
+                &t.shape,
+                t.channel_axis,
+                &[],
+                seed,
+            )?
+        } else {
+            qdq_tensor(
+                &scheme,
+                &data,
+                &t.shape,
+                t.channel_axis,
+                &[],
+                seed,
+            )?
+        };
         let decoded = art.decode_tensor(i)?;
         for (j, (&a, &b)) in
             decoded.iter().zip(&reference.recon).enumerate()
@@ -514,6 +543,14 @@ fn cmd_pack(args: &Args) -> Result<()> {
         .map(|s| AllocMode::parse(s))
         .transpose()?
         .unwrap_or(AllocMode::Flat);
+    // fractional budget target, e.g. `--bits 3.3`; the other alloc
+    // modes target the spec's own width and ignore this
+    let target_bits: Option<f64> = args
+        .flags
+        .get("bits")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--bits")?;
 
     let (store, fisher_mean, meta) = if let Some(shapes) =
         args.flags.get("sim")
@@ -567,6 +604,7 @@ fn cmd_pack(args: &Args) -> Result<()> {
         alloc,
         codec,
         lanes,
+        target_bits,
         meta,
     };
     let t0 = std::time::Instant::now();
@@ -641,6 +679,9 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         if let Some(g) = &rec.grid {
             marks.push_str(&format!(" G{}", g.buckets.len()));
         }
+        if rec.mix.is_some() {
+            marks.push_str(" M");
+        }
         println!(
             "  {:<24} {:?}{} {:<36} {:>9.3} b/elem (payload {:.3}) \
              sq-err {:.4e} outliers {}",
@@ -653,6 +694,25 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             rec.sq_err,
             rec.outlier_idx.len / 4,
         );
+        if let Some(mix) = &rec.mix {
+            let total: usize = mix.part_elems.iter().sum();
+            let parts: Vec<String> = mix
+                .specs
+                .iter()
+                .zip(&mix.part_elems)
+                .map(|(s, &e)| {
+                    // "int@4:block64-absmax" -> "int4"
+                    let (el, rest) =
+                        s.split_once('@').unwrap_or((s.as_str(), ""));
+                    let b = rest.split(':').next().unwrap_or("");
+                    format!(
+                        "{el}{b} {:.0}%",
+                        100.0 * e as f64 / total.max(1) as f64
+                    )
+                })
+                .collect();
+            println!("      mix: {}", parts.join(" / "));
+        }
     }
     if args.flags.contains_key("verify") {
         verify_artifact(&art)?;
@@ -755,7 +815,8 @@ fn cmd_fault_inject(args: &Args) -> Result<()> {
     }
     let section = args.flags.get("section").context(
         "--section <codebook|scales|payload|counts|outlier_idx|\
-         outlier_val|manifest|header> or --truncate-frac required",
+         outlier_val|block_schemes|manifest|header> or \
+         --truncate-frac required",
     )?;
     let bit: u8 = args
         .flags
@@ -806,7 +867,7 @@ fn cmd_fault_inject(args: &Args) -> Result<()> {
                     format!(
                         "unknown tensor/section {tensor:?}/{name:?} \
                          (sections: codebook scales payload counts \
-                         outlier_idx outlier_val)"
+                         outlier_idx outlier_val block_schemes)"
                     )
                 })?;
             if len == 0 {
@@ -1379,7 +1440,11 @@ PACK OPTIONS (owf pack):
   --sim SHAPES      pack synthetic tensors instead, e.g. 96x64,4096
   --seed N          sim RNG seed                      (default 1234)
   --dist D          sim distribution: t<nu>|normal|laplace (default t5)
-  --alloc MODE      flat | variable (eq.-5 Fisher/RMS) (default flat)
+  --alloc MODE      flat | variable (eq.-5 Fisher/RMS) | fractional
+                    (hull water-filling + per-block scheme mixing;
+                    needs a block-granular non-grid spec) (default flat)
+  --bits B          fractional target average bits/param, e.g. 3.3
+                    (default: the spec's own width; fractional only)
   --codec C         huffman | rans | raw               (default huffman)
   --lanes K         interleaved entropy-coder lanes    (default: the
                     active ISA's vector width — 8 on AVX2, else 4)
@@ -1407,8 +1472,8 @@ SERVE-BENCH OPTIONS:
 
 FAULT-INJECT OPTIONS (owf fault-inject <in> --out <out>):
   --section S       damage target: codebook|scales|payload|counts|
-                    outlier_idx|outlier_val (middle byte of that section)
-                    or manifest|header
+                    outlier_idx|outlier_val|block_schemes (middle byte
+                    of that section) or manifest|header
   --tensor T        which tensor's section              (default: first
                     tensor with a non-empty such section)
   --bit K           bit index 0..7 to flip              (default 0)
@@ -1430,6 +1495,14 @@ examples:
   grid@3.5:tensor-rms:compress       entropy-coded uniform grid
   int@3:channel-absmax:sparse0.001   SpQR-style dense+sparse
   lloyd@4:tensor-rms:fisher          SqueezeLLM-style weighted k-means
+
+fractional allocator sweep points (owf sweep):
+  frac@<bits>:<granularity>-<statistic>[:<flags>]
+measures the int@2..8 candidate curve for the tail spec, water-fills
+the (possibly fractional) budget over its convex hull and realises the
+resulting block-level mix — so the allocator's rate–distortion curve
+sweeps directly against the fixed formats.
+  frac@{3,3.3,4.7}:block64-absmax                    3 points
 
 sweep grids (owf sweep): any {...} group in a spec expands —
   {a,b,c}   comma alternation        {lo..hi}  inclusive integer range

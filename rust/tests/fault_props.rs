@@ -66,6 +66,7 @@ fn packed_bytes(codec: Codec, lanes: usize, tag: &str) -> Vec<u8> {
             alloc: AllocMode::Flat,
             codec,
             lanes,
+            target_bits: None,
             meta: Json::obj().push("source", "test"),
         },
         &path,
@@ -108,6 +109,7 @@ fn packed_bytes_spec(
             alloc: AllocMode::Flat,
             codec,
             lanes,
+            target_bits: None,
             meta: Json::obj().push("source", "test"),
         },
         &path,
@@ -115,6 +117,47 @@ fn packed_bytes_spec(
     .unwrap();
     let raw = std::fs::read(&path).unwrap();
     std::fs::remove_file(&path).unwrap();
+    raw
+}
+
+/// A v3 fractional container (2.5/3.3-style mixed tensors) for the flip
+/// sweeps: same two tensors as [`packed_bytes_spec`], packed with the
+/// fractional allocator at a non-lattice budget so at least one tensor
+/// carries a `mix` record + `block_schemes` section.
+fn packed_fractional_bytes(tag: &str) -> Vec<u8> {
+    let mut rng = Rng::new(0xFA117);
+    let mut store = Store::new(Json::obj().push("kind", "fault-props"));
+    let m: Vec<f32> = rng.student_t_vec(5.0, 12 * 8);
+    store.push(Tensor::from_f32("m", vec![12, 8], &m));
+    let mut w: Vec<f32> = rng.student_t_vec(5.0, 96);
+    w[7] = 40.0;
+    w[61] = -35.0;
+    store.push(Tensor::from_f32("w", vec![96], &w));
+    let dir = std::env::temp_dir().join("owf_fault_props");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path =
+        dir.join(format!("{tag}_{}.owq", std::process::id()));
+    pack_store(
+        &store,
+        &std::collections::HashMap::new(),
+        &PackOptions {
+            spec: "int@4:block32-absmax".to_string(),
+            alloc: AllocMode::Fractional,
+            codec: Codec::Huffman,
+            lanes: 2,
+            target_bits: Some(3.3),
+            meta: Json::obj().push("source", "test"),
+        },
+        &path,
+    )
+    .unwrap();
+    let raw = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    let art = Artifact::from_bytes(raw.clone()).unwrap();
+    assert!(
+        art.tensors.iter().any(|r| r.mix.is_some()),
+        "the fractional fault fixture must contain a mixed tensor"
+    );
     raw
 }
 
@@ -284,6 +327,17 @@ fn every_single_bit_flip_is_detected_or_bit_exact_for_rot_and_grid() {
             tag,
         ));
     }
+}
+
+/// The OWQ3 mixed form obeys the same fault contract: the `mix` record
+/// lives under the manifest checksum, and the per-part concatenated
+/// sections plus the `block_schemes` id stream live in checksummed
+/// sections — so every single-bit flip in a fractional container is
+/// detected (naming the damaged section, `block_schemes` included) or
+/// provably without effect.
+#[test]
+fn every_single_bit_flip_is_detected_or_bit_exact_for_fractional() {
+    exhaustive_flip_sweep(&packed_fractional_bytes("fracsweep"));
 }
 
 /// Seeded (non-exhaustive) flip sweeps for the other codecs share the

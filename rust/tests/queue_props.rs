@@ -51,6 +51,7 @@ fn packed_bytes(tag: &str) -> Vec<u8> {
             alloc: AllocMode::Flat,
             codec: Codec::Huffman,
             lanes: 4,
+            target_bits: None,
             meta: Json::obj().push("source", "test"),
         },
         &path,

@@ -275,6 +275,7 @@ fn packed_artifact_decodes_identically_via_pread_and_memory() {
         alloc: AllocMode::Flat,
         codec: Codec::Rans,
         lanes: simd::preferred_lanes(),
+        target_bits: None,
         meta: Json::obj(),
     };
     let path = std::env::temp_dir().join(format!(

@@ -9,6 +9,9 @@
 # bit in every section class must drive `owf fsck` to a nonzero exit
 # with a typed verdict — on base, rot and grid containers — and
 # `owf serve-bench` must survive injected transient EIO + payload flips),
+# a fractional-allocation gate (an OWQ3 store packed at a non-lattice
+# 3.3-bit budget must inspect --verify bit-exact, print its per-tensor
+# scheme mix, fail fsck typed on a block_schemes bit flip, and serve),
 # an overload gate (a one-permit, depth-2, 50ms-deadline serve-bench under
 # transient faults must terminate inside a wall-clock timeout with a
 # closed stats partition — the no-unbounded-wait backstop),
@@ -132,6 +135,45 @@ for section in codebook payload counts manifest header; do
         exit 1
     fi
 done
+
+echo "== fractional allocation gate (OWQ3: pack 3.3b, verify, fault, serve) =="
+# the fractional allocator must hit a non-lattice budget by mixing two
+# int schemes per tensor at block granularity; inspect --verify proves
+# the packed mixed decode bit-identical to the in-memory mixed pipeline,
+# the inspect text must surface the v3 version and the per-tensor mix,
+# a flipped bit in the block_schemes id stream must fail fsck typed,
+# and the serving stack must serve the v3 store unchanged
+FRAC="$PACK_DIR/gate_frac.owq"
+"$BIN" pack --spec 'int@4:block64-absmax' --alloc fractional --bits 3.3 \
+    --sim 96x64,4096 --seed 7 --codec huffman --lanes 4 --out "$FRAC"
+FRAC_OUT=$("$BIN" inspect "$FRAC" --verify)
+echo "$FRAC_OUT"
+echo "$FRAC_OUT" | grep -q 'OWQ v3' || {
+    echo "check.sh: fractional container did not inspect as OWQ v3" >&2
+    exit 1
+}
+echo "$FRAC_OUT" | grep -q 'mix:' || {
+    echo "check.sh: fractional inspect printed no per-tensor mix" >&2
+    exit 1
+}
+echo "$FRAC_OUT" | grep -q 'alloc: fractional' || {
+    echo "check.sh: fractional alloc record missing from inspect" >&2
+    exit 1
+}
+for section in block_schemes codebook scales payload counts; do
+    BAD="$FAULT_DIR/frac_$section.owq"
+    "$BIN" fault-inject "$FRAC" --out "$BAD" --section "$section"
+    if "$BIN" fsck "$BAD" > /dev/null 2>&1; then
+        echo "check.sh: fsck missed a fractional-container $section flip" >&2
+        exit 1
+    fi
+done
+FRAC_SB=$("$BIN" serve-bench "$FRAC" --threads 4 --requests 64)
+echo "$FRAC_SB"
+echo "$FRAC_SB" | grep -q 'hit rate' || {
+    echo "check.sh: serve-bench over the v3 store reported no cache stats" >&2
+    exit 1
+}
 
 echo "== serve-bench fault smoke (transient EIO + payload flips) =="
 # the server must degrade gracefully under injected faults: transient
